@@ -1,0 +1,145 @@
+//! Design-space exploration: the ablations DESIGN.md calls out.
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+//!
+//! Sweeps the architectural knobs the paper's argument hinges on and
+//! prints where the crossovers fall:
+//!
+//! * SLM size vs efficiency (the "analog wins with scale" claim, eq. 11);
+//! * systolic array dimension (bigger is not free: SRAM banks shrink);
+//! * bit precision (ADC/DAC/laser are exponential in B — eqs. A3/A4/A8);
+//! * electro-optic modulator energy (the silicon-photonics bottleneck);
+//! * DRAM weight streaming on/off for the systolic machine;
+//! * full-aperture vs shuttered laser for the 4F machine.
+
+use aimc::analytic::{photonic, Workload};
+use aimc::energy::EnergyParams;
+use aimc::networks::yolov3::yolov3;
+use aimc::simulator::{optical4f, systolic};
+
+fn main() {
+    let node = 28.0;
+    let net = yolov3(1000);
+    println!("design-space exploration — YOLOv3 @ 1 Mpx, {node} nm\n");
+
+    // ---- 1. SLM size sweep -------------------------------------------------
+    println!("1) optical-4F SLM size (eq. 11: efficiency ∝ processor scale):");
+    for mpx in [0.25, 1.0, 4.0, 16.0, 64.0] {
+        let cfg = optical4f::Optical4FConfig {
+            slm_pixels: (mpx * 1024.0 * 1024.0) as usize,
+            ..Default::default()
+        };
+        let r = optical4f::simulate_network(&cfg, &net, node);
+        println!(
+            "   {mpx:5.2} Mpx : {:8.2} TOPS/W  ({:.4} pJ/MAC, {:.0} executions)",
+            r.tops_per_watt(),
+            r.energy_per_mac() * 1e12,
+            r.time_units
+        );
+    }
+
+    // ---- 2. systolic array dimension ---------------------------------------
+    println!("\n2) systolic array dimension (SRAM fixed at 24 MiB total):");
+    for dim in [64usize, 128, 256, 512, 1024] {
+        let cfg = systolic::SystolicConfig {
+            dim,
+            banks: dim,
+            ..Default::default()
+        };
+        let r = systolic::simulate_network(&cfg, &net, node);
+        println!(
+            "   {dim:4}x{dim:<4}: {:6.2} TOPS/W  (utilization {:4.1}%)",
+            r.tops_per_watt(),
+            100.0 * systolic::utilization(&cfg, &r)
+        );
+    }
+
+    // ---- 3. bit precision --------------------------------------------------
+    println!("\n3) bit precision (ADC/DAC/laser scale as 2^2B — eq. A3/A4/A8):");
+    let w = Workload::reference();
+    for bits in [4u32, 6, 8, 10, 12] {
+        let e = EnergyParams {
+            bits,
+            ..Default::default()
+        }
+        .at_node(node);
+        // Converter-bound compute term of the 4F machine (per eq. 24's N).
+        let per_op = e.e_adc / 128.0 + (e.e_dac + e.e_opt) / 576.0;
+        println!(
+            "   B={bits:2}: e_adc {:8.4} pJ, e_dac {:7.4} pJ, 4F converter term {:9.6} pJ/op",
+            e.e_adc * 1e12,
+            e.e_dac * 1e12,
+            per_op * 1e12
+        );
+    }
+
+    // ---- 4. electro-optic modulator energy (planar photonics) --------------
+    println!("\n4) silicon-photonic modulator energy (today 7 pJ → future 0.5 pJ → research 0.05 pJ):");
+    for e_mod in [7e-12, 0.5e-12, 0.05e-12] {
+        let cfg = photonic::Config {
+            e_modulator: e_mod,
+            ..photonic::Config::typical()
+        };
+        let eta = cfg.efficiency(&w, node).tops_per_watt();
+        println!("   {:5.2} pJ/sample: {eta:8.2} TOPS/W", e_mod * 1e12);
+    }
+
+    // ---- 5. DRAM weight streaming ------------------------------------------
+    println!("\n5) systolic DRAM weight streaming (paper's model charges 0):");
+    for e_dram in [0.0, 5e-12, 20e-12] {
+        let cfg = systolic::SystolicConfig {
+            e_dram_per_byte: e_dram,
+            ..Default::default()
+        };
+        let r = systolic::simulate_network(&cfg, &net, node);
+        println!(
+            "   {:4.0} pJ/B : {:6.2} TOPS/W",
+            e_dram * 1e12,
+            r.tops_per_watt()
+        );
+    }
+
+    // ---- 6b. ReRAM weight reuse (extension machine) -------------------------
+    println!("\n6b) ReRAM crossbar: weight-programming amortization (reuse count):");
+    for reuse in [1.0, 100.0, 1e4, 1e6] {
+        let cfg = aimc::simulator::reram::ReramConfig {
+            reuse,
+            ..Default::default()
+        };
+        let r = aimc::simulator::reram::simulate_network(&cfg, &net, node);
+        println!(
+            "   reuse {reuse:8.0} : {:6.2} TOPS/W",
+            r.tops_per_watt()
+        );
+    }
+
+    // ---- 6c. photonic mesh size (extension machine) --------------------------
+    println!("\n6c) photonic mesh dimension (eq. 11 again, planar this time):");
+    for dim in [8usize, 40, 128, 512] {
+        let cfg = aimc::simulator::photonic::PhotonicConfig {
+            dim,
+            banks: dim,
+            ..Default::default()
+        };
+        let r = aimc::simulator::photonic::simulate_network(&cfg, &net, node);
+        println!("   {dim:4}x{dim:<4}: {:6.2} TOPS/W", r.tops_per_watt());
+    }
+
+    // ---- 7. laser aperture policy ------------------------------------------
+    println!("\n7) 4F laser: full-aperture (paper) vs shuttered illumination:");
+    for full in [true, false] {
+        let cfg = optical4f::Optical4FConfig {
+            laser_full_aperture: full,
+            ..Default::default()
+        };
+        let r = optical4f::simulate_network(&cfg, &net, node);
+        println!(
+            "   {:9}: {:8.2} TOPS/W (laser share {:4.1}%)",
+            if full { "full" } else { "shuttered" },
+            r.tops_per_watt(),
+            100.0 * r.ledger.get(aimc::simulator::Component::Laser) / r.ledger.total()
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Regenerate every table and figure of the paper in one run, writing
+//! aligned text to stdout and CSVs to `results/`.
+//!
+//! ```sh
+//! cargo run --release --example paper_tables
+//! ```
+
+use std::fs;
+use std::path::Path;
+
+use aimc::report;
+use aimc::util::table::Table;
+
+fn save(dir: &Path, name: &str, t: &Table) {
+    println!("{}", t.render());
+    fs::write(dir.join(format!("{name}.csv")), t.to_csv())
+        .unwrap_or_else(|e| eprintln!("warn: writing {name}.csv: {e}"));
+}
+
+fn main() {
+    let out = Path::new("results");
+    fs::create_dir_all(out).expect("mkdir results/");
+    let input = 1000;
+
+    save(out, "table1", &report::table1(input));
+    save(out, "table2", &report::table2(input));
+    save(out, "table3", &report::table3(input));
+    save(out, "table4", &report::table4());
+    save(out, "fig6", &report::fig6());
+    save(out, "fig7", &report::fig7());
+    save(out, "fig8_yolov3", &report::fig8(None, input));
+    save(out, "fig9_yolov3", &report::fig9(None, input));
+    save(out, "fig10_vgg19", &report::fig10(Some("VGG19"), input));
+    save(out, "fig10_yolov3", &report::fig10(Some("YOLOv3"), input));
+
+    println!("CSV copies written to {}/", out.display());
+}

@@ -1,0 +1,184 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+artifacts through the PJRT C API and Python never runs again.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts written to ``artifacts/``:
+    <name>.hlo.txt      HLO text of the lowered computation
+    <name>.in<i>.f32    golden input i   (raw little-endian f32)
+    <name>.out.f32      golden output    (raw little-endian f32)
+    manifest.tsv        name, input shapes, output shape, rtol per artifact
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .quant import quantize_symmetric
+
+# Tolerance used by the rust runtime's golden replay tests. Quantized paths
+# carry 8-bit converter error; exact paths are float-roundoff only.
+RTOL_EXACT = 1e-5
+RTOL_QUANT = 5e-2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def qgemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """f32 GEMM through the full systolic datapath (quantize/compute/dequant).
+
+    Demo artifact exercising the Layer-1 kernel in isolation from Rust.
+    """
+    from .kernels import qmatmul
+
+    xq, sx = quantize_symmetric(x)
+    wq, sw = quantize_symmetric(w)
+    acc = qmatmul(xq, wq, block_l=128, block_n=128, block_m=128)
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def _batched(fn, batch: int, *, vectorize: bool):
+    """Batch a single-image function.
+
+    ``vectorize=True`` lowers with ``jax.vmap`` — XLA fuses the batch into
+    wide ops (measured 2.1× faster than the sequential loop for the exact
+    path; see EXPERIMENTS.md §Perf). Interpret-mode Pallas kernels batch
+    *slower* under vmap (the interpreter re-traces batched refs), so the
+    systolic path keeps the ``lax.map`` while-loop.
+    """
+    if vectorize:
+        return jax.vmap(fn)
+
+    def wrapped(xs):
+        return jax.lax.map(fn, xs)
+
+    return wrapped
+
+
+def build_artifact_specs() -> list[tuple[str, object, list, float]]:
+    """(name, fn, example_args, rtol) for every artifact we ship."""
+    rng = np.random.default_rng(0xA1C)
+
+    def arr(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+    specs: list[tuple[str, object, list, float]] = []
+
+    # Layer-1 kernel demo: the systolic GEMM tile path.
+    specs.append(
+        ("qgemm_256x128x256", qgemm, [arr(256, 128), arr(128, 256)], RTOL_QUANT)
+    )
+
+    # Single conv layers, both machine datapaths (runtime integration tests).
+    x_c = arr(8, 64, 64)
+    w_c = arr(16, 8, 3, 3)
+    specs.append(
+        (
+            "conv_sys_n64_ci8_co16_k3",
+            functools.partial(model.conv2d_systolic, bits=8),
+            [x_c, w_c],
+            RTOL_QUANT,
+        )
+    )
+    specs.append(
+        (
+            "conv_fft_n64_ci8_co16_k3",
+            functools.partial(model.conv2d_fft, bits=8),
+            [x_c, w_c],
+            RTOL_QUANT,
+        )
+    )
+
+    # SmallCNN end-to-end, all three paths, parameters baked in.
+    x_img = arr(*model.SMALLCNN_INPUT)
+    for path, rtol in (
+        ("exact", RTOL_EXACT),
+        ("systolic", RTOL_QUANT),
+        ("fft", RTOL_QUANT),
+    ):
+        specs.append(
+            (
+                f"smallcnn_{path}",
+                functools.partial(model.smallcnn, path=path),
+                [x_img],
+                rtol,
+            )
+        )
+
+    # Batched variants for the coordinator's dynamic batcher.
+    for batch in (4, 8):
+        xs = arr(batch, *model.SMALLCNN_INPUT)
+        for path, rtol in (("exact", RTOL_EXACT), ("systolic", RTOL_QUANT)):
+            fn = _batched(
+                functools.partial(model.smallcnn, path=path),
+                batch,
+                vectorize=(path == "exact"),
+            )
+            specs.append((f"smallcnn_{path}_b{batch}", fn, [xs], rtol))
+
+    return specs
+
+
+def lower_and_write(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args, rtol in build_artifact_specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+
+        # Golden replay data.
+        out = np.asarray(jax.jit(fn)(*args))
+        for i, a in enumerate(args):
+            np.asarray(a, dtype=np.float32).tofile(
+                os.path.join(out_dir, f"{name}.in{i}.f32")
+            )
+        out.astype(np.float32).tofile(os.path.join(out_dir, f"{name}.out.f32"))
+
+        in_shapes = ";".join(
+            ",".join(str(d) for d in np.shape(a)) for a in args
+        )
+        out_shape = ",".join(str(d) for d in out.shape)
+        manifest_lines.append(f"{name}\t{in_shapes}\t{out_shape}\t{rtol}")
+        print(f"  {name}: {len(text)} chars, out {out.shape}")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the original Makefile single-file target.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    ns = ap.parse_args()
+    out_dir = os.path.dirname(ns.out) if ns.out else ns.out_dir
+    lower_and_write(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the two analog-machine datapaths.
+
+``qmatmul``           -- weight-stationary tiled int8 matrix multiply with
+                         32-bit accumulation: the functional model of the
+                         paper's 256x256 digital systolic array (TPU-like).
+``fourier_pointwise`` -- per-output-channel complex multiply-accumulate in
+                         the Fourier plane: the functional model of the
+                         optical 4F system's diagonal eigenvalue operator
+                         (the second, Fourier-plane SLM).
+
+All kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU resource estimates live in DESIGN.md S7
+and EXPERIMENTS.md.
+"""
+
+from .qmatmul import qmatmul, qmatmul_f32
+from .fourier_pointwise import fourier_pointwise
+
+__all__ = ["qmatmul", "qmatmul_f32", "fourier_pointwise"]

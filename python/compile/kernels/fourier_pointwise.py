@@ -1,0 +1,89 @@
+"""Fourier-plane pointwise multiply-accumulate Pallas kernel.
+
+Functional model of the optical 4F system's compute phase (paper Fig. 5b,
+eq. 17): after the first lens has produced U x (the 2-D Fourier transform of
+the activation data, held on the Fourier-plane SLM), the second SLM applies
+the diagonal eigenvalue operator Lambda — an elementwise complex product
+with the Fourier transform of the kernel — and the second lens applies U^T.
+
+This kernel is Lambda, fused with the channel reduction: for every output
+channel ``co``::
+
+    Y_f[co, h, w] = sum_ci X_f[ci, h, w] * K_f[co, ci, h, w]
+
+The lenses (the static U / U^T eigenvector matrices) remain jnp FFTs in the
+Layer-2 model — they are *static optics* in the paper's machine, and XLA's
+FFT is already optimal on CPU.
+
+Complex data is carried as separate real/imaginary planes: Pallas interpret
+mode (and TPU Mosaic) has no complex vector type, and physically the two
+quadratures are measured separately by the interferometric CIS readout
+anyway (paper Sec. V: "the complex value of the field can nonetheless be
+recovered using interferometric methods").
+
+TPU mapping: grid = (Co, H/bh); each step loads an (Ci, bh, W) slab of the
+activation spectrum plus the matching kernel slab into VMEM and reduces over
+Ci with FMA — pure VPU work, no MXU. VMEM per step (defaults, Ci<=64,
+bh=8, W<=129 rfft bins): 4 slabs * 64*8*129*4 B ~ 1.0 MiB << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fourier_kernel(xr_ref, xi_ref, kr_ref, ki_ref, or_ref, oi_ref):
+    """One (co, h-tile) step: complex dot over the input-channel axis."""
+    xr = xr_ref[...]  # (Ci, bh, W)
+    xi = xi_ref[...]
+    kr = kr_ref[0]  # (Ci, bh, W)  — leading block dim of size 1 (this co)
+    ki = ki_ref[0]
+    # (a + ib)(c + id) = (ac - bd) + i(ad + bc), summed over Ci.
+    or_ref[0] = jnp.sum(xr * kr - xi * ki, axis=0)
+    oi_ref[0] = jnp.sum(xr * ki + xi * kr, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h",))
+def fourier_pointwise(
+    xr: jax.Array,
+    xi: jax.Array,
+    kr: jax.Array,
+    ki: jax.Array,
+    *,
+    block_h: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply the Fourier-plane diagonal operator.
+
+    Args:
+      xr, xi: activation spectrum, shape ``(Ci, H, W)`` float32.
+      kr, ki: kernel spectrum, shape ``(Co, Ci, H, W)`` float32.
+      block_h: H-tile size; H must be a multiple of it.
+
+    Returns:
+      (yr, yi): output spectrum, shape ``(Co, H, W)`` float32.
+    """
+    ci, h, w = xr.shape
+    co = kr.shape[0]
+    if kr.shape != (co, ci, h, w):
+        raise ValueError(f"kernel spectrum {kr.shape} != {(co, ci, h, w)}")
+    if xi.shape != xr.shape or ki.shape != kr.shape:
+        raise ValueError("real/imag shape mismatch")
+    if h % block_h:
+        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
+    grid = (co, h // block_h)
+    x_spec = pl.BlockSpec((ci, block_h, w), lambda c, j: (0, j, 0))
+    k_spec = pl.BlockSpec((1, ci, block_h, w), lambda c, j: (c, 0, j, 0))
+    o_spec = pl.BlockSpec((1, block_h, w), lambda c, j: (c, j, 0))
+    out_sd = jax.ShapeDtypeStruct((co, h, w), jnp.float32)
+    return pl.pallas_call(
+        _fourier_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, k_spec, k_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[out_sd, out_sd],
+        interpret=True,
+    )(xr, xi, kr, ki)

@@ -1,0 +1,152 @@
+"""Weight-stationary tiled quantized matmul Pallas kernel.
+
+Functional model of the paper's digital in-memory compute datapath: a
+256x256 weight-stationary systolic array (Google TPUv1-like) computing
+``activations (L, N) @ weights (N, M)`` with 8-bit operands and a 32-bit
+accumulator (the paper, Sec. VII.A: "The activations and weights are 8-bit
+fixed point" with a 32-bit accumulation register per tile).
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the weight-stationary MAC
+plane becomes an MXU-style tiled matmul. The grid is (L/bl, M/bm, N/bn)
+with the contraction dimension innermost so each (bl, bm) output tile stays
+resident in VMEM across the N-sweep — exactly the partial-sum-stationary
+accumulation a systolic column performs. BlockSpec expresses the HBM->VMEM
+schedule the hardware would do with its activation/weight FIFOs.
+
+VMEM footprint per step (defaults bl=bm=bn=128):
+    x tile   128*128*4 B =  64 KiB   (int32-widened int8 activations)
+    w tile   128*128*4 B =  64 KiB
+    acc      128*128*4 B =  64 KiB
+  total ~192 KiB << 16 MiB VMEM; the MXU sees dense 128x128 int8 GEMM tiles
+  (100% utilization modulo edge padding, which the wrapper zero-pads).
+
+interpret=True throughout (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref, *, n_steps: int):
+    """One grid step: o[bl,bm] (+)= x[bl,bn] @ w[bn,bm] in int32.
+
+    The innermost grid dimension walks the contraction axis; on the first
+    step the accumulator tile is zeroed, afterwards it accumulates in place
+    (partial-sum-stationary, like the systolic array's accumulator column).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_n", "block_m"))
+def qmatmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_l: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+) -> jax.Array:
+    """Quantized matmul: int8 ``x (L, N)`` @ int8 ``w (N, M)`` -> int32 (L, M).
+
+    Dimensions must be multiples of the block sizes; callers zero-pad
+    (zero-padding is exact for matmul). See :func:`pad_to_blocks`.
+    """
+    l, n = x.shape
+    n2, m = w.shape
+    if n != n2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if l % block_l or n % block_n or m % block_m:
+        raise ValueError(
+            f"dims {(l, n, m)} not multiples of blocks {(block_l, block_n, block_m)}"
+        )
+    n_steps = n // block_n
+    grid = (l // block_l, m // block_m, n_steps)
+    kernel = functools.partial(_qmatmul_kernel, n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_m), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_l, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, m), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def _f32_matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_n", "block_m"))
+def qmatmul_f32(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_l: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+) -> jax.Array:
+    """f32 variant of the same tiled schedule (used by the exact-path CNN).
+
+    Same BlockSpec schedule as :func:`qmatmul` so the HBM<->VMEM traffic
+    model is identical; only the element type changes (bf16/f32 MXU mode).
+    """
+    l, n = x.shape
+    n2, m = w.shape
+    if n != n2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if l % block_l or n % block_n or m % block_m:
+        raise ValueError(
+            f"dims {(l, n, m)} not multiples of blocks {(block_l, block_n, block_m)}"
+        )
+    grid = (l // block_l, m // block_m, n // block_n)
+    return pl.pallas_call(
+        _f32_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_m), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_l, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, m), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def pad_to_blocks(a: jax.Array, blocks: tuple[int, ...]) -> jax.Array:
+    """Zero-pad each dim of ``a`` up to the next multiple of ``blocks``."""
+    pads = []
+    for dim, b in zip(a.shape, blocks):
+        rem = (-dim) % b
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return a
+    return jnp.pad(a, pads)

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Pallas kernels and the Layer-2 conv paths.
+
+These are the CORE correctness signal: every Pallas kernel and every model
+datapath is pytest-asserted allclose against the functions in this module.
+Nothing here is tiled, quantized-in-kernel, or otherwise clever.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_i32(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 (L,N) @ int8 (N,M) with exact int32 accumulation."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def matmul_f32(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def fourier_pointwise(
+    xr: jax.Array, xi: jax.Array, kr: jax.Array, ki: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Complex pointwise product + channel reduction, via native complex."""
+    x = xr + 1j * xi  # (Ci, H, W)
+    k = kr + 1j * ki  # (Co, Ci, H, W)
+    y = jnp.einsum("chw,ochw->ohw", x, k)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def conv2d_valid(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Direct VALID cross-correlation: x (Ci,H,W), w (Co,Ci,k,k) -> (Co,H',W').
+
+    Matches the convention of deep-learning 'convolution' (no kernel flip),
+    which is what both machine datapaths implement.
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def im2col(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
+    """Toeplitz rearrangement (paper Fig. 2): x (Ci,H,W) -> (L, k*k*Ci).
+
+    L = H' * W' with H' = (H-k)//stride + 1. Column ordering is
+    (ci, dy, dx) fastest-last, matching ``w.reshape(Co, -1).T`` for OIHW
+    weights.
+    """
+    ci, h, w_ = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w_ - k) // stride + 1
+    patches = []
+    for dy in range(k):
+        for dx in range(k):
+            patches.append(
+                jax.lax.slice(
+                    x,
+                    (0, dy, dx),
+                    (ci, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+            )
+    # (k*k, Ci, Ho, Wo) -> (Ho*Wo, Ci*k*k) with (ci, dy, dx) ordering.
+    stack = jnp.stack(patches, axis=0).reshape(k, k, ci, ho, wo)
+    stack = stack.transpose(3, 4, 2, 0, 1)  # (Ho, Wo, Ci, k, k)
+    return stack.reshape(ho * wo, ci * k * k)
+
+
+def conv2d_via_matmul(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Reference conv-as-matmul (the systolic-array algorithm, paper Fig. 2)."""
+    co, ci, k, _ = w.shape
+    cols = im2col(x, k, stride)  # (L, k*k*Ci)
+    wmat = w.reshape(co, ci * k * k).T  # (k*k*Ci, Co)
+    h = (x.shape[1] - k) // stride + 1
+    wdt = (x.shape[2] - k) // stride + 1
+    return (cols @ wmat).T.reshape(co, h, wdt)
+
+
+def conv2d_via_fft(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference conv-as-FFT (the optical 4F algorithm, paper Sec. V).
+
+    Linear VALID cross-correlation through padded circular convolution:
+    correlate(x, w) = ifft( fft(x) * conj(fft(w)) ) with both zero-padded
+    to (H + k - 1).
+    """
+    ci, h, w_ = x.shape
+    co, _, k, _ = w.shape
+    s0, s1 = h + k - 1, w_ + k - 1
+    xf = jnp.fft.rfft2(x, s=(s0, s1))  # (Ci, s0, s1//2+1)
+    kf = jnp.fft.rfft2(w, s=(s0, s1))  # (Co, Ci, ...)
+    yf = jnp.einsum("chw,ochw->ohw", xf, jnp.conj(kf))
+    y = jnp.fft.irfft2(yf, s=(s0, s1))  # circular correlation, (Co, s0, s1)
+    # Non-wrapping (VALID) region of the circular correlation is [0, H-k].
+    return y[:, : h - k + 1, : w_ - k + 1]

@@ -1,0 +1,272 @@
+"""Layer-2 JAX model: the two machine datapaths + the SmallCNN e2e network.
+
+Every convolution can be executed through either machine's functional model:
+
+* :func:`conv2d_systolic` — the digital in-memory path (paper Fig. 2):
+  im2col Toeplitz rearrangement, 8-bit symmetric quantization, and the
+  weight-stationary tiled matmul Pallas kernel with int32 accumulation.
+* :func:`conv2d_fft` — the optical 4F path (paper Figs. 4-5): zero-pad,
+  2-D FFT (the first lens, eigenvector matrix U), B-bit SLM quantization of
+  both spectra (the DACs driving the metasurfaces), the Fourier-plane
+  pointwise Pallas kernel (the diagonal eigenvalue operator Lambda), inverse
+  FFT (the second lens, U^T), VALID crop, and ADC quantization of the
+  measured field.
+
+Both reduce to plain HLO via interpret-mode Pallas, so ``aot.py`` can lower
+any of these graphs to HLO text for the Rust/PJRT runtime. Python never
+runs at serving time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qmatmul, fourier_pointwise
+from .kernels.ref import im2col
+from .quant import (
+    fake_quantize,
+    fake_quantize_per_leading,
+    quantize_per_leading,
+    quantize_symmetric,
+)
+
+ConvPath = Literal["systolic", "fft", "exact"]
+
+
+def _block_for(dim: int, target: int = 128) -> int:
+    """Pick a block size: ``target`` if the padded cost is acceptable."""
+    return min(target, max(8, dim)) if dim < target else target
+
+
+def _pad2(a: jax.Array, bl: int, bn: int) -> jax.Array:
+    p0 = (-a.shape[0]) % bl
+    p1 = (-a.shape[1]) % bn
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def conv2d_systolic(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    bits: int = 8,
+) -> jax.Array:
+    """VALID conv on the weight-stationary systolic machine.
+
+    x: (Ci, H, W) f32; w: (Co, Ci, k, k) f32 -> (Co, H', W') f32.
+
+    Activations get one scale per layer invocation (the accumulator feeds a
+    single requantizer per port); weights get one scale per output channel
+    (scales travel with the weight tile loaded from DRAM).
+    """
+    co, ci, k, _ = w.shape
+    cols = im2col(x, k, stride)  # (L, N) with N = k*k*Ci
+    wmat = w.reshape(co, ci * k * k).T  # (N, M)
+
+    xq, sx = quantize_symmetric(cols, bits)
+    wq_t, sw = quantize_per_leading(w.reshape(co, -1), bits)  # scales per Co
+    wq = wq_t.T  # (N, M) codes
+
+    bl, bn, bm = (
+        _block_for(xq.shape[0]),
+        _block_for(xq.shape[1]),
+        _block_for(wq.shape[1]),
+    )
+    acc = qmatmul(
+        jnp.astype(_pad2(xq, bl, bn), jnp.int32),
+        jnp.astype(_pad2(wq, bn, bm), jnp.int32),
+        block_l=bl,
+        block_n=bn,
+        block_m=bm,
+    )[: xq.shape[0], : wq.shape[1]]
+
+    y = acc.astype(jnp.float32) * sx * sw[None, :]  # dequantize (L, M)
+    ho = (x.shape[1] - k) // stride + 1
+    wo = (x.shape[2] - k) // stride + 1
+    return y.T.reshape(co, ho, wo)
+
+
+def _fft_block_h(h: int, target: int = 8) -> int:
+    """Largest divisor of ``h`` that is <= target (grid must tile H exactly)."""
+    for b in range(min(target, h), 0, -1):
+        if h % b == 0:
+            return b
+    return 1
+
+
+def conv2d_fft(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bits: int | None = 8,
+    adc_bits: int | None = None,
+) -> jax.Array:
+    """VALID conv on the reflection-mode optical 4F machine (stride 1).
+
+    x: (Ci, H, W) f32; w: (Co, Ci, k, k) f32 -> (Co, H-k+1, W-k+1) f32.
+
+    ``bits`` models the SLM/DAC precision applied to both spectra (the
+    loading phase writes the activation spectrum to the Fourier-plane SLM;
+    the compute phase writes kernels to the object-plane SLM).
+    ``adc_bits`` models the CIS readout. ``None`` disables either quantizer
+    (ideal converters), which the tests use to isolate kernel correctness.
+    """
+    ci, h, w_ = x.shape
+    co, _, k, _ = w.shape
+    s0, s1 = h + k - 1, w_ + k - 1
+
+    xf = jnp.fft.rfft2(x, s=(s0, s1))  # phase 1: optical FFT of activations
+    kf = jnp.conj(jnp.fft.rfft2(w, s=(s0, s1)))  # kernel spectra (correlation)
+
+    # SLM write precision: independent real/imag quadratures, one scale per
+    # activation load and per kernel tile (each tile normalized to the
+    # modulator dynamic range).
+    xr = fake_quantize(jnp.real(xf).astype(jnp.float32), bits)
+    xi = fake_quantize(jnp.imag(xf).astype(jnp.float32), bits)
+    kr = fake_quantize_per_leading(jnp.real(kf).astype(jnp.float32), bits)
+    ki = fake_quantize_per_leading(jnp.imag(kf).astype(jnp.float32), bits)
+
+    yr, yi = fourier_pointwise(xr, xi, kr, ki, block_h=_fft_block_h(s0))
+
+    y = jnp.fft.irfft2(yr + 1j * yi, s=(s0, s1))  # second lens: U^T
+    y = y[:, : h - k + 1, : w_ - k + 1]  # non-wrapping VALID region
+    return fake_quantize(y.astype(jnp.float32), adc_bits)
+
+
+def conv2d_fft_tiled(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bits: int | None = None,
+) -> jax.Array:
+    """VALID conv via the paper's Fig. 4 parallel-channel tiling.
+
+    All Cᵢ input channels are tiled onto ONE object-plane canvas (stacked
+    along the rows with n-row spacing); for each output channel the
+    matching kernels are tiled at the same offsets. A single Fourier
+    transform of the canvas and one pointwise product then produce the
+    *channel-summed* convolution in the canvas' top-left n-k+1 window —
+    "one complete output channel is produced per measurement" — because
+    same-channel correlation terms land at the common window while all
+    cross-channel terms land at row offsets >= n-k+1 (and the circular
+    wraparound stays outside too, since H = Ci*n + k - 1).
+
+    This is the mechanism that makes eq. (22)'s C' channel packing work;
+    numerically verified against :func:`conv2d_exact` in the tests.
+    """
+    ci, n, n2 = x.shape
+    assert n == n2, "square inputs"
+    co, _, k, _ = w.shape
+    h_canvas = ci * n + k - 1
+    w_canvas = n + k - 1
+
+    # Object-plane canvas: channel j occupies rows [j*n, j*n + n).
+    canvas = jnp.zeros((h_canvas, w_canvas), x.dtype)
+    for j in range(ci):
+        canvas = canvas.at[j * n : (j + 1) * n, :n].set(x[j])
+    # Kernel canvases: kernel (o, j) at rows [j*n, j*n + k).
+    kern = jnp.zeros((co, h_canvas, w_canvas), x.dtype)
+    for j in range(ci):
+        kern = kern.at[:, j * n : j * n + k, :k].set(w[:, j])
+
+    xf = jnp.fft.rfft2(canvas)  # one optical FFT for ALL channels
+    kf = jnp.conj(jnp.fft.rfft2(kern))  # (Co, H, Wf)
+
+    xr = fake_quantize(jnp.real(xf).astype(jnp.float32), bits)[None]
+    xi = fake_quantize(jnp.imag(xf).astype(jnp.float32), bits)[None]
+    kr = fake_quantize_per_leading(jnp.real(kf).astype(jnp.float32), bits)[:, None]
+    ki = fake_quantize_per_leading(jnp.imag(kf).astype(jnp.float32), bits)[:, None]
+
+    yr, yi = fourier_pointwise(xr, xi, kr, ki, block_h=_fft_block_h(h_canvas))
+    y = jnp.fft.irfft2(yr + 1j * yi, s=(h_canvas, w_canvas))
+    return y[:, : n - k + 1, : n - k + 1]
+
+
+def conv2d_exact(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """f32 oracle conv (XLA native) — the 'infinite-precision' datapath."""
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv2d(
+    x: jax.Array, w: jax.Array, *, path: ConvPath, stride: int = 1
+) -> jax.Array:
+    if path == "systolic":
+        return conv2d_systolic(x, w, stride=stride)
+    if path == "fft":
+        assert stride == 1, "4F machine computes stride-1 convs"
+        return conv2d_fft(x, w)
+    return conv2d_exact(x, w, stride=stride)
+
+
+def avg_pool2(x: jax.Array) -> jax.Array:
+    """2x2 mean pool over (C, H, W), truncating odd edges."""
+    c, h, w = x.shape
+    x = x[:, : h - h % 2, : w - w % 2]
+    return x.reshape(c, h // 2, 2, w // 2, 2).mean(axis=(2, 4))
+
+
+# --------------------------------------------------------------------------
+# SmallCNN: the end-to-end workload (examples/e2e_inference.rs).
+# --------------------------------------------------------------------------
+
+SMALLCNN_CHANNELS = (3, 8, 16, 32, 32)
+SMALLCNN_K = 3
+SMALLCNN_CLASSES = 10
+SMALLCNN_INPUT = (3, 64, 64)
+
+
+def smallcnn_init(seed: int = 0) -> dict[str, jax.Array]:
+    """Deterministic He-initialized parameters (fixed across python/rust)."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jax.Array] = {}
+    chans = SMALLCNN_CHANNELS
+    for i, (ci, co) in enumerate(zip(chans[:-1], chans[1:])):
+        key, k1 = jax.random.split(key)
+        fan_in = ci * SMALLCNN_K * SMALLCNN_K
+        params[f"conv{i}"] = (
+            jax.random.normal(k1, (co, ci, SMALLCNN_K, SMALLCNN_K))
+            * jnp.sqrt(2.0 / fan_in)
+        ).astype(jnp.float32)
+    key, k1 = jax.random.split(key)
+    params["head"] = (
+        jax.random.normal(k1, (chans[-1], SMALLCNN_CLASSES))
+        * jnp.sqrt(1.0 / chans[-1])
+    ).astype(jnp.float32)
+    return params
+
+
+def smallcnn_forward(
+    params: dict[str, jax.Array], x: jax.Array, *, path: ConvPath
+) -> jax.Array:
+    """x (3, 64, 64) -> logits (10,). Pools after the first three convs."""
+    n_convs = len(SMALLCNN_CHANNELS) - 1
+    for i in range(n_convs):
+        x = conv2d(x, params[f"conv{i}"], path=path)
+        x = jax.nn.relu(x)
+        if i < 3:
+            x = avg_pool2(x)
+    feat = x.mean(axis=(1, 2))  # global average pool -> (C,)
+    return feat @ params["head"]
+
+
+def smallcnn(x: jax.Array, *, path: ConvPath, seed: int = 0) -> jax.Array:
+    """Self-contained forward with baked parameters (for AOT lowering)."""
+    return smallcnn_forward(smallcnn_init(seed), x, path=path)
+
+
+@functools.partial(jax.jit, static_argnames=("path",))
+def smallcnn_jit(x: jax.Array, path: ConvPath = "exact") -> jax.Array:
+    return smallcnn(x, path=path)

@@ -1,0 +1,71 @@
+"""Quantization helpers emulating the machines' converter precision.
+
+The paper's machines move data through B-bit converters: the systolic array
+uses 8-bit fixed-point operands (Sec. VII.A), the analog machines pass
+every input through a DAC and every output through an ADC whose energy is
+set by the bit precision (eqs. A3/A4, the 2^{2B} laws). These helpers are
+the *numerical* counterpart of those converters: symmetric uniform
+quantization to B bits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    """Largest positive code of a signed symmetric B-bit quantizer (e.g. 127)."""
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_symmetric(
+    x: jax.Array, bits: int = 8
+) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric quantization.
+
+    Returns ``(codes, scale)`` with ``codes`` integer-valued (kept in int32
+    for headroom; the systolic datapath consumes them as int8-range values)
+    and ``x ~= codes * scale``.
+    """
+    m = qmax(bits)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / m
+    codes = jnp.clip(jnp.round(x / scale), -m, m).astype(jnp.int32)
+    return codes, scale
+
+
+def quantize_per_leading(
+    x: jax.Array, bits: int = 8
+) -> tuple[jax.Array, jax.Array]:
+    """Symmetric quantization with one scale per leading-axis slice.
+
+    Used for weight tensors (one scale per output channel) — the systolic
+    array reloads scales with each weight tile, and each kernel tile written
+    to the Fourier-plane SLM is independently normalized to the modulator's
+    dynamic range.
+    """
+    m = qmax(bits)
+    flat = x.reshape(x.shape[0], -1)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-30) / m
+    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    codes = jnp.clip(
+        jnp.round(x / scale.reshape(bshape)), -m, m
+    ).astype(jnp.int32)
+    return codes, scale
+
+
+def fake_quantize(x: jax.Array, bits: int | None) -> jax.Array:
+    """Quantize-dequantize (per tensor). ``bits=None`` is the identity."""
+    if bits is None:
+        return x
+    codes, scale = quantize_symmetric(x, bits)
+    return codes.astype(x.dtype) * scale
+
+
+def fake_quantize_per_leading(x: jax.Array, bits: int | None) -> jax.Array:
+    """Quantize-dequantize with per-leading-slice scales."""
+    if bits is None:
+        return x
+    codes, scale = quantize_per_leading(x, bits)
+    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    return codes.astype(x.dtype) * scale.reshape(bshape)

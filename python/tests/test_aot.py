@@ -1,0 +1,77 @@
+"""AOT compile-path tests: artifact specs, HLO-text lowering, batching."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_specs_unique_and_wellformed():
+    specs = aot.build_artifact_specs()
+    names = [s[0] for s in specs]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    assert len(specs) >= 10
+    for name, fn, args, rtol in specs:
+        assert callable(fn)
+        assert 0 < rtol < 1
+        assert all(isinstance(a, jax.Array) for a in args)
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn = lambda x: (x * 2.0 + 1.0,)
+    lowered = jax.jit(fn).lower(jnp.zeros((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    # The rust loader's parser requires classic HLO text structure.
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_qgemm_roundtrip_close_to_f32():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 256)).astype(np.float32))
+    y = aot.qgemm(x, w)
+    ref = x @ w
+    err = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+    assert err < 0.05, err
+
+
+def test_batched_vectorize_and_map_agree():
+    rng = np.random.default_rng(4)
+    xs = jnp.asarray(rng.standard_normal((3, *model.SMALLCNN_INPUT)).astype(np.float32))
+    import functools
+
+    fn = functools.partial(model.smallcnn, path="exact")
+    via_map = aot._batched(fn, 3, vectorize=False)(xs)
+    via_vmap = aot._batched(fn, 3, vectorize=True)(xs)
+    np.testing.assert_allclose(
+        np.asarray(via_map), np.asarray(via_vmap), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_artifact_files():
+    art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(art, "manifest.tsv")) as f:
+        lines = [l.strip().split("\t") for l in f if l.strip()]
+    assert len(lines) >= 10
+    for name, in_shapes, out_shape, rtol in lines:
+        assert os.path.exists(os.path.join(art, f"{name}.hlo.txt")), name
+        n_inputs = len(in_shapes.split(";"))
+        for i in range(n_inputs):
+            p = os.path.join(art, f"{name}.in{i}.f32")
+            assert os.path.exists(p), p
+            shape = [int(d) for d in in_shapes.split(";")[i].split(",")]
+            assert os.path.getsize(p) == 4 * int(np.prod(shape))
+        out_p = os.path.join(art, f"{name}.out.f32")
+        out_elems = int(np.prod([int(d) for d in out_shape.split(",")]))
+        assert os.path.getsize(out_p) == 4 * out_elems
+        float(rtol)

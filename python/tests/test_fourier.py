@@ -1,0 +1,109 @@
+"""Layer-1 correctness: fourier_pointwise Pallas kernel vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fourier_pointwise
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _check(xr, xi, kr, ki, block_h):
+    yr, yi = fourier_pointwise(xr, xi, kr, ki, block_h=block_h)
+    er, ei = ref.fourier_pointwise(xr, xi, kr, ki)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(er), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yi), np.asarray(ei), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    ci=st.integers(1, 8),
+    co=st.integers(1, 8),
+    hb=st.integers(1, 4),
+    w=st.integers(1, 24),
+    block_h=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_fourier_pointwise_vs_oracle(ci, co, hb, w, block_h, seed):
+    rng = np.random.default_rng(seed)
+    h = hb * block_h
+    xr, xi = _rand(rng, (ci, h, w)), _rand(rng, (ci, h, w))
+    kr, ki = _rand(rng, (co, ci, h, w)), _rand(rng, (co, ci, h, w))
+    _check(xr, xi, kr, ki, block_h)
+
+
+def test_single_channel_is_elementwise_product():
+    rng = np.random.default_rng(3)
+    xr, xi = _rand(rng, (1, 4, 5)), _rand(rng, (1, 4, 5))
+    kr, ki = _rand(rng, (1, 1, 4, 5)), _rand(rng, (1, 1, 4, 5))
+    yr, yi = fourier_pointwise(xr, xi, kr, ki, block_h=4)
+    np.testing.assert_allclose(
+        np.asarray(yr[0]), np.asarray(xr[0] * kr[0, 0] - xi[0] * ki[0, 0]), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(yi[0]), np.asarray(xr[0] * ki[0, 0] + xi[0] * kr[0, 0]), rtol=1e-5
+    )
+
+
+def test_real_only_inputs_stay_consistent():
+    """Purely real activation x purely real kernel -> output = plain product sum."""
+    rng = np.random.default_rng(4)
+    xr = _rand(rng, (3, 8, 6))
+    z = jnp.zeros_like(xr)
+    kr = _rand(rng, (2, 3, 8, 6))
+    kz = jnp.zeros_like(kr)
+    yr, yi = fourier_pointwise(xr, z, kr, kz, block_h=8)
+    np.testing.assert_allclose(
+        np.asarray(yr), np.asarray(jnp.einsum("chw,ochw->ohw", xr, kr)), rtol=1e-4
+    )
+    np.testing.assert_allclose(np.asarray(yi), 0.0, atol=1e-6)
+
+
+def test_imaginary_rotation():
+    """Multiplying by i (kr=0, ki=1) swaps and negates quadratures."""
+    rng = np.random.default_rng(5)
+    xr, xi = _rand(rng, (1, 4, 4)), _rand(rng, (1, 4, 4))
+    kr = jnp.zeros((1, 1, 4, 4), jnp.float32)
+    ki = jnp.ones((1, 1, 4, 4), jnp.float32)
+    yr, yi = fourier_pointwise(xr, xi, kr, ki, block_h=4)
+    np.testing.assert_allclose(np.asarray(yr[0]), np.asarray(-xi[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(yi[0]), np.asarray(xr[0]), rtol=1e-6)
+
+
+def test_linearity_in_kernel():
+    rng = np.random.default_rng(6)
+    xr, xi = _rand(rng, (2, 4, 4)), _rand(rng, (2, 4, 4))
+    kr1, ki1 = _rand(rng, (2, 2, 4, 4)), _rand(rng, (2, 2, 4, 4))
+    kr2, ki2 = _rand(rng, (2, 2, 4, 4)), _rand(rng, (2, 2, 4, 4))
+    y1 = fourier_pointwise(xr, xi, kr1, ki1, block_h=4)
+    y2 = fourier_pointwise(xr, xi, kr2, ki2, block_h=4)
+    ysum = fourier_pointwise(xr, xi, kr1 + kr2, ki1 + ki2, block_h=4)
+    np.testing.assert_allclose(
+        np.asarray(ysum[0]), np.asarray(y1[0] + y2[0]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(ysum[1]), np.asarray(y1[1] + y2[1]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_shape_mismatch_raises():
+    z3 = jnp.zeros((2, 4, 4), jnp.float32)
+    z4 = jnp.zeros((3, 2, 4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="real/imag"):
+        fourier_pointwise(z3, jnp.zeros((2, 4, 5)), z4, z4, block_h=4)
+    with pytest.raises(ValueError, match="kernel spectrum"):
+        fourier_pointwise(z3, z3, jnp.zeros((3, 1, 4, 4)), z4, block_h=4)
+
+
+def test_bad_block_raises():
+    z3 = jnp.zeros((1, 5, 4), jnp.float32)
+    z4 = jnp.zeros((1, 1, 5, 4), jnp.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        fourier_pointwise(z3, z3, z4, z4, block_h=4)

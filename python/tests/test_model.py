@@ -1,0 +1,284 @@
+"""Layer-2 correctness: both machine conv datapaths vs the exact oracle,
+quantization behaviour, and the SmallCNN end-to-end forward."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.quant import (
+    fake_quantize,
+    fake_quantize_per_leading,
+    qmax,
+    quantize_per_leading,
+    quantize_symmetric,
+)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _rel(a, b):
+    denom = max(float(jnp.max(jnp.abs(b))), 1e-12)
+    return float(jnp.max(jnp.abs(a - b))) / denom
+
+
+# ---------------------------------------------------------------- quant --
+
+
+@given(bits=st.integers(2, 12), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_quantize_symmetric_bounds_and_error(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (32, 17))
+    codes, scale = quantize_symmetric(x, bits)
+    m = qmax(bits)
+    assert int(jnp.max(jnp.abs(codes))) <= m
+    # Round-trip error bounded by half an LSB.
+    err = jnp.max(jnp.abs(codes.astype(jnp.float32) * scale - x))
+    assert float(err) <= float(scale) * 0.5 + 1e-7
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_quantize_per_leading_scales_independent(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (4, 9))
+    # Scale one slice hugely; other slices' quantization must be unaffected.
+    x = x.at[0].mul(1000.0)
+    _, scales = quantize_per_leading(x, 8)
+    assert scales.shape == (4,)
+    assert float(scales[0]) > 100 * float(scales[1])
+    rt = fake_quantize_per_leading(x, 8)
+    assert _rel(rt[1:], x[1:]) < 1e-2
+
+
+def test_fake_quantize_none_is_identity():
+    x = jnp.linspace(-1, 1, 7)
+    assert jnp.array_equal(fake_quantize(x, None), x)
+
+
+def test_fake_quantize_monotone_in_bits():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (64,))
+    errs = [float(jnp.max(jnp.abs(fake_quantize(x, b) - x))) for b in (4, 6, 8, 10)]
+    assert errs == sorted(errs, reverse=True)
+
+
+# ------------------------------------------------------------ ref cross --
+
+
+@given(
+    ci=st.integers(1, 4),
+    co=st.integers(1, 4),
+    n=st.integers(5, 14),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ref_matmul_conv_equals_direct(ci, co, n, k, seed):
+    if k > n:
+        return
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (ci, n, n)), _rand(rng, (co, ci, k, k))
+    a = ref.conv2d_via_matmul(x, w)
+    b = ref.conv2d_valid(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    ci=st.integers(1, 4),
+    co=st.integers(1, 3),
+    n=st.integers(5, 14),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ref_fft_conv_equals_direct(ci, co, n, k, seed):
+    if k > n:
+        return
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (ci, n, n)), _rand(rng, (co, ci, k, k))
+    a = ref.conv2d_via_fft(x, w)
+    b = ref.conv2d_valid(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+@given(
+    n=st.integers(4, 10),
+    k=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ref_strided_matmul_conv(n, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (2, n, n)), _rand(rng, (3, 2, k, k))
+    a = ref.conv2d_via_matmul(x, w, stride)
+    b = ref.conv2d_valid(x, w, stride)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- machine paths --
+
+
+@given(
+    ci=st.integers(1, 4),
+    co=st.integers(1, 4),
+    n=st.integers(6, 16),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_conv2d_systolic_8bit_close_to_exact(ci, co, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (ci, n, n)), _rand(rng, (co, ci, k, k))
+    got = model.conv2d_systolic(x, w, bits=8)
+    want = model.conv2d_exact(x, w)
+    assert _rel(got, want) < 0.05
+
+
+@given(
+    ci=st.integers(1, 3),
+    co=st.integers(1, 3),
+    n=st.integers(6, 14),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_conv2d_fft_ideal_matches_exact(ci, co, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (ci, n, n)), _rand(rng, (co, ci, k, k))
+    got = model.conv2d_fft(x, w, bits=None)
+    want = model.conv2d_exact(x, w)
+    assert _rel(got, want) < 1e-4
+
+
+def test_conv2d_fft_8bit_close_to_exact():
+    rng = np.random.default_rng(21)
+    x, w = _rand(rng, (3, 20, 20)), _rand(rng, (5, 3, 3, 3))
+    got = model.conv2d_fft(x, w, bits=8)
+    want = model.conv2d_exact(x, w)
+    assert _rel(got, want) < 0.05
+
+
+def test_conv2d_fft_adc_quantization_applies():
+    rng = np.random.default_rng(22)
+    x, w = _rand(rng, (2, 12, 12)), _rand(rng, (2, 2, 3, 3))
+    ideal = model.conv2d_fft(x, w, bits=None, adc_bits=None)
+    coarse = model.conv2d_fft(x, w, bits=None, adc_bits=4)
+    assert _rel(coarse, ideal) > 1e-4  # ADC must actually quantize
+    assert _rel(coarse, ideal) < 0.2
+
+
+def test_conv2d_systolic_more_bits_more_accurate():
+    rng = np.random.default_rng(23)
+    x, w = _rand(rng, (3, 16, 16)), _rand(rng, (4, 3, 3, 3))
+    want = model.conv2d_exact(x, w)
+    e4 = _rel(model.conv2d_systolic(x, w, bits=4), want)
+    e8 = _rel(model.conv2d_systolic(x, w, bits=8), want)
+    assert e8 < e4
+
+
+def test_conv2d_systolic_stride2():
+    rng = np.random.default_rng(24)
+    x, w = _rand(rng, (3, 17, 17)), _rand(rng, (4, 3, 3, 3))
+    got = model.conv2d_systolic(x, w, stride=2, bits=8)
+    want = model.conv2d_exact(x, w, stride=2)
+    assert got.shape == want.shape == (4, 8, 8)
+    assert _rel(got, want) < 0.05
+
+
+def test_avg_pool2():
+    x = jnp.arange(2 * 4 * 4, dtype=jnp.float32).reshape(2, 4, 4)
+    p = model.avg_pool2(x)
+    assert p.shape == (2, 2, 2)
+    np.testing.assert_allclose(float(p[0, 0, 0]), float(x[0, :2, :2].mean()))
+
+
+def test_avg_pool2_odd_edges_truncated():
+    x = jnp.ones((1, 5, 7), jnp.float32)
+    assert model.avg_pool2(x).shape == (1, 2, 3)
+
+
+# ---------------------------------------------------------------- e2e ----
+
+
+def test_smallcnn_paths_agree():
+    rng = np.random.default_rng(30)
+    x = _rand(rng, model.SMALLCNN_INPUT)
+    exact = model.smallcnn_jit(x, "exact")
+    sys8 = model.smallcnn_jit(x, "systolic")
+    fft8 = model.smallcnn_jit(x, "fft")
+    assert exact.shape == (model.SMALLCNN_CLASSES,)
+    scale = float(jnp.max(jnp.abs(exact)))
+    assert float(jnp.max(jnp.abs(sys8 - exact))) / scale < 0.1
+    assert float(jnp.max(jnp.abs(fft8 - exact))) / scale < 0.1
+    # Quantized paths must usually preserve the argmax decision.
+    assert int(jnp.argmax(sys8)) == int(jnp.argmax(exact))
+    assert int(jnp.argmax(fft8)) == int(jnp.argmax(exact))
+
+
+def test_smallcnn_deterministic_params():
+    p1 = model.smallcnn_init(0)
+    p2 = model.smallcnn_init(0)
+    for k in p1:
+        assert jnp.array_equal(p1[k], p2[k])
+    p3 = model.smallcnn_init(1)
+    assert not jnp.array_equal(p1["conv0"], p3["conv0"])
+
+
+def test_smallcnn_param_shapes():
+    p = model.smallcnn_init()
+    chans = model.SMALLCNN_CHANNELS
+    for i, (ci, co) in enumerate(zip(chans[:-1], chans[1:])):
+        assert p[f"conv{i}"].shape == (co, ci, model.SMALLCNN_K, model.SMALLCNN_K)
+    assert p["head"].shape == (chans[-1], model.SMALLCNN_CLASSES)
+
+
+def test_conv2d_dispatch():
+    rng = np.random.default_rng(31)
+    x, w = _rand(rng, (2, 10, 10)), _rand(rng, (2, 2, 3, 3))
+    for path in ("exact", "systolic", "fft"):
+        y = model.conv2d(x, w, path=path)
+        assert y.shape == (2, 8, 8)
+    with pytest.raises(AssertionError):
+        model.conv2d(x, w, path="fft", stride=2)
+
+
+# ----------------------------------------------- Fig. 4 channel tiling --
+
+
+@given(
+    ci=st.integers(1, 4),
+    co=st.integers(1, 4),
+    n=st.integers(5, 12),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_conv2d_fft_tiled_matches_exact(ci, co, n, k, seed):
+    """Fig. 4's parallel-channel tiling: one FFT for all input channels,
+    one measurement per output channel, cross-terms guaranteed outside the
+    readout window."""
+    if k > n:
+        return
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (ci, n, n)), _rand(rng, (co, ci, k, k))
+    got = model.conv2d_fft_tiled(x, w, bits=None)
+    want = model.conv2d_exact(x, w)
+    assert got.shape == want.shape
+    assert _rel(got, want) < 1e-4
+
+
+def test_conv2d_fft_tiled_quantized():
+    rng = np.random.default_rng(42)
+    x, w = _rand(rng, (3, 10, 10)), _rand(rng, (4, 3, 3, 3))
+    got = model.conv2d_fft_tiled(x, w, bits=8)
+    want = model.conv2d_exact(x, w)
+    assert _rel(got, want) < 0.1

@@ -1,0 +1,123 @@
+"""Layer-1 correctness: qmatmul Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes; int accumulation must be EXACT
+(bit-identical to the oracle), the f32 variant allclose.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul, qmatmul_f32
+from compile.kernels import ref
+from compile.kernels.qmatmul import pad_to_blocks
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand_codes(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, shape).astype(np.int32))
+
+
+@given(
+    lb=st.integers(1, 3),
+    nb=st.integers(1, 3),
+    mb=st.integers(1, 3),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_qmatmul_exact_vs_oracle(lb, nb, mb, block, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_codes(rng, (lb * block, nb * block))
+    w = _rand_codes(rng, (nb * block, mb * block))
+    got = qmatmul(x, w, block_l=block, block_n=block, block_m=block)
+    want = ref.matmul_i32(x, w)
+    assert got.dtype == jnp.int32
+    assert jnp.array_equal(got, want), "int32 accumulation must be exact"
+
+
+@given(
+    lb=st.integers(1, 2),
+    nb=st.integers(1, 3),
+    mb=st.integers(1, 2),
+    block=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_qmatmul_f32_vs_oracle(lb, nb, mb, block, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((lb * block, nb * block)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((nb * block, mb * block)).astype(np.float32))
+    got = qmatmul_f32(x, w, block_l=block, block_n=block, block_m=block)
+    want = ref.matmul_f32(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_rectangular_blocks():
+    rng = np.random.default_rng(7)
+    x = _rand_codes(rng, (64, 96))
+    w = _rand_codes(rng, (96, 32))
+    got = qmatmul(x, w, block_l=16, block_n=32, block_m=8)
+    assert jnp.array_equal(got, ref.matmul_i32(x, w))
+
+
+def test_single_block():
+    rng = np.random.default_rng(8)
+    x = _rand_codes(rng, (8, 8))
+    w = _rand_codes(rng, (8, 8))
+    got = qmatmul(x, w, block_l=8, block_n=8, block_m=8)
+    assert jnp.array_equal(got, ref.matmul_i32(x, w))
+
+
+def test_extreme_codes_no_overflow():
+    """Worst-case +-127 codes over a deep contraction still fit int32."""
+    n = 256
+    x = jnp.full((8, n), 127, jnp.int32)
+    w = jnp.full((n, 8), 127, jnp.int32)
+    got = qmatmul(x, w, block_l=8, block_n=32, block_m=8)
+    assert int(got[0, 0]) == 127 * 127 * n
+
+
+def test_zero_inputs():
+    x = jnp.zeros((16, 16), jnp.int32)
+    w = jnp.zeros((16, 16), jnp.int32)
+    got = qmatmul(x, w, block_l=8, block_n=8, block_m=8)
+    assert jnp.array_equal(got, jnp.zeros((16, 16), jnp.int32))
+
+
+def test_identity_weights():
+    rng = np.random.default_rng(9)
+    x = _rand_codes(rng, (32, 32))
+    w = jnp.eye(32, dtype=jnp.int32)
+    got = qmatmul(x, w, block_l=8, block_n=8, block_m=8)
+    assert jnp.array_equal(got, x)
+
+
+def test_shape_mismatch_raises():
+    x = jnp.zeros((8, 16), jnp.int32)
+    w = jnp.zeros((8, 8), jnp.int32)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        qmatmul(x, w, block_l=8, block_n=8, block_m=8)
+
+
+def test_non_multiple_raises():
+    x = jnp.zeros((9, 8), jnp.int32)
+    w = jnp.zeros((8, 8), jnp.int32)
+    with pytest.raises(ValueError, match="not multiples"):
+        qmatmul(x, w, block_l=8, block_n=8, block_m=8)
+
+
+@given(
+    l=st.integers(1, 40),
+    n=st.integers(1, 40),
+    block=st.sampled_from([8, 16]),
+)
+@settings(**SETTINGS)
+def test_pad_to_blocks_invariants(l, n, block):
+    a = jnp.ones((l, n), jnp.float32)
+    p = pad_to_blocks(a, (block, block))
+    assert p.shape[0] % block == 0 and p.shape[1] % block == 0
+    assert p.shape[0] - l < block and p.shape[1] - n < block
+    assert float(p.sum()) == float(a.sum()), "padding must be zeros"

@@ -1,0 +1,214 @@
+//! `cargo bench` — regenerates every table and figure of the paper
+//! (printing the same rows/series the paper reports) and times each
+//! generator plus the runtime/serving hot paths.
+//!
+//! Custom harness (the offline build has no criterion): each benchmark
+//! runs a warm-up pass then `iters` timed passes and reports min / median
+//! / mean wall time. Timing output doubles as the §Perf baseline log in
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use aimc::coordinator::server::{Server, ServerConfig};
+use aimc::coordinator::{ConvPath, IMAGE_ELEMS};
+use aimc::networks::{yolov3::yolov3, zoo};
+use aimc::report;
+use aimc::runtime::Engine;
+use aimc::simulator::{optical4f, systolic};
+use aimc::util::rng::Rng;
+
+/// Time `f` over `iters` iterations (after one warm-up); returns samples.
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> Vec<Duration> {
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples
+}
+
+fn report_time(name: &str, samples: &[Duration], unit_work: Option<(f64, &str)>) {
+    let mut us: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = us[0];
+    let med = us[us.len() / 2];
+    let mean = us.iter().sum::<f64>() / us.len() as f64;
+    print!("bench {name:38} min {min:>10.1} µs   med {med:>10.1} µs   mean {mean:>10.1} µs");
+    if let Some((per, what)) = unit_work {
+        print!("   ({:.2} {what})", per / (med / 1e6));
+    }
+    println!();
+}
+
+fn main() {
+    // `cargo bench -- <filter>` support (cargo injects flags like
+    // `--bench`; ignore anything starting with '-').
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+    let input = 1000;
+
+    println!("=== aimc paper benches (tables + figures + hot paths) ===\n");
+
+    // ---- Tables I–IV ------------------------------------------------------
+    if run("table1") {
+        println!("{}", report::table1(input).render());
+        report_time("table1 (zoo stats ×8 nets)", &time_it(20, || {
+            let _ = report::table1(input);
+        }), None);
+    }
+    if run("table2") {
+        println!("{}", report::table2(input).render());
+        report_time("table2 (matmul dims)", &time_it(20, || {
+            let _ = report::table2(input);
+        }), None);
+    }
+    if run("table3") {
+        println!("{}", report::table3(input).render());
+        report_time("table3 (4F dims)", &time_it(20, || {
+            let _ = report::table3(input);
+        }), None);
+    }
+    if run("table4") {
+        println!("{}", report::table4().render());
+        report_time("table4 (energy constants)", &time_it(100, || {
+            let _ = report::table4();
+        }), None);
+    }
+
+    // ---- Figures 6–10 -------------------------------------------------------
+    if run("fig6") {
+        println!("{}", report::fig6().render());
+        report_time("fig6 (4 models × 13 nodes)", &time_it(20, || {
+            let _ = report::fig6();
+        }), None);
+    }
+    if run("fig7") {
+        println!("{}", report::fig7().render());
+        report_time("fig7 (breakdown @32nm)", &time_it(50, || {
+            let _ = report::fig7();
+        }), None);
+    }
+    if run("fig8") {
+        println!("{}", report::fig8(None, input).render());
+        report_time("fig8 (systolic sim ×13 nodes)", &time_it(10, || {
+            let _ = report::fig8(None, input);
+        }), None);
+    }
+    if run("fig9") {
+        println!("{}", report::fig9(None, input).render());
+        report_time("fig9 (optical sim ×13 nodes)", &time_it(10, || {
+            let _ = report::fig9(None, input);
+        }), None);
+    }
+    if run("fig10") {
+        println!("{}", report::fig10(Some("VGG19"), input).render());
+        println!("{}", report::fig10(Some("YOLOv3"), input).render());
+        report_time("fig10 (2 nets × 13 nodes)", &time_it(10, || {
+            let _ = report::fig10(Some("VGG19"), input);
+            let _ = report::fig10(Some("YOLOv3"), input);
+        }), None);
+    }
+
+    // ---- Simulator hot paths ------------------------------------------------
+    if run("sim") {
+        let net = yolov3(input);
+        let scfg = systolic::SystolicConfig::default();
+        let ocfg = optical4f::Optical4FConfig::default();
+        report_time(
+            "sim: systolic YOLOv3 (1 net·node)",
+            &time_it(50, || {
+                let _ = systolic::simulate_network(&scfg, &net, 28.0);
+            }),
+            Some((net.num_layers() as f64, "layers/s")),
+        );
+        report_time(
+            "sim: optical4f YOLOv3 (1 net·node)",
+            &time_it(50, || {
+                let _ = optical4f::simulate_network(&ocfg, &net, 28.0);
+            }),
+            Some((net.num_layers() as f64, "layers/s")),
+        );
+        report_time("zoo build (8 networks)", &time_it(50, || {
+            let _ = zoo(input);
+        }), None);
+        // Full evaluation-section sweep: every net × node × both machines.
+        let nets = zoo(input);
+        report_time("sweep: 8 nets × 13 nodes × 2 machines", &time_it(5, || {
+            for net in &nets {
+                for node in aimc::technode::NODES {
+                    let _ = systolic::simulate_network(&scfg, net, node.nm);
+                    let _ = optical4f::simulate_network(&ocfg, net, node.nm);
+                }
+            }
+        }), None);
+    }
+
+    // ---- Runtime / serving hot paths -----------------------------------------
+    if run("runtime") {
+        match Engine::discover() {
+            Ok(engine) => {
+                let mut rng = Rng::new(1);
+                let img = rng.normal_vec(IMAGE_ELEMS);
+                engine.warm_up(&["smallcnn_exact", "smallcnn_exact_b8"]).unwrap();
+                report_time(
+                    "runtime: smallcnn_exact b1",
+                    &time_it(30, || {
+                        let _ = engine.execute("smallcnn_exact", &[img.clone()]).unwrap();
+                    }),
+                    Some((1.0, "img/s")),
+                );
+                let img8: Vec<f32> = (0..8).flat_map(|_| img.clone()).collect();
+                report_time(
+                    "runtime: smallcnn_exact b8",
+                    &time_it(30, || {
+                        let _ = engine
+                            .execute("smallcnn_exact_b8", &[img8.clone()])
+                            .unwrap();
+                    }),
+                    Some((8.0, "img/s")),
+                );
+            }
+            Err(e) => println!("runtime benches skipped: {e:#}"),
+        }
+    }
+
+    if run("serve") {
+        match Server::start(ServerConfig {
+            path: ConvPath::Exact,
+            workers: 2,
+            ..Default::default()
+        }) {
+            Ok(server) => {
+                let mut rng = Rng::new(2);
+                server.infer_blocking(vec![0.0; IMAGE_ELEMS]).unwrap();
+                let n = 64;
+                // Pre-generate images so the bench times the server, not
+                // the Box-Muller PRNG (~100 µs/image).
+                let images: Vec<Vec<f32>> =
+                    (0..n).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
+                let samples = time_it(5, || {
+                    let rxs: Vec<_> =
+                        images.iter().map(|im| server.infer(im.clone())).collect();
+                    for rx in rxs {
+                        rx.recv().unwrap().unwrap();
+                    }
+                });
+                report_time(
+                    "serve: 64 reqs, exact, 2 workers",
+                    &samples,
+                    Some((n as f64, "img/s")),
+                );
+                let m = server.shutdown();
+                println!("   server metrics: {}", m.summary());
+            }
+            Err(e) => println!("serve bench skipped: {e:#}"),
+        }
+    }
+
+    println!("\nbenches done");
+}

@@ -1,0 +1,191 @@
+//! Closed-form efficiency models — the paper's eqs. (3), (5), (13)/(14)
+//! and (18)–(24) — for the four processor classes compared in Figs. 6–7.
+//!
+//! Every model exposes the same interface: given a [`Workload`] (a conv
+//! layer described by its dimensions and arithmetic intensity) and a
+//! technology node, produce an [`Efficiency`] — energy per operation
+//! split into *memory* and *compute* components, from which
+//! η = 1/(e_mem + e_comp) in ops/J. Fig. 6 plots η vs node; Fig. 7 plots
+//! the two components per processor.
+
+pub mod cpu;
+pub mod in_memory;
+pub mod optical4f;
+pub mod photonic;
+pub mod vector_matrix;
+
+use crate::networks::ConvLayer;
+
+/// A workload for the analytic models: one convolutional layer plus both
+/// of its arithmetic intensities.
+///
+/// `a_matmul` (eq. 8) is what a matrix-multiplication machine — the
+/// systolic array or a planar photonic mesh, which both consume the
+/// k²-duplicated Toeplitz input — can exploit; Table V's a = 230 is this
+/// number. `a_native` (eq. 9) is the convolution-native intensity only an
+/// operator-specialized processor (the 4F machine) reaches.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub layer: ConvLayer,
+    /// eq. (9): native convolution arithmetic intensity.
+    pub a_native: f64,
+    /// eq. (8): conv-as-matmul arithmetic intensity.
+    pub a_matmul: f64,
+}
+
+impl Workload {
+    pub fn from_layer(layer: ConvLayer) -> Self {
+        Workload {
+            layer,
+            a_native: layer.arithmetic_intensity(),
+            a_matmul: layer.matmul_arithmetic_intensity(),
+        }
+    }
+
+    /// Table V's reference layer: n=512, Cᵢ=Cᵢ₊₁=128, k=3 (a ≈ 230).
+    pub fn reference() -> Self {
+        Workload::from_layer(ConvLayer::square(512, 128, 128, 3, 1))
+    }
+}
+
+/// Per-operation energy split of a processor on a workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Efficiency {
+    /// Memory-access energy per operation, J/op.
+    pub e_mem: f64,
+    /// Computational energy per operation, J/op.
+    pub e_comp: f64,
+}
+
+impl Efficiency {
+    /// Total energy per operation.
+    pub fn per_op(&self) -> f64 {
+        self.e_mem + self.e_comp
+    }
+
+    /// η in ops per joule (eq. 2).
+    pub fn ops_per_joule(&self) -> f64 {
+        1.0 / self.per_op()
+    }
+
+    /// η in the paper's TOPS/W unit.
+    pub fn tops_per_watt(&self) -> f64 {
+        self.ops_per_joule() / 1e12
+    }
+}
+
+/// The four processor classes of Figs. 6–7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Processor {
+    /// SISD CPU, eq. (3).
+    Cpu,
+    /// Digital in-memory (systolic array), eq. (5).
+    DigitalInMemory,
+    /// Planar silicon-photonic analog array, eqs. (13)/(14).
+    SiliconPhotonic,
+    /// Optical 4F convolution machine, eqs. (23)/(24).
+    Optical4F,
+}
+
+impl Processor {
+    pub const ALL: [Processor; 4] = [
+        Processor::Cpu,
+        Processor::DigitalInMemory,
+        Processor::SiliconPhotonic,
+        Processor::Optical4F,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Processor::Cpu => "CPU (SISD)",
+            Processor::DigitalInMemory => "digital in-memory",
+            Processor::SiliconPhotonic => "silicon photonic",
+            Processor::Optical4F => "optical 4F",
+        }
+    }
+
+    /// Short label used in Fig. 7 ("DIM", "SP", "O4F").
+    pub fn short(&self) -> &'static str {
+        match self {
+            Processor::Cpu => "CPU",
+            Processor::DigitalInMemory => "DIM",
+            Processor::SiliconPhotonic => "SP",
+            Processor::Optical4F => "O4F",
+        }
+    }
+
+    /// Evaluate this processor's analytic model on a workload at a node,
+    /// using the paper's §VI architectural parameters.
+    pub fn efficiency(&self, w: &Workload, node_nm: f64) -> Efficiency {
+        match self {
+            Processor::Cpu => cpu::efficiency(node_nm),
+            Processor::DigitalInMemory => {
+                in_memory::Config::tpu_like().efficiency(w, node_nm)
+            }
+            Processor::SiliconPhotonic => {
+                photonic::Config::typical().efficiency(w, node_nm)
+            }
+            Processor::Optical4F => {
+                optical4f::Config::default_4mpx().efficiency(w, node_nm)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_workload_matches_table_v() {
+        let w = Workload::reference();
+        assert!((w.a_matmul - 230.0).abs() < 6.0, "a_mm = {}", w.a_matmul);
+        assert!((w.a_native - 1149.0).abs() < 10.0, "a9 = {}", w.a_native);
+    }
+
+    #[test]
+    fn efficiency_arithmetic() {
+        let e = Efficiency {
+            e_mem: 3e-13,
+            e_comp: 2e-13,
+        };
+        assert!((e.per_op() - 5e-13).abs() < 1e-25);
+        assert!((e.tops_per_watt() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig6_ordering_at_32nm() {
+        // The paper's headline ordering: CPU << DIM < SP < O4F, with
+        // roughly an order of magnitude between successive classes.
+        let w = Workload::reference();
+        let eta: Vec<f64> = Processor::ALL
+            .iter()
+            .map(|p| p.efficiency(&w, 32.0).tops_per_watt())
+            .collect();
+        assert!(eta[0] * 3.0 < eta[1], "CPU {} !<< DIM {}", eta[0], eta[1]);
+        assert!(eta[1] < eta[2], "DIM {} !< SP {}", eta[1], eta[2]);
+        assert!(eta[2] < eta[3], "SP {} !< O4F {}", eta[2], eta[3]);
+        assert!(eta[3] > 10.0 * eta[1], "O4F {} should be ≳10× DIM {}", eta[3], eta[1]);
+    }
+
+    #[test]
+    fn all_processors_improve_with_node() {
+        let w = Workload::reference();
+        for p in Processor::ALL {
+            let e180 = p.efficiency(&w, 180.0).tops_per_watt();
+            let e7 = p.efficiency(&w, 7.0).tops_per_watt();
+            assert!(e7 > e180, "{}: {e180} -> {e7}", p.label());
+        }
+    }
+
+    #[test]
+    fn fig7_memory_dominates_cpu_compute_dominates_dim() {
+        // Fig. 7's story: in-memory compute pushes memory energy below
+        // compute energy; CPUs are memory-dominated.
+        let w = Workload::reference();
+        let cpu = Processor::Cpu.efficiency(&w, 32.0);
+        let dim = Processor::DigitalInMemory.efficiency(&w, 32.0);
+        assert!(cpu.e_mem > cpu.e_comp, "CPU must be memory-bound");
+        assert!(dim.e_comp > dim.e_mem, "DIM must be compute-bound");
+    }
+}

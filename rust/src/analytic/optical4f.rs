@@ -1,0 +1,121 @@
+//! Optical 4F convolution machine — eqs. (18)–(24).
+//!
+//! The reflection-mode, two-chip machine of Fig. 5: an SLM/metasurface +
+//! CIS pair on either side of a single lens. Per layer it (1) loads the
+//! optical Fourier transform of C′ input channels onto the Fourier-plane
+//! SLM and (2) streams kernels through the object plane, measuring one
+//! output channel per execution. The per-op energy follows
+//!
+//!   e_op = e_dac/M + e_dac/L + e_adc/N          (eq. 24)
+//!
+//! with L = n², M = k²Cᵢ₊₁/2, N = k²C′Cᵢ₊₁/(C′+Cᵢ₊₁) (eq. 23) and
+//! C′ = ⌊N̂/n²⌋ (eq. 22); e_dac includes the SLM active-matrix load and
+//! the laser shot-noise energy (§VII.B).
+
+use super::{Efficiency, Workload};
+use crate::energy::{
+    constants::{SLM_PIXELS, TOTAL_SRAM_BYTES},
+    load::presets,
+    sram::{bank_bytes, Sram},
+    EnergyParams,
+};
+use crate::networks::stats::optical4f_dims;
+
+/// Architectural parameters of the optical 4F machine.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// SLM pixel count N̂ (4 Mpx default).
+    pub slm_pixels: usize,
+    /// Total activation SRAM, bytes.
+    pub sram_bytes: usize,
+    /// SRAM bank count (§VII.B: 2048 banks of 12 KB, one per SLM row).
+    pub banks: usize,
+}
+
+impl Config {
+    /// The paper's §VI/§VII.B machine: 4 Mpx SLMs, 24 MiB SRAM / 2048.
+    pub fn default_4mpx() -> Self {
+        Config {
+            slm_pixels: SLM_PIXELS,
+            sram_bytes: TOTAL_SRAM_BYTES,
+            banks: 2048,
+        }
+    }
+
+    pub fn bank_bytes(&self) -> usize {
+        bank_bytes(self.sram_bytes, self.banks)
+    }
+
+    /// Effective per-sample DAC energy driving one SLM pixel: converter
+    /// circuit + segmented active-matrix line load + laser photons.
+    pub fn e_dac_slm(&self, node_nm: f64) -> f64 {
+        let e = EnergyParams::default().at_node(node_nm);
+        e.e_dac + presets::slm_2048().energy() + e.e_opt
+    }
+
+    /// eq. (24) on a conv layer, at a node.
+    pub fn efficiency(&self, w: &Workload, node_nm: f64) -> Efficiency {
+        let e = EnergyParams::default().at_node(node_nm);
+        let (l, n, m) = optical4f_dims(&w.layer, Some(self.slm_pixels));
+        let e_dac = self.e_dac_slm(node_nm);
+        // eq. (24); the signed-value factor is baked into M (eq. 23c).
+        let per_mac = e_dac / m + e_dac / l + e.e_adc / n;
+        // Native convolution — no Toeplitz duplication — so the SRAM term
+        // amortizes over the layer's *native* intensity (eq. 9 / eq. 21).
+        let sram = Sram::at_node(self.bank_bytes(), node_nm);
+        Efficiency {
+            e_mem: sram.energy_per_byte / w.a_native,
+            e_comp: per_mac / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_size_12kb() {
+        assert_eq!(Config::default_4mpx().bank_bytes(), 12 * 1024);
+    }
+
+    #[test]
+    fn e_dac_slm_mostly_load() {
+        // 0.01 (circuit) + 0.04 (load) + 0.01 (laser) ≈ 0.06 pJ.
+        let e = Config::default_4mpx().e_dac_slm(45.0);
+        assert!((e * 1e12 - 0.06).abs() < 0.01, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn order_100_tops_at_45nm() {
+        // §VI: another order of magnitude beyond silicon photonics.
+        let eta = Config::default_4mpx()
+            .efficiency(&Workload::reference(), 45.0)
+            .tops_per_watt();
+        assert!(eta > 50.0 && eta < 500.0, "η = {eta}");
+    }
+
+    #[test]
+    fn compute_below_memory() {
+        // Fig. 7: the 4F machine pushes compute energy *below* the
+        // in-memory-compute memory floor.
+        let e = Config::default_4mpx().efficiency(&Workload::reference(), 32.0);
+        assert!(e.e_comp < e.e_mem, "e_comp {} !< e_mem {}", e.e_comp, e.e_mem);
+    }
+
+    #[test]
+    fn bigger_slm_helps_until_channels_exhausted() {
+        let w = Workload::reference(); // n=512, Ci=128
+        let small = Config {
+            slm_pixels: 1024 * 1024,
+            ..Config::default_4mpx()
+        };
+        let big = Config {
+            slm_pixels: 64 * 1024 * 1024,
+            ..Config::default_4mpx()
+        };
+        let e_small = small.efficiency(&w, 45.0);
+        let e_big = big.efficiency(&w, 45.0);
+        assert!(e_big.e_comp < e_small.e_comp);
+    }
+}

@@ -1,0 +1,131 @@
+//! Planar silicon-photonic analog array — eqs. (13)/(14).
+//!
+//! A `dim × dim` array of electro-optic modulators (MZI mesh or VOA
+//! crossbar) performing matrix–matrix multiplication:
+//!
+//!   e_op = e_dac,1/M + e_dac,2/L + e_adc/N     (eq. 14)
+//!
+//! with every term doubled for signed values (§IV.A), M and N clamped to
+//! the array dimensions (eq. 15), and L the (unbounded) streaming
+//! dimension. DAC energies include the modulator drive and the array
+//! line load (eq. A5); inputs additionally pay the shot-noise-limited
+//! laser energy (eq. A8).
+
+use super::{Efficiency, Workload};
+use crate::energy::{
+    constants::{E_EO_MODULATOR_FUTURE, PHOTONIC_DIM, TOTAL_SRAM_BYTES},
+    load::presets,
+    sram::{bank_bytes, Sram},
+    EnergyParams,
+};
+
+/// Architectural parameters of the planar photonic processor.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Array dimension (N̂ = M̂ = dim).
+    pub dim: usize,
+    /// Total activation SRAM, bytes.
+    pub sram_bytes: usize,
+    /// SRAM bank count (§VI: 40 banks of 600 KB).
+    pub banks: usize,
+    /// Electro-optic modulator energy per sample, J (§VI assumes the
+    /// technology improves to 0.5 pJ).
+    pub e_modulator: f64,
+}
+
+impl Config {
+    /// §VI parameters: 40×40 array (100–400 µm modulator pitches cap
+    /// practical meshes), 24 MiB SRAM in 40 banks.
+    pub fn typical() -> Self {
+        Config {
+            dim: PHOTONIC_DIM,
+            sram_bytes: TOTAL_SRAM_BYTES,
+            banks: PHOTONIC_DIM,
+            e_modulator: E_EO_MODULATOR_FUTURE,
+        }
+    }
+
+    pub fn bank_bytes(&self) -> usize {
+        bank_bytes(self.sram_bytes, self.banks)
+    }
+
+    /// eq. (14) on a conv layer mapped through eq. (16), at a node.
+    pub fn efficiency(&self, w: &Workload, node_nm: f64) -> Efficiency {
+        let e = EnergyParams::default().at_node(node_nm);
+        let (l_dim, n_dim, m_dim) = w.layer.matmul_dims();
+        // eq. (15): amortization clamped by the physical array.
+        let m = m_dim.min(self.dim as f64);
+        let n = n_dim.min(self.dim as f64);
+        let l = l_dim; // streaming (time) dimension, not hardware-limited
+
+        // eq. (A5)+(A7): input DAC drives modulator + laser; weight DAC
+        // drives modulator + array line load.
+        let e_dac_in = e.e_dac + self.e_modulator + e.e_opt;
+        let e_dac_w = e.e_dac + self.e_modulator + presets::photonic_40().energy();
+
+        // eq. (14), ×2 for signed values (§IV.A), halved per op
+        // (N_op = 2·MACs).
+        let per_mac = 2.0 * (e_dac_in / m + e_dac_w / l + e.e_adc / n);
+        // The matmul mapping reads the k²-duplicated Toeplitz activations,
+        // so the SRAM term uses the *matmul* intensity (eq. 8).
+        let a_mm = w.layer.matmul_arithmetic_intensity();
+        let sram = Sram::at_node(self.bank_bytes(), node_nm);
+        Efficiency {
+            e_mem: sram.energy_per_byte / a_mm,
+            e_comp: per_mac / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_size_600kb() {
+        let c = Config::typical();
+        assert_eq!(c.bank_bytes(), TOTAL_SRAM_BYTES / 40);
+    }
+
+    #[test]
+    fn order_10_tops_at_45nm() {
+        // §VI: roughly an order of magnitude above digital in-memory.
+        let eta = Config::typical()
+            .efficiency(&Workload::reference(), 45.0)
+            .tops_per_watt();
+        assert!(eta > 5.0 && eta < 80.0, "η = {eta}");
+    }
+
+    #[test]
+    fn amortization_clamped_by_array() {
+        // Reference layer: M' = 128 > 40, N' = 1152 > 40 ⇒ both clamp.
+        let cfg = Config::typical();
+        let w = Workload::reference();
+        let e40 = cfg.efficiency(&w, 45.0);
+        let big = Config {
+            dim: 4096,
+            ..cfg
+        };
+        let e_big = big.efficiency(&w, 45.0);
+        assert!(
+            e_big.e_comp < e40.e_comp,
+            "bigger array must amortize converters better"
+        );
+    }
+
+    #[test]
+    fn modulator_energy_dominates_compute() {
+        // §VI: "computational energy consumption is highly limited by the
+        // optical modulator technology".
+        let cfg = Config::typical();
+        let w = Workload::reference();
+        let base = cfg.efficiency(&w, 45.0).e_comp;
+        let better = Config {
+            e_modulator: 0.05e-12,
+            ..cfg
+        }
+        .efficiency(&w, 45.0)
+        .e_comp;
+        assert!(better < base / 2.0, "{base} -> {better}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Dynamic batching policy.
+//!
+//! Requests accumulate until either the batch budget is reached or the
+//! oldest request has waited `max_wait` — the classic latency/throughput
+//! dial. The dispatcher then greedily decomposes the pending set into the
+//! largest *compiled* batch variants (8 / 4 / 1 for the CNN artifacts),
+//! because PJRT executables have static shapes.
+
+use std::time::Duration;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Upper bound on requests pulled per dispatch round.
+    pub max_batch: usize,
+    /// Deadline: dispatch whatever is pending once the oldest request
+    /// has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Greedily split `pending` requests into compiled batch sizes
+/// (`variants` must be sorted descending, e.g. `[8, 4, 1]`).
+/// Returns the execution plan, e.g. 11 pending → `[8, 1, 1, 1]` when 4s
+/// would strand work, or `[8, 4]` when padding is allowed… we do NOT pad
+/// (wasted compute); remainder runs on smaller variants.
+pub fn plan_batches(pending: usize, variants: &[usize]) -> Vec<usize> {
+    assert!(!variants.is_empty());
+    debug_assert!(
+        variants.windows(2).all(|w| w[0] > w[1]),
+        "variants must be strictly descending"
+    );
+    assert_eq!(
+        *variants.last().unwrap(),
+        1,
+        "a batch-1 variant is required to drain remainders"
+    );
+    let mut plan = Vec::new();
+    let mut left = pending;
+    for &v in variants {
+        while left >= v {
+            plan.push(v);
+            left -= v;
+        }
+    }
+    plan
+}
+
+/// Decide whether to dispatch now.
+pub fn should_dispatch(policy: &BatchPolicy, pending: usize, oldest_wait: Duration) -> bool {
+    pending >= policy.max_batch || (pending > 0 && oldest_wait >= policy.max_wait)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_exact_multiples() {
+        assert_eq!(plan_batches(8, &[8, 4, 1]), vec![8]);
+        assert_eq!(plan_batches(12, &[8, 4, 1]), vec![8, 4]);
+        assert_eq!(plan_batches(16, &[8, 4, 1]), vec![8, 8]);
+    }
+
+    #[test]
+    fn plan_remainders_drain_on_batch1() {
+        assert_eq!(plan_batches(11, &[8, 4, 1]), vec![8, 1, 1, 1]);
+        assert_eq!(plan_batches(3, &[8, 4, 1]), vec![1, 1, 1]);
+        assert_eq!(plan_batches(7, &[8, 4, 1]), vec![4, 1, 1, 1]);
+    }
+
+    #[test]
+    fn plan_zero_is_empty() {
+        assert_eq!(plan_batches(0, &[8, 4, 1]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_single_variant() {
+        assert_eq!(plan_batches(5, &[1]), vec![1; 5]);
+    }
+
+    #[test]
+    fn plan_conserves_requests() {
+        for pending in 0..50 {
+            let total: usize = plan_batches(pending, &[8, 4, 1]).iter().sum();
+            assert_eq!(total, pending);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch-1 variant")]
+    fn plan_requires_batch1() {
+        plan_batches(5, &[8, 4]);
+    }
+
+    #[test]
+    fn dispatch_on_full_batch() {
+        let p = BatchPolicy::default();
+        assert!(should_dispatch(&p, 8, Duration::ZERO));
+        assert!(!should_dispatch(&p, 7, Duration::ZERO));
+    }
+
+    #[test]
+    fn dispatch_on_deadline() {
+        let p = BatchPolicy::default();
+        assert!(should_dispatch(&p, 1, Duration::from_millis(3)));
+        assert!(!should_dispatch(&p, 0, Duration::from_secs(1)));
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving metrics: latency percentiles, throughput, batch-size histogram.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates per-request and per-batch observations.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn record_request(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batch_sizes.push(size);
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Latency percentile in microseconds (nearest-rank).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+        v[rank.min(v.len()) - 1]
+    }
+
+    /// Mean batch size actually executed.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    /// Requests per second over the start→stop window.
+    pub fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.count() as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, {:.1} req/s",
+            self.count(),
+            self.percentile_us(50.0) as f64 / 1e3,
+            self.percentile_us(95.0) as f64 / 1e3,
+            self.percentile_us(99.0) as f64 / 1e3,
+            self.mean_batch(),
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            m.record_request(Duration::from_micros(us));
+        }
+        assert_eq!(m.percentile_us(50.0), 500);
+        assert_eq!(m.percentile_us(95.0), 1000);
+        assert_eq!(m.percentile_us(10.0), 100);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile_us(99.0), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch() {
+        let mut m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert!((m.mean_batch() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.record_request(Duration::from_micros(10));
+        let mut b = Metrics::new();
+        b.record_request(Duration::from_micros(20));
+        b.record_batch(4);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn throughput_counts_window() {
+        let mut m = Metrics::new();
+        m.start();
+        for _ in 0..100 {
+            m.record_request(Duration::from_micros(5));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        m.stop();
+        let t = m.throughput();
+        assert!(t > 0.0 && t < 100.0 / 0.02, "throughput {t}");
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_millis(1));
+        let s = m.summary();
+        assert!(s.contains("p50") && s.contains("req/s"));
+    }
+}

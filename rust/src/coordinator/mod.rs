@@ -1,0 +1,143 @@
+//! Layer-3 serving coordinator.
+//!
+//! The paper's contribution is the architecture analysis, so L3 here is a
+//! lean but real inference server over the PJRT [`crate::runtime`]:
+//!
+//! * [`batcher`] — dynamic batching: requests accumulate up to a batch
+//!   budget or a deadline, whichever first, and the dispatcher picks the
+//!   largest compiled batch variant that fits (mirroring eq. 22's C′
+//!   channel-packing decision on the optical machine: batching amortizes
+//!   fixed per-execution cost over more useful work).
+//! * [`server`] — worker pool (std threads; the offline environment has
+//!   no tokio) executing batches on the shared engine.
+//! * [`metrics`] — latency/throughput accounting (p50/p95/p99).
+//! * [`energy`] — per-request energy co-simulation: every served batch is
+//!   also priced on the cycle-accurate systolic and optical-4F machines,
+//!   so the server reports joules-per-inference alongside latency.
+//!
+//! The SmallCNN layer schedule (mirroring `python/compile/model.py`) is
+//! defined in [`smallcnn_network`] for the co-simulation.
+
+pub mod batcher;
+pub mod energy;
+pub mod metrics;
+pub mod server;
+
+use crate::networks::{ConvLayer, Network};
+
+/// SmallCNN conv topology — MUST mirror `python/compile/model.py`
+/// (`SMALLCNN_CHANNELS = (3, 8, 16, 32, 32)`, k=3, pools after the first
+/// three convs, input 64×64).
+pub fn smallcnn_network() -> Network {
+    // Input 64 → conv(62) pool(31) → conv(29) pool(14) → conv(12) pool(6)
+    // → conv(4). Spatial entries are the conv *input* sizes.
+    let chans = [3usize, 8, 16, 32, 32];
+    let mut layers = Vec::new();
+    let mut n = 64usize;
+    for i in 0..chans.len() - 1 {
+        layers.push(ConvLayer::square(n, chans[i], chans[i + 1], 3, 1));
+        n -= 2; // valid 3×3
+        if i < 3 {
+            n /= 2; // avg-pool 2×2 (truncating)
+        }
+    }
+    Network {
+        name: "SmallCNN",
+        layers,
+    }
+}
+
+/// Which compiled datapath variant serves the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvPath {
+    /// f32 oracle (XLA-native convs).
+    Exact,
+    /// 8-bit weight-stationary systolic functional model (Pallas qmatmul).
+    Systolic,
+    /// Optical-4F functional model (FFT + Pallas Fourier-plane kernel).
+    Fft,
+}
+
+impl ConvPath {
+    pub fn artifact_prefix(&self) -> &'static str {
+        match self {
+            ConvPath::Exact => "smallcnn_exact",
+            ConvPath::Systolic => "smallcnn_systolic",
+            ConvPath::Fft => "smallcnn_fft",
+        }
+    }
+
+    /// Batch sizes with compiled variants, largest first (see aot.py).
+    pub fn available_batches(&self) -> &'static [usize] {
+        match self {
+            ConvPath::Exact | ConvPath::Systolic => &[8, 4, 1],
+            ConvPath::Fft => &[1],
+        }
+    }
+
+    /// Artifact name for a given compiled batch size.
+    pub fn artifact_for_batch(&self, batch: usize) -> String {
+        if batch == 1 {
+            self.artifact_prefix().to_string()
+        } else {
+            format!("{}_b{}", self.artifact_prefix(), batch)
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ConvPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(ConvPath::Exact),
+            "systolic" => Some(ConvPath::Systolic),
+            "fft" | "optical" | "4f" => Some(ConvPath::Fft),
+            _ => None,
+        }
+    }
+}
+
+/// SmallCNN I/O geometry (mirrors model.py).
+pub const IMAGE_ELEMS: usize = 3 * 64 * 64;
+pub const LOGITS: usize = 10;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smallcnn_topology_mirrors_python() {
+        let net = smallcnn_network();
+        assert_eq!(net.num_layers(), 4);
+        let l = &net.layers;
+        assert_eq!((l[0].n, l[0].c_in, l[0].c_out), (64, 3, 8));
+        assert_eq!((l[1].n, l[1].c_in, l[1].c_out), (31, 8, 16));
+        assert_eq!((l[2].n, l[2].c_in, l[2].c_out), (14, 16, 32));
+        assert_eq!((l[3].n, l[3].c_in, l[3].c_out), (6, 32, 32));
+        for layer in l {
+            assert_eq!((layer.kh, layer.stride), (3, 1));
+        }
+    }
+
+    #[test]
+    fn smallcnn_macs_positive() {
+        // conv0: 62²·9·3·8 ≈ 0.93 M MACs dominates.
+        let m = smallcnn_network().total_macs();
+        assert!(m > 1.0e6 && m < 1.0e7, "MACs = {m:.3e}");
+    }
+
+    #[test]
+    fn conv_path_artifacts() {
+        assert_eq!(ConvPath::Exact.artifact_for_batch(1), "smallcnn_exact");
+        assert_eq!(
+            ConvPath::Systolic.artifact_for_batch(8),
+            "smallcnn_systolic_b8"
+        );
+        assert_eq!(ConvPath::Fft.available_batches(), &[1]);
+    }
+
+    #[test]
+    fn conv_path_parse() {
+        assert_eq!(ConvPath::parse("FFT"), Some(ConvPath::Fft));
+        assert_eq!(ConvPath::parse("systolic"), Some(ConvPath::Systolic));
+        assert_eq!(ConvPath::parse("4f"), Some(ConvPath::Fft));
+        assert_eq!(ConvPath::parse("x"), None);
+    }
+}

@@ -1,0 +1,378 @@
+//! The inference server: request queue → dynamic batcher → worker pool.
+//!
+//! PJRT client handles are `Rc`-based (not `Send`), so the engine cannot
+//! be shared across threads; instead each worker thread owns a private
+//! [`Engine`] (compilation is per-worker and lazy) and workers pull
+//! batches from a shared queue. The dispatcher thread implements the
+//! [`BatchPolicy`]: it drains the request queue, forms execution plans
+//! via [`plan_batches`], and hands concatenated image tensors to workers.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{plan_batches, should_dispatch, BatchPolicy};
+use super::metrics::Metrics;
+use super::{ConvPath, IMAGE_ELEMS, LOGITS};
+use crate::runtime::Engine;
+
+/// One inference request travelling through the server.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+/// A planned batch ready for execution.
+struct Batch {
+    artifact: String,
+    batch: usize,
+    requests: Vec<Request>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub path: ConvPath,
+    pub policy: BatchPolicy,
+    pub workers: usize,
+    /// Artifacts directory (None = auto-discover).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Pre-compile every batch variant in every worker before serving
+    /// (keeps PJRT compilation off the request path). Disable in tests
+    /// that don't care about steady-state latency.
+    pub warm_start: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            path: ConvPath::Exact,
+            policy: BatchPolicy::default(),
+            workers: 2,
+            artifacts_dir: None,
+            warm_start: true,
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Sender<Request>,
+    stop: Arc<AtomicBool>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Start dispatcher + workers.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = channel::<Request>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        // Resolve the artifacts dir once so workers don't race discovery.
+        let dir = match &cfg.artifacts_dir {
+            Some(d) => d.clone(),
+            None => crate::runtime::find_artifacts_dir().ok_or_else(|| {
+                anyhow::anyhow!("artifacts not found — run `make artifacts`")
+            })?,
+        };
+
+        // Dispatcher: drain queue, apply batching policy, emit plans.
+        let dispatcher = {
+            let stop = stop.clone();
+            let policy = cfg.policy;
+            let path = cfg.path;
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                let mut pending: Vec<Request> = Vec::new();
+                loop {
+                    // Pull everything immediately available.
+                    while let Ok(r) = rx.try_recv() {
+                        pending.push(r);
+                    }
+                    let oldest = pending
+                        .first()
+                        .map(|r| r.enqueued.elapsed())
+                        .unwrap_or(Duration::ZERO);
+                    if should_dispatch(&policy, pending.len(), oldest) {
+                        let take = pending.len().min(policy.max_batch);
+                        let round: Vec<Request> = pending.drain(..take).collect();
+                        let mut round = round;
+                        for b in plan_batches(round.len(), path.available_batches()) {
+                            let reqs: Vec<Request> = round.drain(..b).collect();
+                            metrics.lock().unwrap().record_batch(b);
+                            if batch_tx
+                                .send(Batch {
+                                    artifact: path.artifact_for_batch(b),
+                                    batch: b,
+                                    requests: reqs,
+                                })
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                    } else if stop.load(Ordering::Acquire) && pending.is_empty() {
+                        // Drained and asked to stop: close the batch queue.
+                        return;
+                    } else {
+                        // Idle wait: bounded block so stop/deadlines fire.
+                        match rx.recv_timeout(Duration::from_micros(200)) {
+                            Ok(r) => pending.push(r),
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                                if pending.is_empty() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+        };
+
+        // Workers: each owns a private engine, pre-compiled for every
+        // batch variant of the serving path so compilation (tens of
+        // seconds for the larger graphs) never lands on the request path.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut workers = Vec::new();
+        for _w in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let dir = dir.clone();
+            let metrics = metrics.clone();
+            let in_flight = in_flight.clone();
+            let path = cfg.path;
+            let warm = cfg.warm_start;
+            let ready_tx = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let engine = match Engine::new(&dir) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        let _ = ready_tx.send(Err(err));
+                        return;
+                    }
+                };
+                if warm {
+                    let names: Vec<String> = path
+                        .available_batches()
+                        .iter()
+                        .map(|&b| path.artifact_for_batch(b))
+                        .collect();
+                    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                    if let Err(err) = engine.warm_up(&name_refs) {
+                        let _ = ready_tx.send(Err(err));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { return };
+                    run_batch(&engine, job, &metrics);
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }));
+        }
+
+        // Block until every worker has compiled its executables.
+        drop(ready_tx);
+        for _ in 0..cfg.workers.max(1) {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => anyhow::bail!("worker warm-up failed: {e:#}"),
+                Err(_) => anyhow::bail!("worker died during warm-up"),
+            }
+        }
+
+        Ok(Server {
+            tx,
+            stop,
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            in_flight,
+        })
+    }
+
+    /// Submit one image; returns a receiver for the logits.
+    pub fn infer(&self, image: Vec<f32>) -> Receiver<Result<Vec<f32>>> {
+        let (resp_tx, resp_rx) = channel();
+        if image.len() != IMAGE_ELEMS {
+            let _ = resp_tx.send(Err(anyhow::anyhow!(
+                "image must have {IMAGE_ELEMS} elements, got {}",
+                image.len()
+            )));
+            return resp_rx;
+        }
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let req = Request {
+            image,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        if self.tx.send(req).is_err() {
+            // Server stopped; the receiver will see a disconnect.
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+        resp_rx
+    }
+
+    /// Submit and wait.
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer(image)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+    }
+
+    /// Graceful shutdown: drain, then join all threads.
+    pub fn shutdown(mut self) -> Metrics {
+        // Wait for in-flight work (bounded).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while self.in_flight.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.stop.store(true, Ordering::Release);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+/// Execute one planned batch on a worker's engine and fan results out.
+fn run_batch(engine: &Engine, job: Batch, metrics: &Arc<Mutex<Metrics>>) {
+    let Batch {
+        artifact,
+        batch,
+        requests,
+    } = job;
+    debug_assert_eq!(batch, requests.len());
+
+    let result = if batch == 1 {
+        engine.execute(&artifact, &[requests[0].image.clone()])
+    } else {
+        let mut packed = Vec::with_capacity(batch * IMAGE_ELEMS);
+        for r in &requests {
+            packed.extend_from_slice(&r.image);
+        }
+        engine.execute(&artifact, &[packed])
+    };
+
+    match result {
+        Ok(out) => {
+            debug_assert_eq!(out.len(), batch * LOGITS);
+            for (i, r) in requests.iter().enumerate() {
+                let logits = out[i * LOGITS..(i + 1) * LOGITS].to_vec();
+                metrics
+                    .lock()
+                    .unwrap()
+                    .record_request(r.enqueued.elapsed());
+                let _ = r.resp.send(Ok(logits));
+            }
+        }
+        Err(e) => {
+            for r in requests {
+                let _ = r.resp.send(Err(anyhow::anyhow!("{artifact}: {e:#}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::find_artifacts_dir().is_some()
+    }
+
+    #[test]
+    fn rejects_bad_image_size() {
+        if !have_artifacts() {
+            return;
+        }
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            warm_start: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let err = s.infer_blocking(vec![0.0; 5]);
+        assert!(err.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn serves_single_request() {
+        if !have_artifacts() {
+            return;
+        }
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            warm_start: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(1);
+        let out = s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        assert_eq!(out.len(), LOGITS);
+        let m = s.shutdown();
+        assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn batches_under_load_and_matches_batch1() {
+        if !have_artifacts() {
+            return;
+        }
+        let s = Server::start(ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+            warm_start: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(2);
+        let images: Vec<Vec<f32>> =
+            (0..8).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
+        // Fire all 8 concurrently so the batcher can pack them.
+        let rxs: Vec<_> = images.iter().map(|im| s.infer(im.clone())).collect();
+        let outs: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let m = s.shutdown();
+        assert!(m.mean_batch() > 1.0, "batching should engage: {}", m.summary());
+
+        // Batched results must equal per-image execution.
+        let engine = Engine::discover().unwrap();
+        for (im, out) in images.iter().zip(&outs) {
+            let single = engine.execute("smallcnn_exact", &[im.clone()]).unwrap();
+            for (a, b) in single.iter().zip(out) {
+                assert!((a - b).abs() < 1e-4, "batched {b} vs single {a}");
+            }
+        }
+    }
+}

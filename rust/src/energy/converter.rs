@@ -1,0 +1,66 @@
+//! ADC/DAC energy — eqs. (A3)/(A4), the 2^{2B} thermal-noise laws.
+//!
+//! Distinguishing the levels of a B-bit converter against thermal noise
+//! costs energy exponential in precision: e = γ·kT·2^{2B}. The paper's
+//! calibrations: γ_adc ≈ 927 (45 nm, from Jonsson's empirical survey),
+//! γ_dac ≈ 39 (current-steering DAC), with thermal floors γ_adc > 3.
+
+use super::constants::KT;
+
+/// eq. (A3): ADC energy per sample at calibration.
+pub fn adc_energy(gamma_adc: f64, bits: u32) -> f64 {
+    gamma_adc * KT * 2f64.powi(2 * bits as i32)
+}
+
+/// eq. (A4): DAC circuit energy per sample at calibration (load excluded —
+/// see [`super::load`] and eq. (A5)).
+pub fn dac_energy(gamma_dac: f64, bits: u32) -> f64 {
+    gamma_dac * KT * 2f64.powi(2 * bits as i32)
+}
+
+/// Thermal-noise lower bound on any linear-step ADC (γ = 3).
+pub fn adc_thermal_floor(bits: u32) -> f64 {
+    3.0 * KT * 2f64.powi(2 * bits as i32)
+}
+
+/// eq. (A5): full DAC sample cost driving a physical load.
+pub fn dac_with_load(gamma_dac: f64, bits: u32, e_load: f64) -> f64 {
+    dac_energy(gamma_dac, bits) + e_load
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::constants::{GAMMA_ADC_45NM, GAMMA_DAC};
+
+    #[test]
+    fn table_iv_adc() {
+        let e = adc_energy(GAMMA_ADC_45NM, 8);
+        assert!((e * 1e12 - 0.25).abs() < 0.01, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn table_iv_dac() {
+        let e = dac_energy(GAMMA_DAC, 8);
+        assert!((e * 1e12 - 0.0106).abs() < 0.001, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn exponential_in_bits() {
+        let r = adc_energy(GAMMA_ADC_45NM, 10) / adc_energy(GAMMA_ADC_45NM, 8);
+        assert!((r - 16.0).abs() < 1e-9, "2 extra bits = 16×");
+    }
+
+    #[test]
+    fn floor_below_real() {
+        assert!(adc_thermal_floor(8) < adc_energy(GAMMA_ADC_45NM, 8));
+        let headroom = GAMMA_ADC_45NM / 3.0;
+        assert!(headroom > 100.0, "survey says ~300× above floor");
+    }
+
+    #[test]
+    fn load_adds() {
+        let base = dac_energy(GAMMA_DAC, 8);
+        assert!((dac_with_load(GAMMA_DAC, 8, 1e-13) - base - 1e-13).abs() < 1e-20);
+    }
+}

@@ -1,0 +1,147 @@
+//! Line-capacitance load energy — eq. (A6).
+//!
+//! Driving an analog array's row/column addressing lines dissipates
+//! e = ½·C·L·V² where C is the trace capacitance per unit length and L the
+//! line length. This term is **not** technology-node dependent (wire
+//! capacitance per length is roughly constant across nodes), which is why
+//! the paper's cycle-accurate curves flatten at small nodes (Figs. 8-10).
+
+use super::constants::{TRACE_CAP_PER_M, VDD_45NM};
+
+/// eq. (A6): energy to charge a line of length `line_m` meters.
+pub fn line_energy(line_m: f64, vdd: f64) -> f64 {
+    0.5 * TRACE_CAP_PER_M * line_m * vdd * vdd
+}
+
+/// Load model for an N-element array addressed by lines of pitch `pitch_m`.
+///
+/// `segments` models segmented (active-matrix) addressing: the drive
+/// only charges 1/segments of the full line per operation. The paper's
+/// Table IV SLM row (2.5 µm pitch, N = 2048 → 0.04 pJ) is only consistent
+/// with eq. (A6) under segmentation ≈ 10 (see DESIGN.md "Substitutions");
+/// the ReRAM and photonic rows use `segments = 1` and match exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadModel {
+    pub pitch_m: f64,
+    pub elements: usize,
+    pub vdd: f64,
+    pub segments: f64,
+}
+
+impl LoadModel {
+    pub fn new(pitch_m: f64, elements: usize) -> Self {
+        LoadModel {
+            pitch_m,
+            elements,
+            vdd: VDD_45NM,
+            segments: 1.0,
+        }
+    }
+
+    pub fn with_segments(mut self, segments: f64) -> Self {
+        assert!(segments >= 1.0);
+        self.segments = segments;
+        self
+    }
+
+    /// Full line length in meters.
+    pub fn line_length(&self) -> f64 {
+        self.pitch_m * self.elements as f64
+    }
+
+    /// Energy per drive operation (one element update), joules.
+    pub fn energy(&self) -> f64 {
+        line_energy(self.line_length() / self.segments, self.vdd)
+    }
+}
+
+/// The SLM active-matrix segmentation factor calibrated to the paper's
+/// quoted 40 fJ load at 2.5 µm pitch, N = 2048 (see DESIGN.md).
+pub const SLM_SEGMENTS: f64 = 10.24;
+
+/// Convenience constructors matching Table IV's three rows.
+pub mod presets {
+    use super::*;
+    use crate::energy::constants::{PITCH_PHOTONIC, PITCH_RERAM, PITCH_SLM};
+
+    /// "e_load for 4 µm pitch, N = 256" → 0.08 pJ (ReRAM crossbar).
+    pub fn reram_256() -> LoadModel {
+        LoadModel::new(PITCH_RERAM, 256)
+    }
+
+    /// "e_load for 250 µm pitch, N = 40" → 0.8 pJ (planar photonics).
+    pub fn photonic_40() -> LoadModel {
+        LoadModel::new(PITCH_PHOTONIC, 40)
+    }
+
+    /// "e_load for 2.5 µm pitch, N = 2048" → 0.04 pJ (4F SLM,
+    /// segmented active-matrix addressing).
+    pub fn slm_2048() -> LoadModel {
+        LoadModel::new(PITCH_SLM, 2048).with_segments(SLM_SEGMENTS)
+    }
+
+    /// Systolic-array inter-tile hop (§VII.A): 34.8 µm pitch derived from
+    /// the 256×256 array occupying 24% of the 331 mm² TPU die. Per *bit*.
+    pub fn systolic_hop() -> LoadModel {
+        LoadModel::new(34.8e-6, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::*;
+    use super::*;
+
+    #[test]
+    fn copper_trace_0_08_fj_per_um() {
+        // Paper: "they typically consume 0.08 fJ/µm per operation".
+        let e = line_energy(1e-6, VDD_45NM);
+        assert!((e * 1e15 - 0.081).abs() < 0.005, "{} fJ", e * 1e15);
+    }
+
+    #[test]
+    fn table_iv_reram_row() {
+        let e = reram_256().energy();
+        assert!((e * 1e12 - 0.08).abs() < 0.005, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn table_iv_photonic_row() {
+        let e = photonic_40().energy();
+        assert!((e * 1e12 - 0.8).abs() < 0.05, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn table_iv_slm_row() {
+        let e = slm_2048().energy();
+        assert!((e * 1e12 - 0.04).abs() < 0.003, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn systolic_hop_2_82_fj_per_bit() {
+        // §VII.A: "A load energy cost of 2.82 fJ/bit was computed using
+        // eq. A6 … a distance of 34.8 µm between tiles."
+        let e = systolic_hop().energy();
+        assert!((e * 1e15 - 2.82).abs() < 0.05, "{} fJ", e * 1e15);
+    }
+
+    #[test]
+    fn energy_linear_in_length() {
+        let a = LoadModel::new(1e-6, 100).energy();
+        let b = LoadModel::new(1e-6, 200).energy();
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn segmentation_divides() {
+        let full = LoadModel::new(2.5e-6, 2048);
+        let seg = full.with_segments(8.0);
+        assert!((full.energy() / seg.energy() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn segments_below_one_rejected() {
+        let _ = LoadModel::new(1e-6, 10).with_segments(0.5);
+    }
+}

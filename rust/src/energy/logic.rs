@@ -1,0 +1,63 @@
+//! Digital logic energy — eq. (A1), the gate-count MAC model.
+//!
+//! A serial-parallel multiplier has G = 6B² gates, a full adder adds 9B
+//! more, so e_mac = γ_mac (6B² + 9B) kT. γ_mac ≈ 1.225e5 for a 45 nm
+//! process (Horowitz), giving the 0.23 pJ 8-bit MAC of Table IV; the
+//! Landauer bound is γ_mac = ln 2.
+
+use super::constants::KT;
+
+/// Number of logic gates in a B-bit MAC (multiplier + adder).
+pub fn mac_gate_count(bits: u32) -> u64 {
+    let b = bits as u64;
+    6 * b * b + 9 * b
+}
+
+/// Energy of one B-bit MAC at calibration (45 nm), eq. (A1).
+pub fn mac_energy(gamma_mac: f64, bits: u32) -> f64 {
+    gamma_mac * mac_gate_count(bits) as f64 * KT
+}
+
+/// The Landauer lower bound for the same gate count (γ = ln 2).
+pub fn mac_landauer_bound(bits: u32) -> f64 {
+    std::f64::consts::LN_2 * mac_gate_count(bits) as f64 * KT
+}
+
+/// Headroom factor between a real MAC and its Landauer bound.
+pub fn landauer_headroom(gamma_mac: f64) -> f64 {
+    gamma_mac / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::constants::GAMMA_MAC_45NM;
+
+    #[test]
+    fn gate_count_8bit() {
+        // 6·64 + 72 = 456 gates.
+        assert_eq!(mac_gate_count(8), 456);
+    }
+
+    #[test]
+    fn mac_energy_is_0_23_pj() {
+        let e = mac_energy(GAMMA_MAC_45NM, 8);
+        assert!((e * 1e12 - 0.23).abs() < 0.005, "{} pJ", e * 1e12);
+    }
+
+    #[test]
+    fn quadratic_in_bits() {
+        let e8 = mac_energy(GAMMA_MAC_45NM, 8);
+        let e16 = mac_energy(GAMMA_MAC_45NM, 16);
+        let ratio = e16 / e8;
+        // (6·256+144)/(6·64+72) ≈ 3.68
+        assert!((ratio - 3.68).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn landauer_bound_below_real() {
+        assert!(mac_landauer_bound(8) < mac_energy(GAMMA_MAC_45NM, 8));
+        // Paper: "several orders of magnitude improvement" available.
+        assert!(landauer_headroom(GAMMA_MAC_45NM) > 1e4);
+    }
+}

@@ -1,0 +1,135 @@
+//! Appendix-A energy parameter models.
+//!
+//! Everything here is expressed in SI units (joules, meters, volts, farads)
+//! with `f64` precision; the report layer converts to pJ for display.
+//!
+//! The module reproduces every energy law the paper uses:
+//!
+//! | paper | here |
+//! |---|---|
+//! | eq. (A1) MAC gate model | [`logic::mac_energy`] |
+//! | eq. (A2) SRAM √size law | [`sram::Sram`] |
+//! | eq. (A3) ADC 2^2B law | [`converter::adc_energy`] |
+//! | eq. (A4)/(A5) DAC + load | [`converter::dac_energy`], [`load`] |
+//! | eq. (A6) line-capacitance load | [`load::line_energy`] |
+//! | eq. (A8) shot-noise laser floor | [`optical::optical_energy`] |
+//! | eqs. (A9)–(A13) ReRAM array | [`reram`] |
+//! | Table IV / Table VII constants | [`constants`] |
+
+pub mod constants;
+pub mod converter;
+pub mod load;
+pub mod logic;
+pub mod optical;
+pub mod reram;
+pub mod sram;
+
+pub use constants::*;
+
+/// Bundle of the per-operation energies a processor model consumes,
+/// evaluated at one technology node and bit precision.
+///
+/// Produced by [`EnergyParams::at_node`]; every analytic model and both
+/// cycle-accurate simulators read from this struct only, so a single
+/// source of truth feeds Tables IV/V and Figures 6–10.
+#[derive(Clone, Copy, Debug)]
+pub struct OpEnergies {
+    /// Technology node in nm this was evaluated at.
+    pub node_nm: f64,
+    /// Bit precision.
+    pub bits: u32,
+    /// Digital MAC (multiply + accumulate counted as the fused op), J.
+    pub e_mac: f64,
+    /// ADC conversion (per sample), J.
+    pub e_adc: f64,
+    /// DAC conversion circuit energy (per sample, excl. load), J.
+    pub e_dac: f64,
+    /// Laser energy per measured pixel (shot-noise floor, node-independent), J.
+    pub e_opt: f64,
+}
+
+/// Technology-independent description of the converter/logic stack;
+/// evaluate with [`EnergyParams::at_node`] to get node-scaled numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    pub bits: u32,
+    /// Dimensionless γ for the MAC model (paper: 1.225e5 at 45 nm).
+    pub gamma_mac: f64,
+    /// Dimensionless γ for ADCs (paper Table IV uses 927 at 45 nm).
+    pub gamma_adc: f64,
+    /// Dimensionless γ for DACs (paper: 39).
+    pub gamma_dac: f64,
+    /// Optical system efficiency (0..1], paper: 0.8 for Table IV.
+    pub eta_opt: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            bits: 8,
+            gamma_mac: constants::GAMMA_MAC_45NM,
+            gamma_adc: constants::GAMMA_ADC_45NM,
+            gamma_dac: constants::GAMMA_DAC,
+            eta_opt: constants::ETA_OPT,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Evaluate all CMOS energies at a technology node (nm). CMOS terms are
+    /// scaled from their 45 nm calibration by [`crate::technode::scale`];
+    /// the laser term is physics-bound and does not scale with node.
+    pub fn at_node(&self, node_nm: f64) -> OpEnergies {
+        let s = crate::technode::scale_from_45nm(node_nm);
+        OpEnergies {
+            node_nm,
+            bits: self.bits,
+            e_mac: logic::mac_energy(self.gamma_mac, self.bits) * s,
+            e_adc: converter::adc_energy(self.gamma_adc, self.bits) * s,
+            e_dac: converter::dac_energy(self.gamma_dac, self.bits) * s,
+            e_opt: optical::optical_energy(self.eta_opt, self.bits),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iv_at_45nm() {
+        // Reproduce Table IV: e_mac 0.23 pJ, e_adc 0.25 pJ, e_dac 0.01 pJ,
+        // e_opt 0.01 pJ (all 8-bit, 45 nm).
+        let e = EnergyParams::default().at_node(45.0);
+        assert!((e.e_mac * 1e12 - 0.23).abs() < 0.01, "e_mac {}", e.e_mac * 1e12);
+        assert!((e.e_adc * 1e12 - 0.25).abs() < 0.01, "e_adc {}", e.e_adc * 1e12);
+        assert!((e.e_dac * 1e12 - 0.01).abs() < 0.005, "e_dac {}", e.e_dac * 1e12);
+        assert!((e.e_opt * 1e12 - 0.01).abs() < 0.005, "e_opt {}", e.e_opt * 1e12);
+    }
+
+    #[test]
+    fn smaller_node_cheaper_cmos_same_laser() {
+        let p = EnergyParams::default();
+        let e45 = p.at_node(45.0);
+        let e7 = p.at_node(7.0);
+        assert!(e7.e_mac < e45.e_mac);
+        assert!(e7.e_adc < e45.e_adc);
+        assert_eq!(e7.e_opt, e45.e_opt, "laser floor is node-independent");
+    }
+
+    #[test]
+    fn more_bits_more_energy() {
+        let lo = EnergyParams {
+            bits: 4,
+            ..Default::default()
+        }
+        .at_node(45.0);
+        let hi = EnergyParams {
+            bits: 12,
+            ..Default::default()
+        }
+        .at_node(45.0);
+        assert!(hi.e_adc > lo.e_adc * 100.0, "ADC is exponential in B");
+        assert!(hi.e_mac > lo.e_mac, "MAC is quadratic in B");
+    }
+}

@@ -1,0 +1,63 @@
+//! Laser / optical energy — eq. (A8), the shot-noise floor.
+//!
+//! Recovering B bits from a photodetector against shot noise requires
+//! 2^{2B} detected photons, so the optical energy per measured value is
+//! e_opt = (ħω/η_opt)·2^{2B}. For 1550 nm light at 80% system efficiency
+//! this is ≈ 10 fJ — Table IV's 0.01 pJ. Physics-bound: does not scale
+//! with CMOS technology node.
+
+use super::constants::{C_LIGHT, HBAR, KT, LAMBDA};
+
+/// Photon energy ħω at the system wavelength, joules.
+pub fn photon_energy() -> f64 {
+    let omega = 2.0 * std::f64::consts::PI * C_LIGHT / LAMBDA;
+    HBAR * omega
+}
+
+/// eq. (A8): optical energy per measured pixel for B-bit precision.
+pub fn optical_energy(eta_opt: f64, bits: u32) -> f64 {
+    assert!(eta_opt > 0.0 && eta_opt <= 1.0);
+    photon_energy() / eta_opt * 2f64.powi(2 * bits as i32)
+}
+
+/// The equivalent dimensionless γ_opt = ħω/(η·kT), for Table VII output.
+pub fn gamma_opt(eta_opt: f64) -> f64 {
+    photon_energy() / eta_opt / KT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::constants::ETA_OPT;
+
+    #[test]
+    fn table_iv_e_opt() {
+        let e = optical_energy(ETA_OPT, 8);
+        assert!((e * 1e15 - 10.5).abs() < 0.5, "{} fJ", e * 1e15);
+    }
+
+    #[test]
+    fn gamma_opt_about_39_at_80pct() {
+        // Paper: "for 1550-nm light and an optical efficiency of 80%, we
+        // have γ_opt ≈ 39".
+        let g = gamma_opt(0.8);
+        assert!((g - 38.7).abs() < 1.0, "γ_opt = {g}");
+    }
+
+    #[test]
+    fn lower_efficiency_costs_more() {
+        assert!(optical_energy(0.5, 8) > optical_energy(0.8, 8));
+    }
+
+    #[test]
+    fn shot_noise_exponential() {
+        let r = optical_energy(0.8, 10) / optical_energy(0.8, 8);
+        assert!((r - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_efficiency_rejected() {
+        let _ = optical_energy(0.0, 8);
+    }
+}

@@ -1,0 +1,54 @@
+//! `aimc` — Analog, In-memory Compute Architectures for AI.
+//!
+//! Reproduction of Bowen, Regev, Regev, Pedroni, Hanson & Chen,
+//! *"Analog, In-memory Compute Architectures for Artificial Intelligence"*
+//! (cs.AR, 2023): analytic energy-efficiency models and cycle-accurate
+//! simulators for four classes of inference processors — SISD CPUs,
+//! digital in-memory (systolic) arrays, planar analog processors
+//! (silicon-photonic / ReRAM crossbars), and optical 4F convolution
+//! machines — plus a Rust/PJRT serving runtime whose convolution datapaths
+//! are the *functional* models of the same machines (AOT-compiled from
+//! JAX + Pallas, see `python/compile/`).
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`energy`] — Appendix-A energy parameter models (SRAM, MAC, ADC/DAC,
+//!   line loads, laser, ReRAM).
+//! * [`technode`] — CMOS technology-node energy scaling (Stillmaker & Baas).
+//! * [`networks`] — conv-layer shape zoo for the eight CNNs of Table I.
+//! * [`analytic`] — closed-form efficiency models (eqs. 3, 5, 14, 24).
+//! * [`simulator`] — cycle-accurate systolic-array and optical-4F machines.
+//! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
+//! * [`coordinator`] — request batching/scheduling/serving on top of
+//!   [`runtime`], with per-request energy co-simulation.
+//! * [`report`] — table/figure emitters regenerating every table and
+//!   figure in the paper's evaluation section.
+//! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks (the
+//!   build environment is offline; only `xla` + `anyhow` are available).
+
+pub mod analytic;
+pub mod coordinator;
+pub mod energy;
+pub mod networks;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod technode;
+pub mod util;
+
+/// 1 tera-operation per watt, expressed in ops per joule.
+pub const TOPS_PER_WATT: f64 = 1e12;
+
+/// Convert ops-per-joule into the paper's TOPS/W unit.
+pub fn tops_per_watt(ops_per_joule: f64) -> f64 {
+    ops_per_joule / TOPS_PER_WATT
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tops_conversion() {
+        // 1 op per pJ == 1 TOPS/W.
+        assert!((super::tops_per_watt(1e12) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,243 @@
+//! `aimc` — CLI for the analog in-memory compute reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper, run the
+//! cycle-accurate simulators on arbitrary (network, machine, node)
+//! combinations, verify the AOT artifacts against their goldens, and
+//! serve inference through the PJRT coordinator.
+
+use std::time::Instant;
+
+use aimc::coordinator::server::{Server, ServerConfig};
+use aimc::coordinator::{energy as co_energy, smallcnn_network, ConvPath, IMAGE_ELEMS};
+use aimc::networks::{by_name, zoo, DEFAULT_INPUT};
+use aimc::report;
+use aimc::runtime::Engine;
+use aimc::simulator::{optical4f, photonic, reram, systolic};
+use aimc::util::cli::Spec;
+use aimc::util::rng::Rng;
+use aimc::util::table::Table;
+
+fn spec() -> Spec {
+    Spec::new(
+        "aimc",
+        "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
+         commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
+         crossval all simulate zoo verify serve",
+    )
+    .opt("net", "network name (fig8/fig9/fig10/simulate)", None)
+    .opt("input", "input resolution (pixels per side)", Some("1000"))
+    .opt("node", "technology node in nm (simulate)", Some("45"))
+    .opt(
+        "machine",
+        "simulate on: systolic | optical4f | photonic | reram",
+        Some("systolic"),
+    )
+    .opt("path", "serve datapath: exact | systolic | fft", Some("exact"))
+    .opt("requests", "serve: number of requests", Some("64"))
+    .opt("workers", "serve: worker threads", Some("2"))
+    .flag("csv", "emit CSV instead of aligned text")
+}
+
+fn emit(t: &Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let s = spec();
+    let args = s.parse(std::env::args().skip(1))?;
+    if args.positional.is_empty() {
+        println!("{}", s.usage());
+        return Ok(());
+    }
+    let csv = args.flag("csv");
+    let input = args.get_usize("input", DEFAULT_INPUT)?;
+    let net = args.get("net");
+
+    for cmd in &args.positional {
+        match cmd.as_str() {
+            "table1" => emit(&report::table1(input), csv),
+            "table2" => emit(&report::table2(input), csv),
+            "table3" => emit(&report::table3(input), csv),
+            "table4" => emit(&report::table4(), csv),
+            "fig6" => emit(&report::fig6(), csv),
+            "fig7" => emit(&report::fig7(), csv),
+            "fig8" => emit(&report::fig8(net, input), csv),
+            "fig9" => emit(&report::fig9(net, input), csv),
+            "fig10" => {
+                // The paper shows VGG19 (left) and YOLOv3 (right).
+                match net {
+                    Some(n) => emit(&report::fig10(Some(n), input), csv),
+                    None => {
+                        emit(&report::fig10(Some("VGG19"), input), csv);
+                        emit(&report::fig10(Some("YOLOv3"), input), csv);
+                    }
+                }
+            }
+            "all" => {
+                emit(&report::table1(input), csv);
+                emit(&report::table2(input), csv);
+                emit(&report::table3(input), csv);
+                emit(&report::table4(), csv);
+                emit(&report::fig6(), csv);
+                emit(&report::fig7(), csv);
+                emit(&report::fig8(net, input), csv);
+                emit(&report::fig9(net, input), csv);
+                emit(&report::fig10(Some("VGG19"), input), csv);
+                emit(&report::fig10(Some("YOLOv3"), input), csv);
+            }
+            "crossval" => emit(&report::crossval(net, input), csv),
+            "zoo" => cmd_zoo(input, csv),
+            "simulate" => cmd_simulate(&args, input)?,
+            "verify" => cmd_verify()?,
+            "serve" => cmd_serve(&args)?,
+            other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_zoo(input: usize, csv: bool) {
+    let mut t = Table::new(
+        &format!("network zoo @ {input} px"),
+        &["network", "conv layers", "GMACs", "weights (M)"],
+    );
+    for net in zoo(input) {
+        t.row(vec![
+            net.name.to_string(),
+            net.num_layers().to_string(),
+            format!("{:.1}", net.total_macs() / 1e9),
+            format!("{:.1}", net.total_weights() / 1e6),
+        ]);
+    }
+    emit(&t, csv);
+}
+
+fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
+    let node = args.get_f64("node", 45.0)?;
+    let name = args.get("net").unwrap_or("YOLOv3");
+    let net = if name.eq_ignore_ascii_case("smallcnn") {
+        smallcnn_network()
+    } else {
+        by_name(name, input)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {name:?} (try `aimc zoo`)"))?
+    };
+    let machine = args.get_or("machine", "systolic");
+    let t0 = Instant::now();
+    let r = match machine {
+        "systolic" => systolic::simulate_network(&systolic::SystolicConfig::default(), &net, node),
+        "optical4f" | "optical" | "4f" => {
+            optical4f::simulate_network(&optical4f::Optical4FConfig::default(), &net, node)
+        }
+        "photonic" | "sp" => {
+            photonic::simulate_network(&photonic::PhotonicConfig::default(), &net, node)
+        }
+        "reram" | "memristor" => {
+            reram::simulate_network(&reram::ReramConfig::default(), &net, node)
+        }
+        m => anyhow::bail!(
+            "unknown machine {m:?} (systolic | optical4f | photonic | reram)"
+        ),
+    };
+    println!(
+        "{} on {machine} @ {node} nm  ({} layers, {:.1} GMACs, simulated in {:.1} ms)",
+        net.name,
+        net.num_layers(),
+        r.macs / 1e9,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!(
+        "  efficiency: {:.3} TOPS/W   energy/MAC: {:.4} pJ   time units: {:.3e}",
+        r.tops_per_watt(),
+        r.energy_per_mac() * 1e12,
+        r.time_units
+    );
+    for (c, j) in r.ledger.breakdown() {
+        println!(
+            "  {:>5}: {:>10.4} pJ/MAC  ({:>5.1}%)",
+            c.label(),
+            j / r.macs * 1e12,
+            100.0 * j / r.ledger.total()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify() -> anyhow::Result<()> {
+    let engine = Engine::discover()?;
+    println!("platform: {}", engine.platform());
+    let names = engine.artifact_names();
+    let mut failed = 0;
+    for name in &names {
+        let t0 = Instant::now();
+        match engine.verify_golden(name) {
+            Ok(err) => {
+                let rtol = engine.manifest().get(name).unwrap().rtol;
+                let ok = err <= rtol;
+                if !ok {
+                    failed += 1;
+                }
+                println!(
+                    "  {:28} max rel err {err:.3e} (rtol {rtol:.0e}) {} [{:.2}s]",
+                    name,
+                    if ok { "OK" } else { "FAIL" },
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("  {name:28} ERROR: {e:#}");
+            }
+        }
+    }
+    if failed > 0 {
+        anyhow::bail!("{failed}/{} artifacts failed golden replay", names.len());
+    }
+    println!("all {} artifacts verified", names.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
+    let path = ConvPath::parse(args.get_or("path", "exact"))
+        .ok_or_else(|| anyhow::anyhow!("bad --path (exact | systolic | fft)"))?;
+    let n_req = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", 2)?;
+    println!("starting server: path {path:?}, {workers} workers, {n_req} requests");
+
+    let server = Server::start(ServerConfig {
+        path,
+        workers,
+        ..Default::default()
+    })?;
+    // Warm up compilation before timing.
+    let _ = server.infer_blocking(vec![0.0; IMAGE_ELEMS])?;
+
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> = (0..n_req).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
+    server.metrics.lock().unwrap().start();
+    let rxs: Vec<_> = images.into_iter().map(|im| server.infer(im)).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    server.metrics.lock().unwrap().stop();
+    let metrics = server.shutdown();
+    println!("served {ok}/{n_req} OK — {}", metrics.summary());
+
+    // Energy co-simulation for the served workload.
+    let report = co_energy::co_simulate(&smallcnn_network(), 45.0);
+    println!("energy co-simulation (per inference) {}", report.summary());
+    Ok(())
+}

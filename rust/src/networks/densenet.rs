@@ -1,0 +1,122 @@
+//! DenseNet-201 (Huang et al. 2016): dense blocks [6, 12, 48, 32] with
+//! growth rate 32 and bottleneck width 4·growth = 128. 200 conv layers
+//! (Table I): 1 stem + 2·98 dense-layer convs + 3 transitions.
+
+use super::{Builder, Network};
+
+const GROWTH: usize = 32;
+const BOTTLENECK: usize = 4 * GROWTH; // 128
+
+/// DenseNet-201 at the given input resolution.
+pub fn densenet201(input: usize) -> Network {
+    densenet(input, &[6, 12, 48, 32], "DenseNet201")
+}
+
+/// DenseNet-121 (ablation benches).
+pub fn densenet121(input: usize) -> Network {
+    densenet(input, &[6, 12, 24, 16], "DenseNet121")
+}
+
+fn densenet(input: usize, blocks: &[usize], name: &'static str) -> Network {
+    let mut b = Builder::new(input);
+    b.conv(3, 64, 7, 2); // stem
+    b.pool(2); // max-pool
+    let mut c = 64;
+    for (bi, &layers) in blocks.iter().enumerate() {
+        for _ in 0..layers {
+            // Dense layer: 1×1 bottleneck (c → 128) then 3×3 (128 → 32);
+            // the 32 new features concatenate onto the running c.
+            b.branch_conv(b.n, c, BOTTLENECK, 1, 1, 1);
+            b.branch_conv(b.n, BOTTLENECK, GROWTH, 3, 3, 1);
+            c += GROWTH;
+        }
+        if bi + 1 < blocks.len() {
+            // Transition: 1×1 halving channels, then 2×2 avg-pool.
+            b.branch_conv(b.n, c, c / 2, 1, 1, 1);
+            c /= 2;
+            b.pool(2);
+        }
+    }
+    b.finish(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, median};
+
+    #[test]
+    fn densenet201_layer_count() {
+        assert_eq!(densenet201(1000).num_layers(), 200); // Table I: 200
+    }
+
+    #[test]
+    fn densenet121_layer_count() {
+        assert_eq!(densenet121(1000).num_layers(), 120); // 1 + 2·58 + 3
+    }
+
+    #[test]
+    fn channel_accumulation() {
+        // Block 3 ends at 256 + 48·32 = 1792 channels before transition.
+        let net = densenet201(1000);
+        let max_cin = net.layers.iter().map(|l| l.c_in).max().unwrap();
+        assert_eq!(max_cin, 896 + 32 * 31); // deepest dense layer of block 4
+    }
+
+    #[test]
+    fn median_n_is_62() {
+        // Table I: median n = 62 (1000/16 = 62 after stem+3 transitions).
+        let net = densenet201(1000);
+        let ns: Vec<f64> = net.layers.iter().map(|l| l.n as f64).collect();
+        let m = median(&ns);
+        assert!((m - 62.0).abs() <= 2.0, "median n = {m}");
+    }
+
+    #[test]
+    fn median_ci_is_128() {
+        // Table I: median Cᵢ = 128 (half the convs are the 128-in 3×3s).
+        let net = densenet201(1000);
+        let ci: Vec<f64> = net.layers.iter().map(|l| l.c_in as f64).collect();
+        assert_eq!(median(&ci), 128.0);
+    }
+
+    #[test]
+    fn avg_k_is_2() {
+        // Table I: avg k = 2.0 (half 1×1, half 3×3).
+        let net = densenet201(1000);
+        let ks: Vec<f64> = net.layers.iter().map(|l| l.k_eff()).collect();
+        assert!((mean(&ks) - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn total_weights_1_8e7() {
+        // Table I: total K = 1.8e7.
+        let k = densenet201(1000).total_weights();
+        assert!((k - 1.8e7).abs() / 1.8e7 < 0.15, "K = {k:.3e}");
+    }
+
+    #[test]
+    fn median_intensity_matches_table1() {
+        // Table I: median a = 292.
+        let net = densenet201(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 292.0).abs() / 292.0 < 0.2, "median a = {m}");
+    }
+
+    #[test]
+    fn table2_dims() {
+        // Table II: median L' = 3844 (62²), N' = 1152, M' = 128.
+        let net = densenet201(1000);
+        let lp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().0).collect();
+        let np: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().1).collect();
+        let mp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().2).collect();
+        assert!((median(&lp) - 3844.0).abs() / 3844.0 < 0.1);
+        assert!((median(&np) - 1152.0).abs() / 1152.0 < 0.35, "N' {}", median(&np));
+        assert_eq!(median(&mp), 128.0);
+    }
+}

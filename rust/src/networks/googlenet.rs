@@ -1,0 +1,135 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al. 2014): 9 inception modules of
+//! 6 convs each + 3 stem convs + 2 auxiliary-classifier 1×1s = 59 conv
+//! layers (Table I).
+
+use super::{Builder, Network};
+
+/// One inception module: (#1×1, #3×3 reduce, #3×3, #5×5 reduce, #5×5,
+/// pool-proj). Returns the concatenated output width.
+fn inception(
+    b: &mut Builder,
+    c_in: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+) -> usize {
+    let n = b.n;
+    b.branch_conv(n, c_in, c1, 1, 1, 1);
+    b.branch_conv(n, c_in, c3r, 1, 1, 1);
+    b.branch_conv(n, c3r, c3, 3, 3, 1);
+    b.branch_conv(n, c_in, c5r, 1, 1, 1);
+    b.branch_conv(n, c5r, c5, 5, 5, 1);
+    b.branch_conv(n, c_in, pp, 1, 1, 1);
+    c1 + c3 + c5 + pp
+}
+
+/// GoogLeNet at the given input resolution.
+pub fn googlenet(input: usize) -> Network {
+    let mut b = Builder::new(input);
+    // Stem.
+    b.conv(3, 64, 7, 2);
+    b.pool(2);
+    b.conv(64, 64, 1, 1);
+    b.conv(64, 192, 3, 1);
+    b.pool(2);
+    // Inception 3a/3b.
+    let c = inception(&mut b, 192, 64, 96, 128, 16, 32, 32); // 256
+    let c = inception(&mut b, c, 128, 128, 192, 32, 96, 64); // 480
+    b.pool(2);
+    // Inception 4a–4e (+ two auxiliary heads off 4a and 4d).
+    let c = inception(&mut b, c, 192, 96, 208, 16, 48, 64); // 512
+    // aux1: 5×5/3 avg-pool then 1×1 conv 512→128.
+    b.branch_conv((b.n + 2) / 3, 512, 128, 1, 1, 1);
+    let c = inception(&mut b, c, 160, 112, 224, 24, 64, 64); // 512
+    let c = inception(&mut b, c, 128, 128, 256, 24, 64, 64); // 512
+    let c = inception(&mut b, c, 112, 144, 288, 32, 64, 64); // 528
+    // aux2 off 4d.
+    b.branch_conv((b.n + 2) / 3, 528, 128, 1, 1, 1);
+    let c = inception(&mut b, c, 256, 160, 320, 32, 128, 128); // 832
+    b.pool(2);
+    // Inception 5a/5b.
+    let c = inception(&mut b, c, 256, 160, 320, 32, 128, 128); // 832
+    let _ = inception(&mut b, c, 384, 192, 384, 48, 128, 128); // 1024
+    b.finish("GoogLeNet")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, median};
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(googlenet(1000).num_layers(), 59); // Table I: 59
+    }
+
+    #[test]
+    fn median_n_about_61() {
+        // Table I: median n = 61 (most modules sit at 1000/16 ≈ 62).
+        let net = googlenet(1000);
+        let ns: Vec<f64> = net.layers.iter().map(|l| l.n as f64).collect();
+        let m = median(&ns);
+        assert!((m - 61.0).abs() <= 3.0, "median n = {m}");
+    }
+
+    #[test]
+    fn median_ci_480() {
+        // Table I: median Cᵢ = 480.
+        let net = googlenet(1000);
+        let ci: Vec<f64> = net.layers.iter().map(|l| l.c_in as f64).collect();
+        let m = median(&ci);
+        assert!((m - 480.0).abs() <= 96.0, "median Cᵢ = {m}");
+    }
+
+    #[test]
+    fn median_co_128() {
+        // Table I: median Cᵢ₊₁ = 128.
+        let net = googlenet(1000);
+        let co: Vec<f64> = net.layers.iter().map(|l| l.c_out as f64).collect();
+        assert_eq!(median(&co), 128.0);
+    }
+
+    #[test]
+    fn avg_k_about_2_1() {
+        // Table I: avg k = 2.1.
+        let net = googlenet(1000);
+        let ks: Vec<f64> = net.layers.iter().map(|l| l.k_eff()).collect();
+        let m = mean(&ks);
+        assert!((m - 2.1).abs() < 0.2, "avg k = {m}");
+    }
+
+    #[test]
+    fn total_weights_6_1e6() {
+        // Table I: total K = 6.1e6.
+        let k = googlenet(1000).total_weights();
+        assert!((k - 6.1e6).abs() / 6.1e6 < 0.15, "K = {k:.3e}");
+    }
+
+    #[test]
+    fn median_intensity_matches_table1() {
+        // Table I: median a = 200.
+        let net = googlenet(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 200.0).abs() / 200.0 < 0.25, "median a = {m}");
+    }
+
+    #[test]
+    fn table2_dims() {
+        // Table II: median L' = 3721 (61²), N' = 528, M' = 128.
+        let net = googlenet(1000);
+        let lp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().0).collect();
+        let np: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().1).collect();
+        let mp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().2).collect();
+        assert!((median(&lp) - 3721.0).abs() / 3721.0 < 0.1);
+        assert!((median(&np) - 528.0).abs() / 528.0 < 0.3, "N' {}", median(&np));
+        assert_eq!(median(&mp), 128.0);
+    }
+}

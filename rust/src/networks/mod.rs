@@ -1,0 +1,319 @@
+//! Convolutional-layer shape zoo for the eight CNNs of the paper's
+//! Tables I–III (DenseNet201, GoogLeNet, InceptionResNetV2, InceptionV3,
+//! ResNet152, VGG16, VGG19, YOLOv3).
+//!
+//! The paper consumes only layer *shape statistics* — spatial size n,
+//! channel counts Cᵢ/Cᵢ₊₁, kernel size k, and the derived arithmetic
+//! intensity / matrix dimensions — "considering a 1-Mpixel (per channel)
+//! input image". Each architecture here is generated programmatically
+//! from its published structure at a configurable input resolution
+//! (default 1000×1000 = 1 Mpx), tracking spatial size through
+//! stride-2 stages exactly as the paper does.
+
+pub mod densenet;
+pub mod googlenet;
+pub mod inception;
+pub mod resnet;
+pub mod stats;
+pub mod vgg;
+pub mod yolov3;
+
+/// One convolutional layer's shape. Non-square kernels (Inception's 1×7
+/// factorizations) carry distinct `kh`/`kw`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Input spatial size (square feature map, n × n).
+    pub n: usize,
+    /// Input channels Cᵢ.
+    pub c_in: usize,
+    /// Output channels Cᵢ₊₁.
+    pub c_out: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (same in both dims).
+    pub stride: usize,
+}
+
+impl ConvLayer {
+    pub fn square(n: usize, c_in: usize, c_out: usize, k: usize, stride: usize) -> Self {
+        ConvLayer {
+            n,
+            c_in,
+            c_out,
+            kh: k,
+            kw: k,
+            stride,
+        }
+    }
+
+    /// Output spatial size (same-padding bookkeeping, matching how the
+    /// architectures are actually built).
+    pub fn n_out(&self) -> usize {
+        (self.n + self.stride - 1) / self.stride
+    }
+
+    /// Effective k² (= kh·kw for rectangular kernels).
+    pub fn k2(&self) -> f64 {
+        (self.kh * self.kw) as f64
+    }
+
+    /// Effective (geometric-mean) kernel edge, for Table I's "avg. k".
+    pub fn k_eff(&self) -> f64 {
+        self.k2().sqrt()
+    }
+
+    /// Number of kernel weights K = k²·Cᵢ·Cᵢ₊₁.
+    pub fn weights(&self) -> f64 {
+        self.k2() * (self.c_in * self.c_out) as f64
+    }
+
+    /// MAC count: n_out²·k²·Cᵢ·Cᵢ₊₁.
+    pub fn macs(&self) -> f64 {
+        let no = self.n_out() as f64;
+        no * no * self.k2() * (self.c_in * self.c_out) as f64
+    }
+
+    /// Operation count (paper convention: multiply and add are separate
+    /// ops, N_op = 2·MACs).
+    pub fn ops(&self) -> f64 {
+        2.0 * self.macs()
+    }
+
+    /// Input activation size n²·Cᵢ (Table I's N).
+    pub fn input_size(&self) -> f64 {
+        (self.n * self.n * self.c_in) as f64
+    }
+
+    /// eq. (9): native arithmetic intensity of the layer,
+    /// a = 2n²k²CᵢCᵢ₊₁ / (n²(Cᵢ+Cᵢ₊₁) + k²CᵢCᵢ₊₁),
+    /// generalized to strided layers by using the output size for the
+    /// output-traffic term.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let n2 = (self.n * self.n) as f64;
+        let no2 = {
+            let no = self.n_out() as f64;
+            no * no
+        };
+        let mem = n2 * self.c_in as f64 + no2 * self.c_out as f64 + self.weights();
+        self.ops() / mem
+    }
+
+    /// eq. (16): conv-as-matmul dimensions (L', N', M') for a
+    /// weight-stationary scheme.
+    pub fn matmul_dims(&self) -> (f64, f64, f64) {
+        let l = {
+            // (n-k+1)² for stride 1; ((n-k)/s+1)² generally.
+            let span = self.n.saturating_sub(self.kh.max(self.kw)) / self.stride + 1;
+            (span * span) as f64
+        };
+        let n = self.k2() * self.c_in as f64;
+        let m = self.c_out as f64;
+        (l, n, m)
+    }
+
+    /// eq. (8): arithmetic intensity when implemented as a general
+    /// matrix multiplication (Toeplitz input, k²-duplicated activations).
+    pub fn matmul_arithmetic_intensity(&self) -> f64 {
+        let (l, n, m) = self.matmul_dims();
+        2.0 * l * n * m / (l * n + n * m + l * m)
+    }
+}
+
+/// A named network: an ordered list of conv layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_macs(&self) -> f64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    pub fn total_weights(&self) -> f64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+/// Default input resolution: 1 Mpixel per channel, as in Tables I–III.
+pub const DEFAULT_INPUT: usize = 1000;
+
+/// All eight networks of Table I at the given input resolution.
+pub fn zoo(input: usize) -> Vec<Network> {
+    vec![
+        densenet::densenet201(input),
+        googlenet::googlenet(input),
+        inception::inception_resnet_v2(input),
+        inception::inception_v3(input),
+        resnet::resnet152(input),
+        vgg::vgg16(input),
+        vgg::vgg19(input),
+        yolov3::yolov3(input),
+    ]
+}
+
+/// Look up one network by (case-insensitive) name.
+pub fn by_name(name: &str, input: usize) -> Option<Network> {
+    let lower = name.to_ascii_lowercase();
+    zoo(input)
+        .into_iter()
+        .find(|n| n.name.to_ascii_lowercase() == lower)
+}
+
+/// Internal helper for the builders: tracks spatial size while pushing
+/// layers, mirroring how the reference implementations are written.
+pub(crate) struct Builder {
+    pub n: usize,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Builder {
+    pub fn new(input: usize) -> Self {
+        Builder {
+            n: input,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Push a conv at the current spatial size; advance size by stride.
+    pub fn conv(&mut self, c_in: usize, c_out: usize, k: usize, stride: usize) {
+        self.layers.push(ConvLayer::square(self.n, c_in, c_out, k, stride));
+        self.n = (self.n + stride - 1) / stride;
+    }
+
+    /// Push a conv that does NOT advance the tracked spatial size
+    /// (parallel branch of an inception module).
+    pub fn branch_conv(&mut self, n: usize, c_in: usize, c_out: usize, kh: usize, kw: usize, stride: usize) {
+        self.layers.push(ConvLayer {
+            n,
+            c_in,
+            c_out,
+            kh,
+            kw,
+            stride,
+        });
+    }
+
+    /// Pooling: just advance the spatial tracker.
+    pub fn pool(&mut self, stride: usize) {
+        self.n = (self.n + stride - 1) / stride;
+    }
+
+    pub fn finish(self, name: &'static str) -> Network {
+        Network {
+            name,
+            layers: self.layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_layer_basics() {
+        let l = ConvLayer::square(100, 16, 32, 3, 1);
+        assert_eq!(l.n_out(), 100);
+        assert_eq!(l.k2(), 9.0);
+        assert_eq!(l.weights(), 9.0 * 16.0 * 32.0);
+        assert_eq!(l.macs(), 100.0 * 100.0 * 9.0 * 512.0);
+        assert_eq!(l.ops(), 2.0 * l.macs());
+    }
+
+    #[test]
+    fn stride_halves_output() {
+        let l = ConvLayer::square(101, 8, 8, 3, 2);
+        assert_eq!(l.n_out(), 51);
+    }
+
+    #[test]
+    fn rectangular_kernel() {
+        let l = ConvLayer {
+            n: 50,
+            c_in: 4,
+            c_out: 4,
+            kh: 1,
+            kw: 7,
+            stride: 1,
+        };
+        assert_eq!(l.k2(), 7.0);
+        assert!((l.k_eff() - 7f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq9_matches_hand_computation() {
+        // Table V layer: n=512, Ci=Co=128, k=3. eq. (9) *native* intensity:
+        // 2·512²·9·128² / (512²·256 + 9·128²) ≈ 1149.
+        let l = ConvLayer::square(512, 128, 128, 3, 1);
+        let a = l.arithmetic_intensity();
+        assert!((a - 1149.0).abs() < 5.0, "a = {a}");
+    }
+
+    #[test]
+    fn table_v_a_230_is_the_matmul_intensity() {
+        // Table V quotes a = 230 for the same layer, citing eq. (9) — but
+        // 230 is exactly eq. (8), the conv-as-matmul intensity with the
+        // k²-duplicated Toeplitz input. (Paper typo; we reproduce 230 via
+        // eq. 8 and use it wherever the paper uses Table V's a.)
+        let l = ConvLayer::square(512, 128, 128, 3, 1);
+        let a = l.matmul_arithmetic_intensity();
+        assert!((a - 230.0).abs() < 2.0, "a_mm = {a}");
+    }
+
+    #[test]
+    fn eq8_lower_than_eq9() {
+        // Matmul implementation duplicates activations k² times, so its
+        // arithmetic intensity must be lower for n² >> k²Cᵢ.
+        let l = ConvLayer::square(512, 16, 16, 3, 1);
+        assert!(l.matmul_arithmetic_intensity() < l.arithmetic_intensity());
+    }
+
+    #[test]
+    fn matmul_dims_eq16() {
+        let l = ConvLayer::square(64, 8, 16, 3, 1);
+        let (lp, np, mp) = l.matmul_dims();
+        assert_eq!(lp, 62.0 * 62.0);
+        assert_eq!(np, 9.0 * 8.0);
+        assert_eq!(mp, 16.0);
+    }
+
+    #[test]
+    fn zoo_has_eight_networks() {
+        let z = zoo(DEFAULT_INPUT);
+        assert_eq!(z.len(), 8);
+        let names: Vec<_> = z.iter().map(|n| n.name).collect();
+        assert!(names.contains(&"VGG16") && names.contains(&"YOLOv3"));
+    }
+
+    #[test]
+    fn by_name_case_insensitive() {
+        assert!(by_name("vgg16", 1000).is_some());
+        assert!(by_name("YOLOV3", 1000).is_some());
+        assert!(by_name("nope", 1000).is_none());
+    }
+
+    #[test]
+    fn builder_tracks_spatial() {
+        let mut b = Builder::new(100);
+        b.conv(3, 8, 3, 1);
+        assert_eq!(b.n, 100);
+        b.conv(8, 16, 3, 2);
+        assert_eq!(b.n, 50);
+        b.pool(2);
+        assert_eq!(b.n, 25);
+        let net = b.finish("t");
+        assert_eq!(net.num_layers(), 2);
+    }
+}

@@ -1,0 +1,150 @@
+//! ResNet-152 (He et al. 2015): bottleneck residual blocks,
+//! stages [3, 8, 36, 3]. 155 conv layers (Table I): 1 stem +
+//! 150 bottleneck convs + 4 downsample projections.
+
+use super::{Builder, Network};
+
+struct Stage {
+    blocks: usize,
+    mid: usize,
+    out: usize,
+    stride: usize,
+}
+
+/// General bottleneck ResNet generator.
+fn resnet(input: usize, stages: &[Stage], name: &'static str) -> Network {
+    let mut b = Builder::new(input);
+    b.conv(3, 64, 7, 2); // stem
+    b.pool(2); // 3×3 max-pool
+    let mut c_in = 64;
+    for st in stages {
+        for blk in 0..st.blocks {
+            let stride = if blk == 0 { st.stride } else { 1 };
+            let n = b.n;
+            if blk == 0 {
+                // Downsample projection shortcut (1×1, strided).
+                b.branch_conv(n, c_in, st.out, 1, 1, stride);
+            }
+            // Bottleneck: 1×1 reduce → 3×3 (strided on the first block)
+            // → 1×1 expand. (v1.5 convention: stride on the 3×3.)
+            b.branch_conv(n, c_in, st.mid, 1, 1, 1);
+            b.conv(st.mid, st.mid, 3, stride);
+            b.branch_conv(b.n, st.mid, st.out, 1, 1, 1);
+            c_in = st.out;
+        }
+    }
+    b.finish(name)
+}
+
+/// ResNet-152 at the given input resolution.
+pub fn resnet152(input: usize) -> Network {
+    resnet(
+        input,
+        &[
+            Stage { blocks: 3, mid: 64, out: 256, stride: 1 },
+            Stage { blocks: 8, mid: 128, out: 512, stride: 2 },
+            Stage { blocks: 36, mid: 256, out: 1024, stride: 2 },
+            Stage { blocks: 3, mid: 512, out: 2048, stride: 2 },
+        ],
+        "ResNet152",
+    )
+}
+
+/// ResNet-50 (used by the ablation benches, not in the paper's tables).
+pub fn resnet50(input: usize) -> Network {
+    resnet(
+        input,
+        &[
+            Stage { blocks: 3, mid: 64, out: 256, stride: 1 },
+            Stage { blocks: 4, mid: 128, out: 512, stride: 2 },
+            Stage { blocks: 6, mid: 256, out: 1024, stride: 2 },
+            Stage { blocks: 3, mid: 512, out: 2048, stride: 2 },
+        ],
+        "ResNet50",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, median};
+
+    #[test]
+    fn resnet152_layer_count() {
+        assert_eq!(resnet152(1000).num_layers(), 155); // Table I: 155
+    }
+
+    #[test]
+    fn resnet50_layer_count() {
+        assert_eq!(resnet50(1000).num_layers(), 53); // 1 + 48 + 4
+    }
+
+    #[test]
+    fn spatial_ladder() {
+        let net = resnet152(1000);
+        // Stem at 1000, first stage at 250, last blocks at 32.
+        assert_eq!(net.layers[0].n, 1000);
+        assert_eq!(net.layers[1].n, 250);
+        assert!(net.layers.last().unwrap().n <= 32);
+    }
+
+    #[test]
+    fn median_n_matches_table1() {
+        // Table I: median n = 63 (ours: 63 with ceil-div tracking).
+        let net = resnet152(1000);
+        let ns: Vec<f64> = net.layers.iter().map(|l| l.n as f64).collect();
+        let m = median(&ns);
+        assert!((m - 63.0).abs() <= 2.0, "median n = {m}");
+    }
+
+    #[test]
+    fn median_channels_match_table1() {
+        // Table I: median Cᵢ = 256, Cᵢ₊₁ = 256.
+        let net = resnet152(1000);
+        let ci: Vec<f64> = net.layers.iter().map(|l| l.c_in as f64).collect();
+        let co: Vec<f64> = net.layers.iter().map(|l| l.c_out as f64).collect();
+        assert_eq!(median(&ci), 256.0);
+        assert_eq!(median(&co), 256.0);
+    }
+
+    #[test]
+    fn avg_k_about_1_7() {
+        // Table I: avg k = 1.7 (mostly 1×1 with one 3×3 per block).
+        let net = resnet152(1000);
+        let ks: Vec<f64> = net.layers.iter().map(|l| l.k_eff()).collect();
+        let m = mean(&ks);
+        assert!((m - 1.7).abs() < 0.15, "avg k = {m}");
+    }
+
+    #[test]
+    fn total_weights_5_8e7() {
+        // Table I: total K = 5.8e7.
+        let k = resnet152(1000).total_weights();
+        assert!((k - 5.8e7).abs() / 5.8e7 < 0.1, "K = {k:.3e}");
+    }
+
+    #[test]
+    fn median_intensity_matches_table1() {
+        // Table I: median a = 390.
+        let net = resnet152(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 390.0).abs() / 390.0 < 0.2, "median a = {m}");
+    }
+
+    #[test]
+    fn table2_dims() {
+        // Table II: median L' = 3969 (=63²), N' = 1024, M' = 256.
+        let net = resnet152(1000);
+        let lp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().0).collect();
+        let np: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().1).collect();
+        let mp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().2).collect();
+        assert!((median(&lp) - 3969.0).abs() / 3969.0 < 0.1);
+        assert!((median(&np) - 1024.0).abs() / 1024.0 < 0.26);
+        assert_eq!(median(&mp), 256.0);
+    }
+}

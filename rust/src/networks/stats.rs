@@ -1,0 +1,186 @@
+//! Network-level statistics: the rows of Tables I, II and III.
+
+use super::{ConvLayer, Network};
+use crate::util::stats::{mean, median};
+
+/// Table I row: conv-layer shape statistics of one network.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: &'static str,
+    pub num_layers: usize,
+    pub median_n: f64,
+    pub median_ci: f64,
+    pub max_input: f64,
+    pub avg_k: f64,
+    pub total_weights: f64,
+    pub median_co: f64,
+    pub median_a: f64,
+}
+
+pub fn table1_row(net: &Network) -> Table1Row {
+    let ls = &net.layers;
+    Table1Row {
+        name: net.name,
+        num_layers: ls.len(),
+        median_n: median(&ls.iter().map(|l| l.n as f64).collect::<Vec<_>>()),
+        median_ci: median(&ls.iter().map(|l| l.c_in as f64).collect::<Vec<_>>()),
+        max_input: ls.iter().map(|l| l.input_size()).fold(0.0, f64::max),
+        avg_k: mean(&ls.iter().map(|l| l.k_eff()).collect::<Vec<_>>()),
+        total_weights: net.total_weights(),
+        median_co: median(&ls.iter().map(|l| l.c_out as f64).collect::<Vec<_>>()),
+        median_a: median(
+            &ls.iter()
+                .map(|l| l.arithmetic_intensity())
+                .collect::<Vec<_>>(),
+        ),
+    }
+}
+
+/// Table II row: median conv-as-matmul dimensions (eq. 16).
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub name: &'static str,
+    pub num_layers: usize,
+    pub median_l: f64,
+    pub median_n: f64,
+    pub median_m: f64,
+}
+
+pub fn table2_row(net: &Network) -> Table2Row {
+    let dims: Vec<(f64, f64, f64)> =
+        net.layers.iter().map(|l| l.matmul_dims()).collect();
+    Table2Row {
+        name: net.name,
+        num_layers: net.layers.len(),
+        median_l: median(&dims.iter().map(|d| d.0).collect::<Vec<_>>()),
+        median_n: median(&dims.iter().map(|d| d.1).collect::<Vec<_>>()),
+        median_m: median(&dims.iter().map(|d| d.2).collect::<Vec<_>>()),
+    }
+}
+
+/// eq. (23): the energy-amortization factors (L, N, M) of a conv layer on
+/// an optical 4F machine with `slm_pixels` of SLM area. `None` pixels
+/// means an infinitely large metasurface (Table III's C' → ∞).
+pub fn optical4f_dims(layer: &ConvLayer, slm_pixels: Option<usize>) -> (f64, f64, f64) {
+    let n2 = (layer.n * layer.n) as f64;
+    let k2 = layer.k2();
+    let co = layer.c_out as f64;
+    let c_prime = match slm_pixels {
+        None => f64::INFINITY,
+        Some(px) => ((px as f64 / n2).floor()).max(1.0).min(layer.c_in as f64),
+    };
+    let l = n2; // eq. (23a)
+    let n = if c_prime.is_infinite() {
+        k2 * co // lim_{C'→∞} k²C'Cₒ/(C'+Cₒ) = k²Cₒ
+    } else {
+        k2 * c_prime * co / (c_prime + co) // eq. (23b)
+    };
+    let m = k2 * co / 2.0; // eq. (23c)
+    (l, n, m)
+}
+
+/// Table III row: median optical-4F amortization dims of one network.
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub name: &'static str,
+    pub num_layers: usize,
+    pub median_l: f64,
+    pub median_n: f64,
+    pub median_m: f64,
+}
+
+pub fn table3_row(net: &Network, slm_pixels: Option<usize>) -> Table3Row {
+    let dims: Vec<(f64, f64, f64)> = net
+        .layers
+        .iter()
+        .map(|l| optical4f_dims(l, slm_pixels))
+        .collect();
+    Table3Row {
+        name: net.name,
+        num_layers: net.layers.len(),
+        median_l: median(&dims.iter().map(|d| d.0).collect::<Vec<_>>()),
+        median_n: median(&dims.iter().map(|d| d.1).collect::<Vec<_>>()),
+        median_m: median(&dims.iter().map(|d| d.2).collect::<Vec<_>>()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::{vgg::vgg16, yolov3::yolov3, zoo, ConvLayer};
+
+    #[test]
+    fn table1_row_fields_populated() {
+        let r = table1_row(&vgg16(1000));
+        assert_eq!(r.num_layers, 13);
+        assert!(r.median_a > 1000.0);
+        assert!(r.max_input > 1e7);
+    }
+
+    #[test]
+    fn table3_infinite_slm_n_equals_2m() {
+        // In the C'→∞ limit N = k²Cₒ and M = k²Cₒ/2, so N = 2M for every
+        // layer — visible in every row of the paper's Table III.
+        for net in zoo(1000) {
+            let r = table3_row(&net, None);
+            assert!(
+                (r.median_n - 2.0 * r.median_m).abs() < 1e-9,
+                "{}: N {} != 2M {}",
+                net.name,
+                r.median_n,
+                r.median_m
+            );
+        }
+    }
+
+    #[test]
+    fn table3_yolo_matches_paper() {
+        // Table III YOLOv3: L = 3844, N = 512, M = 256.
+        let r = table3_row(&yolov3(1000), None);
+        assert!((r.median_l - 3844.0).abs() / 3844.0 < 0.1, "L {}", r.median_l);
+        assert!((r.median_n - 512.0).abs() / 512.0 < 0.3, "N {}", r.median_n);
+        assert!((r.median_m - 256.0).abs() / 256.0 < 0.3, "M {}", r.median_m);
+    }
+
+    #[test]
+    fn finite_slm_reduces_n() {
+        let l = ConvLayer::square(512, 128, 128, 3, 1);
+        let (_, n_inf, _) = optical4f_dims(&l, None);
+        let (_, n_4m, _) = optical4f_dims(&l, Some(4 * 1024 * 1024));
+        assert!(n_4m < n_inf, "finite SLM must reduce amortization");
+        // C' = floor(4Mi/512²) = 16 → N = 9·16·128/144 = 128.
+        assert!((n_4m - 128.0).abs() < 1.0, "N = {n_4m}");
+    }
+
+    #[test]
+    fn c_prime_clamped_to_ci() {
+        // Tiny image: C' would be huge but can't exceed the actual
+        // channel count.
+        let l = ConvLayer::square(10, 4, 8, 3, 1);
+        let (_, n, _) = optical4f_dims(&l, Some(4 * 1024 * 1024));
+        let expect = 9.0 * 4.0 * 8.0 / (4.0 + 8.0);
+        assert!((n - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c_prime_floor_at_one() {
+        // Image bigger than the SLM: C' clamps to 1 (spatial tiling is
+        // the simulator's job, the analytic factor keeps C' ≥ 1).
+        let l = ConvLayer::square(4000, 16, 8, 3, 1);
+        let (_, n, _) = optical4f_dims(&l, Some(1024 * 1024));
+        let expect = 9.0 * 1.0 * 8.0 / (1.0 + 8.0);
+        assert!((n - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_rows_emit_for_zoo() {
+        for net in zoo(1000) {
+            let r1 = table1_row(&net);
+            let r2 = table2_row(&net);
+            let r3 = table3_row(&net, None);
+            assert_eq!(r1.num_layers, r2.num_layers);
+            assert_eq!(r2.num_layers, r3.num_layers);
+            assert!(r1.median_a > 0.0 && r2.median_l > 0.0 && r3.median_m > 0.0);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! VGG-16 / VGG-19 (Simonyan & Zisserman 2014): plain 3×3 stacks with
+//! 2×2 max-pools. The highest-arithmetic-intensity networks in Table I
+//! (median a ≈ 2262 / 2527) because of their large spatial maps.
+
+use super::{Builder, Network};
+
+fn vgg(input: usize, blocks: &[(usize, usize)]) -> Builder {
+    // blocks: (convs_in_block, out_channels)
+    let mut b = Builder::new(input);
+    let mut c_in = 3;
+    for &(convs, width) in blocks {
+        for _ in 0..convs {
+            b.conv(c_in, width, 3, 1);
+            c_in = width;
+        }
+        b.pool(2);
+    }
+    b
+}
+
+/// VGG-16: 13 conv layers (2,2,3,3,3) × (64,128,256,512,512).
+pub fn vgg16(input: usize) -> Network {
+    vgg(
+        input,
+        &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)],
+    )
+    .finish("VGG16")
+}
+
+/// VGG-19: 16 conv layers (2,2,4,4,4).
+pub fn vgg19(input: usize) -> Network {
+    vgg(
+        input,
+        &[(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)],
+    )
+    .finish("VGG19")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::median;
+
+    #[test]
+    fn vgg16_layer_count() {
+        assert_eq!(vgg16(1000).num_layers(), 13); // Table I: 13
+    }
+
+    #[test]
+    fn vgg19_layer_count() {
+        assert_eq!(vgg19(1000).num_layers(), 16); // Table I: 16
+    }
+
+    #[test]
+    fn all_kernels_are_3x3() {
+        for l in &vgg19(1000).layers {
+            assert_eq!((l.kh, l.kw), (3, 3));
+        }
+    }
+
+    #[test]
+    fn vgg16_median_n_close_to_paper() {
+        // Table I: median n = 249 (we track same-padded sizes: 250).
+        let net = vgg16(1000);
+        let ns: Vec<f64> = net.layers.iter().map(|l| l.n as f64).collect();
+        let m = median(&ns);
+        assert!((m - 249.0).abs() <= 6.0, "median n = {m}");
+    }
+
+    #[test]
+    fn vgg16_median_channels() {
+        // Table I: median Cᵢ = 256, median Cᵢ₊₁ = 256.
+        let net = vgg16(1000);
+        let ci: Vec<f64> = net.layers.iter().map(|l| l.c_in as f64).collect();
+        let co: Vec<f64> = net.layers.iter().map(|l| l.c_out as f64).collect();
+        assert_eq!(median(&ci), 256.0);
+        assert_eq!(median(&co), 256.0);
+    }
+
+    #[test]
+    fn vgg16_total_weights_1_5e7() {
+        // Table I: total K = 1.5e7 (conv layers only).
+        let k = vgg16(1000).total_weights();
+        assert!((k - 1.47e7).abs() / 1.5e7 < 0.05, "K = {k:.3e}");
+    }
+
+    #[test]
+    fn vgg16_max_input_size() {
+        // Table I: max N = 6.4e7 = 1000²·64.
+        let net = vgg16(1000);
+        let max_n = net
+            .layers
+            .iter()
+            .map(|l| l.input_size())
+            .fold(0.0, f64::max);
+        assert!((max_n - 6.4e7).abs() / 6.4e7 < 0.02, "max N = {max_n:.3e}");
+    }
+
+    #[test]
+    fn vgg16_median_intensity_matches_table1() {
+        // Table I: median a = 2262. Band: ±15% (spatial bookkeeping
+        // differs by a couple pixels from the paper's).
+        let net = vgg16(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 2262.0).abs() / 2262.0 < 0.15, "median a = {m}");
+    }
+
+    #[test]
+    fn vgg19_median_intensity_matches_table1() {
+        // Table I: median a = 2527.
+        let net = vgg19(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 2527.0).abs() / 2527.0 < 0.15, "median a = {m}");
+    }
+
+    #[test]
+    fn vgg16_table2_l_prime() {
+        // Table II: median L' = 62001 (=249²); ours (250-3+1)² = 61504.
+        let net = vgg16(1000);
+        let lp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().0).collect();
+        let m = median(&lp);
+        assert!((m - 62001.0).abs() / 62001.0 < 0.05, "median L' = {m}");
+    }
+
+    #[test]
+    fn vgg16_table2_n_m_prime() {
+        // Table II: median N' = 2304 (=9·256), median M' = 256.
+        let net = vgg16(1000);
+        let np: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().1).collect();
+        let mp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().2).collect();
+        assert_eq!(median(&np), 2304.0);
+        assert_eq!(median(&mp), 256.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! YOLOv3 (Redmon & Farhadi 2018): Darknet-53 backbone (52 convs) + the
+//! three-scale detection head (23 convs) = 75 conv layers (Table I).
+//! This is the workload of the paper's cycle-accurate Figures 8–10.
+
+use super::{Builder, Network};
+
+/// YOLOv3 at the given input resolution.
+pub fn yolov3(input: usize) -> Network {
+    let mut b = Builder::new(input);
+    // ---- Darknet-53 backbone ----
+    b.conv(3, 32, 3, 1);
+    let mut stage = |b: &mut Builder, c_in: usize, c_out: usize, blocks: usize| {
+        b.conv(c_in, c_out, 3, 2); // downsample
+        for _ in 0..blocks {
+            b.branch_conv(b.n, c_out, c_out / 2, 1, 1, 1);
+            b.branch_conv(b.n, c_out / 2, c_out, 3, 3, 1);
+        }
+    };
+    stage(&mut b, 32, 64, 1); // 500
+    stage(&mut b, 64, 128, 2); // 250
+    stage(&mut b, 128, 256, 8); // 125  (route to scale-3 head)
+    let n_route2 = b.n;
+    stage(&mut b, 256, 512, 8); // 63   (route to scale-2 head)
+    let n_route1 = b.n;
+    stage(&mut b, 512, 1024, 4); // 32
+
+    // ---- Detection heads ----
+    // Scale 1 (deepest): 5-conv block + 3×3 + 1×1 detection.
+    let n = b.n;
+    let head = |b: &mut Builder, n: usize, c_in: usize, c: usize| {
+        b.branch_conv(n, c_in, c, 1, 1, 1);
+        b.branch_conv(n, c, 2 * c, 3, 3, 1);
+        b.branch_conv(n, 2 * c, c, 1, 1, 1);
+        b.branch_conv(n, c, 2 * c, 3, 3, 1);
+        b.branch_conv(n, 2 * c, c, 1, 1, 1);
+        b.branch_conv(n, c, 2 * c, 3, 3, 1);
+        b.branch_conv(n, 2 * c, 255, 1, 1, 1); // 3·(80+5) anchors
+    };
+    head(&mut b, n, 1024, 512);
+    // Upsample branch to scale 2: 1×1 512→256, concat with 512-wide route.
+    b.branch_conv(n, 512, 256, 1, 1, 1);
+    head(&mut b, n_route1, 256 + 512, 256);
+    // Upsample branch to scale 3.
+    b.branch_conv(n_route1, 256, 128, 1, 1, 1);
+    head(&mut b, n_route2, 128 + 256, 128);
+    b.finish("YOLOv3")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, median};
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(yolov3(1000).num_layers(), 75); // Table I: 75
+    }
+
+    #[test]
+    fn spatial_ladder() {
+        let net = yolov3(1000);
+        assert_eq!(net.layers[0].n, 1000);
+        // Backbone bottoms out at 1000/32 ≈ 32.
+        let min_n = net.layers.iter().map(|l| l.n).min().unwrap();
+        assert!((31..=32).contains(&min_n), "min n = {min_n}");
+    }
+
+    #[test]
+    fn median_n_about_62() {
+        // Table I: median n = 62.
+        let net = yolov3(1000);
+        let ns: Vec<f64> = net.layers.iter().map(|l| l.n as f64).collect();
+        let m = median(&ns);
+        assert!((m - 62.0).abs() <= 4.0, "median n = {m}");
+    }
+
+    #[test]
+    fn median_channels_256() {
+        // Table I: median Cᵢ = 256, median Cᵢ₊₁ = 256.
+        let net = yolov3(1000);
+        let ci: Vec<f64> = net.layers.iter().map(|l| l.c_in as f64).collect();
+        let co: Vec<f64> = net.layers.iter().map(|l| l.c_out as f64).collect();
+        assert_eq!(median(&ci), 256.0);
+        assert_eq!(median(&co), 256.0);
+    }
+
+    #[test]
+    fn avg_k_about_2() {
+        // Table I: avg k = 2.0 (alternating 1×1 / 3×3).
+        let net = yolov3(1000);
+        let ks: Vec<f64> = net.layers.iter().map(|l| l.k_eff()).collect();
+        let m = mean(&ks);
+        assert!((m - 2.0).abs() < 0.2, "avg k = {m}");
+    }
+
+    #[test]
+    fn total_weights_6_2e7() {
+        // Table I: total K = 6.2e7.
+        let k = yolov3(1000).total_weights();
+        assert!((k - 6.2e7).abs() / 6.2e7 < 0.1, "K = {k:.3e}");
+    }
+
+    #[test]
+    fn max_input_size_3_2e7() {
+        // Table I: max N = 3.2e7 (= 500²·128 at the stage-2 entry).
+        let net = yolov3(1000);
+        let max_n = net
+            .layers
+            .iter()
+            .map(|l| l.input_size())
+            .fold(0.0, f64::max);
+        assert!((max_n - 3.2e7).abs() / 3.2e7 < 0.05, "max N = {max_n:.3e}");
+    }
+
+    #[test]
+    fn median_intensity_matches_table1() {
+        // Table I: median a = 504.
+        let net = yolov3(1000);
+        let a: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.arithmetic_intensity())
+            .collect();
+        let m = median(&a);
+        assert!((m - 504.0).abs() / 504.0 < 0.2, "median a = {m}");
+    }
+
+    #[test]
+    fn table2_dims() {
+        // Table II: median L' = 3844, N' = 1024, M' = 256.
+        let net = yolov3(1000);
+        let lp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().0).collect();
+        let np: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().1).collect();
+        let mp: Vec<f64> = net.layers.iter().map(|l| l.matmul_dims().2).collect();
+        assert!((median(&lp) - 3844.0).abs() / 3844.0 < 0.1, "L' {}", median(&lp));
+        assert!((median(&np) - 1024.0).abs() / 1024.0 < 0.3, "N' {}", median(&np));
+        assert_eq!(median(&mp), 256.0);
+    }
+
+    #[test]
+    fn total_macs_reasonable() {
+        // ~190 GMAC at 1 Mpx (65.9 GFLOP ≈ 33 GMAC at 416², scaled ×5.8).
+        let macs = yolov3(1000).total_macs();
+        assert!(macs > 1.0e11 && macs < 4.0e11, "MACs = {macs:.3e}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Report generators: regenerate every table and figure of the paper's
+//! evaluation section as aligned text tables (or CSV), with the paper's
+//! printed values alongside for comparison where applicable.
+//!
+//! | generator | paper artifact |
+//! |---|---|
+//! | [`tables::table1`] | Table I — CNN conv-layer statistics |
+//! | [`tables::table2`] | Table II — median matmul dims L′,N′,M′ |
+//! | [`tables::table3`] | Table III — median 4F dims L,N,M |
+//! | [`tables::table4`] | Table IV — energy per operation (+VI, VII) |
+//! | [`figures::fig6`] | Fig. 6 — analytic η vs technology node |
+//! | [`figures::fig7`] | Fig. 7 — memory/compute energy split @32 nm |
+//! | [`figures::fig8`] | Fig. 8 — systolic cycle-accurate vs analytic |
+//! | [`figures::fig9`] | Fig. 9 — optical 4F cycle-accurate vs analytic |
+//! | [`figures::fig10`] | Fig. 10 — 4F energy distribution vs node |
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;

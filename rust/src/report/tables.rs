@@ -1,0 +1,245 @@
+//! Tables I–IV (plus VI/VII footers) as renderable [`Table`]s.
+
+use crate::energy::{
+    self, constants,
+    converter::{adc_energy, dac_energy},
+    load::presets,
+    logic::mac_energy,
+    optical::{gamma_opt, optical_energy},
+    reram::ReramArray,
+    sram,
+};
+use crate::networks::{stats, zoo, Network};
+use crate::util::table::{sci, Table};
+
+/// Paper-printed Table I rows (for the comparison column):
+/// (name, layers, median n, median Cᵢ, max N, avg k, total K, median Cᵢ₊₁, median a).
+pub const PAPER_TABLE1: &[(&str, usize, f64, f64, f64, f64, f64, f64, f64)] = &[
+    ("DenseNet201", 200, 62.0, 128.0, 1.6e7, 2.0, 1.8e7, 128.0, 292.0),
+    ("GoogLeNet", 59, 61.0, 480.0, 3.9e6, 2.1, 6.1e6, 128.0, 200.0),
+    ("InceptionResNetV2", 244, 60.0, 320.0, 8.0e6, 1.9, 8.0e7, 192.0, 291.0),
+    ("InceptionV3", 94, 60.0, 192.0, 8.0e6, 2.4, 3.7e7, 192.0, 295.0),
+    ("ResNet152", 155, 63.0, 256.0, 1.6e7, 1.7, 5.8e7, 256.0, 390.0),
+    ("VGG16", 13, 249.0, 256.0, 6.4e7, 3.0, 1.5e7, 256.0, 2262.0),
+    ("VGG19", 16, 186.0, 256.0, 6.4e7, 3.0, 2.0e7, 384.0, 2527.0),
+    ("YOLOv3", 75, 62.0, 256.0, 3.2e7, 2.0, 6.2e7, 256.0, 504.0),
+];
+
+fn paper1(name: &str) -> Option<&'static (&'static str, usize, f64, f64, f64, f64, f64, f64, f64)> {
+    PAPER_TABLE1.iter().find(|r| r.0 == name)
+}
+
+/// Table I: conv-layer statistics of the eight networks (ours vs paper).
+pub fn table1(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table I — conv-layer statistics (1 Mpx input; ours / paper)",
+        &[
+            "network", "layers", "med n", "med Ci", "max N", "avg k", "total K",
+            "med Ci+1", "med a", "paper a",
+        ],
+    );
+    for net in zoo(input) {
+        let r = stats::table1_row(&net);
+        let pa = paper1(net.name).map(|p| p.8).unwrap_or(f64::NAN);
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_ci),
+            sci(r.max_input),
+            format!("{:.1}", r.avg_k),
+            sci(r.total_weights),
+            format!("{:.0}", r.median_co),
+            format!("{:.0}", r.median_a),
+            format!("{pa:.0}"),
+        ]);
+    }
+    t
+}
+
+/// Paper Table II rows: (name, L′, N′, M′).
+pub const PAPER_TABLE2: &[(&str, f64, f64, f64)] = &[
+    ("DenseNet201", 3844.0, 1152.0, 128.0),
+    ("GoogLeNet", 3721.0, 528.0, 128.0),
+    ("InceptionResNetV2", 3600.0, 432.0, 192.0),
+    ("InceptionV3", 3600.0, 768.0, 192.0),
+    ("ResNet152", 3969.0, 1024.0, 256.0),
+    ("VGG16", 62001.0, 2304.0, 256.0),
+    ("VGG19", 38688.0, 2304.0, 384.0),
+    ("YOLOv3", 3844.0, 1024.0, 256.0),
+];
+
+/// Table II: median conv-as-matmul dimensions (eq. 16).
+pub fn table2(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table II — median matmul dims (eq. 16; ours / paper)",
+        &["network", "layers", "L'", "N'", "M'", "paper L'", "paper N'", "paper M'"],
+    );
+    for net in zoo(input) {
+        let r = stats::table2_row(&net);
+        let p = PAPER_TABLE2
+            .iter()
+            .find(|p| p.0 == net.name)
+            .copied()
+            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_l),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_m),
+            format!("{:.0}", p.1),
+            format!("{:.0}", p.2),
+            format!("{:.0}", p.3),
+        ]);
+    }
+    t
+}
+
+/// Paper Table III rows: (name, L, N, M) at C′ → ∞.
+pub const PAPER_TABLE3: &[(&str, f64, f64, f64)] = &[
+    ("DenseNet201", 3844.0, 272.0, 136.0),
+    ("GoogLeNet", 3721.0, 128.0, 64.0),
+    ("InceptionResNetV2", 3600.0, 224.0, 112.0),
+    ("InceptionV3", 3600.0, 240.0, 120.0),
+    ("ResNet152", 3969.0, 1024.0, 512.0),
+    ("VGG16", 62001.0, 2304.0, 1152.0),
+    ("VGG19", 38688.0, 3456.0, 1728.0),
+    ("YOLOv3", 3844.0, 512.0, 256.0),
+];
+
+/// Table III: median optical-4F amortization dims (eq. 23, infinite SLM).
+pub fn table3(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)",
+        &["network", "layers", "L", "N", "M", "paper L", "paper N", "paper M"],
+    );
+    for net in zoo(input) {
+        let r = stats::table3_row(&net, None);
+        let p = PAPER_TABLE3
+            .iter()
+            .find(|p| p.0 == net.name)
+            .copied()
+            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_l),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_m),
+            format!("{:.0}", p.1),
+            format!("{:.0}", p.2),
+            format!("{:.0}", p.3),
+        ]);
+    }
+    t
+}
+
+/// Table IV (with Tables VI and VII as footer rows): energies per
+/// operation at 45 nm, 0.9 V, 8 bit — ours vs the paper's printed values.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table IV — energy per operation (45 nm, 0.9 V, 8-bit)",
+        &["quantity", "ours (pJ)", "paper (pJ)"],
+    );
+    let mut row = |name: &str, ours_j: f64, paper_pj: f64| {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.4}", ours_j * 1e12),
+            format!("{paper_pj}"),
+        ]);
+    };
+    row(
+        "e_m (96kB SRAM, per byte)",
+        sram::energy_per_byte_45nm(96 * 1024),
+        4.3,
+    );
+    row("e_mac", mac_energy(constants::GAMMA_MAC_45NM, 8), 0.23);
+    row("e_adc", adc_energy(constants::GAMMA_ADC_45NM, 8), 0.25);
+    row("e_dac", dac_energy(constants::GAMMA_DAC, 8), 0.01);
+    row("e_opt", optical_energy(constants::ETA_OPT, 8), 0.01);
+    row("e_load 4um pitch N=256", presets::reram_256().energy(), 0.08);
+    row("e_load 250um pitch N=40", presets::photonic_40().energy(), 0.8);
+    row("e_load 2.5um pitch N=2048", presets::slm_2048().energy(), 0.04);
+    // §A2 ReRAM bound + Table VII γs as footer rows.
+    let arr = ReramArray::default();
+    row("e_ReRAM per MAC (A11, 70 mV)", arr.energy_per_mac(), 0.05);
+    t.row(vec![
+        "ReRAM ceiling (TOPS/W)".into(),
+        format!("{:.1}", 1.0 / (arr.energy_per_mac() * 1e12)),
+        "20".into(),
+    ]);
+    t.row(vec![
+        "gamma_mac / adc / dac / opt".into(),
+        format!(
+            "{:.0} / {:.0} / {:.0} / {:.0}",
+            constants::GAMMA_MAC_45NM,
+            constants::GAMMA_ADC_45NM,
+            constants::GAMMA_DAC,
+            gamma_opt(0.5)
+        ),
+        "1.2e5 / 927* / 39 / 105".into(),
+    ]);
+    t
+}
+
+/// Networks helper reused by figures: the Table I zoo plus SmallCNN.
+pub fn all_networks(input: usize) -> Vec<Network> {
+    let mut v = zoo(input);
+    v.push(crate::coordinator::smallcnn_network());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_8_networks_and_10_columns() {
+        let t = table1(1000);
+        assert_eq!(t.rows.len(), 8);
+        assert_eq!(t.headers.len(), 10);
+    }
+
+    #[test]
+    fn table1_ours_close_to_paper_for_vgg() {
+        let t = table1(1000);
+        let vgg = t.rows.iter().find(|r| r[0] == "VGG16").unwrap();
+        let ours: f64 = vgg[8].parse().unwrap();
+        let paper: f64 = vgg[9].parse().unwrap();
+        assert!((ours - paper).abs() / paper < 0.1, "{ours} vs {paper}");
+    }
+
+    #[test]
+    fn table2_table3_render() {
+        let t2 = table2(1000);
+        let t3 = table3(1000);
+        assert_eq!(t2.rows.len(), 8);
+        assert_eq!(t3.rows.len(), 8);
+        assert!(t2.render().contains("VGG19"));
+        assert!(t3.render().contains("YOLOv3"));
+    }
+
+    #[test]
+    fn table4_matches_paper_within_rounding() {
+        let t = table4();
+        for row in &t.rows {
+            let (Ok(ours), Ok(paper)) = (row[1].parse::<f64>(), row[2].parse::<f64>()) else {
+                continue; // footer rows
+            };
+            // Paper prints 1-2 significant digits; allow 15%.
+            assert!(
+                (ours - paper).abs() / paper < 0.15,
+                "{}: ours {ours} vs paper {paper}",
+                row[0]
+            );
+        }
+    }
+
+    #[test]
+    fn csv_export_works() {
+        let csv = table1(1000).to_csv();
+        assert!(csv.lines().count() == 9);
+        assert!(csv.starts_with("network,"));
+    }
+}

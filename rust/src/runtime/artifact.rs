@@ -1,0 +1,256 @@
+//! Artifact manifest: what `aot.py` shipped and how to call it.
+//!
+//! `manifest.tsv` line format (tab-separated):
+//! `name \t in_shapes \t out_shape \t rtol`
+//! where `in_shapes` is `;`-separated, each shape `,`-separated dims,
+//! e.g. `conv_sys_n64_ci8_co16_k3 \t 8,64,64;16,8,3,3 \t 16,62,62 \t 0.05`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled artifact's calling convention.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+    /// Relative tolerance for golden replay.
+    pub rtol: f64,
+}
+
+impl ArtifactSpec {
+    /// Number of f32 elements of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Path of the HLO text file inside `dir`.
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+
+    /// Path of golden input `i`.
+    pub fn golden_in_path(&self, dir: &Path, i: usize) -> PathBuf {
+        dir.join(format!("{}.in{}.f32", self.name, i))
+    }
+
+    pub fn golden_out_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.out.f32", self.name))
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad dim {d:?} in shape {s:?}"))
+        })
+        .collect()
+}
+
+/// The full artifact set.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.tsv"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 4 {
+                bail!("manifest line {}: want 4 fields, got {}", lineno + 1, fields.len());
+            }
+            let input_shapes = fields[1]
+                .split(';')
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: fields[0].to_string(),
+                input_shapes,
+                output_shape: parse_shape(fields[2])?,
+                rtol: fields[3]
+                    .parse()
+                    .with_context(|| format!("bad rtol {:?}", fields[3]))?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Load a raw little-endian f32 file.
+    pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load all golden inputs of an artifact.
+    pub fn golden_inputs(&self, spec: &ArtifactSpec) -> Result<Vec<Vec<f32>>> {
+        (0..spec.input_shapes.len())
+            .map(|i| {
+                let v = Self::read_f32(&spec.golden_in_path(&self.dir, i))?;
+                if v.len() != spec.input_len(i) {
+                    bail!(
+                        "{} input {}: {} elements, expected {}",
+                        spec.name,
+                        i,
+                        v.len(),
+                        spec.input_len(i)
+                    );
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Load the golden output of an artifact.
+    pub fn golden_output(&self, spec: &ArtifactSpec) -> Result<Vec<f32>> {
+        let v = Self::read_f32(&spec.golden_out_path(&self.dir))?;
+        if v.len() != spec.output_len() {
+            bail!(
+                "{} output: {} elements, expected {}",
+                spec.name,
+                v.len(),
+                spec.output_len()
+            );
+        }
+        Ok(v)
+    }
+}
+
+/// Max relative error between two vectors (scaled by the max |b|).
+pub fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let scale = b
+        .iter()
+        .map(|v| v.abs() as f64)
+        .fold(1e-30f64, f64::max);
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y).abs() as f64) / scale)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str =
+        "qgemm\t256,128;128,256\t256,256\t0.05\nsmallcnn\t3,64,64\t10\t1e-5\n";
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("qgemm").unwrap();
+        assert_eq!(a.input_shapes, vec![vec![256, 128], vec![128, 256]]);
+        assert_eq!(a.output_shape, vec![256, 256]);
+        assert_eq!(a.input_len(0), 256 * 128);
+        assert_eq!(a.output_len(), 256 * 256);
+        assert!((m.get("smallcnn").unwrap().rtol - 1e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_skips_blank_and_comments() {
+        let m = Manifest::parse(Path::new("/tmp"), "# c\n\nqgemm\t2,2\t2,2\t0.1\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(Manifest::parse(Path::new("/tmp"), "name\tonly_two\n").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "n\t1,x\t1\t0.1\n").is_err());
+    }
+
+    #[test]
+    fn paths_formatted() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        let a = m.get("qgemm").unwrap();
+        assert_eq!(a.hlo_path(&m.dir).to_str().unwrap(), "/art/qgemm.hlo.txt");
+        assert_eq!(
+            a.golden_in_path(&m.dir, 1).to_str().unwrap(),
+            "/art/qgemm.in1.f32"
+        );
+        assert_eq!(
+            a.golden_out_path(&m.dir).to_str().unwrap(),
+            "/art/qgemm.out.f32"
+        );
+    }
+
+    #[test]
+    fn read_f32_round_trip() {
+        let vals = [1.5f32, -2.25, 0.0, 3.5e7];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = std::env::temp_dir().join("aimc_test_read_f32.bin");
+        std::fs::write(&p, &bytes).unwrap();
+        let got = Manifest::read_f32(&p).unwrap();
+        assert_eq!(got, vals);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_f32_rejects_misaligned() {
+        let p = std::env::temp_dir().join("aimc_test_misaligned.bin");
+        std::fs::write(&p, [0u8, 1, 2]).unwrap();
+        assert!(Manifest::read_f32(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn max_rel_err_basics() {
+        assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let e = max_rel_err(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((e - 0.05).abs() < 1e-6); // 0.1 / max|b|=2.0
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 6, "expected the aot.py artifact set");
+            assert!(m.get("smallcnn_exact").is_some());
+            // Goldens are readable and correctly sized.
+            let spec = m.get("smallcnn_exact").unwrap().clone();
+            let ins = m.golden_inputs(&spec).unwrap();
+            assert_eq!(ins.len(), 1);
+            assert_eq!(ins[0].len(), 3 * 64 * 64);
+            assert_eq!(m.golden_output(&spec).unwrap().len(), 10);
+        }
+    }
+}

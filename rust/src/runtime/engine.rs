@@ -1,0 +1,216 @@
+//! PJRT execution engine: compile each HLO-text artifact once on the CPU
+//! PJRT client, then execute with plain `Vec<f32>` I/O from the serving
+//! hot path.
+//!
+//! Compilation is lazy (first call) and cached; executions are
+//! `&self`-threadsafe behind per-executable mutexes so the coordinator's
+//! worker pool can share one engine.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// A compiled artifact ready to execute.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The engine owns the PJRT client and all compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: Mutex<HashMap<String, &'static Loaded>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            loaded: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create an engine using artifact auto-discovery.
+    pub fn discover() -> Result<Engine> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/manifest.tsv not found — run `make artifacts`"))?;
+        Engine::new(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all available artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect()
+    }
+
+    /// Compile (once) and return the cached executable for `name`.
+    fn load(&self, name: &str) -> Result<&'static Loaded> {
+        if let Some(l) = self.loaded.lock().unwrap().get(name) {
+            return Ok(l);
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let hlo = spec.hlo_path(&self.manifest.dir);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        // Executables live for the process lifetime; leak to get a stable
+        // reference that avoids cloning non-Clone PJRT handles per call.
+        let leaked: &'static Loaded = Box::leak(Box::new(Loaded { exe, spec }));
+        self.loaded
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Eagerly compile a set of artifacts (warm-up).
+    pub fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given inputs.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let l = self.load(name)?;
+        if inputs.len() != l.spec.input_shapes.len() {
+            anyhow::bail!(
+                "{name}: got {} inputs, expects {}",
+                inputs.len(),
+                l.spec.input_shapes.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != l.spec.input_len(i) {
+                anyhow::bail!(
+                    "{name} input {i}: {} elements, expects {}",
+                    data.len(),
+                    l.spec.input_len(i)
+                );
+            }
+            let dims: Vec<i64> =
+                l.spec.input_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = l
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if vals.len() != l.spec.output_len() {
+            anyhow::bail!(
+                "{name}: output {} elements, manifest says {}",
+                vals.len(),
+                l.spec.output_len()
+            );
+        }
+        Ok(vals)
+    }
+
+    /// Replay an artifact against its golden input/output. Returns the
+    /// max relative error (must be ≤ spec.rtol to pass).
+    pub fn verify_golden(&self, name: &str) -> Result<f64> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let inputs = self.manifest.golden_inputs(&spec)?;
+        let want = self.manifest.golden_output(&spec)?;
+        let got = self.execute(name, &inputs)?;
+        Ok(super::artifact::max_rel_err(&got, &want))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        crate::runtime::find_artifacts_dir().map(|d| Engine::new(&d).unwrap())
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_errors() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute("smallcnn_exact", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_len_errors() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute("smallcnn_exact", &[vec![0.0; 7]]).is_err());
+    }
+
+    #[test]
+    fn golden_replay_smallcnn_exact() {
+        let Some(e) = engine() else { return };
+        let err = e.verify_golden("smallcnn_exact").unwrap();
+        assert!(err < 1e-5, "max rel err {err}");
+    }
+
+    #[test]
+    fn golden_replay_qgemm() {
+        let Some(e) = engine() else { return };
+        let err = e.verify_golden("qgemm_256x128x256").unwrap();
+        assert!(err < 1e-4, "max rel err {err}");
+    }
+
+    #[test]
+    fn execute_is_deterministic() {
+        let Some(e) = engine() else { return };
+        let spec = e.manifest().get("smallcnn_exact").unwrap().clone();
+        let inputs = e.manifest().golden_inputs(&spec).unwrap();
+        let a = e.execute("smallcnn_exact", &inputs).unwrap();
+        let b = e.execute("smallcnn_exact", &inputs).unwrap();
+        assert_eq!(a, b);
+    }
+}

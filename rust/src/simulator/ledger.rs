@@ -1,0 +1,150 @@
+//! Energy ledger: attribute every simulated joule to a hardware component.
+//!
+//! Fig. 10's stacked "energy cost distribution" (DAC / ADC / SRAM / laser)
+//! is a direct read-out of this ledger after a simulation run.
+
+/// Hardware components energy can be charged to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Component {
+    /// Digital-to-analog conversion incl. line/modulator loads.
+    Dac,
+    /// Analog-to-digital conversion.
+    Adc,
+    /// On-chip SRAM traffic.
+    Sram,
+    /// Off-chip DRAM traffic (weights).
+    Dram,
+    /// Laser illumination (optical machines).
+    Laser,
+    /// Digital MAC array (systolic machine).
+    Mac,
+    /// Inter-tile data movement (systolic machine).
+    Load,
+}
+
+impl Component {
+    pub const ALL: [Component; 7] = [
+        Component::Dac,
+        Component::Adc,
+        Component::Sram,
+        Component::Dram,
+        Component::Laser,
+        Component::Mac,
+        Component::Load,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Dac => "DAC",
+            Component::Adc => "ADC",
+            Component::Sram => "SRAM",
+            Component::Dram => "DRAM",
+            Component::Laser => "laser",
+            Component::Mac => "MAC",
+            Component::Load => "load",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Component::Dac => 0,
+            Component::Adc => 1,
+            Component::Sram => 2,
+            Component::Dram => 3,
+            Component::Laser => 4,
+            Component::Mac => 5,
+            Component::Load => 6,
+        }
+    }
+}
+
+/// Per-component energy accumulator (joules).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    joules: [f64; 7],
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        EnergyLedger::default()
+    }
+
+    /// Charge `joules` to a component. Negative charges are a bug.
+    pub fn add(&mut self, c: Component, joules: f64) {
+        debug_assert!(joules >= 0.0, "negative energy charged to {c:?}");
+        self.joules[c.index()] += joules;
+    }
+
+    pub fn get(&self, c: Component) -> f64 {
+        self.joules[c.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.joules.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for i in 0..self.joules.len() {
+            self.joules[i] += other.joules[i];
+        }
+    }
+
+    /// Non-zero (component, joules) pairs, largest first.
+    pub fn breakdown(&self) -> Vec<(Component, f64)> {
+        let mut v: Vec<(Component, f64)> = Component::ALL
+            .iter()
+            .map(|&c| (c, self.get(c)))
+            .filter(|(_, j)| *j > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_total() {
+        let mut l = EnergyLedger::new();
+        l.add(Component::Dac, 1.0e-12);
+        l.add(Component::Dac, 0.5e-12);
+        l.add(Component::Laser, 2.0e-12);
+        assert!((l.get(Component::Dac) - 1.5e-12).abs() < 1e-24);
+        assert!((l.total() - 3.5e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn merge_sums_componentwise() {
+        let mut a = EnergyLedger::new();
+        a.add(Component::Sram, 1.0);
+        let mut b = EnergyLedger::new();
+        b.add(Component::Sram, 2.0);
+        b.add(Component::Adc, 3.0);
+        a.merge(&b);
+        assert_eq!(a.get(Component::Sram), 3.0);
+        assert_eq!(a.get(Component::Adc), 3.0);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc() {
+        let mut l = EnergyLedger::new();
+        l.add(Component::Adc, 1.0);
+        l.add(Component::Dac, 5.0);
+        l.add(Component::Laser, 3.0);
+        let b = l.breakdown();
+        assert_eq!(b[0].0, Component::Dac);
+        assert_eq!(b[1].0, Component::Laser);
+        assert_eq!(b[2].0, Component::Adc);
+        assert_eq!(b.len(), 3, "zero components omitted");
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<&str> = Component::ALL.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 7);
+    }
+}

@@ -1,0 +1,104 @@
+//! Cycle-accurate machine models (paper §VII).
+//!
+//! Two machines, matching the paper's computational-results section:
+//!
+//! * [`systolic`] — a weight-stationary 256×256 systolic array with
+//!   24 MiB of banked activation SRAM and DRAM-resident weights
+//!   (the Google-TPUv1-like machine of Fig. 8);
+//! * [`optical4f`] — the reflection-mode optical 4F machine of Fig. 5
+//!   with 4 Mpx SLMs (Figs. 9–10);
+//! * [`reram`], [`photonic`] — *extensions*: cycle models for the two
+//!   planar analog machines of Fig. 3 that the paper only treats
+//!   analytically, so all four Fig. 6 processor classes cross-validate
+//!   the same way.
+//!
+//! Unlike the analytic models, the simulators walk every layer tile by
+//! tile / execution by execution, so finite array capacity, edge tiles,
+//! stride effects and partial-sum spilling are all accounted exactly.
+//! Every joule is attributed to a [`ledger::Component`] so Fig. 10's
+//! energy-distribution stacks fall out directly.
+
+pub mod ledger;
+pub mod optical4f;
+pub mod photonic;
+pub mod reram;
+pub mod systolic;
+
+pub use ledger::{Component, EnergyLedger};
+
+/// Result of simulating one network on one machine at one node.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Total MAC count actually performed (useful work only).
+    pub macs: f64,
+    /// Total operations (2·MACs, the paper's op accounting).
+    pub ops: f64,
+    /// Energy attribution.
+    pub ledger: EnergyLedger,
+    /// Machine-specific time proxy: systolic = array cycles,
+    /// optical = SLM executions.
+    pub time_units: f64,
+}
+
+impl SimResult {
+    /// Efficiency in ops per joule.
+    pub fn ops_per_joule(&self) -> f64 {
+        self.ops / self.ledger.total()
+    }
+
+    /// Efficiency in TOPS/W.
+    pub fn tops_per_watt(&self) -> f64 {
+        self.ops_per_joule() / 1e12
+    }
+
+    /// Energy per MAC in joules (Fig. 10's y-axis is pJ/MAC).
+    pub fn energy_per_mac(&self) -> f64 {
+        self.ledger.total() / self.macs
+    }
+
+    pub fn merge(&mut self, other: &SimResult) {
+        self.macs += other.macs;
+        self.ops += other.ops;
+        self.ledger.merge(&other.ledger);
+        self.time_units += other.time_units;
+    }
+
+    pub fn empty() -> Self {
+        SimResult {
+            macs: 0.0,
+            ops: 0.0,
+            ledger: EnergyLedger::new(),
+            time_units: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SimResult::empty();
+        a.macs = 10.0;
+        a.ops = 20.0;
+        a.ledger.add(Component::Sram, 1e-12);
+        let mut b = SimResult::empty();
+        b.macs = 5.0;
+        b.ops = 10.0;
+        b.ledger.add(Component::Adc, 2e-12);
+        a.merge(&b);
+        assert_eq!(a.macs, 15.0);
+        assert!((a.ledger.total() - 3e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn efficiency_math() {
+        let mut r = SimResult::empty();
+        r.macs = 1e6;
+        r.ops = 2e6;
+        r.ledger.add(Component::Mac, 2e-6); // 1 pJ/op
+        assert!((r.tops_per_watt() - 1.0).abs() < 1e-9);
+        assert!((r.energy_per_mac() - 2e-12).abs() < 1e-24);
+    }
+}

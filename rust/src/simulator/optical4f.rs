@@ -1,0 +1,394 @@
+//! Cycle-accurate reflection-mode optical 4F machine (paper §VII.B–C,
+//! Figs. 5, 9, 10).
+//!
+//! The machine of Fig. 5: one lens between two hybrid chips, each holding
+//! an SLM/metasurface half and a CMOS image-sensor half. Every layer runs
+//! in two phases:
+//!
+//! * **Load phase** (Fig. 5a): C′ input channels are tiled onto the
+//!   object-plane SLM (2 DACs/pixel for the complex write), one laser
+//!   shot takes the optical Fourier transform, the CIS reads the spectrum
+//!   interferometrically (2 ADCs/pixel) and it is re-written to the
+//!   Fourier-plane SLM (2 DACs/pixel) — eq. (18)'s n²Cᵢ(2e_adc + 4e_dac).
+//! * **Compute phase** (Fig. 5b): per output channel, the kernel stack is
+//!   written to the object SLM (2 DACs per kernel pixel), a laser shot
+//!   performs Λ·(Ux) and the second Fourier transform, and the CIS reads
+//!   the convolution (2 ADCs per output pixel) — eq. (19).
+//!
+//! Differences from the analytic eq. (24) — exactly the ones the paper
+//! lists in §VII.B: exact execution counts (⌈Cᵢ/C′⌉ groups × Cᵢ₊₁
+//! output channels), stride-aware CIS readout, and laser energy charged
+//! per shot proportional to the full metasurface size rather than folded
+//! into e_dac.
+
+use super::{Component, EnergyLedger, SimResult};
+use crate::energy::{
+    constants::{SLM_PIXELS, TOTAL_SRAM_BYTES},
+    load::presets,
+    sram::{bank_bytes, Sram},
+    EnergyParams,
+};
+use crate::networks::{ConvLayer, Network};
+
+/// Machine description.
+#[derive(Clone, Copy, Debug)]
+pub struct Optical4FConfig {
+    /// SLM pixel count N̂ (4 Mpx default).
+    pub slm_pixels: usize,
+    /// Total activation SRAM, bytes.
+    pub sram_bytes: usize,
+    /// SRAM bank count (2048 × 12 KB default).
+    pub banks: usize,
+    /// Bytes per stored activation (1 = 8-bit).
+    pub act_bytes: f64,
+    /// Bytes per partial sum when channel groups accumulate (4 = 32-bit).
+    pub psum_bytes: f64,
+    /// Laser energy charged per shot per SLM pixel? When `true` (paper's
+    /// cycle model) each execution pays e_opt × N̂; when `false` only
+    /// active pixels pay (an idealized shuttered illuminator — ablation).
+    pub laser_full_aperture: bool,
+}
+
+impl Default for Optical4FConfig {
+    fn default() -> Self {
+        Optical4FConfig {
+            slm_pixels: SLM_PIXELS,
+            sram_bytes: TOTAL_SRAM_BYTES,
+            banks: 2048,
+            act_bytes: 1.0,
+            psum_bytes: 4.0,
+            laser_full_aperture: true,
+        }
+    }
+}
+
+impl Optical4FConfig {
+    pub fn bank_bytes(&self) -> usize {
+        bank_bytes(self.sram_bytes, self.banks)
+    }
+
+    /// Channels that fit on the SLM at once for a padded tile of s² px
+    /// (eq. 22), clamped to [1, Cᵢ].
+    pub fn channels_at_once(&self, s: usize, c_in: usize) -> usize {
+        ((self.slm_pixels / (s * s)).max(1)).min(c_in.max(1))
+    }
+
+    /// Spatial patches needed when one padded channel exceeds the SLM:
+    /// the image is split into overlapping patches whose inner (valid)
+    /// region tiles the output plane.
+    pub fn spatial_patches(&self, n: usize, k: usize) -> usize {
+        let s = n + k - 1;
+        if s * s <= self.slm_pixels {
+            return 1;
+        }
+        let side = (self.slm_pixels as f64).sqrt().floor() as usize;
+        let inner = side.saturating_sub(k - 1).max(1);
+        n.div_ceil(inner).pow(2)
+    }
+}
+
+struct Coeffs {
+    e_dac_px: f64,
+    e_adc: f64,
+    e_opt_px: f64,
+    e_sram_byte: f64,
+}
+
+impl Coeffs {
+    fn new(cfg: &Optical4FConfig, node_nm: f64) -> Self {
+        let e = EnergyParams::default().at_node(node_nm);
+        Coeffs {
+            // Pixel-wise DAC: converter circuit + segmented active-matrix
+            // line load (node-independent wire term).
+            e_dac_px: e.e_dac + presets::slm_2048().energy(),
+            e_adc: e.e_adc,
+            e_opt_px: e.e_opt,
+            e_sram_byte: Sram::at_node(cfg.bank_bytes(), node_nm).energy_per_byte,
+        }
+    }
+}
+
+/// Simulate one conv layer (stride supported; the FFT is computed on the
+/// full input, only the CIS readout is stride-decimated).
+pub fn simulate_layer(cfg: &Optical4FConfig, layer: &ConvLayer, node_nm: f64) -> SimResult {
+    let c = Coeffs::new(cfg, node_nm);
+    simulate_layer_with(cfg, layer, &c)
+}
+
+fn simulate_layer_with(
+    cfg: &Optical4FConfig,
+    layer: &ConvLayer,
+    c: &Coeffs,
+) -> SimResult {
+    let n = layer.n;
+    let k = layer.kh.max(layer.kw);
+    let ci = layer.c_in;
+    let co = layer.c_out;
+    let n_out = {
+        // VALID output, stride-decimated.
+        let span = n.saturating_sub(k) / layer.stride + 1;
+        span * span
+    } as f64;
+
+    let patches = cfg.spatial_patches(n, k);
+    // Per-patch spatial extent (padded): whole image if it fits.
+    let s2 = if patches == 1 {
+        ((n + k - 1) * (n + k - 1)) as f64
+    } else {
+        cfg.slm_pixels as f64
+    };
+    let c_prime = cfg.channels_at_once(((s2).sqrt()) as usize, ci);
+    let groups = ci.div_ceil(c_prime);
+
+    let laser_px = if cfg.laser_full_aperture {
+        cfg.slm_pixels as f64
+    } else {
+        s2 * c_prime as f64
+    };
+
+    let mut ledger = EnergyLedger::new();
+    let mut executions = 0.0;
+
+    for _patch in 0..patches {
+        let mut remaining = ci;
+        for _g in 0..groups {
+            let cg = remaining.min(c_prime) as f64;
+            remaining -= cg as usize;
+            let act_px = s2 * cg; // active pixels this group
+
+            // ---- Load phase (eq. 18) ----
+            // Activations out of SRAM to drive the object SLM.
+            ledger.add(Component::Sram, act_px * cfg.act_bytes * c.e_sram_byte);
+            // Complex write of the input (2 DACs/px).
+            ledger.add(Component::Dac, 2.0 * act_px * c.e_dac_px);
+            // One laser shot for the optical FFT.
+            ledger.add(Component::Laser, laser_px * c.e_opt_px);
+            executions += 1.0;
+            // Interferometric CIS read of the spectrum (2 ADCs/px) and
+            // complex re-write to the Fourier-plane SLM (2 DACs/px).
+            ledger.add(Component::Adc, 2.0 * act_px * c.e_adc);
+            ledger.add(Component::Dac, 2.0 * act_px * c.e_dac_px);
+
+            // ---- Compute phase (eq. 19), one execution per out-channel.
+            // Every output channel of this group performs identical
+            // work, so the Cᵢ₊₁ executions are charged in closed form
+            // (hoisting this loop cut the YOLOv3 whole-network sim from
+            // 43 µs to ~6 µs — EXPERIMENTS.md §Perf).
+            let kern_px = (k * k) as f64 * cg;
+            let cof = co as f64;
+            // Kernel stacks from SRAM, complex writes to the object SLM.
+            ledger.add(
+                Component::Sram,
+                cof * kern_px * cfg.act_bytes * c.e_sram_byte,
+            );
+            ledger.add(Component::Dac, cof * 2.0 * kern_px * c.e_dac_px);
+            // One laser shot per output channel for Λ·Ux + second FFT.
+            ledger.add(Component::Laser, cof * laser_px * c.e_opt_px);
+            executions += cof;
+            // CIS reads the (stride-decimated) output field.
+            let out_px = n_out / patches as f64;
+            ledger.add(Component::Adc, cof * 2.0 * out_px * c.e_adc);
+            // Output buffering: final group writes the 8-bit result;
+            // earlier groups spill 32-bit partial fields.
+            if groups > 1 && remaining > 0 {
+                ledger.add(
+                    Component::Sram,
+                    cof * 2.0 * out_px * cfg.psum_bytes * c.e_sram_byte,
+                );
+            } else {
+                ledger.add(
+                    Component::Sram,
+                    cof * out_px * cfg.act_bytes * c.e_sram_byte,
+                );
+            }
+        }
+    }
+
+    // Useful work = the VALID output region the CIS actually measured —
+    // the same count the systolic machine's Toeplitz GEMM performs, so
+    // cross-machine TOPS/W comparisons are apples-to-apples.
+    let macs = n_out * layer.k2() * (ci * co) as f64;
+    SimResult {
+        macs,
+        ops: 2.0 * macs,
+        ledger,
+        time_units: executions,
+    }
+}
+
+/// Simulate a whole network at a node.
+pub fn simulate_network(
+    cfg: &Optical4FConfig,
+    net: &Network,
+    node_nm: f64,
+) -> SimResult {
+    let c = Coeffs::new(cfg, node_nm);
+    let mut total = SimResult::empty();
+    for layer in &net.layers {
+        total.merge(&simulate_layer_with(cfg, layer, &c));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::yolov3::yolov3;
+
+    #[test]
+    fn channels_at_once_eq22() {
+        let cfg = Optical4FConfig::default();
+        // 4 Mpx / 512² = 16 channels.
+        assert_eq!(cfg.channels_at_once(512, 128), 16);
+        // Clamped to Cᵢ.
+        assert_eq!(cfg.channels_at_once(512, 4), 4);
+        // Image fills the SLM: 1 channel at a time.
+        assert_eq!(cfg.channels_at_once(2048, 64), 1);
+    }
+
+    #[test]
+    fn spatial_patches_only_for_huge_inputs() {
+        let cfg = Optical4FConfig::default();
+        assert_eq!(cfg.spatial_patches(1000, 3), 1);
+        assert_eq!(cfg.spatial_patches(2046, 3), 1);
+        assert!(cfg.spatial_patches(4000, 3) > 1);
+    }
+
+    #[test]
+    fn execution_count_exact() {
+        // Groups = ⌈Cᵢ/C′⌉; executions = groups·(1 + Cᵢ₊₁).
+        let cfg = Optical4FConfig::default();
+        let l = ConvLayer::square(512, 128, 64, 3, 1);
+        let r = simulate_layer(&cfg, &l, 45.0);
+        // Padded tile is 514² px → C′ = ⌊4 Mpx/514²⌋ = 15 → 9 groups.
+        let c_prime = cfg.channels_at_once(514, 128);
+        assert_eq!(c_prime, 15);
+        let groups = 128usize.div_ceil(c_prime);
+        assert_eq!(r.time_units, (groups * (1 + 64)) as f64);
+    }
+
+    #[test]
+    fn dac_count_matches_eq18_eq19() {
+        // For a single-group layer the DAC op count is exactly
+        // 4·n̄²Cᵢ (load) + 2·k²CᵢCᵢ₊₁ (compute), n̄ = n+k-1.
+        let cfg = Optical4FConfig::default();
+        let l = ConvLayer::square(100, 4, 8, 3, 1);
+        let c = Coeffs::new(&cfg, 45.0);
+        let r = simulate_layer(&cfg, &l, 45.0);
+        let s2 = (102 * 102) as f64;
+        let expect_dacs = 4.0 * s2 * 4.0 + 2.0 * 9.0 * 4.0 * 8.0;
+        let got = r.ledger.get(Component::Dac) / c.e_dac_px;
+        assert!((got - expect_dacs).abs() / expect_dacs < 1e-9, "{got} vs {expect_dacs}");
+    }
+
+    #[test]
+    fn adc_count_matches_eq18_eq19() {
+        let cfg = Optical4FConfig::default();
+        let l = ConvLayer::square(100, 4, 8, 3, 1);
+        let c = Coeffs::new(&cfg, 45.0);
+        let r = simulate_layer(&cfg, &l, 45.0);
+        let s2 = (102 * 102) as f64;
+        let out = (98 * 98) as f64;
+        let expect = 2.0 * s2 * 4.0 + 2.0 * out * 8.0;
+        let got = r.ledger.get(Component::Adc) / c.e_adc;
+        assert!((got - expect).abs() / expect < 1e-9, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn efficiency_band_45nm_yolo() {
+        // Fig. 9: tens of TOPS/W at 45 nm for YOLOv3.
+        let cfg = Optical4FConfig::default();
+        let r = simulate_network(&cfg, &yolov3(1000), 45.0);
+        let eta = r.tops_per_watt();
+        assert!(eta > 10.0 && eta < 400.0, "η = {eta}");
+    }
+
+    #[test]
+    fn beats_systolic_by_an_order() {
+        // The paper's headline: the 4F machine sits ≳10× above the
+        // digital systolic array on the same network and node.
+        use crate::simulator::systolic::{simulate_network as sys, SystolicConfig};
+        let net = yolov3(1000);
+        let o = simulate_network(&Optical4FConfig::default(), &net, 32.0);
+        let s = sys(&SystolicConfig::default(), &net, 32.0);
+        assert!(
+            o.tops_per_watt() > 5.0 * s.tops_per_watt(),
+            "4F {} vs systolic {}",
+            o.tops_per_watt(),
+            s.tops_per_watt()
+        );
+    }
+
+    #[test]
+    fn laser_energy_flat_across_nodes() {
+        let cfg = Optical4FConfig::default();
+        let net = yolov3(1000);
+        let a = simulate_network(&cfg, &net, 45.0);
+        let b = simulate_network(&cfg, &net, 7.0);
+        let la = a.ledger.get(Component::Laser);
+        let lb = b.ledger.get(Component::Laser);
+        assert!((la - lb).abs() / la < 1e-12, "laser is node-independent");
+        // While ADC + SRAM must shrink (Fig. 10's trend).
+        assert!(b.ledger.get(Component::Adc) < a.ledger.get(Component::Adc));
+        assert!(b.ledger.get(Component::Sram) < a.ledger.get(Component::Sram));
+    }
+
+    #[test]
+    fn dac_nearly_flat_across_nodes() {
+        // Fig. 10: "we see very little reduction in the overall DAC
+        // energy cost" — the wire load dominates the converter circuit
+        // over the figure's 45 → 7 nm span.
+        let cfg = Optical4FConfig::default();
+        let net = yolov3(1000);
+        let a = simulate_network(&cfg, &net, 45.0);
+        let b = simulate_network(&cfg, &net, 7.0);
+        let ratio = b.ledger.get(Component::Dac) / a.ledger.get(Component::Dac);
+        assert!(ratio > 0.6, "DAC should be ≳60% flat 45→7 nm, got {ratio}");
+        // While SRAM scales nearly fully with CMOS.
+        let sr = b.ledger.get(Component::Sram) / a.ledger.get(Component::Sram);
+        assert!(sr < 0.15, "SRAM should follow CMOS scaling, got {sr}");
+    }
+
+    #[test]
+    fn shuttered_laser_ablation_reduces_laser_energy() {
+        let full = Optical4FConfig::default();
+        let shuttered = Optical4FConfig {
+            laser_full_aperture: false,
+            ..full
+        };
+        let l = ConvLayer::square(100, 4, 8, 3, 1); // tiny active area
+        let rf = simulate_layer(&full, &l, 45.0);
+        let rs = simulate_layer(&shuttered, &l, 45.0);
+        assert!(
+            rs.ledger.get(Component::Laser) < rf.ledger.get(Component::Laser) / 10.0
+        );
+    }
+
+    #[test]
+    fn stride_reduces_adc_not_dac() {
+        let cfg = Optical4FConfig::default();
+        let s1 = ConvLayer::square(200, 8, 8, 3, 1);
+        let s2 = ConvLayer::square(200, 8, 8, 3, 2);
+        let r1 = simulate_layer(&cfg, &s1, 45.0);
+        let r2 = simulate_layer(&cfg, &s2, 45.0);
+        assert!(r2.ledger.get(Component::Adc) < r1.ledger.get(Component::Adc));
+        assert_eq!(r2.ledger.get(Component::Dac), r1.ledger.get(Component::Dac));
+        // …and stride-2 performs ~1/4 the MACs: efficiency drops (the
+        // paper's §VII.B divergence).
+        assert!(r2.macs < r1.macs / 3.5);
+    }
+
+    #[test]
+    fn group_psum_spill_appears_only_with_multiple_groups() {
+        let cfg = Optical4FConfig::default();
+        // 512²-padded channels: C′=15 < Cᵢ=30 → 2 groups → 32-bit spill.
+        let multi = ConvLayer::square(510, 30, 4, 3, 1);
+        let single = ConvLayer::square(510, 15, 4, 3, 1);
+        let rm = simulate_layer(&cfg, &multi, 45.0);
+        let rs = simulate_layer(&cfg, &single, 45.0);
+        // Per MAC, the multi-group layer pays more SRAM.
+        let per_mac_m = rm.ledger.get(Component::Sram) / rm.macs;
+        let per_mac_s = rs.ledger.get(Component::Sram) / rs.macs;
+        assert!(per_mac_m > per_mac_s, "{per_mac_m} !> {per_mac_s}");
+    }
+}

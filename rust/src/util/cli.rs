@@ -1,0 +1,214 @@
+//! Tiny declarative CLI argument parser (offline stand-in for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; generates usage text from the declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Declarative command spec.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Spec {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse a token list. Unknown `--options` are errors.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} is a flag and takes no value");
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?,
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("t", "test")
+            .opt("node", "tech node", Some("45"))
+            .opt("net", "network", None)
+            .flag("csv", "emit csv")
+    }
+
+    fn parse(toks: &[&str]) -> anyhow::Result<Args> {
+        spec().parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get("node"), Some("45"));
+        assert_eq!(a.get("net"), None);
+        assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--node", "7", "--net=vgg16"]).unwrap();
+        assert_eq!(a.get("node"), Some("7"));
+        assert_eq!(a.get("net"), Some("vgg16"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["fig8", "--csv"]).unwrap();
+        assert!(a.flag("csv"));
+        assert_eq!(a.positional, vec!["fig8"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--net"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&["--csv=yes"]).is_err());
+    }
+
+    #[test]
+    fn numeric_getters() {
+        let a = parse(&["--node", "32"]).unwrap();
+        assert_eq!(a.get_usize("node", 0).unwrap(), 32);
+        assert!(a.get_f64("node", 0.0).unwrap() == 32.0);
+        let bad = parse(&["--node", "xx"]).unwrap();
+        assert!(bad.get_usize("node", 0).is_err());
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = spec().usage();
+        assert!(u.contains("--node") && u.contains("--csv"));
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree mini-frameworks.
+//!
+//! The build environment is offline and only the `xla` crate's dependency
+//! closure is vendored, so the conveniences a crate would normally pull
+//! from crates.io live here instead:
+//!
+//! * [`rng`] — xorshift/splitmix PRNG (deterministic, seedable).
+//! * [`prop`] — a property-based test runner with shrinking.
+//! * [`cli`] — a small declarative argument parser for the `aimc` binary.
+//! * [`table`] — aligned-column text tables + CSV emission.
+//! * [`stats`] — medians/means over layer populations.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,88 @@
+//! Integration: the AOT bridge end to end — every artifact compiles on
+//! PJRT, replays its golden, and the three SmallCNN datapaths agree on
+//! fresh random inputs (python never ran on any of these numbers).
+
+use aimc::runtime::{artifact::max_rel_err, Engine};
+use aimc::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::discover().expect("run `make artifacts` first")
+}
+
+#[test]
+fn all_artifacts_replay_their_goldens() {
+    let e = engine();
+    for name in e.artifact_names() {
+        let rtol = e.manifest().get(&name).unwrap().rtol;
+        let err = e
+            .verify_golden(&name)
+            .unwrap_or_else(|x| panic!("{name}: {x:#}"));
+        assert!(err <= rtol, "{name}: max rel err {err} > rtol {rtol}");
+    }
+}
+
+#[test]
+fn conv_artifacts_sys_and_fft_agree_on_fresh_input() {
+    let e = engine();
+    let mut rng = Rng::new(99);
+    let x = rng.normal_vec(8 * 64 * 64);
+    let w = rng.normal_vec(16 * 8 * 3 * 3);
+    let sys = e
+        .execute("conv_sys_n64_ci8_co16_k3", &[x.clone(), w.clone()])
+        .unwrap();
+    let fft = e
+        .execute("conv_fft_n64_ci8_co16_k3", &[x, w])
+        .unwrap();
+    assert_eq!(sys.len(), 16 * 62 * 62);
+    // Two *different machines* computing the same convolution at 8-bit
+    // precision: they agree within combined quantization error.
+    let err = max_rel_err(&sys, &fft);
+    assert!(err < 0.1, "machine datapaths disagree: {err}");
+}
+
+#[test]
+fn smallcnn_three_paths_agree_on_fresh_images() {
+    let e = engine();
+    let mut rng = Rng::new(7);
+    for _ in 0..4 {
+        let img = rng.normal_vec(3 * 64 * 64);
+        let exact = e.execute("smallcnn_exact", &[img.clone()]).unwrap();
+        let sys = e.execute("smallcnn_systolic", &[img.clone()]).unwrap();
+        let fft = e.execute("smallcnn_fft", &[img]).unwrap();
+        assert!(max_rel_err(&sys, &exact) < 0.15, "systolic vs exact");
+        assert!(max_rel_err(&fft, &exact) < 0.15, "fft vs exact");
+    }
+}
+
+#[test]
+fn batched_artifacts_match_singles() {
+    let e = engine();
+    let mut rng = Rng::new(13);
+    let imgs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(3 * 64 * 64)).collect();
+    let packed: Vec<f32> = imgs.iter().flatten().copied().collect();
+    let batched = e.execute("smallcnn_exact_b4", &[packed]).unwrap();
+    assert_eq!(batched.len(), 4 * 10);
+    for (i, img) in imgs.iter().enumerate() {
+        let single = e.execute("smallcnn_exact", &[img.clone()]).unwrap();
+        let b = &batched[i * 10..(i + 1) * 10];
+        assert!(
+            max_rel_err(b, &single) < 1e-4,
+            "batch element {i} diverges from single execution"
+        );
+    }
+}
+
+#[test]
+fn qgemm_linear_in_scale() {
+    // The quantized GEMM datapath rescales with its inputs (per-tensor
+    // scales): doubling x doubles the output within quantization error.
+    let e = engine();
+    let mut rng = Rng::new(5);
+    let x = rng.normal_vec(256 * 128);
+    let w = rng.normal_vec(128 * 256);
+    let y1 = e.execute("qgemm_256x128x256", &[x.clone(), w.clone()]).unwrap();
+    let x2: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+    let y2 = e.execute("qgemm_256x128x256", &[x2, w]).unwrap();
+    let halved: Vec<f32> = y2.iter().map(|v| v / 2.0).collect();
+    assert!(max_rel_err(&halved, &y1) < 0.02);
+}

@@ -1,0 +1,120 @@
+//! Integration: the serving coordinator under load, across datapaths and
+//! failure modes.
+
+use std::time::Duration;
+
+use aimc::coordinator::batcher::BatchPolicy;
+use aimc::coordinator::server::{Server, ServerConfig};
+use aimc::coordinator::{ConvPath, IMAGE_ELEMS, LOGITS};
+use aimc::util::rng::Rng;
+
+fn start(path: ConvPath, workers: usize) -> Server {
+    Server::start(ServerConfig {
+        path,
+        workers,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        warm_start: false, // lazy compile: these tests don't time serving
+        ..Default::default()
+    })
+    .expect("server start")
+}
+
+#[test]
+fn serves_concurrent_load_exact() {
+    let server = start(ConvPath::Exact, 2);
+    server.infer_blocking(vec![0.0; IMAGE_ELEMS]).unwrap(); // warm-up
+    let mut rng = Rng::new(11);
+    let n = 40;
+    server.metrics.lock().unwrap().start();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+        .collect();
+    for rx in rxs {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), LOGITS);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+    server.metrics.lock().unwrap().stop();
+    let m = server.shutdown();
+    assert_eq!(m.count(), n + 1);
+    assert!(m.throughput() > 0.0);
+}
+
+#[test]
+fn systolic_path_serves_and_batches() {
+    let server = start(ConvPath::Systolic, 1);
+    server.infer_blocking(vec![0.1; IMAGE_ELEMS]).unwrap();
+    let mut rng = Rng::new(12);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.shutdown();
+    // At least one multi-request batch should have formed.
+    assert!(m.mean_batch() > 1.0, "{}", m.summary());
+}
+
+#[test]
+fn fft_path_serves_batch1_only() {
+    let server = start(ConvPath::Fft, 1);
+    let out = server.infer_blocking(vec![0.2; IMAGE_ELEMS]).unwrap();
+    assert_eq!(out.len(), LOGITS);
+    let m = server.shutdown();
+    // FFT has no batched artifacts: every batch is size 1.
+    assert!((m.mean_batch() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn bad_requests_rejected_good_ones_still_served() {
+    let server = start(ConvPath::Exact, 1);
+    assert!(server.infer_blocking(vec![0.0; 3]).is_err());
+    assert!(server.infer_blocking(vec![]).is_err());
+    let ok = server.infer_blocking(vec![0.0; IMAGE_ELEMS]);
+    assert!(ok.is_ok(), "server must survive bad requests");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work() {
+    let server = start(ConvPath::Exact, 2);
+    server.infer_blocking(vec![0.0; IMAGE_ELEMS]).unwrap();
+    let mut rng = Rng::new(14);
+    let rxs: Vec<_> = (0..16)
+        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+        .collect();
+    // Shut down immediately — all 16 must still complete.
+    let _ = server.shutdown();
+    let mut done = 0;
+    for rx in rxs {
+        if let Ok(Ok(out)) = rx.recv() {
+            assert_eq!(out.len(), LOGITS);
+            done += 1;
+        }
+    }
+    assert_eq!(done, 16, "shutdown dropped in-flight requests");
+}
+
+#[test]
+fn deterministic_results_across_paths_and_servers() {
+    let mut rng = Rng::new(15);
+    let img = rng.normal_vec(IMAGE_ELEMS);
+    let mut per_path = Vec::new();
+    for path in [ConvPath::Exact, ConvPath::Systolic] {
+        let server = start(path, 1);
+        let a = server.infer_blocking(img.clone()).unwrap();
+        let b = server.infer_blocking(img.clone()).unwrap();
+        assert_eq!(a, b, "same server must be deterministic");
+        per_path.push(a);
+        server.shutdown();
+    }
+    // Exact vs systolic agree within quantization error.
+    let scale = per_path[0].iter().fold(1e-9f32, |m, v| m.max(v.abs()));
+    for (a, b) in per_path[0].iter().zip(&per_path[1]) {
+        assert!((a - b).abs() / scale < 0.15, "{a} vs {b}");
+    }
+}

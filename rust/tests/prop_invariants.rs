@@ -1,0 +1,212 @@
+//! Property-based tests (in-tree `util::prop` runner) over the
+//! coordinator and simulator invariants DESIGN.md §5 calls out:
+//! batching conservation, tiling/energy invariants, C′ packing bounds,
+//! analytic-model limits and monotonicities.
+
+use aimc::analytic::Workload;
+use aimc::coordinator::batcher::plan_batches;
+use aimc::energy::EnergyParams;
+use aimc::networks::stats::optical4f_dims;
+use aimc::networks::ConvLayer;
+use aimc::simulator::{optical4f, systolic, Component};
+use aimc::util::prop::{check, prop_assert, prop_close};
+
+fn random_layer(g: &mut aimc::util::prop::Gen) -> ConvLayer {
+    let k = *g.choose(&[1usize, 3, 5, 7]);
+    let n = g.usize(k.max(4), 300);
+    ConvLayer::square(
+        n,
+        g.usize(1, 512),
+        g.usize(1, 512),
+        k,
+        *g.choose(&[1usize, 1, 1, 2]),
+    )
+}
+
+#[test]
+fn prop_batch_plans_conserve_requests() {
+    check(500, |g| {
+        let pending = g.usize(0, 200);
+        let plan = plan_batches(pending, &[8, 4, 1]);
+        let total: usize = plan.iter().sum();
+        prop_assert(total == pending, "requests lost or duplicated")?;
+        prop_assert(
+            plan.iter().all(|b| [8, 4, 1].contains(b)),
+            "plan uses uncompiled batch size",
+        )
+    });
+}
+
+#[test]
+fn prop_systolic_macs_equal_gemm_size() {
+    // The simulator must do exactly L'·N'·M' MACs for any layer and any
+    // array size — tiling must never add or drop work.
+    check(120, |g| {
+        let layer = random_layer(g);
+        let dim = *g.choose(&[32usize, 64, 256, 300]);
+        let cfg = systolic::SystolicConfig {
+            dim,
+            banks: dim,
+            ..Default::default()
+        };
+        let r = systolic::simulate_layer(&cfg, &layer, 45.0);
+        let (l, n, m) = layer.matmul_dims();
+        prop_close(r.macs, l * n * m, 1e-9, "MAC conservation")
+    });
+}
+
+#[test]
+fn prop_systolic_sram_traffic_lower_bound() {
+    // SRAM traffic ≥ one read of the Toeplitz + one write of the output,
+    // for any tiling.
+    check(120, |g| {
+        let layer = random_layer(g);
+        let cfg = systolic::SystolicConfig::default();
+        let r = systolic::simulate_layer(&cfg, &layer, 45.0);
+        let (l, n, m) = layer.matmul_dims();
+        let e_b = aimc::energy::sram::energy_per_byte_45nm(cfg.bank_bytes());
+        let floor = (l * n + l * m) * e_b;
+        prop_assert(
+            r.ledger.get(Component::Sram) >= floor * (1.0 - 1e-9),
+            "SRAM below physical floor",
+        )
+    });
+}
+
+#[test]
+fn prop_optical_c_prime_packing() {
+    // eq. (22): C′ channels of s² pixels never exceed the SLM (unless
+    // clamped to 1 for spatial tiling); C′ never exceeds Cᵢ.
+    check(300, |g| {
+        let layer = random_layer(g);
+        let cfg = optical4f::Optical4FConfig::default();
+        let s = layer.n + layer.kh.max(layer.kw) - 1;
+        let c = cfg.channels_at_once(s, layer.c_in);
+        prop_assert(c >= 1 && c <= layer.c_in.max(1), "C' out of range")?;
+        if c > 1 {
+            prop_assert(c * s * s <= cfg.slm_pixels, "C' overpacks the SLM")
+        } else {
+            Ok(())
+        }
+    });
+}
+
+#[test]
+fn prop_optical_execution_count() {
+    // executions = patches · ⌈Cᵢ/C′⌉ · (1 + Cᵢ₊₁) exactly.
+    check(120, |g| {
+        let layer = random_layer(g);
+        let cfg = optical4f::Optical4FConfig::default();
+        let r = optical4f::simulate_layer(&cfg, &layer, 45.0);
+        let k = layer.kh.max(layer.kw);
+        let patches = cfg.spatial_patches(layer.n, k);
+        let s2 = if patches == 1 {
+            (layer.n + k - 1) * (layer.n + k - 1)
+        } else {
+            cfg.slm_pixels
+        };
+        let cp = cfg.channels_at_once((s2 as f64).sqrt() as usize, layer.c_in);
+        let groups = layer.c_in.div_ceil(cp);
+        let want = (patches * groups * (1 + layer.c_out)) as f64;
+        prop_close(r.time_units, want, 1e-12, "execution count")
+    });
+}
+
+#[test]
+fn prop_ledger_total_is_sum_of_components() {
+    check(100, |g| {
+        let layer = random_layer(g);
+        let r = optical4f::simulate_layer(&optical4f::Optical4FConfig::default(), &layer, 45.0);
+        let sum: f64 = Component::ALL.iter().map(|&c| r.ledger.get(c)).sum();
+        prop_close(r.ledger.total(), sum, 1e-12, "ledger additivity")
+    });
+}
+
+#[test]
+fn prop_efficiency_monotone_in_intensity() {
+    // eq. (5): more arithmetic intensity never hurts.
+    check(200, |g| {
+        let cfg = aimc::analytic::in_memory::Config::tpu_like();
+        let mut w1 = Workload::reference();
+        let mut w2 = Workload::reference();
+        let a1 = g.f64(1.0, 5000.0);
+        let a2 = g.f64(1.0, 5000.0);
+        w1.a_matmul = a1.min(a2);
+        w2.a_matmul = a1.max(a2);
+        let e1 = cfg.efficiency(&w1, 45.0).tops_per_watt();
+        let e2 = cfg.efficiency(&w2, 45.0).tops_per_watt();
+        prop_assert(e2 >= e1 - 1e-12, "η must be monotone in a")
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_bits() {
+    check(100, |g| {
+        let b = g.u32(2, 14);
+        let lo = EnergyParams { bits: b, ..Default::default() }.at_node(45.0);
+        let hi = EnergyParams { bits: b + 1, ..Default::default() }.at_node(45.0);
+        prop_assert(hi.e_adc > lo.e_adc, "ADC monotone")?;
+        prop_assert(hi.e_mac > lo.e_mac, "MAC monotone")?;
+        prop_assert(hi.e_opt > lo.e_opt, "laser monotone")
+    });
+}
+
+#[test]
+fn prop_node_scaling_monotone_and_bounded() {
+    check(200, |g| {
+        let a = g.f64(7.0, 180.0);
+        let b = g.f64(7.0, 180.0);
+        let (lo, hi) = (a.min(b), a.max(b));
+        let s_lo = aimc::technode::scale_from_45nm(lo);
+        let s_hi = aimc::technode::scale_from_45nm(hi);
+        prop_assert(s_lo <= s_hi + 1e-12, "scale monotone in feature size")?;
+        prop_assert(s_lo > 0.0, "scale positive")
+    });
+}
+
+#[test]
+fn prop_simulator_energy_scales_with_node_but_not_below_wire_floor() {
+    // Total energy at a smaller node is smaller, but bounded below by the
+    // node-independent wire/laser terms.
+    check(60, |g| {
+        let layer = random_layer(g);
+        let cfg = systolic::SystolicConfig::default();
+        let e45 = systolic::simulate_layer(&cfg, &layer, 45.0);
+        let e7 = systolic::simulate_layer(&cfg, &layer, 7.0);
+        prop_assert(
+            e7.ledger.total() < e45.ledger.total(),
+            "smaller node must be cheaper",
+        )?;
+        let wire = e45.ledger.get(Component::Load);
+        prop_close(
+            e7.ledger.get(Component::Load),
+            wire,
+            1e-12,
+            "wire term node-independent",
+        )?;
+        prop_assert(
+            e7.ledger.total() >= wire * (1.0 - 1e-12),
+            "total bounded by wire floor",
+        )
+    });
+}
+
+#[test]
+fn prop_table3_n_equals_2m_in_infinite_slm_limit() {
+    check(200, |g| {
+        let layer = random_layer(g);
+        let (_, n, m) = optical4f_dims(&layer, None);
+        prop_close(n, 2.0 * m, 1e-12, "N = 2M at C'→∞")
+    });
+}
+
+#[test]
+fn prop_finite_slm_never_beats_infinite() {
+    check(200, |g| {
+        let layer = random_layer(g);
+        let px = g.usize(1 << 16, 1 << 26);
+        let (_, n_fin, _) = optical4f_dims(&layer, Some(px));
+        let (_, n_inf, _) = optical4f_dims(&layer, None);
+        prop_assert(n_fin <= n_inf + 1e-9, "finite SLM can't amortize more")
+    });
+}
