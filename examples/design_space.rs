@@ -17,21 +17,30 @@
 use aimc::analytic::{photonic, Workload};
 use aimc::energy::EnergyParams;
 use aimc::networks::yolov3::yolov3;
-use aimc::simulator::{optical4f, systolic};
+use aimc::simulator::{optical4f, systolic, SweepCache};
+use aimc::util::pool;
 
 fn main() {
     let node = 28.0;
     let net = yolov3(1000);
+    // Every whole-network sweep below fans out over the work-stealing
+    // pool and shares one layer-dedup cache: knob settings that leave a
+    // layer's simulation unchanged (they never do here — each knob is in
+    // the config fingerprint) would be deduped automatically, and the
+    // repeated residual-block shapes within YOLOv3 always are.
+    let cache = SweepCache::new();
     println!("design-space exploration — YOLOv3 @ 1 Mpx, {node} nm\n");
 
     // ---- 1. SLM size sweep -------------------------------------------------
     println!("1) optical-4F SLM size (eq. 11: efficiency ∝ processor scale):");
-    for mpx in [0.25, 1.0, 4.0, 16.0, 64.0] {
+    let mpxs = [0.25, 1.0, 4.0, 16.0, 64.0];
+    for (mpx, r) in mpxs.iter().zip(pool::par_map(&mpxs, |&mpx| {
         let cfg = optical4f::Optical4FConfig {
             slm_pixels: (mpx * 1024.0 * 1024.0) as usize,
             ..Default::default()
         };
-        let r = optical4f::simulate_network(&cfg, &net, node);
+        cache.simulate_network(&cfg, &net, node)
+    })) {
         println!(
             "   {mpx:5.2} Mpx : {:8.2} TOPS/W  ({:.4} pJ/MAC, {:.0} executions)",
             r.tops_per_watt(),
@@ -42,13 +51,16 @@ fn main() {
 
     // ---- 2. systolic array dimension ---------------------------------------
     println!("\n2) systolic array dimension (SRAM fixed at 24 MiB total):");
-    for dim in [64usize, 128, 256, 512, 1024] {
+    let dims = [64usize, 128, 256, 512, 1024];
+    for (dim, (cfg, r)) in dims.iter().zip(pool::par_map(&dims, |&dim| {
         let cfg = systolic::SystolicConfig {
             dim,
             banks: dim,
             ..Default::default()
         };
-        let r = systolic::simulate_network(&cfg, &net, node);
+        let r = cache.simulate_network(&cfg, &net, node);
+        (cfg, r)
+    })) {
         println!(
             "   {dim:4}x{dim:<4}: {:6.2} TOPS/W  (utilization {:4.1}%)",
             r.tops_per_watt(),
@@ -88,12 +100,14 @@ fn main() {
 
     // ---- 5. DRAM weight streaming ------------------------------------------
     println!("\n5) systolic DRAM weight streaming (paper's model charges 0):");
-    for e_dram in [0.0, 5e-12, 20e-12] {
+    let drams = [0.0, 5e-12, 20e-12];
+    for (e_dram, r) in drams.iter().zip(pool::par_map(&drams, |&e_dram| {
         let cfg = systolic::SystolicConfig {
             e_dram_per_byte: e_dram,
             ..Default::default()
         };
-        let r = systolic::simulate_network(&cfg, &net, node);
+        cache.simulate_network(&cfg, &net, node)
+    })) {
         println!(
             "   {:4.0} pJ/B : {:6.2} TOPS/W",
             e_dram * 1e12,
@@ -103,12 +117,14 @@ fn main() {
 
     // ---- 6b. ReRAM weight reuse (extension machine) -------------------------
     println!("\n6b) ReRAM crossbar: weight-programming amortization (reuse count):");
-    for reuse in [1.0, 100.0, 1e4, 1e6] {
+    let reuses = [1.0, 100.0, 1e4, 1e6];
+    for (reuse, r) in reuses.iter().zip(pool::par_map(&reuses, |&reuse| {
         let cfg = aimc::simulator::reram::ReramConfig {
             reuse,
             ..Default::default()
         };
-        let r = aimc::simulator::reram::simulate_network(&cfg, &net, node);
+        cache.simulate_network(&cfg, &net, node)
+    })) {
         println!(
             "   reuse {reuse:8.0} : {:6.2} TOPS/W",
             r.tops_per_watt()
@@ -117,29 +133,35 @@ fn main() {
 
     // ---- 6c. photonic mesh size (extension machine) --------------------------
     println!("\n6c) photonic mesh dimension (eq. 11 again, planar this time):");
-    for dim in [8usize, 40, 128, 512] {
+    let mesh_dims = [8usize, 40, 128, 512];
+    for (dim, r) in mesh_dims.iter().zip(pool::par_map(&mesh_dims, |&dim| {
         let cfg = aimc::simulator::photonic::PhotonicConfig {
             dim,
             banks: dim,
             ..Default::default()
         };
-        let r = aimc::simulator::photonic::simulate_network(&cfg, &net, node);
+        cache.simulate_network(&cfg, &net, node)
+    })) {
         println!("   {dim:4}x{dim:<4}: {:6.2} TOPS/W", r.tops_per_watt());
     }
 
     // ---- 7. laser aperture policy ------------------------------------------
     println!("\n7) 4F laser: full-aperture (paper) vs shuttered illumination:");
-    for full in [true, false] {
+    let apertures = [true, false];
+    for (full, r) in apertures.iter().zip(pool::par_map(&apertures, |&full| {
         let cfg = optical4f::Optical4FConfig {
             laser_full_aperture: full,
             ..Default::default()
         };
-        let r = optical4f::simulate_network(&cfg, &net, node);
+        cache.simulate_network(&cfg, &net, node)
+    })) {
         println!(
             "   {:9}: {:8.2} TOPS/W (laser share {:4.1}%)",
-            if full { "full" } else { "shuttered" },
+            if *full { "full" } else { "shuttered" },
             r.tops_per_watt(),
             100.0 * r.ledger.get(aimc::simulator::Component::Laser) / r.ledger.total()
         );
     }
+
+    eprintln!("\nlayer-dedup cache: {}", cache.stats());
 }

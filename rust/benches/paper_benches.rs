@@ -14,7 +14,9 @@ use aimc::coordinator::{ConvPath, IMAGE_ELEMS};
 use aimc::networks::{yolov3::yolov3, zoo};
 use aimc::report;
 use aimc::runtime::Engine;
-use aimc::simulator::{optical4f, systolic};
+use aimc::simulator::{optical4f, photonic, reram, sweep, systolic, SweepCache};
+use aimc::technode::NODES;
+use aimc::util::pool::Pool;
 use aimc::util::rng::Rng;
 
 /// Time `f` over `iters` iterations (after one warm-up); returns samples.
@@ -40,6 +42,93 @@ fn report_time(name: &str, samples: &[Duration], unit_work: Option<(f64, &str)>)
         print!("   ({:.2} {what})", per / (med / 1e6));
     }
     println!();
+}
+
+fn median_us(samples: &[Duration]) -> f64 {
+    let mut us: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    us[us.len() / 2]
+}
+
+/// Serial vs parallel sweep-engine shootout over the full evaluation
+/// grid (every machine × Table I network × node), recorded to
+/// `BENCH_sweep.json` (override the path with `BENCH_JSON`) so the perf
+/// trajectory is tracked from PR to PR.
+fn bench_sweep_engine(input: usize) {
+    let nets = zoo(input);
+    let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
+    let machines = aimc::simulator::all_machines();
+    let scfg = systolic::SystolicConfig::default();
+    let ocfg = optical4f::Optical4FConfig::default();
+    let rcfg = reram::ReramConfig::default();
+    let pcfg = photonic::PhotonicConfig::default();
+
+    // Baseline: the seed's path — hand-unrolled free-function calls, no
+    // pool, no memoization.
+    let serial = time_it(5, || {
+        for net in &nets {
+            for &nm in &nodes {
+                let _ = systolic::simulate_network(&scfg, net, nm);
+                let _ = reram::simulate_network(&rcfg, net, nm);
+                let _ = photonic::simulate_network(&pcfg, net, nm);
+                let _ = optical4f::simulate_network(&ocfg, net, nm);
+            }
+        }
+    });
+    report_time("sweep: serial direct (seed path)", &serial, None);
+
+    // Engine, single worker: isolates the layer-dedup memoization win.
+    let engine_1t = time_it(5, || {
+        let cache = SweepCache::new();
+        let _ = sweep::sweep_on(&Pool::new(1), &machines, &nets, &nodes, &cache);
+    });
+    report_time("sweep: engine 1 thread (memo only)", &engine_1t, None);
+
+    // Engine, all cores: memoization + work stealing.
+    let pool = Pool::auto();
+    let shared_cache = SweepCache::new();
+    let engine = time_it(5, || {
+        let cache = SweepCache::new();
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+    });
+    report_time("sweep: engine parallel", &engine, None);
+    // One extra pass on a shared cache for the hit/miss statistics.
+    let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &shared_cache);
+
+    // Full report regeneration (Fig. 6 + Tables I–III + Figs. 8–10 +
+    // crossval) through the new engine.
+    let figures = time_it(3, || {
+        let _ = report::fig6();
+        let _ = report::table1(input);
+        let _ = report::table2(input);
+        let _ = report::table3(input);
+        let _ = report::fig8(None, input);
+        let _ = report::fig9(None, input);
+        let _ = report::fig10(Some("VGG19"), input);
+        let _ = report::fig10(Some("YOLOv3"), input);
+        let _ = report::crossval(None, input);
+    });
+    report_time("sweep: full report regen (engine)", &figures, None);
+
+    let serial_ms = median_us(&serial) / 1e3;
+    let engine_1t_ms = median_us(&engine_1t) / 1e3;
+    let engine_ms = median_us(&engine) / 1e3;
+    let json = format!(
+        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
+        machines.len(),
+        nets.len(),
+        nodes.len(),
+        pool.threads(),
+        serial_ms / engine_ms,
+        shared_cache.hits(),
+        shared_cache.misses(),
+        median_us(&figures) / 1e3,
+    );
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("   wrote {path} (speedup {:.2}x over serial)", serial_ms / engine_ms),
+        Err(e) => eprintln!("   warn: writing {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -146,6 +235,11 @@ fn main() {
                 }
             }
         }), None);
+    }
+
+    // ---- Parallel sweep engine ----------------------------------------------
+    if run("sweep") {
+        bench_sweep_engine(input);
     }
 
     // ---- Runtime / serving hot paths -----------------------------------------

@@ -5,8 +5,8 @@
 //! every served batch carries a projected joules-per-inference for each
 //! architecture — the hw/sw-codesign readout of the serving stack.
 
-use crate::simulator::{optical4f, systolic, SimResult};
 use crate::networks::Network;
+use crate::simulator::{optical4f, systolic, SimResult, SweepCache};
 
 /// Energy projections for one inference of `net` at `node_nm`.
 #[derive(Clone, Debug)]
@@ -41,13 +41,17 @@ impl EnergyReport {
 
 /// Price one inference of `net` on both machines.
 pub fn co_simulate(net: &Network, node_nm: f64) -> EnergyReport {
+    co_simulate_cached(net, node_nm, &SweepCache::new())
+}
+
+/// [`co_simulate`] through a shared layer-dedup cache — a server pricing
+/// the same layer schedule on every batch pays the simulators once.
+pub fn co_simulate_cached(net: &Network, node_nm: f64, cache: &SweepCache) -> EnergyReport {
+    let sys = systolic::SystolicConfig::default();
+    let opt = optical4f::Optical4FConfig::default();
     EnergyReport {
-        systolic: systolic::simulate_network(&systolic::SystolicConfig::default(), net, node_nm),
-        optical4f: optical4f::simulate_network(
-            &optical4f::Optical4FConfig::default(),
-            net,
-            node_nm,
-        ),
+        systolic: cache.simulate_network(&sys, net, node_nm),
+        optical4f: cache.simulate_network(&opt, net, node_nm),
         node_nm,
     }
 }
@@ -64,6 +68,23 @@ mod tests {
         assert!(r.optical_joules() > 0.0);
         assert_eq!(r.systolic.macs, r.optical4f.macs);
         assert!(r.summary().contains("TOPS/W"));
+    }
+
+    #[test]
+    fn cached_co_sim_identical_and_reuses_entries() {
+        let net = smallcnn_network();
+        let direct = co_simulate(&net, 45.0);
+        let cache = SweepCache::new();
+        let first = co_simulate_cached(&net, 45.0, &cache);
+        let misses_after_first = cache.misses();
+        let second = co_simulate_cached(&net, 45.0, &cache);
+        assert_eq!(direct.systolic_joules(), first.systolic_joules());
+        assert_eq!(direct.optical_joules(), second.optical_joules());
+        assert_eq!(
+            cache.misses(),
+            misses_after_first,
+            "second pricing must be pure cache hits"
+        );
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! batches from a shared queue. The dispatcher thread implements the
 //! [`BatchPolicy`]: it drains the request queue, forms execution plans
 //! via [`plan_batches`], and hands concatenated image tensors to workers.
+//! Between rounds it parks in a bounded `recv_timeout` (new work or the
+//! oldest request's deadline wakes it), so an idle server does not burn
+//! a core polling.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -19,6 +22,11 @@ use super::batcher::{plan_batches, should_dispatch, BatchPolicy};
 use super::metrics::Metrics;
 use super::{ConvPath, IMAGE_ELEMS, LOGITS};
 use crate::runtime::Engine;
+
+/// Longest the dispatcher blocks in one park: long enough that an idle
+/// server wakes ~100×/s (instead of the 5000×/s the old 200 µs poll
+/// cost a core for), short enough that `stop` is honoured promptly.
+const IDLE_PARK: Duration = Duration::from_millis(10);
 
 /// One inference request travelling through the server.
 struct Request {
@@ -127,14 +135,33 @@ impl Server {
                         // Drained and asked to stop: close the batch queue.
                         return;
                     } else {
-                        // Idle wait: bounded block so stop/deadlines fire.
-                        match rx.recv_timeout(Duration::from_micros(200)) {
+                        // Park until new work arrives or the oldest
+                        // pending request's batching deadline fires. An
+                        // idle server blocks for the full bound instead
+                        // of spinning at poll granularity; a non-empty
+                        // queue wakes exactly when `should_dispatch`
+                        // could flip to true.
+                        let park = if pending.is_empty() {
+                            IDLE_PARK
+                        } else {
+                            policy
+                                .max_wait
+                                .saturating_sub(oldest)
+                                .clamp(Duration::from_micros(50), IDLE_PARK)
+                        };
+                        match rx.recv_timeout(park) {
                             Ok(r) => pending.push(r),
                             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                                 if pending.is_empty() {
                                     return;
                                 }
+                                // Senders are gone but requests remain:
+                                // sleep out the deadline (recv would
+                                // return Disconnected immediately and
+                                // busy-spin otherwise), then the
+                                // dispatch branch flushes them.
+                                std::thread::sleep(park);
                             }
                         }
                     }

@@ -17,14 +17,21 @@
 //! * [`technode`] — CMOS technology-node energy scaling (Stillmaker & Baas).
 //! * [`networks`] — conv-layer shape zoo for the eight CNNs of Table I.
 //! * [`analytic`] — closed-form efficiency models (eqs. 3, 5, 14, 24).
-//! * [`simulator`] — cycle-accurate systolic-array and optical-4F machines.
-//! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
+//! * [`simulator`] — cycle-accurate machines for all four processor
+//!   classes (systolic, ReRAM, planar photonic, optical 4F), unified
+//!   behind the [`simulator::Machine`] trait, with layer-dedup
+//!   memoization ([`simulator::SweepCache`]) and the parallel
+//!   (machine × network × node) grid runner [`simulator::sweep::sweep`].
+//! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
+//!   (behind the `pjrt` cargo feature; a stub engine otherwise).
 //! * [`coordinator`] — request batching/scheduling/serving on top of
 //!   [`runtime`], with per-request energy co-simulation.
 //! * [`report`] — table/figure emitters regenerating every table and
-//!   figure in the paper's evaluation section.
-//! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks (the
-//!   build environment is offline; only `xla` + `anyhow` are available).
+//!   figure in the paper's evaluation section, fanned out over
+//!   [`util::pool`] workers.
+//! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks plus
+//!   the [`util::pool`] work-stealing thread pool (the build environment
+//!   is offline; only `xla` + `anyhow` are available).
 
 pub mod analytic;
 pub mod coordinator;

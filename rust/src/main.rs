@@ -12,8 +12,10 @@ use aimc::coordinator::{energy as co_energy, smallcnn_network, ConvPath, IMAGE_E
 use aimc::networks::{by_name, zoo, DEFAULT_INPUT};
 use aimc::report;
 use aimc::runtime::Engine;
-use aimc::simulator::{optical4f, photonic, reram, systolic};
+use aimc::simulator::{machine, sweep, Machine, SweepCache};
+use aimc::technode::NODES;
 use aimc::util::cli::Spec;
+use aimc::util::pool::Pool;
 use aimc::util::rng::Rng;
 use aimc::util::table::Table;
 
@@ -22,7 +24,7 @@ fn spec() -> Spec {
         "aimc",
         "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
          commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
-         crossval all simulate zoo verify serve",
+         crossval all simulate sweep zoo verify serve",
     )
     .opt("net", "network name (fig8/fig9/fig10/simulate)", None)
     .opt("input", "input resolution (pixels per side)", Some("1000"))
@@ -33,6 +35,11 @@ fn spec() -> Spec {
         Some("systolic"),
     )
     .opt("path", "serve datapath: exact | systolic | fft", Some("exact"))
+    .opt(
+        "threads",
+        "worker threads for sweeps (default: AIMC_THREADS or all cores)",
+        None,
+    )
     .opt("requests", "serve: number of requests", Some("64"))
     .opt("workers", "serve: worker threads", Some("2"))
     .flag("csv", "emit CSV instead of aligned text")
@@ -99,6 +106,7 @@ fn run() -> anyhow::Result<()> {
             "crossval" => emit(&report::crossval(net, input), csv),
             "zoo" => cmd_zoo(input, csv),
             "simulate" => cmd_simulate(&args, input)?,
+            "sweep" => cmd_sweep(&args, input, csv)?,
             "verify" => cmd_verify()?,
             "serve" => cmd_serve(&args)?,
             other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
@@ -132,29 +140,21 @@ fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()
         by_name(name, input)
             .ok_or_else(|| anyhow::anyhow!("unknown network {name:?} (try `aimc zoo`)"))?
     };
-    let machine = args.get_or("machine", "systolic");
+    let mname = args.get_or("machine", "systolic");
+    let m = machine::by_name(mname).ok_or_else(|| {
+        anyhow::anyhow!("unknown machine {mname:?} (systolic | optical4f | photonic | reram)")
+    })?;
     let t0 = Instant::now();
-    let r = match machine {
-        "systolic" => systolic::simulate_network(&systolic::SystolicConfig::default(), &net, node),
-        "optical4f" | "optical" | "4f" => {
-            optical4f::simulate_network(&optical4f::Optical4FConfig::default(), &net, node)
-        }
-        "photonic" | "sp" => {
-            photonic::simulate_network(&photonic::PhotonicConfig::default(), &net, node)
-        }
-        "reram" | "memristor" => {
-            reram::simulate_network(&reram::ReramConfig::default(), &net, node)
-        }
-        m => anyhow::bail!(
-            "unknown machine {m:?} (systolic | optical4f | photonic | reram)"
-        ),
-    };
+    let cache = SweepCache::new();
+    let r = cache.simulate_network(m.as_ref(), &net, node);
     println!(
-        "{} on {machine} @ {node} nm  ({} layers, {:.1} GMACs, simulated in {:.1} ms)",
+        "{} on {} @ {node} nm  ({} layers, {:.1} GMACs, simulated in {:.1} ms, cache {})",
         net.name,
+        m.name(),
         net.num_layers(),
         r.macs / 1e9,
-        t0.elapsed().as_secs_f64() * 1e3
+        t0.elapsed().as_secs_f64() * 1e3,
+        cache.stats()
     );
     println!(
         "  efficiency: {:.3} TOPS/W   energy/MAC: {:.4} pJ   time units: {:.3e}",
@@ -170,6 +170,53 @@ fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()
             100.0 * j / r.ledger.total()
         );
     }
+    Ok(())
+}
+
+/// The full evaluation grid — every machine × every zoo network × every
+/// node of the ladder — through the parallel, memoized sweep engine.
+fn cmd_sweep(args: &aimc::util::cli::Args, input: usize, csv: bool) -> anyhow::Result<()> {
+    let pool = match args.get("threads") {
+        Some(_) => Pool::new(args.get_usize("threads", 0)?),
+        None => Pool::auto(),
+    };
+    let machines = machine::all_machines();
+    let nets = zoo(input);
+    let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
+    let cache = SweepCache::new();
+    let t0 = Instant::now();
+    let records = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!(
+            "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes @ {input} px",
+            machines.len(),
+            nets.len(),
+            nodes.len()
+        ),
+        &["network", "node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
+    );
+    // Records are machine-major; table rows are (network, node)-major
+    // with one column per machine.
+    let stride = nets.len() * nodes.len();
+    for ni in 0..nets.len() {
+        for ki in 0..nodes.len() {
+            let mut cells = vec![nets[ni].name.to_string(), format!("{:.0}", nodes[ki])];
+            for mi in 0..machines.len() {
+                let r = &records[mi * stride + ni * nodes.len() + ki];
+                cells.push(format!("{:.3}", r.result.tops_per_watt()));
+            }
+            t.row(cells);
+        }
+    }
+    emit(&t, csv);
+    eprintln!(
+        "swept {} grid points in {elapsed:.2} s on {} threads (cache: {})",
+        records.len(),
+        pool.threads(),
+        cache.stats()
+    );
     Ok(())
 }
 

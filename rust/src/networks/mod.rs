@@ -19,8 +19,9 @@ pub mod vgg;
 pub mod yolov3;
 
 /// One convolutional layer's shape. Non-square kernels (Inception's 1×7
-/// factorizations) carry distinct `kh`/`kw`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// factorizations) carry distinct `kh`/`kw`. `Hash`/`Eq` make the shape
+/// directly usable as a [`crate::simulator::SweepCache`] memo key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvLayer {
     /// Input spatial size (square feature map, n × n).
     pub n: usize,

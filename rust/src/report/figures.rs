@@ -1,10 +1,19 @@
 //! Figures 6–10 as data tables (one row per x-axis point, one column per
 //! series — ready for plotting or eyeballing in the terminal).
+//!
+//! Every simulator-backed node sweep (Figs. 8–10, crossval) runs through
+//! the parallel engine: rows are computed by [`pool::par_map`] workers
+//! (one per x-axis point) against a shared [`SweepCache`], then emitted
+//! in axis order — so the rendered tables are byte-identical to the
+//! serial path while the wall clock scales with cores and repeated layer
+//! shapes simulate once. The closed-form figures (6–7) stay serial: their
+//! whole sweep costs less than a thread spawn.
 
 use crate::analytic::{Processor, Workload};
 use crate::networks::{by_name, Network};
-use crate::simulator::{optical4f, systolic, Component};
+use crate::simulator::{all_machines, optical4f, systolic, Component, SweepCache};
 use crate::technode::NODES;
+use crate::util::pool;
 use crate::util::table::Table;
 
 /// Fig. 6: analytic η (TOPS/W) vs technology node for the four
@@ -15,6 +24,9 @@ pub fn fig6() -> Table {
         "Fig. 6 — analytic efficiency vs technology node (TOPS/W, Table V layer)",
         &["node (nm)", "CPU", "DIM", "SP", "O4F"],
     );
+    // Closed-form: the whole sweep is microseconds of arithmetic, so a
+    // serial loop beats paying the pool's thread spawn/join here. The
+    // simulator-backed figures (8–10, crossval) are the parallel ones.
     for n in NODES {
         let mut cells = vec![format!("{:.0}", n.nm)];
         for p in Processor::ALL {
@@ -66,17 +78,20 @@ pub fn fig8(net: Option<&str>, input: usize) -> Table {
         ),
         &["node (nm)", "cycle-accurate", "analytic eq.(5)", "ratio"],
     );
-    for n in NODES {
-        let sim = systolic::simulate_network(&cfg, &net, n.nm).tops_per_watt();
+    let cache = SweepCache::new();
+    for row in pool::par_map(NODES, |n| {
+        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
         let ana = crate::analytic::in_memory::Config::tpu_like()
             .efficiency(&w, n.nm)
             .tops_per_watt();
-        t.row(vec![
+        vec![
             format!("{:.0}", n.nm),
             format!("{sim:.3}"),
             format!("{ana:.3}"),
             format!("{:.2}", sim / ana),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }
@@ -93,17 +108,20 @@ pub fn fig9(net: Option<&str>, input: usize) -> Table {
         ),
         &["node (nm)", "cycle-accurate", "analytic eq.(24)", "ratio"],
     );
-    for n in NODES {
-        let sim = optical4f::simulate_network(&cfg, &net, n.nm).tops_per_watt();
+    let cache = SweepCache::new();
+    for row in pool::par_map(NODES, |n| {
+        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
         let ana = crate::analytic::optical4f::Config::default_4mpx()
             .efficiency(&w, n.nm)
             .tops_per_watt();
-        t.row(vec![
+        vec![
             format!("{:.0}", n.nm),
             format!("{sim:.3}"),
             format!("{ana:.3}"),
             format!("{:.2}", sim / ana),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }
@@ -120,17 +138,20 @@ pub fn fig10(net: Option<&str>, input: usize) -> Table {
         ),
         &["node (nm)", "DAC", "ADC", "SRAM", "laser", "total"],
     );
-    for n in NODES {
-        let r = optical4f::simulate_network(&cfg, &net, n.nm);
+    let cache = SweepCache::new();
+    for row in pool::par_map(NODES, |n| {
+        let r = cache.simulate_network(&cfg, &net, n.nm);
         let per = |c: Component| r.ledger.get(c) / r.macs * 1e12;
-        t.row(vec![
+        vec![
             format!("{:.0}", n.nm),
             format!("{:.4}", per(Component::Dac)),
             format!("{:.4}", per(Component::Adc)),
             format!("{:.4}", per(Component::Sram)),
             format!("{:.4}", per(Component::Laser)),
             format!("{:.4}", r.energy_per_mac() * 1e12),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }
@@ -141,12 +162,10 @@ pub fn fig10(net: Option<&str>, input: usize) -> Table {
 /// with the [`crate::simulator::reram`] and [`crate::simulator::photonic`]
 /// extensions, Fig. 6's ordering can be checked end to end.
 pub fn crossval(net: Option<&str>, input: usize) -> Table {
-    use crate::simulator::{photonic, reram};
     let net = net_or_yolo(net, input);
-    let scfg = systolic::SystolicConfig::default();
-    let rcfg = reram::ReramConfig::default();
-    let pcfg = photonic::PhotonicConfig::default();
-    let ocfg = optical4f::Optical4FConfig::default();
+    // all_machines() is Fig. 6 chart order: systolic, ReRAM, photonic, 4F
+    // — the column order below.
+    let machines = all_machines();
     let mut t = Table::new(
         &format!(
             "Cross-validation (extension) — cycle-accurate TOPS/W, {} @ {} px",
@@ -154,14 +173,25 @@ pub fn crossval(net: Option<&str>, input: usize) -> Table {
         ),
         &["node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
     );
+    let cache = SweepCache::new();
+    // One grid point per (node, machine), stolen across all cores.
+    let mut points = Vec::new();
     for n in NODES {
-        t.row(vec![
-            format!("{:.0}", n.nm),
-            format!("{:.3}", systolic::simulate_network(&scfg, &net, n.nm).tops_per_watt()),
-            format!("{:.3}", reram::simulate_network(&rcfg, &net, n.nm).tops_per_watt()),
-            format!("{:.3}", photonic::simulate_network(&pcfg, &net, n.nm).tops_per_watt()),
-            format!("{:.3}", optical4f::simulate_network(&ocfg, &net, n.nm).tops_per_watt()),
-        ]);
+        for mi in 0..machines.len() {
+            points.push((n.nm, mi));
+        }
+    }
+    let etas = pool::par_map(&points, |&(nm, mi)| {
+        cache
+            .simulate_network(machines[mi].as_ref(), &net, nm)
+            .tops_per_watt()
+    });
+    for (i, n) in NODES.iter().enumerate() {
+        let mut cells = vec![format!("{:.0}", n.nm)];
+        for mi in 0..machines.len() {
+            cells.push(format!("{:.3}", etas[i * machines.len() + mi]));
+        }
+        t.row(cells);
     }
     t
 }

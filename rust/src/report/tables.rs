@@ -1,4 +1,8 @@
 //! Tables I–IV (plus VI/VII footers) as renderable [`Table`]s.
+//!
+//! Tables I–III compute one row per network; rows are evaluated by
+//! [`pool::par_map`] workers and emitted in zoo order, so output is
+//! byte-identical to the serial path.
 
 use crate::energy::{
     self, constants,
@@ -10,6 +14,7 @@ use crate::energy::{
     sram,
 };
 use crate::networks::{stats, zoo, Network};
+use crate::util::pool;
 use crate::util::table::{sci, Table};
 
 /// Paper-printed Table I rows (for the comparison column):
@@ -38,10 +43,11 @@ pub fn table1(input: usize) -> Table {
             "med Ci+1", "med a", "paper a",
         ],
     );
-    for net in zoo(input) {
-        let r = stats::table1_row(&net);
+    let nets = zoo(input);
+    for row in pool::par_map(&nets, |net| {
+        let r = stats::table1_row(net);
         let pa = paper1(net.name).map(|p| p.8).unwrap_or(f64::NAN);
-        t.row(vec![
+        vec![
             r.name.to_string(),
             r.num_layers.to_string(),
             format!("{:.0}", r.median_n),
@@ -52,7 +58,9 @@ pub fn table1(input: usize) -> Table {
             format!("{:.0}", r.median_co),
             format!("{:.0}", r.median_a),
             format!("{pa:.0}"),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }
@@ -75,14 +83,15 @@ pub fn table2(input: usize) -> Table {
         "Table II — median matmul dims (eq. 16; ours / paper)",
         &["network", "layers", "L'", "N'", "M'", "paper L'", "paper N'", "paper M'"],
     );
-    for net in zoo(input) {
-        let r = stats::table2_row(&net);
+    let nets = zoo(input);
+    for row in pool::par_map(&nets, |net| {
+        let r = stats::table2_row(net);
         let p = PAPER_TABLE2
             .iter()
             .find(|p| p.0 == net.name)
             .copied()
             .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
-        t.row(vec![
+        vec![
             r.name.to_string(),
             r.num_layers.to_string(),
             format!("{:.0}", r.median_l),
@@ -91,7 +100,9 @@ pub fn table2(input: usize) -> Table {
             format!("{:.0}", p.1),
             format!("{:.0}", p.2),
             format!("{:.0}", p.3),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }
@@ -114,14 +125,15 @@ pub fn table3(input: usize) -> Table {
         "Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)",
         &["network", "layers", "L", "N", "M", "paper L", "paper N", "paper M"],
     );
-    for net in zoo(input) {
-        let r = stats::table3_row(&net, None);
+    let nets = zoo(input);
+    for row in pool::par_map(&nets, |net| {
+        let r = stats::table3_row(net, None);
         let p = PAPER_TABLE3
             .iter()
             .find(|p| p.0 == net.name)
             .copied()
             .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
-        t.row(vec![
+        vec![
             r.name.to_string(),
             r.num_layers.to_string(),
             format!("{:.0}", r.median_l),
@@ -130,7 +142,9 @@ pub fn table3(input: usize) -> Table {
             format!("{:.0}", p.1),
             format!("{:.0}", p.2),
             format!("{:.0}", p.3),
-        ]);
+        ]
+    }) {
+        t.row(row);
     }
     t
 }

@@ -1,0 +1,296 @@
+//! The unified [`Machine`] trait: one interface over all four
+//! cycle-accurate simulators (and, via [`AnalyticMachine`], the
+//! closed-form models), so sweep drivers iterate `&[Box<dyn Machine>]`
+//! instead of hand-unrolling per-module match arms.
+//!
+//! Every implementation is a thin adapter over the module's existing
+//! `simulate_layer` / `simulate_network` functions — the physics stays
+//! where it is documented; this module only provides the common shape
+//! plus a stable config [fingerprint](Machine::fingerprint) for the
+//! [`crate::simulator::SweepCache`] memo key.
+
+use super::{optical4f, photonic, reram, systolic, Component, SimResult};
+use crate::analytic::{Processor, Workload};
+use crate::networks::{ConvLayer, Network};
+
+/// A simulated inference machine: anything that can price one conv layer
+/// (and, by summation, a network) at a technology node.
+///
+/// `Send + Sync` is part of the contract so trait objects can be shared
+/// across the [`crate::util::pool`] workers of a parallel sweep.
+pub trait Machine: Send + Sync {
+    /// Short stable identifier ("systolic", "reram", …) used in tables,
+    /// CLI arguments and bench labels.
+    fn name(&self) -> &'static str;
+
+    /// Stable fingerprint of this machine's *configuration* (not its
+    /// name alone): two instances with different knob settings must
+    /// fingerprint differently, so cached sweep entries never alias
+    /// across configs.
+    fn fingerprint(&self) -> u64;
+
+    /// Price one conv layer at `node_nm`.
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult;
+
+    /// Price a whole network at `node_nm`. The default merges per-layer
+    /// results in layer order — implementations may override with a
+    /// coefficient-hoisted fast path, but must produce bit-identical
+    /// sums (the memoization tests rely on it).
+    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+        let mut total = SimResult::default();
+        for layer in &net.layers {
+            total += &self.simulate_layer(layer, node_nm);
+        }
+        total
+    }
+}
+
+/// FNV-1a over a byte string — tiny, dependency-free, stable across
+/// runs (the memo key only ever lives for one process, but stability
+/// makes bench logs comparable).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint a config through its (stable, field-complete) Debug
+/// rendering, domain-tagged so two machines with coincidentally equal
+/// field lists still differ.
+fn config_fingerprint(tag: &str, debug: &str) -> u64 {
+    fnv1a(format!("{tag}:{debug}").as_bytes())
+}
+
+impl Machine for systolic::SystolicConfig {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        config_fingerprint("systolic", &format!("{self:?}"))
+    }
+
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+        systolic::simulate_layer(self, layer, node_nm)
+    }
+
+    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+        systolic::simulate_network(self, net, node_nm)
+    }
+}
+
+impl Machine for optical4f::Optical4FConfig {
+    fn name(&self) -> &'static str {
+        "optical4f"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        config_fingerprint("optical4f", &format!("{self:?}"))
+    }
+
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+        optical4f::simulate_layer(self, layer, node_nm)
+    }
+
+    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+        optical4f::simulate_network(self, net, node_nm)
+    }
+}
+
+impl Machine for reram::ReramConfig {
+    fn name(&self) -> &'static str {
+        "reram"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        config_fingerprint("reram", &format!("{self:?}"))
+    }
+
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+        reram::simulate_layer(self, layer, node_nm)
+    }
+
+    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+        reram::simulate_network(self, net, node_nm)
+    }
+}
+
+impl Machine for photonic::PhotonicConfig {
+    fn name(&self) -> &'static str {
+        "photonic"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        config_fingerprint("photonic", &format!("{self:?}"))
+    }
+
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+        photonic::simulate_layer(self, layer, node_nm)
+    }
+
+    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+        photonic::simulate_network(self, net, node_nm)
+    }
+}
+
+/// Adapter exposing a closed-form [`Processor`] model as a [`Machine`]:
+/// each layer is priced by its own eq. (8)/(9) workload, with the
+/// memory/compute split mapped onto the ledger (SRAM/MAC buckets) so
+/// analytic and cycle-accurate results render through the same tables.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyticMachine(pub Processor);
+
+impl Machine for AnalyticMachine {
+    fn name(&self) -> &'static str {
+        self.0.short()
+    }
+
+    fn fingerprint(&self) -> u64 {
+        config_fingerprint("analytic", &format!("{self:?}"))
+    }
+
+    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+        let w = Workload::from_layer(*layer);
+        let e = self.0.efficiency(&w, node_nm);
+        let ops = layer.ops();
+        let mut r = SimResult::default();
+        r.macs = layer.macs();
+        r.ops = ops;
+        r.ledger.add(Component::Sram, e.e_mem * ops);
+        r.ledger.add(Component::Mac, e.e_comp * ops);
+        r
+    }
+}
+
+/// The four cycle-accurate machines at their default (paper §VI/§VII)
+/// configurations, in Fig. 6 chart order.
+pub fn all_machines() -> Vec<Box<dyn Machine>> {
+    vec![
+        Box::new(systolic::SystolicConfig::default()),
+        Box::new(reram::ReramConfig::default()),
+        Box::new(photonic::PhotonicConfig::default()),
+        Box::new(optical4f::Optical4FConfig::default()),
+    ]
+}
+
+/// The four analytic processor models wrapped as machines, Fig. 6 order.
+pub fn all_analytic_machines() -> Vec<Box<dyn Machine>> {
+    Processor::ALL
+        .iter()
+        .map(|&p| Box::new(AnalyticMachine(p)) as Box<dyn Machine>)
+        .collect()
+}
+
+/// Look up a default-config machine by (case-insensitive) name,
+/// accepting the CLI aliases the `simulate` subcommand always took.
+pub fn by_name(name: &str) -> Option<Box<dyn Machine>> {
+    match name.to_ascii_lowercase().as_str() {
+        "systolic" => Some(Box::new(systolic::SystolicConfig::default())),
+        "optical4f" | "optical" | "4f" => {
+            Some(Box::new(optical4f::Optical4FConfig::default()))
+        }
+        "photonic" | "sp" => Some(Box::new(photonic::PhotonicConfig::default())),
+        "reram" | "memristor" => Some(Box::new(reram::ReramConfig::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::yolov3::yolov3;
+
+    #[test]
+    fn trait_network_matches_free_function() {
+        let net = yolov3(1000);
+        let cfg = systolic::SystolicConfig::default();
+        let direct = systolic::simulate_network(&cfg, &net, 32.0);
+        let via_trait = (&cfg as &dyn Machine).simulate_network(&net, 32.0);
+        assert_eq!(direct.macs, via_trait.macs);
+        assert_eq!(direct.ledger.total(), via_trait.ledger.total());
+        assert_eq!(direct.time_units, via_trait.time_units);
+    }
+
+    #[test]
+    fn default_network_impl_matches_override() {
+        // The hoisted-coefficients override must be bit-identical to the
+        // default per-layer merge (SweepCache correctness rests on this).
+        struct PerLayer(systolic::SystolicConfig);
+        impl Machine for PerLayer {
+            fn name(&self) -> &'static str {
+                "per-layer"
+            }
+            fn fingerprint(&self) -> u64 {
+                0
+            }
+            fn simulate_layer(&self, l: &ConvLayer, n: f64) -> SimResult {
+                systolic::simulate_layer(&self.0, l, n)
+            }
+        }
+        let net = yolov3(1000);
+        let cfg = systolic::SystolicConfig::default();
+        let a = (&cfg as &dyn Machine).simulate_network(&net, 45.0);
+        let b = PerLayer(cfg).simulate_network(&net, 45.0);
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.time_units, b.time_units);
+        for c in Component::ALL {
+            assert_eq!(a.ledger.get(c), b.ledger.get(c), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn all_machines_have_unique_names_and_fingerprints() {
+        let ms = all_machines();
+        assert_eq!(ms.len(), 4);
+        let mut names: Vec<&str> = ms.iter().map(|m| m.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+        let mut fps: Vec<u64> = ms.iter().map(|m| m.fingerprint()).collect();
+        fps.sort();
+        fps.dedup();
+        assert_eq!(fps.len(), 4);
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_changes() {
+        let a = systolic::SystolicConfig::default();
+        let b = systolic::SystolicConfig {
+            dim: 128,
+            ..Default::default()
+        };
+        assert_ne!(Machine::fingerprint(&a), Machine::fingerprint(&b));
+        assert_eq!(
+            Machine::fingerprint(&a),
+            Machine::fingerprint(&systolic::SystolicConfig::default())
+        );
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        for (alias, want) in [
+            ("systolic", "systolic"),
+            ("4f", "optical4f"),
+            ("OPTICAL", "optical4f"),
+            ("sp", "photonic"),
+            ("memristor", "reram"),
+        ] {
+            assert_eq!(by_name(alias).unwrap().name(), want, "{alias}");
+        }
+        assert!(by_name("abacus").is_none());
+    }
+
+    #[test]
+    fn analytic_machine_matches_processor_efficiency() {
+        let layer = ConvLayer::square(512, 128, 128, 3, 1);
+        let m = AnalyticMachine(Processor::Optical4F);
+        let r = m.simulate_layer(&layer, 32.0);
+        let w = Workload::from_layer(layer);
+        let want = Processor::Optical4F.efficiency(&w, 32.0).tops_per_watt();
+        assert!((r.tops_per_watt() - want).abs() / want < 1e-12);
+    }
+}

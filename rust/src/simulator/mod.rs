@@ -1,6 +1,6 @@
 //! Cycle-accurate machine models (paper §VII).
 //!
-//! Two machines, matching the paper's computational-results section:
+//! Four machines, covering the paper's computational-results section:
 //!
 //! * [`systolic`] — a weight-stationary 256×256 systolic array with
 //!   24 MiB of banked activation SRAM and DRAM-resident weights
@@ -17,17 +17,27 @@
 //! stride effects and partial-sum spilling are all accounted exactly.
 //! Every joule is attributed to a [`ledger::Component`] so Fig. 10's
 //! energy-distribution stacks fall out directly.
+//!
+//! Sweep drivers do not call the machines directly: the [`machine`]
+//! module unifies all four (plus the analytic models) behind the
+//! [`Machine`] trait, and [`sweep`] adds layer-dedup memoization
+//! ([`SweepCache`]) plus the parallel (machine × network × node) grid
+//! runner built on [`crate::util::pool`].
 
 pub mod ledger;
+pub mod machine;
 pub mod optical4f;
 pub mod photonic;
 pub mod reram;
+pub mod sweep;
 pub mod systolic;
 
 pub use ledger::{Component, EnergyLedger};
+pub use machine::{all_machines, AnalyticMachine, Machine};
+pub use sweep::{SweepCache, SweepRecord};
 
 /// Result of simulating one network on one machine at one node.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SimResult {
     /// Total MAC count actually performed (useful work only).
     pub macs: f64,
@@ -62,14 +72,17 @@ impl SimResult {
         self.ledger.merge(&other.ledger);
         self.time_units += other.time_units;
     }
+}
 
-    pub fn empty() -> Self {
-        SimResult {
-            macs: 0.0,
-            ops: 0.0,
-            ledger: EnergyLedger::new(),
-            time_units: 0.0,
-        }
+impl std::ops::AddAssign<&SimResult> for SimResult {
+    fn add_assign(&mut self, rhs: &SimResult) {
+        self.merge(rhs);
+    }
+}
+
+impl std::ops::AddAssign for SimResult {
+    fn add_assign(&mut self, rhs: SimResult) {
+        self.merge(&rhs);
     }
 }
 
@@ -79,11 +92,11 @@ mod tests {
 
     #[test]
     fn merge_accumulates() {
-        let mut a = SimResult::empty();
+        let mut a = SimResult::default();
         a.macs = 10.0;
         a.ops = 20.0;
         a.ledger.add(Component::Sram, 1e-12);
-        let mut b = SimResult::empty();
+        let mut b = SimResult::default();
         b.macs = 5.0;
         b.ops = 10.0;
         b.ledger.add(Component::Adc, 2e-12);
@@ -93,8 +106,23 @@ mod tests {
     }
 
     #[test]
+    fn add_assign_delegates_to_merge() {
+        let mut a = SimResult::default();
+        a.macs = 1.0;
+        a.time_units = 2.0;
+        let mut b = SimResult::default();
+        b.macs = 3.0;
+        b.ledger.add(Component::Dac, 4e-12);
+        a += &b;
+        a += b.clone();
+        assert_eq!(a.macs, 7.0);
+        assert_eq!(a.time_units, 2.0);
+        assert!((a.ledger.get(Component::Dac) - 8e-12).abs() < 1e-24);
+    }
+
+    #[test]
     fn efficiency_math() {
-        let mut r = SimResult::empty();
+        let mut r = SimResult::default();
         r.macs = 1e6;
         r.ops = 2e6;
         r.ledger.add(Component::Mac, 2e-6); // 1 pJ/op

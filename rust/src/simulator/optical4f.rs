@@ -223,9 +223,9 @@ pub fn simulate_network(
     node_nm: f64,
 ) -> SimResult {
     let c = Coeffs::new(cfg, node_nm);
-    let mut total = SimResult::empty();
+    let mut total = SimResult::default();
     for layer in &net.layers {
-        total.merge(&simulate_layer_with(cfg, layer, &c));
+        total += &simulate_layer_with(cfg, layer, &c);
     }
     total
 }

@@ -163,9 +163,9 @@ fn simulate_layer_with(cfg: &PhotonicConfig, layer: &ConvLayer, c: &Coeffs) -> S
 /// Simulate a whole network.
 pub fn simulate_network(cfg: &PhotonicConfig, net: &Network, node_nm: f64) -> SimResult {
     let c = Coeffs::new(cfg, node_nm);
-    let mut total = SimResult::empty();
+    let mut total = SimResult::default();
     for layer in &net.layers {
-        total.merge(&simulate_layer_with(cfg, layer, &c));
+        total += &simulate_layer_with(cfg, layer, &c);
     }
     total
 }

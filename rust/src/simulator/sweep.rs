@@ -1,0 +1,280 @@
+//! Layer-dedup memoization + the parallel sweep engine.
+//!
+//! The zoo networks repeat identical conv shapes heavily (DenseNet201's
+//! 200 layers collapse to a few dozen unique (n, Cᵢ, Cᵢ₊₁, k, stride)
+//! tuples; VGG repeats its expensive 224²-class layers back to back), and
+//! the evaluation grids re-simulate every network at 13 nodes. A
+//! [`SweepCache`] keyed by (machine-config fingerprint, node, layer
+//! shape) therefore simulates each unique tuple **once** and replays the
+//! stored [`SimResult`] everywhere else.
+//!
+//! Correctness contract: [`SweepCache::simulate_network`] merges the
+//! per-layer results *in layer order*, exactly like the direct
+//! `simulate_network` paths, so cached totals are **bit-identical** to
+//! uncached ones — scaling one result by a multiplicity factor would
+//! round differently and is deliberately avoided. The property tests in
+//! `tests/sweep_engine.rs` pin this down for all four machines.
+//!
+//! [`sweep`] is the grid runner on top: every (machine × network × node)
+//! point, evaluated through a shared cache by [`crate::util::pool`]
+//! workers, with records returned in deterministic machine-major order.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::machine::Machine;
+use super::SimResult;
+use crate::networks::{ConvLayer, Network};
+use crate::util::pool::Pool;
+
+/// Memo key: machine config fingerprint + node (exact bits) + layer.
+type Key = (u64, u64, ConvLayer);
+
+/// Concurrent memo table for (machine, node, layer) simulation results.
+///
+/// Thread-safe by a plain mutex around the map: the hot path is the
+/// *simulation*, which runs outside the lock; the lock only guards
+/// clone-in/clone-out of small `SimResult`s. Two workers racing on the
+/// same miss both simulate (idempotent — results are identical) and one
+/// insert wins.
+#[derive(Default)]
+pub struct SweepCache {
+    entries: Mutex<HashMap<Key, SimResult>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl SweepCache {
+    pub fn new() -> Self {
+        SweepCache::default()
+    }
+
+    /// Price one layer through the cache.
+    pub fn simulate_layer(
+        &self,
+        machine: &dyn Machine,
+        layer: &ConvLayer,
+        node_nm: f64,
+    ) -> SimResult {
+        let key = (machine.fingerprint(), node_nm.to_bits(), *layer);
+        if let Some(hit) = self.entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let r = machine.simulate_layer(layer, node_nm);
+        self.entries.lock().unwrap().insert(key, r.clone());
+        r
+    }
+
+    /// Price a whole network through the cache, merging per-layer
+    /// results in layer order (bit-identical to the direct path; see
+    /// module docs).
+    pub fn simulate_network(
+        &self,
+        machine: &dyn Machine,
+        net: &Network,
+        node_nm: f64,
+    ) -> SimResult {
+        let mut total = SimResult::default();
+        for layer in &net.layers {
+            total += &self.simulate_layer(machine, layer, node_nm);
+        }
+        total
+    }
+
+    /// Unique (machine, node, layer) tuples simulated so far.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to simulate.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// "hits/misses (ratio)" one-liner for CLI / bench output.
+    pub fn stats(&self) -> String {
+        let (h, m) = (self.hits(), self.misses());
+        let total = (h + m).max(1);
+        format!(
+            "{h} hits / {m} misses ({:.1}% reuse)",
+            100.0 * h as f64 / total as f64
+        )
+    }
+}
+
+/// One evaluated grid point of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRecord {
+    pub machine: &'static str,
+    pub network: &'static str,
+    pub node_nm: f64,
+    pub result: SimResult,
+}
+
+/// Evaluate the full (machine × network × node) grid in parallel through
+/// a shared cache. Records come back machine-major, then network, then
+/// node — the exact order a serial triple loop would produce — so
+/// drivers can index `records[(mi * nets.len() + ni) * nodes.len() + ki]`
+/// or just iterate.
+pub fn sweep(
+    machines: &[Box<dyn Machine>],
+    nets: &[Network],
+    nodes: &[f64],
+    cache: &SweepCache,
+) -> Vec<SweepRecord> {
+    sweep_on(&Pool::auto(), machines, nets, nodes, cache)
+}
+
+/// [`sweep`] with an explicit pool (serial baseline: `Pool::new(1)`).
+pub fn sweep_on(
+    pool: &Pool,
+    machines: &[Box<dyn Machine>],
+    nets: &[Network],
+    nodes: &[f64],
+    cache: &SweepCache,
+) -> Vec<SweepRecord> {
+    let mut points: Vec<(usize, usize, f64)> =
+        Vec::with_capacity(machines.len() * nets.len() * nodes.len());
+    for mi in 0..machines.len() {
+        for ni in 0..nets.len() {
+            for &node in nodes {
+                points.push((mi, ni, node));
+            }
+        }
+    }
+    pool.par_map(&points, |&(mi, ni, node)| SweepRecord {
+        machine: machines[mi].name(),
+        network: nets[ni].name,
+        node_nm: node,
+        result: cache.simulate_network(machines[mi].as_ref(), &nets[ni], node),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::yolov3::yolov3;
+    use crate::simulator::machine::all_machines;
+    use crate::simulator::{systolic, Component};
+
+    #[test]
+    fn cache_hits_on_repeated_layers() {
+        let cache = SweepCache::new();
+        let cfg = systolic::SystolicConfig::default();
+        let net = yolov3(1000); // plenty of repeated residual-block shapes
+        let r = cache.simulate_network(&cfg, &net, 45.0);
+        assert!(r.macs > 0.0);
+        assert!(cache.hits() > 0, "YOLOv3 repeats shapes: {}", cache.stats());
+        assert_eq!(cache.hits() + cache.misses(), net.num_layers());
+        assert_eq!(cache.len(), cache.misses());
+    }
+
+    #[test]
+    fn cached_network_bit_identical_to_direct() {
+        let cache = SweepCache::new();
+        let cfg = systolic::SystolicConfig::default();
+        let net = yolov3(1000);
+        let direct = systolic::simulate_network(&cfg, &net, 28.0);
+        let cached = cache.simulate_network(&cfg, &net, 28.0);
+        let again = cache.simulate_network(&cfg, &net, 28.0); // pure hits
+        for r in [&cached, &again] {
+            assert_eq!(direct.macs, r.macs);
+            assert_eq!(direct.ops, r.ops);
+            assert_eq!(direct.time_units, r.time_units);
+            for c in Component::ALL {
+                assert_eq!(direct.ledger.get(c), r.ledger.get(c), "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_configs_never_alias() {
+        let cache = SweepCache::new();
+        let small = systolic::SystolicConfig {
+            dim: 64,
+            banks: 64,
+            ..Default::default()
+        };
+        let big = systolic::SystolicConfig::default();
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+        let a = cache.simulate_layer(&small, &layer, 45.0);
+        let b = cache.simulate_layer(&big, &layer, 45.0);
+        assert_eq!(cache.misses(), 2, "two configs → two entries");
+        assert!(a.ledger.total() != b.ledger.total());
+    }
+
+    #[test]
+    fn distinct_nodes_never_alias() {
+        let cache = SweepCache::new();
+        let cfg = systolic::SystolicConfig::default();
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+        let a = cache.simulate_layer(&cfg, &layer, 45.0);
+        let b = cache.simulate_layer(&cfg, &layer, 7.0);
+        assert_eq!(cache.misses(), 2);
+        assert!(a.ledger.total() > b.ledger.total());
+    }
+
+    #[test]
+    fn sweep_grid_order_is_machine_major() {
+        let machines = all_machines();
+        let nets = vec![yolov3(200)];
+        let nodes = [45.0, 7.0];
+        let cache = SweepCache::new();
+        let recs = sweep(&machines, &nets, &nodes, &cache);
+        assert_eq!(recs.len(), machines.len() * nets.len() * nodes.len());
+        let mut i = 0;
+        for m in &machines {
+            for net in &nets {
+                for &node in &nodes {
+                    assert_eq!(recs[i].machine, m.name());
+                    assert_eq!(recs[i].network, net.name);
+                    assert_eq!(recs[i].node_nm, node);
+                    assert!(recs[i].result.macs > 0.0);
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_sweep() {
+        let machines = all_machines();
+        let nets = vec![yolov3(200)];
+        let nodes = [45.0, 28.0, 7.0];
+        let serial = sweep_on(
+            &Pool::new(1),
+            &machines,
+            &nets,
+            &nodes,
+            &SweepCache::new(),
+        );
+        let parallel = sweep_on(
+            &Pool::new(8),
+            &machines,
+            &nets,
+            &nodes,
+            &SweepCache::new(),
+        );
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.machine, b.machine);
+            assert_eq!(a.node_nm, b.node_nm);
+            assert_eq!(a.result.macs, b.result.macs);
+            for c in Component::ALL {
+                assert_eq!(a.result.ledger.get(c), b.result.ledger.get(c));
+            }
+        }
+    }
+}

@@ -9,8 +9,11 @@
 //! * [`cli`] — a small declarative argument parser for the `aimc` binary.
 //! * [`table`] — aligned-column text tables + CSV emission.
 //! * [`stats`] — medians/means over layer populations.
+//! * [`pool`] — scoped work-stealing thread pool (`par_map` /
+//!   `par_for_each`) driving the parallel sweep engine.
 
 pub mod cli;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,242 @@
+//! In-tree work-stealing thread pool with scoped `par_map` /
+//! `par_for_each` (the offline build has no rayon).
+//!
+//! Design: the input slice is split into one contiguous range per worker;
+//! each range carries an atomic cursor. A worker drains its own range
+//! front-to-back with a `fetch_add` claim, and when its range is empty it
+//! *steals* from the cursor of whichever victim has the most work left —
+//! so a skewed grid (VGG16's 62001-row layers next to SmallCNN) still
+//! keeps every core busy. Claims are per-item and idempotent-safe: a
+//! cursor past its range end simply yields no work.
+//!
+//! Guarantees the sweep engine relies on:
+//!
+//! * **Deterministic ordering** — `par_map` returns results in input
+//!   order regardless of which thread computed what (each worker tags
+//!   results with their input index; the merge sorts by it).
+//! * **Scoped borrows** — built on [`std::thread::scope`], so closures
+//!   may borrow the items, configs and caches of the calling frame.
+//! * **Panic transparency** — a panic in the closure is re-raised on the
+//!   caller (after all workers stop claiming work), so `util::prop`
+//!   failures inside a parallel property surface normally.
+//!
+//! Thread count: `AIMC_THREADS` env override, else
+//! [`std::thread::available_parallelism`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A (size-only) handle describing how many worker threads to use.
+/// Workers are spawned per call and scoped to it — the pool holds no
+/// long-lived threads, so there is nothing to shut down and `Pool` is
+/// freely copyable.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The default pool: `AIMC_THREADS` if set, else the machine's
+    /// available parallelism, else 1.
+    pub fn auto() -> Self {
+        let threads = std::env::var("AIMC_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        Pool::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `items` in parallel; results come back in input
+    /// order. Falls back to a plain serial map for 1 thread / ≤ 1 item
+    /// (identical results by construction — `f` runs once per item
+    /// either way).
+    pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> U + Sync,
+    {
+        let n = items.len();
+        if self.threads == 1 || n <= 1 {
+            return items.iter().map(&f).collect();
+        }
+        let workers = self.threads.min(n);
+        let chunk = n.div_ceil(workers);
+        // Per-worker range [w·chunk, min((w+1)·chunk, n)) with an atomic
+        // claim cursor.
+        let cursors: Vec<AtomicUsize> =
+            (0..workers).map(|w| AtomicUsize::new(w * chunk)).collect();
+        let ends: Vec<usize> = (0..workers)
+            .map(|w| ((w + 1) * chunk).min(n))
+            .collect();
+
+        let mut tagged: Vec<(usize, U)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let cursors = &cursors;
+                    let ends = &ends;
+                    let f = &f;
+                    s.spawn(move || {
+                        let mut out: Vec<(usize, U)> = Vec::new();
+                        let mut victim = w;
+                        loop {
+                            let i = cursors[victim].fetch_add(1, Ordering::Relaxed);
+                            if i < ends[victim] {
+                                out.push((i, f(&items[i])));
+                                continue;
+                            }
+                            // Own/current range drained: steal from the
+                            // victim with the most remaining work.
+                            let next = (0..cursors.len())
+                                .filter(|&v| v != victim)
+                                .map(|v| {
+                                    let cur = cursors[v].load(Ordering::Relaxed);
+                                    (v, ends[v].saturating_sub(cur))
+                                })
+                                .max_by_key(|&(_, rem)| rem)
+                                .filter(|&(_, rem)| rem > 0);
+                            match next {
+                                Some((v, _)) => victim = v,
+                                None => break,
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(part) => tagged.extend(part),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+
+        debug_assert_eq!(tagged.len(), n, "every item claimed exactly once");
+        tagged.sort_unstable_by_key(|&(i, _)| i);
+        tagged.into_iter().map(|(_, u)| u).collect()
+    }
+
+    /// Run `f` on every item in parallel (no result collection beyond
+    /// completion — the call returns once every item has been visited).
+    pub fn par_for_each<T, F>(&self, items: &[T], f: F)
+    where
+        T: Sync,
+        F: Fn(&T) + Sync,
+    {
+        self.par_map(items, |x| f(x));
+    }
+}
+
+/// [`Pool::par_map`] on the default ([`Pool::auto`]) pool.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    Pool::auto().par_map(items, f)
+}
+
+/// [`Pool::par_for_each`] on the default ([`Pool::auto`]) pool.
+pub fn par_for_each<T, F>(items: &[T], f: F)
+where
+    T: Sync,
+    F: Fn(&T) + Sync,
+{
+    Pool::auto().par_for_each(items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_matches_serial_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let par = Pool::new(threads).par_map(&items, |x| x * x + 1);
+            assert_eq!(par, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let p = Pool::new(4);
+        assert_eq!(p.par_map(&[] as &[u32], |x| *x), Vec::<u32>::new());
+        assert_eq!(p.par_map(&[7u32], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn every_item_visited_exactly_once() {
+        let n = 4096;
+        let visits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let idx: Vec<usize> = (0..n).collect();
+        Pool::new(7).par_for_each(&idx, |&i| {
+            visits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(visits.iter().all(|v| v.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn skewed_work_is_stolen() {
+        // One pathological item 1000× heavier than the rest: with
+        // stealing, the light items must not wait behind it. We can't
+        // assert wall-clock reliably, but we can assert completion and
+        // order with heavy skew present.
+        let items: Vec<usize> = (0..64).collect();
+        let out = Pool::new(4).par_map(&items, |&i| {
+            let spins = if i == 0 { 200_000 } else { 200 };
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            (i, acc != 1) // acc consumed so the loop isn't optimized out
+        });
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().enumerate().all(|(i, &(j, _))| i == j));
+    }
+
+    #[test]
+    fn borrows_calling_frame() {
+        let offset = 10u64;
+        let items: Vec<u64> = (0..100).collect();
+        let out = Pool::new(3).par_map(&items, |x| x + offset);
+        assert_eq!(out[99], 109);
+    }
+
+    #[test]
+    fn threads_clamped_to_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert!(Pool::auto().threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn closure_panic_propagates() {
+        let items: Vec<u32> = (0..32).collect();
+        Pool::new(4).par_for_each(&items, |&i| {
+            if i == 17 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! The parallel sweep engine's correctness contract, property-tested:
+//!
+//! * memoized sweeps are **bit-identical** to direct `simulate_network`
+//!   across random layer zoos, nodes and all four machines;
+//! * `pool::par_map` output ordering matches the serial map at any
+//!   thread count;
+//! * the full grid runner produces the same records serially and in
+//!   parallel, in the same order.
+
+use aimc::networks::{ConvLayer, Network};
+use aimc::simulator::machine::{all_machines, by_name};
+use aimc::simulator::{Component, Machine, SweepCache};
+use aimc::simulator::sweep::{sweep_on, SweepRecord};
+use aimc::util::pool::Pool;
+use aimc::util::prop::{check, prop_assert, Gen};
+
+/// A random — but modestly sized, these run hundreds of times — layer.
+fn random_layer(g: &mut Gen) -> ConvLayer {
+    let k = *g.choose(&[1usize, 3, 5]);
+    ConvLayer::square(
+        g.usize(k.max(4), 96),
+        g.usize(1, 64),
+        g.usize(1, 64),
+        k,
+        *g.choose(&[1usize, 1, 2]),
+    )
+}
+
+/// A random layer zoo with deliberate duplicates, so the memo layer has
+/// something to dedup (each drawn shape appears 1–3 times).
+fn random_net(g: &mut Gen) -> Network {
+    let distinct = g.usize(1, 6);
+    let mut layers = Vec::new();
+    for _ in 0..distinct {
+        let l = random_layer(g);
+        for _ in 0..g.usize(1, 3) {
+            layers.push(l);
+        }
+    }
+    Network {
+        name: "prop-zoo",
+        layers,
+    }
+}
+
+fn assert_bit_identical(
+    a: &aimc::simulator::SimResult,
+    b: &aimc::simulator::SimResult,
+    what: &str,
+) -> Result<(), String> {
+    prop_assert(a.macs == b.macs, &format!("{what}: macs"))?;
+    prop_assert(a.ops == b.ops, &format!("{what}: ops"))?;
+    prop_assert(a.time_units == b.time_units, &format!("{what}: time"))?;
+    for c in Component::ALL {
+        prop_assert(
+            a.ledger.get(c) == b.ledger.get(c),
+            &format!("{what}: ledger {c:?}"),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_cached_sweep_bit_identical_across_all_machines() {
+    let machines = all_machines();
+    check(30, |g| {
+        let net = random_net(g);
+        let node = *g.choose(&[45.0, 32.0, 28.0, 14.0, 7.0]);
+        for m in &machines {
+            let direct = m.simulate_network(&net, node);
+            let cache = SweepCache::new();
+            let cold = cache.simulate_network(m.as_ref(), &net, node);
+            let warm = cache.simulate_network(m.as_ref(), &net, node);
+            assert_bit_identical(&direct, &cold, &format!("{} cold", m.name()))?;
+            assert_bit_identical(&direct, &warm, &format!("{} warm", m.name()))?;
+            // The dedup must actually engage: unique tuples simulated
+            // once, duplicates + the warm pass served from memory.
+            prop_assert(
+                cache.misses() <= net.num_layers(),
+                "misses bounded by layer count",
+            )?;
+            prop_assert(
+                cache.hits() + cache.misses() == 2 * net.num_layers(),
+                "every lookup accounted",
+            )?;
+            if net.num_layers() > cache.len() {
+                prop_assert(cache.hits() > 0, "duplicate shapes must hit")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_shared_across_nets_nodes_and_machines_stays_exact() {
+    // One long-lived cache fed from many networks/nodes (the sweep-grid
+    // usage pattern) must return the same bits as fresh simulation for
+    // every query, in any interleaving.
+    let machines = all_machines();
+    let cache = SweepCache::new();
+    check(25, |g| {
+        let net = random_net(g);
+        let node = *g.choose(&[45.0, 28.0, 7.0]);
+        let m = g.choose(&machines);
+        let direct = m.simulate_network(&net, node);
+        let cached = cache.simulate_network(m.as_ref(), &net, node);
+        assert_bit_identical(&direct, &cached, m.name())
+    });
+}
+
+#[test]
+fn prop_par_map_ordering_matches_serial() {
+    check(60, |g| {
+        let n = g.usize(0, 400);
+        let threads = g.usize(1, 16);
+        let items: Vec<u64> = (0..n as u64).map(|i| i * 37 + 11).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x ^ (x << 7)).collect();
+        let parallel = Pool::new(threads).par_map(&items, |x| x ^ (x << 7));
+        prop_assert(
+            parallel == serial,
+            &format!("order diverged (n={n}, threads={threads})"),
+        )
+    });
+}
+
+#[test]
+fn prop_parallel_network_sim_deterministic_across_thread_counts() {
+    // Simulating through par_map with any thread count must equal the
+    // serial result record-for-record (f64 merges happen per network
+    // inside one worker, so no reassociation can occur).
+    let machines = all_machines();
+    check(10, |g| {
+        let nets: Vec<Network> = (0..g.usize(1, 4)).map(|_| random_net(g)).collect();
+        let nodes = [45.0, 7.0];
+        let serial = sweep_on(
+            &Pool::new(1),
+            &machines,
+            &nets,
+            &nodes,
+            &SweepCache::new(),
+        );
+        for threads in [2, 5, 13] {
+            let par = sweep_on(
+                &Pool::new(threads),
+                &machines,
+                &nets,
+                &nodes,
+                &SweepCache::new(),
+            );
+            prop_assert(par.len() == serial.len(), "record count")?;
+            for (a, b) in serial.iter().zip(&par) {
+                prop_assert(
+                    a.machine == b.machine
+                        && a.network == b.network
+                        && a.node_nm == b.node_nm,
+                    "record order",
+                )?;
+                assert_bit_identical(&a.result, &b.result, a.machine)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grid_runner_covers_full_grid_in_declared_order() {
+    let machines = all_machines();
+    let nets = vec![
+        aimc::networks::yolov3::yolov3(200),
+        aimc::networks::vgg::vgg16(200),
+    ];
+    let nodes = [45.0, 28.0, 7.0];
+    let cache = SweepCache::new();
+    let recs: Vec<SweepRecord> = sweep_on(&Pool::auto(), &machines, &nets, &nodes, &cache);
+    assert_eq!(recs.len(), 4 * 2 * 3);
+    let mut i = 0;
+    for m in &machines {
+        for net in &nets {
+            for &node in &nodes {
+                assert_eq!(recs[i].machine, m.name());
+                assert_eq!(recs[i].network, net.name);
+                assert_eq!(recs[i].node_nm, node);
+                assert!(recs[i].result.ops > 0.0);
+                i += 1;
+            }
+        }
+    }
+    // VGG16 repeats conv shapes back-to-back; across 3 nodes × 4
+    // machines the cache must have deduped a substantial share.
+    assert!(cache.hits() > 0, "{}", cache.stats());
+}
+
+#[test]
+fn machine_lookup_round_trips_cli_names() {
+    for m in all_machines() {
+        let again = by_name(m.name()).expect(m.name());
+        assert_eq!(again.name(), m.name());
+        assert_eq!(again.fingerprint(), m.fingerprint());
+    }
+}

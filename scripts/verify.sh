@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + full test suite, exactly the command
+# ROADMAP.md pins. Run from anywhere; add --bench to also record the
+# sweep-engine perf numbers to rust/BENCH_sweep.json.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+if [ "${1:-}" = "--bench" ]; then
+    cargo bench --bench paper_benches -- sweep
+    echo "perf record:"
+    cat BENCH_sweep.json
+fi
+
+echo "tier-1 verify OK"
