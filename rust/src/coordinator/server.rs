@@ -102,6 +102,7 @@ impl Server {
             let policy = cfg.policy;
             let path = cfg.path;
             let metrics = metrics.clone();
+            let in_flight = in_flight.clone();
             std::thread::spawn(move || {
                 let mut pending: Vec<Request> = Vec::new();
                 loop {
@@ -120,14 +121,19 @@ impl Server {
                         for b in plan_batches(round.len(), path.available_batches()) {
                             let reqs: Vec<Request> = round.drain(..b).collect();
                             metrics.lock().unwrap().record_batch(b);
-                            if batch_tx
-                                .send(Batch {
-                                    artifact: path.artifact_for_batch(b),
-                                    batch: b,
-                                    requests: reqs,
-                                })
-                                .is_err()
-                            {
+                            if let Err(send_err) = batch_tx.send(Batch {
+                                artifact: path.artifact_for_batch(b),
+                                batch: b,
+                                requests: reqs,
+                            }) {
+                                // All workers are gone; the batch (and
+                                // anything still pending) will never be
+                                // served — retire its accounting so
+                                // shutdown() doesn't burn its deadline.
+                                let dropped = send_err.0.requests.len()
+                                    + round.len()
+                                    + pending.len();
+                                in_flight.fetch_sub(dropped, Ordering::AcqRel);
                                 return;
                             }
                         }
@@ -209,8 +215,11 @@ impl Server {
                         guard.recv()
                     };
                     let Ok(job) = job else { return };
+                    // `infer` counts per request; a batch retires all of
+                    // its requests at once.
+                    let retired = job.requests.len();
                     run_batch(&engine, job, &metrics);
-                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                    in_flight.fetch_sub(retired, Ordering::AcqRel);
                 }
             }));
         }
