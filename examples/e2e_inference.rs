@@ -89,7 +89,6 @@ fn main() -> anyhow::Result<()> {
         server.infer_blocking(vec![0.0; IMAGE_ELEMS])?;
 
         let t0 = Instant::now();
-        server.metrics.lock().unwrap().start();
         let rxs: Vec<_> = (0..n_req)
             .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
             .collect();
@@ -99,7 +98,6 @@ fn main() -> anyhow::Result<()> {
                 ok += 1;
             }
         }
-        server.metrics.lock().unwrap().stop();
         let wall = t0.elapsed();
         let m = server.shutdown();
         anyhow::ensure!(ok == n_req, "{path:?}: {ok}/{n_req} served");

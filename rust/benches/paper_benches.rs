@@ -131,6 +131,91 @@ fn bench_sweep_engine(input: usize) {
     }
 }
 
+/// Serving-path scaling harness: a (worker count × offered concurrency)
+/// grid, closed-loop with a bounded number of outstanding requests,
+/// recorded to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`).
+/// Runs against the real PJRT engine when artifacts are available and
+/// falls back to the deterministic [`SimExecutor`] otherwise, so the
+/// scaling record exists in every environment — the point is how
+/// throughput and p99 move with workers and load, which the sharded
+/// lanes determine, not the backend.
+fn bench_serve() {
+    use aimc::coordinator::exec::SimExecutor;
+    use std::collections::VecDeque;
+
+    let have_engine = Engine::discover().is_ok();
+    let backend = if have_engine { "pjrt" } else { "sim" };
+    let n = 256usize;
+    let mut rng = Rng::new(2);
+    // A small image pool: the bench times the server, not the PRNG.
+    let images: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
+
+    let mut runs = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        for &offered in &[1usize, 8, 32] {
+            let cfg = ServerConfig {
+                path: ConvPath::Exact,
+                workers,
+                warm_start: have_engine,
+                max_pending: 4096,
+                ..Default::default()
+            };
+            let server = if have_engine {
+                Server::start(cfg).unwrap()
+            } else {
+                Server::start_sim(cfg, SimExecutor::default()).unwrap()
+            };
+            let _ = server.infer_blocking(images[0].clone()); // warm path
+            let t0 = Instant::now();
+            let mut outstanding: VecDeque<_> = VecDeque::with_capacity(offered);
+            let mut ok = 0usize;
+            for i in 0..n {
+                outstanding.push_back(server.infer(images[i % images.len()].clone()));
+                if outstanding.len() >= offered {
+                    let rx = outstanding.pop_front().unwrap();
+                    if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                        ok += 1;
+                    }
+                }
+            }
+            while let Some(rx) = outstanding.pop_front() {
+                if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                    ok += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let m = server.shutdown();
+            let rps = n as f64 / wall;
+            println!(
+                "serve[{backend}]: {workers} workers, {offered:>2} offered: \
+                 {rps:>8.0} req/s, p50 {:>7.2} ms, p99 {:>7.2} ms, mean batch {:.2}",
+                m.percentile_us(50.0) as f64 / 1e3,
+                m.percentile_us(99.0) as f64 / 1e3,
+                m.mean_batch(),
+            );
+            runs.push(format!(
+                "    {{ \"workers\": {workers}, \"offered\": {offered}, \"requests\": {n}, \
+                 \"ok\": {ok}, \"throughput_rps\": {rps:.1}, \"p50_us\": {}, \"p99_us\": {}, \
+                 \"mean_batch\": {:.2}, \"rejected\": {} }}",
+                m.percentile_us(50.0),
+                m.percentile_us(99.0),
+                m.mean_batch(),
+                m.rejected(),
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ]\n}}\n",
+        runs.join(",\n")
+    );
+    let path =
+        std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("   wrote {path} ({backend} backend)"),
+        Err(e) => eprintln!("   warn: writing {path}: {e}"),
+    }
+}
+
 fn main() {
     // `cargo bench -- <filter>` support (cargo injects flags like
     // `--bench`; ignore anything starting with '-').
@@ -272,36 +357,7 @@ fn main() {
     }
 
     if run("serve") {
-        match Server::start(ServerConfig {
-            path: ConvPath::Exact,
-            workers: 2,
-            ..Default::default()
-        }) {
-            Ok(server) => {
-                let mut rng = Rng::new(2);
-                server.infer_blocking(vec![0.0; IMAGE_ELEMS]).unwrap();
-                let n = 64;
-                // Pre-generate images so the bench times the server, not
-                // the Box-Muller PRNG (~100 µs/image).
-                let images: Vec<Vec<f32>> =
-                    (0..n).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
-                let samples = time_it(5, || {
-                    let rxs: Vec<_> =
-                        images.iter().map(|im| server.infer(im.clone())).collect();
-                    for rx in rxs {
-                        rx.recv().unwrap().unwrap();
-                    }
-                });
-                report_time(
-                    "serve: 64 reqs, exact, 2 workers",
-                    &samples,
-                    Some((n as f64, "img/s")),
-                );
-                let m = server.shutdown();
-                println!("   server metrics: {}", m.summary());
-            }
-            Err(e) => println!("serve bench skipped: {e:#}"),
-        }
+        bench_serve();
     }
 
     println!("\nbenches done");

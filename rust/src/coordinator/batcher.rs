@@ -29,9 +29,11 @@ impl Default for BatchPolicy {
 
 /// Greedily split `pending` requests into compiled batch sizes
 /// (`variants` must be sorted descending, e.g. `[8, 4, 1]`).
-/// Returns the execution plan, e.g. 11 pending → `[8, 1, 1, 1]` when 4s
-/// would strand work, or `[8, 4]` when padding is allowed… we do NOT pad
-/// (wasted compute); remainder runs on smaller variants.
+/// Returns the execution plan, e.g. 11 pending → `[8, 1, 1, 1]`: after
+/// the 8, only 3 remain, which no 4-variant can carry. Padding a partial
+/// batch up to a larger variant is never done — padded slots are wasted
+/// compute — so remainders always drain on smaller variants, ultimately
+/// the required batch-1.
 pub fn plan_batches(pending: usize, variants: &[usize]) -> Vec<usize> {
     assert!(!variants.is_empty());
     debug_assert!(

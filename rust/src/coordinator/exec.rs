@@ -1,0 +1,184 @@
+//! Execution backends for the serving path.
+//!
+//! The server is generic over [`Executor`], so the same dispatcher /
+//! lane / drain machinery runs against the real PJRT
+//! [`Engine`](crate::runtime::Engine) (when artifacts and the `pjrt`
+//! feature are present) or the deterministic in-process [`SimExecutor`].
+//! The latter is what lets the serving integration tests and
+//! `cargo bench -- serve` exercise batching, backpressure and shutdown
+//! in the offline build environment, where no AOT artifacts exist.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{IMAGE_ELEMS, LOGITS};
+use crate::runtime::Engine;
+
+/// A batch-execution backend owned by one worker thread.
+///
+/// Implementations need not be `Send`: the server constructs one
+/// executor *inside* each worker thread via a factory (PJRT client
+/// handles are `Rc`-based).
+pub trait Executor {
+    /// Pre-compile the named artifacts; a no-op for backends without a
+    /// compilation step.
+    fn warm_up(&self, _artifacts: &[&str]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute one batch. `inputs` matches the artifact's input arity
+    /// (the CNN serving artifacts take a single tensor holding `batch`
+    /// images concatenated); returns `batch * LOGITS` values.
+    fn execute(&self, artifact: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>>;
+}
+
+impl Executor for Engine {
+    fn warm_up(&self, artifacts: &[&str]) -> Result<()> {
+        Engine::warm_up(self, artifacts)
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Engine::execute(self, artifact, inputs)
+    }
+}
+
+/// Deterministic stand-in for the PJRT engine.
+///
+/// Computes a fixed sparse linear readout per image (batch-invariant:
+/// the same image yields bit-identical logits at any batch size, which
+/// is what the batched-equals-single tests rely on) and then sleeps
+/// `base_cost + per_image_cost × batch` to model a device whose fixed
+/// dispatch overhead is amortized by batching — the same shape as the
+/// paper's efficiency-at-scale argument, eq. 22's channel packing in
+/// miniature.
+#[derive(Clone, Copy, Debug)]
+pub struct SimExecutor {
+    /// Fixed per-dispatch cost (kernel launch, readout).
+    pub base_cost: Duration,
+    /// Incremental cost per image in the batch.
+    pub per_image_cost: Duration,
+}
+
+impl Default for SimExecutor {
+    fn default() -> Self {
+        // base/per-image ≈ 10: batch 8 serves ~5× more images per second
+        // than batch 1, so batching visibly pays in the serve bench.
+        SimExecutor {
+            base_cost: Duration::from_micros(300),
+            per_image_cost: Duration::from_micros(30),
+        }
+    }
+}
+
+impl SimExecutor {
+    pub fn new(base_cost: Duration, per_image_cost: Duration) -> Self {
+        SimExecutor {
+            base_cost,
+            per_image_cost,
+        }
+    }
+
+    /// Zero-cost variant for tests that don't time anything.
+    pub fn instant() -> Self {
+        SimExecutor::new(Duration::ZERO, Duration::ZERO)
+    }
+}
+
+/// Batch size encoded in an artifact name (`…_b8` → 8, otherwise 1),
+/// mirroring [`super::ConvPath::artifact_for_batch`].
+fn batch_of(artifact: &str) -> usize {
+    artifact
+        .rsplit_once("_b")
+        .and_then(|(_, n)| n.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Fixed sparse readout: pseudo-weights in {+1, −1}/64 derived from the
+/// element index only, so the map is deterministic and batch-invariant.
+fn logits_of(img: &[f32]) -> [f32; LOGITS] {
+    let mut l = [0.0f32; LOGITS];
+    for (i, &v) in img.iter().enumerate() {
+        let sign = if (i / LOGITS) & 1 == 0 { 1.0 } else { -1.0 };
+        l[i % LOGITS] += sign * v;
+    }
+    for v in &mut l {
+        *v /= 64.0;
+    }
+    l
+}
+
+impl Executor for SimExecutor {
+    fn execute(&self, artifact: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let batch = batch_of(artifact);
+        anyhow::ensure!(
+            inputs.len() == 1,
+            "{artifact}: got {} inputs, expects 1",
+            inputs.len()
+        );
+        let packed = &inputs[0];
+        anyhow::ensure!(
+            packed.len() == batch * IMAGE_ELEMS,
+            "{artifact}: {} elements, expects {}",
+            packed.len(),
+            batch * IMAGE_ELEMS
+        );
+        let mut out = Vec::with_capacity(batch * LOGITS);
+        for b in 0..batch {
+            let img = &packed[b * IMAGE_ELEMS..(b + 1) * IMAGE_ELEMS];
+            out.extend_from_slice(&logits_of(img));
+        }
+        let cost = self.base_cost + self.per_image_cost * batch as u32;
+        if !cost.is_zero() {
+            std::thread::sleep(cost);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_parsed_from_artifact_name() {
+        assert_eq!(batch_of("smallcnn_exact"), 1);
+        assert_eq!(batch_of("smallcnn_exact_b8"), 8);
+        assert_eq!(batch_of("smallcnn_systolic_b4"), 4);
+        assert_eq!(batch_of("smallcnn_fft"), 1);
+    }
+
+    #[test]
+    fn deterministic_and_finite() {
+        let e = SimExecutor::instant();
+        let mut rng = Rng::new(3);
+        let img = rng.normal_vec(IMAGE_ELEMS);
+        let a = e.execute("smallcnn_exact", &[img.clone()]).unwrap();
+        let b = e.execute("smallcnn_exact", &[img]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), LOGITS);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_equals_single() {
+        let e = SimExecutor::instant();
+        let mut rng = Rng::new(4);
+        let images: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
+        let packed: Vec<f32> = images.iter().flatten().copied().collect();
+        let batched = e.execute("smallcnn_exact_b8", &[packed]).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            let single = e.execute("smallcnn_exact", &[img.clone()]).unwrap();
+            assert_eq!(&batched[i * LOGITS..(i + 1) * LOGITS], &single[..]);
+        }
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        let e = SimExecutor::instant();
+        assert!(e.execute("smallcnn_exact", &[vec![0.0; 5]]).is_err());
+        assert!(e.execute("smallcnn_exact_b8", &[vec![0.0; IMAGE_ELEMS]]).is_err());
+        assert!(e.execute("smallcnn_exact", &[]).is_err());
+    }
+}

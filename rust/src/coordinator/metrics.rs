@@ -3,10 +3,16 @@
 use std::time::{Duration, Instant};
 
 /// Accumulates per-request and per-batch observations.
+///
+/// The server keeps one `Metrics` *shard* per worker thread (plus one in
+/// the dispatcher for batch sizes), each owned `&mut` by its thread so
+/// recording never takes a lock; shards are [`Metrics::merge`]d into one
+/// aggregate when the server shuts down.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
     batch_sizes: Vec<usize>,
+    rejected: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -14,14 +20,6 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Metrics::default()
-    }
-
-    pub fn start(&mut self) {
-        self.started = Some(Instant::now());
-    }
-
-    pub fn stop(&mut self) {
-        self.finished = Some(Instant::now());
     }
 
     pub fn record_request(&mut self, latency: Duration) {
@@ -32,13 +30,30 @@ impl Metrics {
         self.batch_sizes.push(size);
     }
 
+    /// Count requests refused at admission (backpressure).
+    pub fn record_rejected(&mut self, n: usize) {
+        self.rejected += n;
+    }
+
+    /// Set the throughput window explicitly (the server stamps serving
+    /// start → shutdown on the merged aggregate).
+    pub fn set_window(&mut self, started: Instant, finished: Instant) {
+        self.started = Some(started);
+        self.finished = Some(finished);
+    }
+
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.rejected += other.rejected;
     }
 
     pub fn count(&self) -> usize {
         self.latencies_us.len()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
     }
 
     /// Latency percentile in microseconds (nearest-rank).
@@ -72,7 +87,7 @@ impl Metrics {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} reqs, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, {:.1} req/s",
             self.count(),
             self.percentile_us(50.0) as f64 / 1e3,
@@ -80,7 +95,11 @@ impl Metrics {
             self.percentile_us(99.0) as f64 / 1e3,
             self.mean_batch(),
             self.throughput()
-        )
+        );
+        if self.rejected > 0 {
+            s.push_str(&format!(", {} rejected", self.rejected));
+        }
+        s
     }
 }
 
@@ -119,23 +138,27 @@ mod tests {
     fn merge_combines() {
         let mut a = Metrics::new();
         a.record_request(Duration::from_micros(10));
+        a.record_rejected(1);
         let mut b = Metrics::new();
         b.record_request(Duration::from_micros(20));
         b.record_batch(4);
+        b.record_rejected(2);
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.mean_batch(), 4.0);
+        assert_eq!(a.rejected(), 3);
+        assert!(a.summary().contains("3 rejected"));
     }
 
     #[test]
-    fn throughput_counts_window() {
+    fn set_window_drives_throughput() {
         let mut m = Metrics::new();
-        m.start();
+        let t0 = Instant::now();
         for _ in 0..100 {
             m.record_request(Duration::from_micros(5));
         }
         std::thread::sleep(Duration::from_millis(20));
-        m.stop();
+        m.set_window(t0, Instant::now());
         let t = m.throughput();
         assert!(t > 0.0 && t < 100.0 / 0.02, "throughput {t}");
     }

@@ -8,9 +8,18 @@
 //!   largest compiled batch variant that fits (mirroring eq. 22's C′
 //!   channel-packing decision on the optical machine: batching amortizes
 //!   fixed per-execution cost over more useful work).
-//! * [`server`] — worker pool (std threads; the offline environment has
-//!   no tokio) executing batches on the shared engine.
-//! * [`metrics`] — latency/throughput accounting (p50/p95/p99).
+//! * [`server`] — the sharded serving path (std threads; the offline
+//!   environment has no tokio): a bounded ingress with a `max_pending`
+//!   admission knob, a dispatcher that hands planned batches to
+//!   per-worker SPSC lanes (least-loaded), per-worker metrics shards
+//!   merged at shutdown, and a condvar drain barrier so shutdown (or
+//!   drop) answers every admitted request before joining threads.
+//! * [`exec`] — execution backends behind the [`exec::Executor`] trait:
+//!   the PJRT engine, or the deterministic [`exec::SimExecutor`] so the
+//!   serving path runs (tests, `cargo bench -- serve`) without
+//!   artifacts.
+//! * [`metrics`] — latency/throughput accounting (p50/p95/p99, batch
+//!   histogram, rejected count), sharded per worker.
 //! * [`energy`] — per-request energy co-simulation: every served batch is
 //!   also priced on the cycle-accurate systolic and optical-4F machines,
 //!   so the server reports joules-per-inference alongside latency.
@@ -20,6 +29,7 @@
 
 pub mod batcher;
 pub mod energy;
+pub mod exec;
 pub mod metrics;
 pub mod server;
 

@@ -24,14 +24,20 @@
 //!   (machine × network × node) grid runner [`simulator::sweep::sweep`].
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
 //!   (behind the `pjrt` cargo feature; a stub engine otherwise).
-//! * [`coordinator`] — request batching/scheduling/serving on top of
-//!   [`runtime`], with per-request energy co-simulation.
+//! * [`coordinator`] — the sharded serving path on top of [`runtime`]:
+//!   bounded ingress with a `max_pending` admission knob, a dispatcher
+//!   feeding per-worker [`util::spsc`] batch lanes (least-loaded),
+//!   per-worker metrics shards merged at shutdown, a condvar drain
+//!   barrier for the lifecycle, per-request energy co-simulation, and
+//!   an executor abstraction ([`coordinator::exec`]) so serving runs
+//!   against PJRT or a deterministic in-process backend.
 //! * [`report`] — table/figure emitters regenerating every table and
 //!   figure in the paper's evaluation section, fanned out over
 //!   [`util::pool`] workers.
 //! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks plus
-//!   the [`util::pool`] work-stealing thread pool (the build environment
-//!   is offline; only `xla` + `anyhow` are available).
+//!   the [`util::pool`] work-stealing thread pool and the [`util::spsc`]
+//!   bounded SPSC channel (the build environment is offline; only `xla`
+//!   + `anyhow` are available).
 
 pub mod analytic;
 pub mod coordinator;

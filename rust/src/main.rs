@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use aimc::coordinator::exec::SimExecutor;
 use aimc::coordinator::server::{Server, ServerConfig};
 use aimc::coordinator::{energy as co_energy, smallcnn_network, ConvPath, IMAGE_ELEMS};
 use aimc::networks::{by_name, zoo, DEFAULT_INPUT};
@@ -42,6 +43,15 @@ fn spec() -> Spec {
     )
     .opt("requests", "serve: number of requests", Some("64"))
     .opt("workers", "serve: worker threads", Some("2"))
+    .opt(
+        "max-pending",
+        "serve: admission bound on in-flight requests (reject beyond)",
+        Some("1024"),
+    )
+    .flag(
+        "synthetic",
+        "serve: deterministic in-process backend (no artifacts/PJRT needed)",
+    )
     .flag("csv", "emit CSV instead of aligned text")
 }
 
@@ -259,19 +269,30 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --path (exact | systolic | fft)"))?;
     let n_req = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
-    println!("starting server: path {path:?}, {workers} workers, {n_req} requests");
+    let max_pending = args.get_usize("max-pending", 1024)?;
+    let synthetic = args.flag("synthetic");
+    println!(
+        "starting server: path {path:?}, {workers} workers, {n_req} requests, \
+         max_pending {max_pending}{}",
+        if synthetic { ", synthetic backend" } else { "" }
+    );
 
-    let server = Server::start(ServerConfig {
+    let cfg = ServerConfig {
         path,
         workers,
+        max_pending,
         ..Default::default()
-    })?;
+    };
+    let server = if synthetic {
+        Server::start_sim(cfg, SimExecutor::default())?
+    } else {
+        Server::start(cfg)?
+    };
     // Warm up compilation before timing.
     let _ = server.infer_blocking(vec![0.0; IMAGE_ELEMS])?;
 
     let mut rng = Rng::new(7);
     let images: Vec<Vec<f32>> = (0..n_req).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
-    server.metrics.lock().unwrap().start();
     let rxs: Vec<_> = images.into_iter().map(|im| server.infer(im)).collect();
     let mut ok = 0;
     for rx in rxs {
@@ -279,7 +300,6 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
             ok += 1;
         }
     }
-    server.metrics.lock().unwrap().stop();
     let metrics = server.shutdown();
     println!("served {ok}/{n_req} OK — {}", metrics.summary());
 

@@ -11,10 +11,13 @@
 //! * [`stats`] — medians/means over layer populations.
 //! * [`pool`] — scoped work-stealing thread pool (`par_map` /
 //!   `par_for_each`) driving the parallel sweep engine.
+//! * [`spsc`] — bounded single-producer/single-consumer channel with a
+//!   lock-free fast path (the coordinator's per-worker batch lanes).
 
 pub mod cli;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod spsc;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,409 @@
+//! Bounded single-producer / single-consumer channel with a lock-free
+//! fast path.
+//!
+//! The serving coordinator's per-worker batch lanes need exactly this
+//! shape: one dispatcher thread pushing, one worker thread popping,
+//! with blocking only when a side would otherwise spin. The ring buffer
+//! is wait-free on the hot path (one atomic load + one atomic store per
+//! side, no CAS loop); a `Mutex`/`Condvar` pair exists purely so a side
+//! can *sleep* — it is touched only when the ring is empty (consumer)
+//! or full (producer), never per message under load.
+//!
+//! SPSC discipline is enforced statically: [`Producer`] and
+//! [`Consumer`] are not `Clone`, and every transfer method takes
+//! `&mut self`.
+//!
+//! All atomics use `SeqCst`. The protocol relies on the total order to
+//! close the classic lost-wakeup races (publish-then-check-sleepers vs
+//! check-empty-then-register-sleeper); the cost is irrelevant next to a
+//! batch execution.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Error from [`Producer::try_send`]; the value is handed back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    Full(T),
+    Disconnected(T),
+}
+
+/// Error from [`Producer::send_timeout`]; the value is handed back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendTimeoutError<T> {
+    Timeout(T),
+    Disconnected(T),
+}
+
+/// Error from [`Consumer::try_recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+/// Error from [`Consumer::recv_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+/// Error from [`Consumer::recv`]: producer gone and the ring is empty.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+struct Ring<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// Next slot the consumer reads. Monotonic; slot index is `% cap`.
+    head: AtomicUsize,
+    /// Next slot the producer writes. Monotonic.
+    tail: AtomicUsize,
+    producer_alive: AtomicBool,
+    consumer_alive: AtomicBool,
+    /// Threads currently parked (0..=2); the publishing side skips the
+    /// mutex entirely while this is 0.
+    sleepers: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+// Values move from the producer thread to the consumer thread; head/tail
+// hand out exclusive access to disjoint slots.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Ring<T> {
+    fn wake(&self) {
+        if self.sleepers.load(SeqCst) > 0 {
+            // Taking the lock orders this notify after the sleeper's
+            // registered-but-not-yet-waiting window closes.
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.tail.load(SeqCst).wrapping_sub(self.head.load(SeqCst))
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // Both handles are gone; drop whatever is still buffered.
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        let cap = self.buf.len();
+        let mut i = head;
+        while i != tail {
+            unsafe { self.buf[i % cap].get_mut().assume_init_drop() };
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+/// Sending half. Dropping it disconnects: the consumer drains what is
+/// buffered, then sees `Disconnected`.
+pub struct Producer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Receiving half. Dropping it disconnects: the producer's next send
+/// reports `Disconnected` (already-buffered values are dropped with the
+/// ring).
+pub struct Consumer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Create a bounded SPSC channel holding at most `cap` values.
+pub fn channel<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    assert!(cap >= 1, "spsc capacity must be at least 1");
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> = (0..cap)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect();
+    let ring = Arc::new(Ring {
+        buf,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        producer_alive: AtomicBool::new(true),
+        consumer_alive: AtomicBool::new(true),
+        sleepers: AtomicUsize::new(0),
+        lock: Mutex::new(()),
+        cv: Condvar::new(),
+    });
+    (Producer { ring: ring.clone() }, Consumer { ring })
+}
+
+impl<T> Producer<T> {
+    /// Values currently buffered (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Push without blocking.
+    pub fn try_send(&mut self, v: T) -> Result<(), TrySendError<T>> {
+        let ring = &*self.ring;
+        if !ring.consumer_alive.load(SeqCst) {
+            return Err(TrySendError::Disconnected(v));
+        }
+        let tail = ring.tail.load(SeqCst);
+        let head = ring.head.load(SeqCst);
+        if tail.wrapping_sub(head) == ring.buf.len() {
+            return Err(TrySendError::Full(v));
+        }
+        unsafe { (*ring.buf[tail % ring.buf.len()].get()).write(v) };
+        ring.tail.store(tail.wrapping_add(1), SeqCst);
+        ring.wake();
+        Ok(())
+    }
+
+    /// Push, parking up to `timeout` for the consumer to free a slot.
+    pub fn send_timeout(&mut self, v: T, timeout: Duration) -> Result<(), SendTimeoutError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut v = v;
+        loop {
+            match self.try_send(v) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(x)) => {
+                    return Err(SendTimeoutError::Disconnected(x))
+                }
+                Err(TrySendError::Full(x)) => v = x,
+            }
+            let ring = &*self.ring;
+            ring.sleepers.fetch_add(1, SeqCst);
+            {
+                let guard = ring.lock.lock().unwrap();
+                // Re-check under the lock: a pop between the failed
+                // try_send and registering as a sleeper must not leave
+                // us parked with free space.
+                let full = ring.len() == ring.buf.len();
+                let alive = ring.consumer_alive.load(SeqCst);
+                if full && alive {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        ring.sleepers.fetch_sub(1, SeqCst);
+                        return Err(SendTimeoutError::Timeout(v));
+                    }
+                    let _unused = ring.cv.wait_timeout(guard, deadline - now).unwrap();
+                }
+            }
+            ring.sleepers.fetch_sub(1, SeqCst);
+            if Instant::now() >= deadline {
+                // One last attempt before reporting the timeout.
+                return match self.try_send(v) {
+                    Ok(()) => Ok(()),
+                    Err(TrySendError::Disconnected(x)) => {
+                        Err(SendTimeoutError::Disconnected(x))
+                    }
+                    Err(TrySendError::Full(x)) => Err(SendTimeoutError::Timeout(x)),
+                };
+            }
+        }
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.ring.producer_alive.store(false, SeqCst);
+        self.ring.wake();
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Values currently buffered (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop without blocking.
+    pub fn try_recv(&mut self) -> Result<T, TryRecvError> {
+        let ring = &*self.ring;
+        loop {
+            let head = ring.head.load(SeqCst);
+            let tail = ring.tail.load(SeqCst);
+            if head != tail {
+                let v = unsafe { (*ring.buf[head % ring.buf.len()].get()).assume_init_read() };
+                ring.head.store(head.wrapping_add(1), SeqCst);
+                ring.wake();
+                return Ok(v);
+            }
+            if ring.producer_alive.load(SeqCst) {
+                return Err(TryRecvError::Empty);
+            }
+            // Producer is gone; it may have published right before
+            // dying. Its tail store precedes the alive=false store, so
+            // one re-read of tail decides.
+            if ring.tail.load(SeqCst) == head {
+                return Err(TryRecvError::Disconnected);
+            }
+        }
+    }
+
+    /// Pop, parking up to `timeout` for the producer to publish.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.try_recv() {
+                Ok(v) => return Ok(v),
+                Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+                Err(TryRecvError::Empty) => {}
+            }
+            let ring = &*self.ring;
+            ring.sleepers.fetch_add(1, SeqCst);
+            {
+                let guard = ring.lock.lock().unwrap();
+                // Re-check under the lock (mirror of send_timeout).
+                let empty = ring.len() == 0;
+                let alive = ring.producer_alive.load(SeqCst);
+                if empty && alive {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        ring.sleepers.fetch_sub(1, SeqCst);
+                        return Err(RecvTimeoutError::Timeout);
+                    }
+                    let _unused = ring.cv.wait_timeout(guard, deadline - now).unwrap();
+                }
+            }
+            ring.sleepers.fetch_sub(1, SeqCst);
+            if Instant::now() >= deadline {
+                return match self.try_recv() {
+                    Ok(v) => Ok(v),
+                    Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+                    Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+                };
+            }
+        }
+    }
+
+    /// Pop, parking until a value arrives or the producer disconnects
+    /// (and the ring has drained).
+    pub fn recv(&mut self) -> Result<T, RecvError> {
+        loop {
+            match self.recv_timeout(Duration::from_secs(1)) {
+                Ok(v) => return Ok(v),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return Err(RecvError),
+            }
+        }
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.ring.consumer_alive.store(false, SeqCst);
+        self.ring.wake();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (mut tx, mut rx) = channel::<u32>(4);
+        for i in 0..4 {
+            tx.try_send(i).unwrap();
+        }
+        assert_eq!(tx.try_send(99), Err(TrySendError::Full(99)));
+        for i in 0..4 {
+            assert_eq!(rx.try_recv(), Ok(i));
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+
+    #[test]
+    fn threaded_transfer_through_tiny_ring() {
+        let (mut tx, mut rx) = channel::<usize>(2);
+        let n = 10_000;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                let mut v = i;
+                loop {
+                    match tx.send_timeout(v, Duration::from_secs(5)) {
+                        Ok(()) => break,
+                        Err(SendTimeoutError::Timeout(x)) => v = x,
+                        Err(SendTimeoutError::Disconnected(_)) => panic!("consumer died"),
+                    }
+                }
+            }
+        });
+        for i in 0..n {
+            assert_eq!(rx.recv(), Ok(i), "order must be FIFO");
+        }
+        producer.join().unwrap();
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn producer_drop_drains_then_disconnects() {
+        let (mut tx, mut rx) = channel::<u8>(4);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.try_recv(), Ok(2));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn consumer_drop_rejects_sends() {
+        let (mut tx, rx) = channel::<u8>(4);
+        drop(rx);
+        assert_eq!(tx.try_send(7), Err(TrySendError::Disconnected(7)));
+        assert!(matches!(
+            tx.send_timeout(8, Duration::from_millis(1)),
+            Err(SendTimeoutError::Disconnected(8))
+        ));
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (_tx, mut rx) = channel::<u8>(1);
+        let t0 = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(20)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn buffered_values_dropped_with_ring() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Counted;
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, SeqCst);
+            }
+        }
+        let (mut tx, rx) = channel::<Counted>(4);
+        tx.try_send(Counted).unwrap();
+        tx.try_send(Counted).unwrap();
+        tx.try_send(Counted).unwrap();
+        drop(rx);
+        drop(tx);
+        assert_eq!(DROPS.load(SeqCst), 3, "ring drop must release values");
+    }
+
+    #[test]
+    fn wakes_parked_consumer() {
+        let (mut tx, mut rx) = channel::<u64>(1);
+        let h = std::thread::spawn(move || rx.recv_timeout(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(30)); // let it park
+        tx.try_send(42).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(42));
+    }
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification: build + full test suite, exactly the command
 # ROADMAP.md pins. Run from anywhere; add --bench to also record the
-# sweep-engine perf numbers to rust/BENCH_sweep.json.
+# sweep-engine and serving-path perf numbers to rust/BENCH_sweep.json
+# and rust/BENCH_serve.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -11,8 +12,9 @@ cargo test -q
 
 if [ "${1:-}" = "--bench" ]; then
     cargo bench --bench paper_benches -- sweep
+    cargo bench --bench paper_benches -- serve
     echo "perf record:"
-    cat BENCH_sweep.json
+    cat BENCH_sweep.json BENCH_serve.json
 fi
 
 echo "tier-1 verify OK"
