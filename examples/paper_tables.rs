@@ -1,5 +1,7 @@
 //! Regenerate every table and figure of the paper in one run, writing
-//! aligned text to stdout and CSVs to `results/`.
+//! aligned text to stdout and CSV + JSON to `results/` — every artifact
+//! evaluated through ONE shared pool + sweep cache (the `aimc all`
+//! scenario list), so repeated layer shapes simulate once.
 //!
 //! ```sh
 //! cargo run --release --example paper_tables
@@ -8,13 +10,16 @@
 use std::fs;
 use std::path::Path;
 
-use aimc::report;
-use aimc::util::table::Table;
+use aimc::report::{self, Dataset, EvalCtx};
+use aimc::simulator::SweepCache;
+use aimc::util::pool::Pool;
 
-fn save(dir: &Path, name: &str, t: &Table) {
-    println!("{}", t.render());
-    fs::write(dir.join(format!("{name}.csv")), t.to_csv())
+fn save(dir: &Path, name: &str, ds: &Dataset) {
+    println!("{}", ds.render());
+    fs::write(dir.join(format!("{name}.csv")), ds.to_csv())
         .unwrap_or_else(|e| eprintln!("warn: writing {name}.csv: {e}"));
+    fs::write(dir.join(format!("{name}.json")), ds.to_json().pretty())
+        .unwrap_or_else(|e| eprintln!("warn: writing {name}.json: {e}"));
 }
 
 fn main() {
@@ -22,16 +27,30 @@ fn main() {
     fs::create_dir_all(out).expect("mkdir results/");
     let input = 1000;
 
-    save(out, "table1", &report::table1(input));
-    save(out, "table2", &report::table2(input));
-    save(out, "table3", &report::table3(input));
-    save(out, "table4", &report::table4());
-    save(out, "fig6", &report::fig6());
-    save(out, "fig7", &report::fig7());
-    save(out, "fig8_yolov3", &report::fig8(None, input));
-    save(out, "fig9_yolov3", &report::fig9(None, input));
-    save(out, "fig10_vgg19", &report::fig10(Some("VGG19"), input));
-    save(out, "fig10_yolov3", &report::fig10(Some("YOLOv3"), input));
+    let pool = Pool::auto();
+    let cache = SweepCache::new();
+    let ctx = EvalCtx {
+        pool: &pool,
+        cache: &cache,
+    };
 
-    println!("CSV copies written to {}/", out.display());
+    let names = [
+        "table1", "table2", "table3", "table4", "fig6", "fig7",
+        "fig8_yolov3", "fig9_yolov3", "fig10_vgg19", "fig10_yolov3",
+    ];
+    let scenarios = report::all_scenarios(None, input);
+    assert_eq!(
+        names.len(),
+        scenarios.len(),
+        "file-name list out of sync with report::all_scenarios"
+    );
+    for (name, scenario) in names.iter().copied().zip(scenarios) {
+        save(out, name, &scenario.eval(&ctx));
+    }
+
+    println!(
+        "CSV + JSON copies written to {}/ (sweep cache: {})",
+        out.display(),
+        cache.stats()
+    );
 }

@@ -98,23 +98,50 @@ fn bench_sweep_engine(input: usize) {
     // Full report regeneration (Fig. 6 + Tables I–III + Figs. 8–10 +
     // crossval) through the new engine.
     let figures = time_it(3, || {
-        let _ = report::fig6();
-        let _ = report::table1(input);
-        let _ = report::table2(input);
-        let _ = report::table3(input);
-        let _ = report::fig8(None, input);
-        let _ = report::fig9(None, input);
-        let _ = report::fig10(Some("VGG19"), input);
-        let _ = report::fig10(Some("YOLOv3"), input);
-        let _ = report::crossval(None, input);
+        let _ = report::fig6().table();
+        let _ = report::table1(input).table();
+        let _ = report::table2(input).table();
+        let _ = report::table3(input).table();
+        let _ = report::fig8(None, input).table();
+        let _ = report::fig9(None, input).table();
+        let _ = report::fig10(Some("VGG19"), input).table();
+        let _ = report::fig10(Some("YOLOv3"), input).table();
+        let _ = report::crossval(None, input).table();
     });
     report_time("sweep: full report regen (engine)", &figures, None);
+
+    // Persistent-cache shootout over the same grid: "cold" is a fresh
+    // snapshot (load misses → simulate everything → save); "warm" loads
+    // the snapshot the cold pass left behind and replays — the
+    // `aimc sweep --cache-dir` repeat-invocation path.
+    let snapshot = std::env::temp_dir().join(format!(
+        "aimc-bench-sweepcache-{}.txt",
+        std::process::id()
+    ));
+    let cold = time_it(3, || {
+        let _ = std::fs::remove_file(&snapshot);
+        let cache = SweepCache::load(&snapshot); // always empty: cold start
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+        cache.save(&snapshot).expect("snapshot save");
+    });
+    report_time("sweep: persistent cache cold", &cold, None);
+    let mut warm_reuse = 0.0;
+    let warm = time_it(3, || {
+        let cache = SweepCache::load(&snapshot); // populated by the cold pass
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+        let total = (cache.hits() + cache.misses()).max(1);
+        warm_reuse = 100.0 * cache.hits() as f64 / total as f64;
+    });
+    report_time("sweep: persistent cache warm", &warm, None);
+    let _ = std::fs::remove_file(&snapshot);
 
     let serial_ms = median_us(&serial) / 1e3;
     let engine_1t_ms = median_us(&engine_1t) / 1e3;
     let engine_ms = median_us(&engine) / 1e3;
+    let cold_ms = median_us(&cold) / 1e3;
+    let warm_ms = median_us(&warm) / 1e3;
     let json = format!(
-        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"persistent_cache\": {{ \"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.3}, \"warm_speedup\": {:.2}, \"warm_reuse_pct\": {warm_reuse:.1} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
         machines.len(),
         nets.len(),
         nodes.len(),
@@ -122,6 +149,7 @@ fn bench_sweep_engine(input: usize) {
         serial_ms / engine_ms,
         shared_cache.hits(),
         shared_cache.misses(),
+        cold_ms / warm_ms,
         median_us(&figures) / 1e3,
     );
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());
@@ -230,61 +258,61 @@ fn main() {
 
     // ---- Tables I–IV ------------------------------------------------------
     if run("table1") {
-        println!("{}", report::table1(input).render());
+        println!("{}", report::table1(input).table().render());
         report_time("table1 (zoo stats ×8 nets)", &time_it(20, || {
-            let _ = report::table1(input);
+            let _ = report::table1(input).table();
         }), None);
     }
     if run("table2") {
-        println!("{}", report::table2(input).render());
+        println!("{}", report::table2(input).table().render());
         report_time("table2 (matmul dims)", &time_it(20, || {
-            let _ = report::table2(input);
+            let _ = report::table2(input).table();
         }), None);
     }
     if run("table3") {
-        println!("{}", report::table3(input).render());
+        println!("{}", report::table3(input).table().render());
         report_time("table3 (4F dims)", &time_it(20, || {
-            let _ = report::table3(input);
+            let _ = report::table3(input).table();
         }), None);
     }
     if run("table4") {
-        println!("{}", report::table4().render());
+        println!("{}", report::table4().table().render());
         report_time("table4 (energy constants)", &time_it(100, || {
-            let _ = report::table4();
+            let _ = report::table4().table();
         }), None);
     }
 
     // ---- Figures 6–10 -------------------------------------------------------
     if run("fig6") {
-        println!("{}", report::fig6().render());
+        println!("{}", report::fig6().table().render());
         report_time("fig6 (4 models × 13 nodes)", &time_it(20, || {
-            let _ = report::fig6();
+            let _ = report::fig6().table();
         }), None);
     }
     if run("fig7") {
-        println!("{}", report::fig7().render());
+        println!("{}", report::fig7().table().render());
         report_time("fig7 (breakdown @32nm)", &time_it(50, || {
-            let _ = report::fig7();
+            let _ = report::fig7().table();
         }), None);
     }
     if run("fig8") {
-        println!("{}", report::fig8(None, input).render());
+        println!("{}", report::fig8(None, input).table().render());
         report_time("fig8 (systolic sim ×13 nodes)", &time_it(10, || {
-            let _ = report::fig8(None, input);
+            let _ = report::fig8(None, input).table();
         }), None);
     }
     if run("fig9") {
-        println!("{}", report::fig9(None, input).render());
+        println!("{}", report::fig9(None, input).table().render());
         report_time("fig9 (optical sim ×13 nodes)", &time_it(10, || {
-            let _ = report::fig9(None, input);
+            let _ = report::fig9(None, input).table();
         }), None);
     }
     if run("fig10") {
-        println!("{}", report::fig10(Some("VGG19"), input).render());
-        println!("{}", report::fig10(Some("YOLOv3"), input).render());
+        println!("{}", report::fig10(Some("VGG19"), input).table().render());
+        println!("{}", report::fig10(Some("YOLOv3"), input).table().render());
         report_time("fig10 (2 nets × 13 nodes)", &time_it(10, || {
-            let _ = report::fig10(Some("VGG19"), input);
-            let _ = report::fig10(Some("YOLOv3"), input);
+            let _ = report::fig10(Some("VGG19"), input).table();
+            let _ = report::fig10(Some("YOLOv3"), input).table();
         }), None);
     }
 

@@ -20,7 +20,8 @@
 //! * [`simulator`] — cycle-accurate machines for all four processor
 //!   classes (systolic, ReRAM, planar photonic, optical 4F), unified
 //!   behind the [`simulator::Machine`] trait, with layer-dedup
-//!   memoization ([`simulator::SweepCache`]) and the parallel
+//!   memoization ([`simulator::SweepCache`], persistable to disk keyed
+//!   by (config fingerprint, node, layer)) and the parallel
 //!   (machine × network × node) grid runner [`simulator::sweep::sweep`].
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
 //!   (behind the `pjrt` cargo feature; a stub engine otherwise).
@@ -31,13 +32,18 @@
 //!   barrier for the lifecycle, per-request energy co-simulation, and
 //!   an executor abstraction ([`coordinator::exec`]) so serving runs
 //!   against PJRT or a deterministic in-process backend.
-//! * [`report`] — table/figure emitters regenerating every table and
-//!   figure in the paper's evaluation section, fanned out over
-//!   [`util::pool`] workers.
+//! * [`report`] — the Scenario → Dataset → sink pipeline: every table,
+//!   figure and sweep of the paper's evaluation section is a declarative
+//!   [`report::Scenario`] (machines × networks × nodes × derived
+//!   columns) evaluated by one engine through a shared [`util::pool`]
+//!   `Pool` + [`simulator::SweepCache`] into a typed
+//!   [`report::Dataset`], rendered by pluggable text / CSV / JSON
+//!   sinks.
 //! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks plus
-//!   the [`util::pool`] work-stealing thread pool and the [`util::spsc`]
-//!   bounded SPSC channel (the build environment is offline; only `xla`
-//!   + `anyhow` are available).
+//!   the [`util::pool`] work-stealing thread pool, the [`util::spsc`]
+//!   bounded SPSC channel, and the [`util::json`] dependency-free JSON
+//!   tree behind the report layer's `--format json` sink (the build
+//!   environment is offline; only `xla` + `anyhow` are available).
 
 pub mod analytic;
 pub mod coordinator;

@@ -1,24 +1,31 @@
 //! `aimc` — CLI for the analog in-memory compute reproduction.
 //!
-//! Subcommands regenerate every table/figure of the paper, run the
-//! cycle-accurate simulators on arbitrary (network, machine, node)
-//! combinations, verify the AOT artifacts against their goldens, and
-//! serve inference through the PJRT coordinator.
+//! Every report subcommand (tables, figures, crossval, zoo, sweep, all)
+//! is a declarative [`aimc::report::Scenario`] evaluated through ONE
+//! shared pool + sweep cache per invocation, then rendered by the sink
+//! picked with `--format text|csv|json` (`--csv` is a legacy alias).
+//! With `--cache-dir` the sweep cache additionally persists across
+//! invocations — keyed by (machine-config fingerprint, node, layer), so
+//! a repeated run replays instead of re-simulating. The remaining
+//! subcommands run the cycle simulators directly (`simulate`), verify
+//! the AOT artifacts against their goldens (`verify`), and serve
+//! inference through the PJRT coordinator (`serve`).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use aimc::coordinator::exec::SimExecutor;
 use aimc::coordinator::server::{Server, ServerConfig};
 use aimc::coordinator::{energy as co_energy, smallcnn_network, ConvPath, IMAGE_ELEMS};
-use aimc::networks::{by_name, zoo, DEFAULT_INPUT};
-use aimc::report;
+use aimc::networks::by_name;
+use aimc::networks::DEFAULT_INPUT;
+use aimc::report::{self, Dataset, EvalCtx, OutputFormat};
 use aimc::runtime::Engine;
-use aimc::simulator::{machine, sweep, Machine, SweepCache};
-use aimc::technode::NODES;
+use aimc::simulator::{machine, SweepCache};
 use aimc::util::cli::Spec;
+use aimc::util::json::Json;
 use aimc::util::pool::Pool;
 use aimc::util::rng::Rng;
-use aimc::util::table::Table;
 
 fn spec() -> Spec {
     Spec::new(
@@ -38,7 +45,13 @@ fn spec() -> Spec {
     .opt("path", "serve datapath: exact | systolic | fft", Some("exact"))
     .opt(
         "threads",
-        "worker threads for sweeps (default: AIMC_THREADS or all cores)",
+        "worker threads for scenario evaluation (default: AIMC_THREADS or all cores)",
+        None,
+    )
+    .opt("format", "report output: text | csv | json", Some("text"))
+    .opt(
+        "cache-dir",
+        "persist the sweep cache in this directory (repeat runs replay it)",
         None,
     )
     .opt("requests", "serve: number of requests", Some("64"))
@@ -52,14 +65,46 @@ fn spec() -> Spec {
         "synthetic",
         "serve: deterministic in-process backend (no artifacts/PJRT needed)",
     )
-    .flag("csv", "emit CSV instead of aligned text")
+    .flag("csv", "emit CSV instead of aligned text (alias for --format csv)")
 }
 
-fn emit(t: &Table, csv: bool) {
-    if csv {
-        print!("{}", t.to_csv());
-    } else {
-        println!("{}", t.render());
+/// Where a cache directory keeps its snapshot (the version is in the
+/// file's own header; the name just keeps it greppable).
+fn cache_file(dir: &Path) -> PathBuf {
+    dir.join("sweep-cache.v1.txt")
+}
+
+/// Output sink: text and CSV stream per dataset exactly as the
+/// pre-scenario CLI did; JSON buffers every dataset of the invocation
+/// and emits ONE top-level array at the end, so `aimc all --format json`
+/// is a single valid document.
+struct Sink {
+    format: OutputFormat,
+    json: Vec<Json>,
+}
+
+impl Sink {
+    fn new(format: OutputFormat) -> Sink {
+        Sink {
+            format,
+            json: Vec::new(),
+        }
+    }
+
+    fn emit(&mut self, ds: &Dataset) {
+        match self.format {
+            OutputFormat::Text => println!("{}", ds.render()),
+            OutputFormat::Csv => print!("{}", ds.to_csv()),
+            OutputFormat::Json => self.json.push(ds.to_json()),
+        }
+    }
+
+    fn finish(self) {
+        // Nothing emitted (e.g. `aimc serve --format json`) prints no
+        // empty document.
+        if self.format == OutputFormat::Json && !self.json.is_empty() {
+            println!("{}", Json::Arr(self.json).pretty());
+        }
     }
 }
 
@@ -77,71 +122,108 @@ fn run() -> anyhow::Result<()> {
         println!("{}", s.usage());
         return Ok(());
     }
-    let csv = args.flag("csv");
+    let format_str = args.get_or("format", "text");
+    let mut format = OutputFormat::parse(format_str)
+        .ok_or_else(|| anyhow::anyhow!("bad --format {format_str:?} (text | csv | json)"))?;
+    if format == OutputFormat::Text && args.flag("csv") {
+        format = OutputFormat::Csv;
+    }
     let input = args.get_usize("input", DEFAULT_INPUT)?;
     let net = args.get("net");
 
-    for cmd in &args.positional {
-        match cmd.as_str() {
-            "table1" => emit(&report::table1(input), csv),
-            "table2" => emit(&report::table2(input), csv),
-            "table3" => emit(&report::table3(input), csv),
-            "table4" => emit(&report::table4(), csv),
-            "fig6" => emit(&report::fig6(), csv),
-            "fig7" => emit(&report::fig7(), csv),
-            "fig8" => emit(&report::fig8(net, input), csv),
-            "fig9" => emit(&report::fig9(net, input), csv),
-            "fig10" => {
-                // The paper shows VGG19 (left) and YOLOv3 (right).
-                match net {
-                    Some(n) => emit(&report::fig10(Some(n), input), csv),
-                    None => {
-                        emit(&report::fig10(Some("VGG19"), input), csv);
-                        emit(&report::fig10(Some("YOLOv3"), input), csv);
+    // One pool + one sweep cache for everything this invocation runs:
+    // `aimc all` is a scenario list over a single warm cache, not ten
+    // cold starts.
+    let pool = match args.get("threads") {
+        Some(_) => Pool::new(args.get_usize("threads", 0)?),
+        None => Pool::auto(),
+    };
+    let cache_dir = args.get("cache-dir").map(PathBuf::from);
+    let cache = match &cache_dir {
+        Some(dir) => SweepCache::load(&cache_file(dir)),
+        None => SweepCache::new(),
+    };
+    let ctx = EvalCtx {
+        pool: &pool,
+        cache: &cache,
+    };
+    let mut sink = Sink::new(format);
+
+    // Run the command list, but flush the sink and persist the cache
+    // even when a later command fails: work a successful `sweep` already
+    // did (buffered JSON, simulated grid points) must not be discarded
+    // because a trailing `verify` errored or a subcommand was mistyped.
+    let commands = |sink: &mut Sink| -> anyhow::Result<()> {
+        for cmd in &args.positional {
+            match cmd.as_str() {
+                "table1" => sink.emit(&report::table1(input).eval(&ctx)),
+                "table2" => sink.emit(&report::table2(input).eval(&ctx)),
+                "table3" => sink.emit(&report::table3(input).eval(&ctx)),
+                "table4" => sink.emit(&report::table4().eval(&ctx)),
+                "fig6" => sink.emit(&report::fig6().eval(&ctx)),
+                "fig7" => sink.emit(&report::fig7().eval(&ctx)),
+                "fig8" => sink.emit(&report::fig8(net, input).eval(&ctx)),
+                "fig9" => sink.emit(&report::fig9(net, input).eval(&ctx)),
+                "fig10" => {
+                    // The paper shows VGG19 (left) and YOLOv3 (right).
+                    match net {
+                        Some(n) => sink.emit(&report::fig10(Some(n), input).eval(&ctx)),
+                        None => {
+                            sink.emit(&report::fig10(Some("VGG19"), input).eval(&ctx));
+                            sink.emit(&report::fig10(Some("YOLOv3"), input).eval(&ctx));
+                        }
                     }
                 }
+                "all" => {
+                    for sc in report::all_scenarios(net, input) {
+                        sink.emit(&sc.eval(&ctx));
+                    }
+                }
+                "crossval" => sink.emit(&report::crossval(net, input).eval(&ctx)),
+                "zoo" => sink.emit(&report::zoo_scenario(input).eval(&ctx)),
+                "simulate" => cmd_simulate(&args, input, &pool, &cache)?,
+                "sweep" => {
+                    let sc = report::sweep_scenario(input);
+                    let t0 = Instant::now();
+                    let ds = sc.eval(&ctx);
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    sink.emit(&ds);
+                    eprintln!(
+                        "swept {} grid points in {elapsed:.2} s on {} threads (cache: {})",
+                        sc.grid_points(),
+                        pool.threads(),
+                        cache.stats()
+                    );
+                }
+                "verify" => cmd_verify()?,
+                "serve" => cmd_serve(&args)?,
+                other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
             }
-            "all" => {
-                emit(&report::table1(input), csv);
-                emit(&report::table2(input), csv);
-                emit(&report::table3(input), csv);
-                emit(&report::table4(), csv);
-                emit(&report::fig6(), csv);
-                emit(&report::fig7(), csv);
-                emit(&report::fig8(net, input), csv);
-                emit(&report::fig9(net, input), csv);
-                emit(&report::fig10(Some("VGG19"), input), csv);
-                emit(&report::fig10(Some("YOLOv3"), input), csv);
-            }
-            "crossval" => emit(&report::crossval(net, input), csv),
-            "zoo" => cmd_zoo(input, csv),
-            "simulate" => cmd_simulate(&args, input)?,
-            "sweep" => cmd_sweep(&args, input, csv)?,
-            "verify" => cmd_verify()?,
-            "serve" => cmd_serve(&args)?,
-            other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
         }
-    }
+        Ok(())
+    };
+
+    let result = commands(&mut sink);
+    sink.finish();
+    let saved = match &cache_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir).and_then(|()| cache.save(&cache_file(dir)))
+        }
+        None => Ok(()),
+    };
+    // A command failure outranks a cache-save failure in the report,
+    // but both paths run.
+    result?;
+    saved?;
     Ok(())
 }
 
-fn cmd_zoo(input: usize, csv: bool) {
-    let mut t = Table::new(
-        &format!("network zoo @ {input} px"),
-        &["network", "conv layers", "GMACs", "weights (M)"],
-    );
-    for net in zoo(input) {
-        t.row(vec![
-            net.name.to_string(),
-            net.num_layers().to_string(),
-            format!("{:.1}", net.total_macs() / 1e9),
-            format!("{:.1}", net.total_weights() / 1e6),
-        ]);
-    }
-    emit(&t, csv);
-}
-
-fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
+fn cmd_simulate(
+    args: &aimc::util::cli::Args,
+    input: usize,
+    pool: &Pool,
+    cache: &SweepCache,
+) -> anyhow::Result<()> {
     let node = args.get_f64("node", 45.0)?;
     let name = args.get("net").unwrap_or("YOLOv3");
     let net = if name.eq_ignore_ascii_case("smallcnn") {
@@ -155,8 +237,9 @@ fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()
         anyhow::anyhow!("unknown machine {mname:?} (systolic | optical4f | photonic | reram)")
     })?;
     let t0 = Instant::now();
-    let cache = SweepCache::new();
-    let r = cache.simulate_network(m.as_ref(), &net, node);
+    // Unique layer shapes fan out over the pool; the merge stays in
+    // layer order, bit-identical to a serial pass.
+    let r = cache.simulate_network_par(pool, m.as_ref(), &net, node);
     println!(
         "{} on {} @ {node} nm  ({} layers, {:.1} GMACs, simulated in {:.1} ms, cache {})",
         net.name,
@@ -180,53 +263,6 @@ fn cmd_simulate(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()
             100.0 * j / r.ledger.total()
         );
     }
-    Ok(())
-}
-
-/// The full evaluation grid — every machine × every zoo network × every
-/// node of the ladder — through the parallel, memoized sweep engine.
-fn cmd_sweep(args: &aimc::util::cli::Args, input: usize, csv: bool) -> anyhow::Result<()> {
-    let pool = match args.get("threads") {
-        Some(_) => Pool::new(args.get_usize("threads", 0)?),
-        None => Pool::auto(),
-    };
-    let machines = machine::all_machines();
-    let nets = zoo(input);
-    let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
-    let cache = SweepCache::new();
-    let t0 = Instant::now();
-    let records = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
-    let elapsed = t0.elapsed().as_secs_f64();
-
-    let mut t = Table::new(
-        &format!(
-            "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes @ {input} px",
-            machines.len(),
-            nets.len(),
-            nodes.len()
-        ),
-        &["network", "node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
-    );
-    // Records are machine-major; table rows are (network, node)-major
-    // with one column per machine.
-    let stride = nets.len() * nodes.len();
-    for ni in 0..nets.len() {
-        for ki in 0..nodes.len() {
-            let mut cells = vec![nets[ni].name.to_string(), format!("{:.0}", nodes[ki])];
-            for mi in 0..machines.len() {
-                let r = &records[mi * stride + ni * nodes.len() + ki];
-                cells.push(format!("{:.3}", r.result.tops_per_watt()));
-            }
-            t.row(cells);
-        }
-    }
-    emit(&t, csv);
-    eprintln!(
-        "swept {} grid points in {elapsed:.2} s on {} threads (cache: {})",
-        records.len(),
-        pool.threads(),
-        cache.stats()
-    );
     Ok(())
 }
 

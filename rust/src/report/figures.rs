@@ -1,61 +1,68 @@
-//! Figures 6–10 as data tables (one row per x-axis point, one column per
-//! series — ready for plotting or eyeballing in the terminal).
+//! Figures 6–10 (and the cross-validation extension) as [`Scenario`]s —
+//! declarative specs evaluated by [`Scenario::eval`] through a shared
+//! pool + cache into typed [`crate::report::Dataset`]s.
 //!
-//! Every simulator-backed node sweep (Figs. 8–10, crossval) runs through
-//! the parallel engine: rows are computed by [`pool::par_map`] workers
-//! (one per x-axis point) against a shared [`SweepCache`], then emitted
-//! in axis order — so the rendered tables are byte-identical to the
-//! serial path while the wall clock scales with cores and repeated layer
-//! shapes simulate once. The closed-form figures (6–7) stay serial: their
-//! whole sweep costs less than a thread spawn.
+//! Fig. 6 runs on the sweep engine like everything else: its four
+//! curves are [`crate::simulator::AnalyticMachine`]s over a single-layer
+//! reference network, so analytic and cycle-accurate figures share one
+//! grid, one cache and one rendering path. The cycle-accurate figures (8–10,
+//! crossval) declare their machine/network/node grids and derive their
+//! columns from [`RowCtx::sim`]; the closed-form comparison columns
+//! (eqs. 5/24) are derived columns evaluated per row. Rendered text is
+//! byte-identical to the pre-scenario drivers (pinned in
+//! `tests/scenario_golden.rs`).
 
 use crate::analytic::{Processor, Workload};
-use crate::networks::{by_name, Network};
-use crate::simulator::{all_machines, optical4f, systolic, Component, SweepCache};
-use crate::technode::NODES;
-use crate::util::pool;
-use crate::util::table::Table;
+use crate::networks::{by_name, ConvLayer, Network};
+use crate::report::scenario::{RowCtx, Scenario};
+use crate::simulator::machine::{all_analytic_machines, all_machines};
+use crate::simulator::{optical4f, systolic, Component};
+
+/// The single-layer network wrapping Table V's reference layer — what
+/// Fig. 6's analytic machines sweep over.
+pub fn reference_network() -> Network {
+    Network {
+        name: "Table V reference layer",
+        layers: vec![ConvLayer::square(512, 128, 128, 3, 1)],
+    }
+}
 
 /// Fig. 6: analytic η (TOPS/W) vs technology node for the four
-/// processor classes on Table V's reference layer.
-pub fn fig6() -> Table {
-    let w = Workload::reference();
-    let mut t = Table::new(
+/// processor classes on Table V's reference layer — evaluated through
+/// the sweep engine via [`AnalyticMachine`], one column per processor.
+///
+/// [`AnalyticMachine`]: crate::simulator::AnalyticMachine
+pub fn fig6() -> Scenario {
+    let mut s = Scenario::new(
         "Fig. 6 — analytic efficiency vs technology node (TOPS/W, Table V layer)",
-        &["node (nm)", "CPU", "DIM", "SP", "O4F"],
-    );
-    // Closed-form: the whole sweep is microseconds of arithmetic, so a
-    // serial loop beats paying the pool's thread spawn/join here. The
-    // simulator-backed figures (8–10, crossval) are the parallel ones.
-    for n in NODES {
-        let mut cells = vec![format!("{:.0}", n.nm)];
-        for p in Processor::ALL {
-            cells.push(format!("{:.3}", p.efficiency(&w, n.nm).tops_per_watt()));
-        }
-        t.row(cells);
+    )
+    .machines(all_analytic_machines())
+    .network(reference_network())
+    .node_ladder()
+    .over_nodes()
+    .num("node (nm)", 0, |c: &RowCtx| c.node());
+    for (mi, p) in Processor::ALL.iter().enumerate() {
+        s = s.num(p.short(), 3, move |c: &RowCtx| c.sim(mi).tops_per_watt());
     }
-    t
+    s
 }
 
 /// Fig. 7: per-op energy split (memory vs compute, pJ) per processor at
-/// 32 nm on the reference layer.
-pub fn fig7() -> Table {
-    let w = Workload::reference();
-    let mut t = Table::new(
-        "Fig. 7 — energy per operation breakdown at 32 nm (pJ/op, Table V layer)",
-        &["processor", "memory", "compute", "total", "eta (TOPS/W)"],
-    );
-    for p in Processor::ALL {
-        let e = p.efficiency(&w, 32.0);
-        t.row(vec![
-            p.short().to_string(),
-            format!("{:.4}", e.e_mem * 1e12),
-            format!("{:.4}", e.e_comp * 1e12),
-            format!("{:.4}", e.per_op() * 1e12),
-            format!("{:.3}", e.tops_per_watt()),
-        ]);
-    }
-    t
+/// 32 nm on the reference layer. One row per processor class; every
+/// column derives from the same closed-form [`Processor::efficiency`].
+pub fn fig7() -> Scenario {
+    let eff = |c: &RowCtx| Processor::ALL[c.index].efficiency(&Workload::reference(), 32.0);
+    Scenario::new("Fig. 7 — energy per operation breakdown at 32 nm (pJ/op, Table V layer)")
+        .items(Processor::ALL.len())
+        .text("processor", |c: &RowCtx| {
+            Processor::ALL[c.index].short().to_string()
+        })
+        .num("memory", 4, move |c: &RowCtx| eff(c).e_mem * 1e12)
+        .num("compute", 4, move |c: &RowCtx| eff(c).e_comp * 1e12)
+        .num("total", 4, move |c: &RowCtx| eff(c).per_op() * 1e12)
+        .num("eta (TOPS/W)", 3, move |c: &RowCtx| {
+            eff(c).tops_per_watt()
+        })
 }
 
 fn net_or_yolo(name: Option<&str>, input: usize) -> Network {
@@ -65,95 +72,84 @@ fn net_or_yolo(name: Option<&str>, input: usize) -> Network {
 
 /// Fig. 8: systolic-array efficiency vs node — cycle-accurate model vs
 /// the analytic eq. (5), running YOLOv3 (or `net`) at 1 Mpx.
-pub fn fig8(net: Option<&str>, input: usize) -> Table {
+pub fn fig8(net: Option<&str>, input: usize) -> Scenario {
     let net = net_or_yolo(net, input);
-    let cfg = systolic::SystolicConfig::default();
     // The analytic curve uses the network's median-layer workload.
-    let med_layer = median_layer(&net);
-    let w = Workload::from_layer(med_layer);
-    let mut t = Table::new(
-        &format!(
-            "Fig. 8 — systolic array, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
-            net.name, input
-        ),
-        &["node (nm)", "cycle-accurate", "analytic eq.(5)", "ratio"],
+    let w = Workload::from_layer(median_layer(&net));
+    let title = format!(
+        "Fig. 8 — systolic array, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
+        net.name, input
     );
-    let cache = SweepCache::new();
-    for row in pool::par_map(NODES, |n| {
-        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
-        let ana = crate::analytic::in_memory::Config::tpu_like()
-            .efficiency(&w, n.nm)
-            .tops_per_watt();
-        vec![
-            format!("{:.0}", n.nm),
-            format!("{sim:.3}"),
-            format!("{ana:.3}"),
-            format!("{:.2}", sim / ana),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let ana = move |node: f64| {
+        crate::analytic::in_memory::Config::tpu_like()
+            .efficiency(&w, node)
+            .tops_per_watt()
+    };
+    Scenario::new(title)
+        .machine(Box::new(systolic::SystolicConfig::default()))
+        .network(net)
+        .node_ladder()
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .num("cycle-accurate", 3, |c: &RowCtx| c.sim(0).tops_per_watt())
+        .num("analytic eq.(5)", 3, move |c: &RowCtx| ana(c.node()))
+        // Re-deriving both operands costs one cache-hit merge + one
+        // closed-form eval per row; identical bits to the neighbouring
+        // columns, so the printed ratio is exactly sim/ana.
+        .num("ratio", 2, move |c: &RowCtx| {
+            c.sim(0).tops_per_watt() / ana(c.node())
+        })
 }
 
 /// Fig. 9: optical 4F efficiency vs node — cycle-accurate vs eq. (24).
-pub fn fig9(net: Option<&str>, input: usize) -> Table {
+pub fn fig9(net: Option<&str>, input: usize) -> Scenario {
     let net = net_or_yolo(net, input);
-    let cfg = optical4f::Optical4FConfig::default();
     let w = Workload::from_layer(median_layer(&net));
-    let mut t = Table::new(
-        &format!(
-            "Fig. 9 — optical 4F, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
-            net.name, input
-        ),
-        &["node (nm)", "cycle-accurate", "analytic eq.(24)", "ratio"],
+    let title = format!(
+        "Fig. 9 — optical 4F, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
+        net.name, input
     );
-    let cache = SweepCache::new();
-    for row in pool::par_map(NODES, |n| {
-        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
-        let ana = crate::analytic::optical4f::Config::default_4mpx()
-            .efficiency(&w, n.nm)
-            .tops_per_watt();
-        vec![
-            format!("{:.0}", n.nm),
-            format!("{sim:.3}"),
-            format!("{ana:.3}"),
-            format!("{:.2}", sim / ana),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let ana = move |node: f64| {
+        crate::analytic::optical4f::Config::default_4mpx()
+            .efficiency(&w, node)
+            .tops_per_watt()
+    };
+    Scenario::new(title)
+        .machine(Box::new(optical4f::Optical4FConfig::default()))
+        .network(net)
+        .node_ladder()
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .num("cycle-accurate", 3, |c: &RowCtx| c.sim(0).tops_per_watt())
+        .num("analytic eq.(24)", 3, move |c: &RowCtx| ana(c.node()))
+        .num("ratio", 2, move |c: &RowCtx| {
+            c.sim(0).tops_per_watt() / ana(c.node())
+        })
 }
 
 /// Fig. 10: optical-4F energy-cost distribution (pJ/MAC by component)
 /// across nodes for one network (paper shows VGG19 and YOLOv3).
-pub fn fig10(net: Option<&str>, input: usize) -> Table {
+pub fn fig10(net: Option<&str>, input: usize) -> Scenario {
     let net = net_or_yolo(net, input);
-    let cfg = optical4f::Optical4FConfig::default();
-    let mut t = Table::new(
-        &format!(
-            "Fig. 10 — optical 4F energy distribution, {} @ {} px (pJ/MAC)",
-            net.name, input
-        ),
-        &["node (nm)", "DAC", "ADC", "SRAM", "laser", "total"],
+    let title = format!(
+        "Fig. 10 — optical 4F energy distribution, {} @ {} px (pJ/MAC)",
+        net.name, input
     );
-    let cache = SweepCache::new();
-    for row in pool::par_map(NODES, |n| {
-        let r = cache.simulate_network(&cfg, &net, n.nm);
-        let per = |c: Component| r.ledger.get(c) / r.macs * 1e12;
-        vec![
-            format!("{:.0}", n.nm),
-            format!("{:.4}", per(Component::Dac)),
-            format!("{:.4}", per(Component::Adc)),
-            format!("{:.4}", per(Component::Sram)),
-            format!("{:.4}", per(Component::Laser)),
-            format!("{:.4}", r.energy_per_mac() * 1e12),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let per = |c: &RowCtx, comp: Component| {
+        let r = c.sim(0);
+        r.ledger.get(comp) / r.macs * 1e12
+    };
+    Scenario::new(title)
+        .machine(Box::new(optical4f::Optical4FConfig::default()))
+        .network(net)
+        .node_ladder()
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .num("DAC", 4, move |c: &RowCtx| per(c, Component::Dac))
+        .num("ADC", 4, move |c: &RowCtx| per(c, Component::Adc))
+        .num("SRAM", 4, move |c: &RowCtx| per(c, Component::Sram))
+        .num("laser", 4, move |c: &RowCtx| per(c, Component::Laser))
+        .num("total", 4, |c: &RowCtx| c.sim(0).energy_per_mac() * 1e12)
 }
 
 /// Extension (beyond the paper): cycle-accurate cross-validation of all
@@ -161,39 +157,27 @@ pub fn fig10(net: Option<&str>, input: usize) -> Table {
 /// builds cycle models only for the systolic array and the 4F machine;
 /// with the [`crate::simulator::reram`] and [`crate::simulator::photonic`]
 /// extensions, Fig. 6's ordering can be checked end to end.
-pub fn crossval(net: Option<&str>, input: usize) -> Table {
+pub fn crossval(net: Option<&str>, input: usize) -> Scenario {
     let net = net_or_yolo(net, input);
-    // all_machines() is Fig. 6 chart order: systolic, ReRAM, photonic, 4F
-    // — the column order below.
-    let machines = all_machines();
-    let mut t = Table::new(
-        &format!(
-            "Cross-validation (extension) — cycle-accurate TOPS/W, {} @ {} px",
-            net.name, input
-        ),
-        &["node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
+    let title = format!(
+        "Cross-validation (extension) — cycle-accurate TOPS/W, {} @ {} px",
+        net.name, input
     );
-    let cache = SweepCache::new();
-    // One grid point per (node, machine), stolen across all cores.
-    let mut points = Vec::new();
-    for n in NODES {
-        for mi in 0..machines.len() {
-            points.push((n.nm, mi));
-        }
+    // all_machines() is Fig. 6 chart order: systolic, ReRAM, photonic,
+    // 4F — the column order below.
+    let mut s = Scenario::new(title)
+        .machines(all_machines())
+        .network(net)
+        .node_ladder()
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node());
+    for (mi, col) in ["systolic", "ReRAM", "photonic", "optical 4F"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(col, 3, move |c: &RowCtx| c.sim(mi).tops_per_watt());
     }
-    let etas = pool::par_map(&points, |&(nm, mi)| {
-        cache
-            .simulate_network(machines[mi].as_ref(), &net, nm)
-            .tops_per_watt()
-    });
-    for (i, n) in NODES.iter().enumerate() {
-        let mut cells = vec![format!("{:.0}", n.nm)];
-        for mi in 0..machines.len() {
-            cells.push(format!("{:.3}", etas[i * machines.len() + mi]));
-        }
-        t.row(cells);
-    }
-    t
+    s
 }
 
 /// The layer whose arithmetic intensity is the network median — the
@@ -212,10 +196,11 @@ pub fn median_layer(net: &Network) -> crate::networks::ConvLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::technode::NODES;
 
     #[test]
     fn fig6_shape() {
-        let t = fig6();
+        let t = fig6().table();
         assert_eq!(t.rows.len(), NODES.len());
         // Efficiency ordering holds on every row: CPU < DIM < SP < O4F.
         for row in &t.rows {
@@ -226,8 +211,22 @@ mod tests {
     }
 
     #[test]
+    fn fig6_matches_closed_form_processor_models() {
+        // The sweep-engine (AnalyticMachine) route must reproduce the
+        // direct closed-form numbers at printed precision on every row.
+        let t = fig6().table();
+        let w = Workload::reference();
+        for (row, n) in t.rows.iter().zip(NODES) {
+            for (cell, p) in row[1..].iter().zip(Processor::ALL) {
+                let want = format!("{:.3}", p.efficiency(&w, n.nm).tops_per_watt());
+                assert_eq!(cell, &want, "{} @ {} nm", p.short(), n.nm);
+            }
+        }
+    }
+
+    #[test]
     fn fig7_cpu_memory_bound_o4f_compute_light() {
-        let t = fig7();
+        let t = fig7().table();
         let cpu: Vec<f64> = t.rows[0][1..=2].iter().map(|c| c.parse().unwrap()).collect();
         let o4f: Vec<f64> = t.rows[3][1..=2].iter().map(|c| c.parse().unwrap()).collect();
         assert!(cpu[0] > cpu[1], "CPU memory-dominated");
@@ -236,7 +235,7 @@ mod tests {
 
     #[test]
     fn fig8_sim_tracks_analytic_within_factor_3() {
-        let t = fig8(None, 1000);
+        let t = fig8(None, 1000).table();
         for row in &t.rows {
             let ratio: f64 = row[3].parse().unwrap();
             assert!(
@@ -253,7 +252,7 @@ mod tests {
         // our analytic Config includes the same hop bundle (§VII.A), so
         // the two stay within ±2× everywhere — and both flatten at 7 nm
         // for the same physical reason (wire-dominated loads).
-        let t = fig8(None, 1000);
+        let t = fig8(None, 1000).table();
         for row in &t.rows {
             let ratio: f64 = row[3].parse().unwrap();
             assert!((0.5..2.0).contains(&ratio), "row {row:?}");
@@ -262,7 +261,7 @@ mod tests {
 
     #[test]
     fn fig9_rows_and_positive() {
-        let t = fig9(None, 1000);
+        let t = fig9(None, 1000).table();
         assert_eq!(t.rows.len(), NODES.len());
         for row in &t.rows {
             assert!(row[1].parse::<f64>().unwrap() > 0.0);
@@ -272,7 +271,7 @@ mod tests {
 
     #[test]
     fn fig10_laser_constant_dac_flat() {
-        let t = fig10(None, 1000);
+        let t = fig10(None, 1000).table();
         let lasers: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
         let spread = lasers.iter().cloned().fold(f64::MIN, f64::max)
             - lasers.iter().cloned().fold(f64::MAX, f64::min);
@@ -289,8 +288,8 @@ mod tests {
         // §VII.C: "a network with a much larger arithmetic intensity as
         // in the case of VGG19 presents a higher SRAM energy per MAC" —
         // the finite-SLM placement artifact.
-        let tv = fig10(Some("VGG19"), 1000);
-        let ty = fig10(Some("YOLOv3"), 1000);
+        let tv = fig10(Some("VGG19"), 1000).table();
+        let ty = fig10(Some("YOLOv3"), 1000).table();
         let idx45 = NODES.iter().position(|n| n.nm == 45.0).unwrap();
         let sram_v: f64 = tv.rows[idx45][3].parse().unwrap();
         let sram_y: f64 = ty.rows[idx45][3].parse().unwrap();
@@ -308,10 +307,11 @@ mod tests {
 #[cfg(test)]
 mod crossval_tests {
     use super::*;
+    use crate::technode::NODES;
 
     #[test]
     fn crossval_has_all_four_machines() {
-        let t = crossval(None, 1000);
+        let t = crossval(None, 1000).table();
         assert_eq!(t.headers.len(), 5);
         assert_eq!(t.rows.len(), NODES.len());
         // At 32 nm the cycle-accurate ordering of Fig. 6 holds:

@@ -1,6 +1,14 @@
-//! Report generators: regenerate every table and figure of the paper's
-//! evaluation section as aligned text tables (or CSV), with the paper's
-//! printed values alongside for comparison where applicable.
+//! Report generation: the **Scenario → Dataset → sink** pipeline.
+//!
+//! Every table, figure and sweep of the paper's evaluation section is a
+//! declarative [`Scenario`] — machines (cycle-accurate and analytic) ×
+//! networks × technology nodes × derived columns — evaluated by ONE
+//! engine ([`Scenario::eval`]) through a shared [`crate::util::pool`]
+//! `Pool` + [`crate::simulator::SweepCache`] into a typed [`Dataset`]
+//! (columns of [`Value::Num`]/[`Value::Text`], not pre-formatted
+//! strings), then rendered by a pluggable sink: aligned text
+//! ([`Dataset::render`]), RFC-4180 CSV ([`Dataset::to_csv`]) or JSON
+//! ([`Dataset::to_json`] via [`crate::util::json`]).
 //!
 //! | generator | paper artifact |
 //! |---|---|
@@ -8,14 +16,141 @@
 //! | [`tables::table2`] | Table II — median matmul dims L′,N′,M′ |
 //! | [`tables::table3`] | Table III — median 4F dims L,N,M |
 //! | [`tables::table4`] | Table IV — energy per operation (+VI, VII) |
-//! | [`figures::fig6`] | Fig. 6 — analytic η vs technology node |
+//! | [`figures::fig6`] | Fig. 6 — analytic η vs node (sweep engine via `AnalyticMachine`) |
 //! | [`figures::fig7`] | Fig. 7 — memory/compute energy split @32 nm |
 //! | [`figures::fig8`] | Fig. 8 — systolic cycle-accurate vs analytic |
 //! | [`figures::fig9`] | Fig. 9 — optical 4F cycle-accurate vs analytic |
 //! | [`figures::fig10`] | Fig. 10 — 4F energy distribution vs node |
+//! | [`figures::crossval`] | extension — all four machines cross-validated |
+//! | [`zoo_scenario`] | `aimc zoo` — network inventory |
+//! | [`sweep_scenario`] | `aimc sweep` — full machine × network × node grid |
+//!
+//! [`all_scenarios`] is the `aimc all` list: one shared cache/pool
+//! evaluates the lot, so layer shapes repeated across artifacts
+//! simulate exactly once per process (and once per *cache directory*
+//! when the CLI persists the sweep cache).
 
 pub mod figures;
+pub mod scenario;
 pub mod tables;
 
 pub use figures::*;
+pub use scenario::{Dataset, EvalCtx, NumFmt, OutputFormat, RowCtx, Scenario, Value};
 pub use tables::*;
+
+use crate::networks::zoo;
+
+/// `aimc zoo`: the Table I network inventory at `input` px.
+pub fn zoo_scenario(input: usize) -> Scenario {
+    Scenario::new(format!("network zoo @ {input} px"))
+        .networks(zoo(input))
+        .over_networks()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("conv layers", 0, |c: &RowCtx| c.net().num_layers() as f64)
+        .num("GMACs", 1, |c: &RowCtx| c.net().total_macs() / 1e9)
+        .num("weights (M)", 1, |c: &RowCtx| c.net().total_weights() / 1e6)
+}
+
+/// `aimc sweep`: the full evaluation grid — every machine × every zoo
+/// network × every node of the ladder, one row per (network, node).
+pub fn sweep_scenario(input: usize) -> Scenario {
+    let machines = crate::simulator::machine::all_machines();
+    let nets = zoo(input);
+    let nodes: Vec<f64> = crate::technode::NODES.iter().map(|n| n.nm).collect();
+    let title = format!(
+        "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes @ {input} px",
+        machines.len(),
+        nets.len(),
+        nodes.len()
+    );
+    let mut s = Scenario::new(title)
+        .machines(machines)
+        .networks(nets)
+        .nodes(&nodes)
+        .over_network_nodes()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("node (nm)", 0, |c: &RowCtx| c.node());
+    for (mi, col) in ["systolic", "ReRAM", "photonic", "optical 4F"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(col, 3, move |c: &RowCtx| c.sim(mi).tops_per_watt());
+    }
+    s
+}
+
+/// The `aimc all` scenario list, in the CLI's historical emission order.
+pub fn all_scenarios(net: Option<&str>, input: usize) -> Vec<Scenario> {
+    vec![
+        table1(input),
+        table2(input),
+        table3(input),
+        table4(),
+        fig6(),
+        fig7(),
+        fig8(net, input),
+        fig9(net, input),
+        fig10(Some("VGG19"), input),
+        fig10(Some("YOLOv3"), input),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SweepCache;
+    use crate::util::pool::Pool;
+
+    #[test]
+    fn zoo_scenario_lists_the_zoo() {
+        let t = zoo_scenario(1000).table();
+        assert_eq!(t.rows.len(), 8);
+        assert!(t.rows.iter().any(|r| r[0] == "YOLOv3"));
+        for row in &t.rows {
+            assert!(row[2].parse::<f64>().unwrap() > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_scenario_covers_the_grid() {
+        let s = sweep_scenario(200);
+        assert_eq!(s.grid_points(), 4 * 8 * crate::technode::NODES.len());
+        assert_eq!(s.row_count(), 8 * crate::technode::NODES.len());
+    }
+
+    #[test]
+    fn all_scenarios_share_one_cache() {
+        // `aimc all` evaluates ten scenarios through one pool + cache.
+        // The last scenario, fig10(YOLOv3), prices the same (optical 4F
+        // default config × YOLOv3 × node ladder) grid fig9 already
+        // simulated — with a genuinely shared cache it must add ZERO
+        // misses. (Within-scenario hits can't satisfy this: the
+        // assertion fails if each eval() gets a private cache.)
+        let list = all_scenarios(None, 120);
+        assert_eq!(list.len(), 10);
+        let pool = Pool::auto();
+        let cache = SweepCache::new();
+        let ctx = EvalCtx {
+            pool: &pool,
+            cache: &cache,
+        };
+        let mut misses_before_last = 0;
+        for (i, s) in list.iter().enumerate() {
+            if i == list.len() - 1 {
+                misses_before_last = cache.misses();
+            }
+            let ds = s.eval(&ctx);
+            assert!(!ds.rows.is_empty(), "{}", s.title());
+            for row in &ds.rows {
+                assert_eq!(row.len(), ds.columns.len());
+            }
+        }
+        assert_eq!(
+            cache.misses(),
+            misses_before_last,
+            "fig10(YOLOv3) must replay fig9's grid from the shared cache: {}",
+            cache.stats()
+        );
+        assert!(cache.hits() > 0, "shared cache must see reuse: {}", cache.stats());
+    }
+}

@@ -1,0 +1,624 @@
+//! The declarative evaluation pipeline: **`Scenario` → `Dataset` → sink**.
+//!
+//! A [`Scenario`] is a typed experiment spec — machines (cycle-accurate
+//! *and* analytic, via [`crate::simulator::AnalyticMachine`]) × networks
+//! × technology nodes × derived columns — with one of four row axes.
+//! One engine ([`Scenario::eval`]) evaluates every scenario the same
+//! way: the (machine × network × node) grid is prefetched through a
+//! shared [`Pool`] into a shared [`SweepCache`] (so repeated layer
+//! shapes simulate once, across *all* scenarios of a CLI invocation),
+//! then rows are assembled in parallel and returned as a typed
+//! [`Dataset`] — named columns of [`Value::Num`]/[`Value::Text`] cells,
+//! not pre-formatted strings.
+//!
+//! Sinks are pluggable and render-only:
+//!
+//! * [`Dataset::to_table`] / [`Dataset::render`] — aligned text, byte-
+//!   identical to the pre-scenario hand-rolled drivers (golden-pinned in
+//!   `tests/scenario_golden.rs`);
+//! * [`Dataset::to_csv`] — RFC-4180 CSV;
+//! * [`Dataset::to_json`] — a [`Json`] object carrying the title, column
+//!   names and raw (full-precision) cell values.
+//!
+//! Formatting lives in the column spec as a [`NumFmt`], so the text/CSV
+//! sinks reproduce the paper's printed precision while the JSON sink
+//! keeps every bit of the underlying `f64`.
+
+use std::collections::HashSet;
+
+use crate::networks::Network;
+use crate::simulator::{Machine, SimResult, SweepCache};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::table::{sci, Table};
+
+/// One typed cell of a [`Dataset`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// A number, rendered by the column's [`NumFmt`] in text/CSV sinks
+    /// and at full precision in the JSON sink.
+    Num(f64),
+    /// Free text, rendered verbatim by every sink (used for labels and
+    /// the occasional pre-formatted footer cell).
+    Text(String),
+}
+
+impl Value {
+    pub fn text(s: impl Into<String>) -> Value {
+        Value::Text(s.into())
+    }
+
+    /// Render for the text/CSV sinks.
+    pub fn render(&self, fmt: NumFmt) -> String {
+        match self {
+            Value::Text(s) => s.clone(),
+            Value::Num(v) => match fmt {
+                NumFmt::Fixed(p) => format!("{:.*}", p, v),
+                NumFmt::Sci => sci(*v),
+                NumFmt::Display => format!("{v}"),
+            },
+        }
+    }
+
+    /// Convert for the JSON sink (non-finite numbers become `null`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Num(v) => Json::Num(*v),
+            Value::Text(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// Per-column number formatting for the text/CSV sinks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumFmt {
+    /// `format!("{:.p}")` — fixed decimals (the paper's table style).
+    Fixed(usize),
+    /// [`sci`] — `1.6e7`-style engineering notation.
+    Sci,
+    /// `format!("{}")` — shortest round-trip.
+    Display,
+}
+
+/// The evaluated result of a scenario: a titled, typed column store.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub title: String,
+    pub columns: Vec<String>,
+    /// One [`NumFmt`] per column (parallel to `columns`).
+    pub fmts: Vec<NumFmt>,
+    /// Row-major cells; every row is `columns.len()` wide.
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl Dataset {
+    /// Format every cell by its column's [`NumFmt`] into an aligned-text
+    /// [`Table`].
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &self.title,
+            &self.columns.iter().map(|c| c.as_str()).collect::<Vec<_>>(),
+        );
+        for row in &self.rows {
+            t.row(
+                row.iter()
+                    .zip(&self.fmts)
+                    .map(|(v, &f)| v.render(f))
+                    .collect(),
+            );
+        }
+        t
+    }
+
+    /// Aligned-text sink.
+    pub fn render(&self) -> String {
+        self.to_table().render()
+    }
+
+    /// CSV sink (RFC-4180; see [`Table::to_csv`] for why the title is
+    /// not embedded).
+    pub fn to_csv(&self) -> String {
+        self.to_table().to_csv()
+    }
+
+    /// JSON sink: `{"title": …, "columns": […], "rows": [[…], …]}` with
+    /// raw numeric cells.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("title".to_string(), Json::Str(self.title.clone())),
+            (
+                "columns".to_string(),
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            (
+                "rows".to_string(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(Value::to_json).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Output format selector for the CLI sinks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputFormat {
+    Text,
+    Csv,
+    Json,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> Option<OutputFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "text" | "txt" => Some(OutputFormat::Text),
+            "csv" => Some(OutputFormat::Csv),
+            "json" => Some(OutputFormat::Json),
+            _ => None,
+        }
+    }
+}
+
+/// What one table row ranges over.
+#[derive(Clone, Debug)]
+enum RowAxis {
+    /// One row per technology node (the scenario's first network is the
+    /// row's network).
+    Nodes,
+    /// One row per network (the scenario's first node, if any, is the
+    /// row's node).
+    Networks,
+    /// Network-major × node-minor cross product (the `sweep` grid).
+    NetworkNode,
+    /// `n` free-form rows addressed by [`RowCtx::index`] (static tables
+    /// like Table IV, or per-processor rows like Fig. 7).
+    Items(usize),
+}
+
+/// Results of the prefetch phase, keyed by (machine index, network
+/// index, node bits) — what [`RowCtx::sim`] serves from.
+type GridResults = std::collections::HashMap<(usize, usize, u64), SimResult>;
+
+/// Everything a column closure may ask about its row. Simulation goes
+/// through [`RowCtx::sim`], which serves the evaluation's prefetched
+/// grid results directly (bit-identical to a direct simulation — they
+/// ARE the cache's in-layer-order merges), so column re-reads neither
+/// re-merge layers nor distort the shared cache's hit/miss statistics.
+pub struct RowCtx<'a> {
+    /// Row number in axis order (also the item index for
+    /// `Scenario::items` scenarios).
+    pub index: usize,
+    net_idx: Option<usize>,
+    network: Option<&'a Network>,
+    node_nm: Option<f64>,
+    machines: &'a [Box<dyn Machine>],
+    cache: &'a SweepCache,
+    grid: &'a GridResults,
+}
+
+impl RowCtx<'_> {
+    /// The row's network. Panics if the scenario declared none.
+    pub fn net(&self) -> &Network {
+        self.network.expect("scenario has no network for this row")
+    }
+
+    /// The row's technology node in nm. Panics if the scenario declared
+    /// none.
+    pub fn node(&self) -> f64 {
+        self.node_nm.expect("scenario has no node for this row")
+    }
+
+    /// Simulation result of machine `mi` (index into the scenario's
+    /// machine list) on the row's (network, node): served from the
+    /// prefetched grid, falling back to the shared cache for any
+    /// combination the prefetch didn't cover (e.g. an `items` axis).
+    pub fn sim(&self, mi: usize) -> SimResult {
+        if let (Some(ni), Some(node)) = (self.net_idx, self.node_nm) {
+            if let Some(r) = self.grid.get(&(mi, ni, node.to_bits())) {
+                return r.clone();
+            }
+        }
+        self.cache
+            .simulate_network(self.machines[mi].as_ref(), self.net(), self.node())
+    }
+}
+
+type CellFn = dyn Fn(&RowCtx) -> Value + Send + Sync;
+
+struct ColumnSpec {
+    name: String,
+    fmt: NumFmt,
+    cell: Box<CellFn>,
+}
+
+/// Shared evaluation resources: every scenario of a CLI invocation (or
+/// an `aimc all` run) evaluates through ONE pool and ONE cache, so
+/// layer shapes repeated across figures simulate exactly once.
+pub struct EvalCtx<'a> {
+    pub pool: &'a Pool,
+    pub cache: &'a SweepCache,
+}
+
+/// A declarative experiment spec. See the module docs for the model;
+/// see `report::figures` / `report::tables` for every paper artifact
+/// expressed as one.
+pub struct Scenario {
+    title: String,
+    machines: Vec<Box<dyn Machine>>,
+    networks: Vec<Network>,
+    nodes: Vec<f64>,
+    axis: RowAxis,
+    columns: Vec<ColumnSpec>,
+}
+
+impl Scenario {
+    pub fn new(title: impl Into<String>) -> Scenario {
+        Scenario {
+            title: title.into(),
+            machines: Vec::new(),
+            networks: Vec::new(),
+            nodes: Vec::new(),
+            axis: RowAxis::Items(0),
+            columns: Vec::new(),
+        }
+    }
+
+    // ---- grid builders ---------------------------------------------------
+
+    pub fn machine(mut self, m: Box<dyn Machine>) -> Self {
+        self.machines.push(m);
+        self
+    }
+
+    pub fn machines(mut self, ms: Vec<Box<dyn Machine>>) -> Self {
+        self.machines.extend(ms);
+        self
+    }
+
+    pub fn network(mut self, n: Network) -> Self {
+        self.networks.push(n);
+        self
+    }
+
+    pub fn networks(mut self, ns: Vec<Network>) -> Self {
+        self.networks.extend(ns);
+        self
+    }
+
+    pub fn nodes(mut self, nodes: &[f64]) -> Self {
+        self.nodes.extend_from_slice(nodes);
+        self
+    }
+
+    /// The full technology ladder of [`crate::technode::NODES`].
+    pub fn node_ladder(self) -> Self {
+        let ladder: Vec<f64> = crate::technode::NODES.iter().map(|n| n.nm).collect();
+        self.nodes(&ladder)
+    }
+
+    // ---- row axis --------------------------------------------------------
+
+    pub fn over_nodes(mut self) -> Self {
+        self.axis = RowAxis::Nodes;
+        self
+    }
+
+    pub fn over_networks(mut self) -> Self {
+        self.axis = RowAxis::Networks;
+        self
+    }
+
+    pub fn over_network_nodes(mut self) -> Self {
+        self.axis = RowAxis::NetworkNode;
+        self
+    }
+
+    pub fn items(mut self, n: usize) -> Self {
+        self.axis = RowAxis::Items(n);
+        self
+    }
+
+    // ---- columns ---------------------------------------------------------
+
+    /// The general column: any [`NumFmt`], any [`Value`].
+    pub fn column<F>(mut self, name: &str, fmt: NumFmt, cell: F) -> Self
+    where
+        F: Fn(&RowCtx) -> Value + Send + Sync + 'static,
+    {
+        self.columns.push(ColumnSpec {
+            name: name.to_string(),
+            fmt,
+            cell: Box::new(cell),
+        });
+        self
+    }
+
+    /// Numeric column with fixed decimals.
+    pub fn num<F>(self, name: &str, decimals: usize, f: F) -> Self
+    where
+        F: Fn(&RowCtx) -> f64 + Send + Sync + 'static,
+    {
+        self.column(name, NumFmt::Fixed(decimals), move |c: &RowCtx| {
+            Value::Num(f(c))
+        })
+    }
+
+    /// Numeric column in `1.6e7`-style engineering notation.
+    pub fn sci<F>(self, name: &str, f: F) -> Self
+    where
+        F: Fn(&RowCtx) -> f64 + Send + Sync + 'static,
+    {
+        self.column(name, NumFmt::Sci, move |c: &RowCtx| Value::Num(f(c)))
+    }
+
+    /// Text column.
+    pub fn text<F>(self, name: &str, f: F) -> Self
+    where
+        F: Fn(&RowCtx) -> String + Send + Sync + 'static,
+    {
+        self.column(name, NumFmt::Display, move |c: &RowCtx| Value::Text(f(c)))
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Rows this scenario will produce.
+    pub fn row_count(&self) -> usize {
+        match self.axis {
+            RowAxis::Nodes => self.nodes.len(),
+            RowAxis::Networks => self.networks.len(),
+            RowAxis::NetworkNode => self.networks.len() * self.nodes.len(),
+            RowAxis::Items(n) => n,
+        }
+    }
+
+    /// (machine × network × node) simulation grid points behind this
+    /// scenario (0 for purely derived scenarios).
+    pub fn grid_points(&self) -> usize {
+        self.machines.len() * self.networks.len().max(1) * self.nodes.len().max(1)
+    }
+
+    // ---- evaluation ------------------------------------------------------
+
+    /// One row descriptor per axis position: (index, network index, node).
+    fn row_specs(&self) -> Vec<(usize, Option<usize>, Option<f64>)> {
+        let first_net = if self.networks.is_empty() { None } else { Some(0) };
+        let first_node = self.nodes.first().copied();
+        match self.axis {
+            RowAxis::Nodes => self
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &nm)| (i, first_net, Some(nm)))
+                .collect(),
+            RowAxis::Networks => (0..self.networks.len())
+                .map(|i| (i, Some(i), first_node))
+                .collect(),
+            RowAxis::NetworkNode => {
+                let mut out = Vec::with_capacity(self.networks.len() * self.nodes.len());
+                let mut index = 0;
+                for ni in 0..self.networks.len() {
+                    for &nm in &self.nodes {
+                        out.push((index, Some(ni), Some(nm)));
+                        index += 1;
+                    }
+                }
+                out
+            }
+            RowAxis::Items(n) => (0..n).map(|i| (i, first_net, first_node)).collect(),
+        }
+    }
+
+    /// Evaluate through the shared pool + cache into a typed [`Dataset`].
+    ///
+    /// Two parallel phases: (1) prefetch — every (machine, network,
+    /// node) grid point a row could touch is simulated across the pool
+    /// through the cache (at grid-point granularity so skewed rows
+    /// don't serialize) and the merged results are kept; (2) assembly —
+    /// rows are built in parallel, their column closures served from
+    /// the kept grid results, so a column reading the same point twice
+    /// costs a map lookup, not a re-merge, and the cache's hit/miss
+    /// counters keep measuring layer dedup only. Rows come back in axis
+    /// order regardless of worker scheduling ([`Pool::par_map`] is
+    /// order-preserving), so rendered output is deterministic.
+    pub fn eval(&self, ctx: &EvalCtx) -> Dataset {
+        let specs = self.row_specs();
+        let mut grid = GridResults::new();
+        if !self.machines.is_empty() {
+            let mut seen = HashSet::new();
+            let mut points: Vec<(usize, usize, f64)> = Vec::new();
+            for &(_, ni, node) in &specs {
+                if let (Some(ni), Some(node)) = (ni, node) {
+                    if seen.insert((ni, node.to_bits())) {
+                        for mi in 0..self.machines.len() {
+                            points.push((mi, ni, node));
+                        }
+                    }
+                }
+            }
+            let results = ctx.pool.par_map(&points, |&(mi, ni, node)| {
+                ctx.cache
+                    .simulate_network(self.machines[mi].as_ref(), &self.networks[ni], node)
+            });
+            for (&(mi, ni, node), r) in points.iter().zip(results) {
+                grid.insert((mi, ni, node.to_bits()), r);
+            }
+        }
+        let grid = &grid;
+        let rows = ctx.pool.par_map(&specs, |&(index, ni, node)| {
+            let rc = RowCtx {
+                index,
+                net_idx: ni,
+                network: ni.map(|i| &self.networks[i]),
+                node_nm: node,
+                machines: &self.machines,
+                cache: ctx.cache,
+                grid,
+            };
+            self.columns
+                .iter()
+                .map(|c| (c.cell)(&rc))
+                .collect::<Vec<Value>>()
+        });
+        Dataset {
+            title: self.title.clone(),
+            columns: self.columns.iter().map(|c| c.name.clone()).collect(),
+            fmts: self.columns.iter().map(|c| c.fmt).collect(),
+            rows,
+        }
+    }
+
+    /// [`Scenario::eval`] with a throwaway pool + cache — convenience
+    /// for tests and one-off calls.
+    pub fn dataset(&self) -> Dataset {
+        let pool = Pool::auto();
+        let cache = SweepCache::new();
+        self.eval(&EvalCtx {
+            pool: &pool,
+            cache: &cache,
+        })
+    }
+
+    /// Evaluate and format as an aligned-text [`Table`].
+    pub fn table(&self) -> Table {
+        self.dataset().to_table()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::yolov3::yolov3;
+    use crate::simulator::machine::all_machines;
+    use crate::simulator::systolic;
+
+    #[test]
+    fn value_rendering_matches_legacy_formats() {
+        assert_eq!(Value::Num(45.0).render(NumFmt::Fixed(0)), "45");
+        assert_eq!(Value::Num(3.14159).render(NumFmt::Fixed(3)), "3.142");
+        assert_eq!(Value::Num(1.6e7).render(NumFmt::Sci), sci(1.6e7));
+        assert_eq!(Value::Num(4.3).render(NumFmt::Display), "4.3");
+        assert_eq!(
+            Value::text("label").render(NumFmt::Fixed(4)),
+            "label",
+            "text ignores the numeric format"
+        );
+    }
+
+    #[test]
+    fn axis_row_counts() {
+        let nodes = [45.0, 28.0, 7.0];
+        let s = Scenario::new("t")
+            .network(yolov3(100))
+            .network(yolov3(120))
+            .nodes(&nodes);
+        assert_eq!(s.row_count(), 0, "default Items(0)");
+        let s = s.over_network_nodes();
+        assert_eq!(s.row_count(), 6);
+        assert_eq!(Scenario::new("t").nodes(&nodes).over_nodes().row_count(), 3);
+        assert_eq!(Scenario::new("t").items(7).row_count(), 7);
+    }
+
+    #[test]
+    fn eval_assembles_rows_in_axis_order() {
+        let s = Scenario::new("order")
+            .nodes(&[45.0, 28.0, 7.0])
+            .over_nodes()
+            .num("node (nm)", 0, |c: &RowCtx| c.node())
+            .num("idx", 0, |c: &RowCtx| c.index as f64);
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 3);
+        assert_eq!(ds.rows[0], vec![Value::Num(45.0), Value::Num(0.0)]);
+        assert_eq!(ds.rows[2], vec![Value::Num(7.0), Value::Num(2.0)]);
+        let t = ds.to_table();
+        assert_eq!(t.rows[1], vec!["28".to_string(), "1".to_string()]);
+    }
+
+    #[test]
+    fn sim_columns_match_direct_simulation_bit_for_bit() {
+        let net = yolov3(200);
+        let cfg = systolic::SystolicConfig::default();
+        let direct = systolic::simulate_network(&cfg, &net, 45.0);
+        let s = Scenario::new("sim")
+            .machine(Box::new(cfg))
+            .network(net)
+            .nodes(&[45.0])
+            .over_nodes()
+            .num("eta", 12, |c: &RowCtx| c.sim(0).tops_per_watt());
+        let ds = s.dataset();
+        match &ds.rows[0][0] {
+            Value::Num(v) => assert_eq!(*v, direct.tops_per_watt()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn shared_cache_dedups_across_scenarios() {
+        let pool = Pool::new(2);
+        let cache = SweepCache::new();
+        let ctx = EvalCtx {
+            pool: &pool,
+            cache: &cache,
+        };
+        let mk = |title: &str| {
+            Scenario::new(title)
+                .machines(all_machines())
+                .network(yolov3(200))
+                .nodes(&[45.0, 7.0])
+                .over_nodes()
+                .num("eta", 3, |c: &RowCtx| c.sim(0).tops_per_watt())
+        };
+        let _ = mk("first").eval(&ctx);
+        let misses_after_first = cache.misses();
+        let _ = mk("second").eval(&ctx);
+        assert_eq!(
+            cache.misses(),
+            misses_after_first,
+            "second scenario must be pure cache hits"
+        );
+    }
+
+    #[test]
+    fn dataset_json_sink_parses_and_keeps_types() {
+        let s = Scenario::new("json, \"quoted\" title")
+            .items(2)
+            .text("label", |c: &RowCtx| format!("row{}", c.index))
+            .num("value", 3, |c: &RowCtx| c.index as f64 + 0.5);
+        let ds = s.dataset();
+        let parsed = Json::parse(&ds.to_json().pretty()).unwrap();
+        match parsed {
+            Json::Obj(fields) => {
+                assert_eq!(fields[0].0, "title");
+                assert_eq!(fields[0].1, Json::Str("json, \"quoted\" title".into()));
+                match &fields[2].1 {
+                    Json::Arr(rows) => {
+                        assert_eq!(rows.len(), 2);
+                        match &rows[1] {
+                            Json::Arr(cells) => {
+                                assert_eq!(cells[0], Json::Str("row1".into()));
+                                assert_eq!(cells[1], Json::Num(1.5));
+                            }
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn output_format_parses() {
+        assert_eq!(OutputFormat::parse("text"), Some(OutputFormat::Text));
+        assert_eq!(OutputFormat::parse("CSV"), Some(OutputFormat::Csv));
+        assert_eq!(OutputFormat::parse("json"), Some(OutputFormat::Json));
+        assert_eq!(OutputFormat::parse("yaml"), None);
+    }
+}

@@ -1,11 +1,15 @@
-//! Tables I–IV (plus VI/VII footers) as renderable [`Table`]s.
+//! Tables I–IV (plus VI/VII footers) as [`Scenario`]s.
 //!
-//! Tables I–III compute one row per network; rows are evaluated by
-//! [`pool::par_map`] workers and emitted in zoo order, so output is
-//! byte-identical to the serial path.
+//! Tables I–III range over the Table I zoo (one row per network) with
+//! every column derived from [`crate::networks::stats`]; Table IV is a
+//! static item scenario whose typed rows are computed once from the
+//! Appendix-A energy models. Rendered text is byte-identical to the
+//! pre-scenario drivers (pinned in `tests/scenario_golden.rs`).
+
+use std::sync::Arc;
 
 use crate::energy::{
-    self, constants,
+    constants,
     converter::{adc_energy, dac_energy},
     load::presets,
     logic::mac_energy,
@@ -14,8 +18,7 @@ use crate::energy::{
     sram,
 };
 use crate::networks::{stats, zoo, Network};
-use crate::util::pool;
-use crate::util::table::{sci, Table};
+use crate::report::scenario::{NumFmt, RowCtx, Scenario, Value};
 
 /// Paper-printed Table I rows (for the comparison column):
 /// (name, layers, median n, median Cᵢ, max N, avg k, total K, median Cᵢ₊₁, median a).
@@ -35,34 +38,33 @@ fn paper1(name: &str) -> Option<&'static (&'static str, usize, f64, f64, f64, f6
 }
 
 /// Table I: conv-layer statistics of the eight networks (ours vs paper).
-pub fn table1(input: usize) -> Table {
-    let mut t = Table::new(
-        "Table I — conv-layer statistics (1 Mpx input; ours / paper)",
-        &[
-            "network", "layers", "med n", "med Ci", "max N", "avg k", "total K",
-            "med Ci+1", "med a", "paper a",
-        ],
-    );
+///
+/// The per-network stats row is computed ONCE here (it sorts the layer
+/// population for its medians); the column closures only address it by
+/// row index — on the `over_networks` axis, row index == network index.
+pub fn table1(input: usize) -> Scenario {
     let nets = zoo(input);
-    for row in pool::par_map(&nets, |net| {
-        let r = stats::table1_row(net);
-        let pa = paper1(net.name).map(|p| p.8).unwrap_or(f64::NAN);
-        vec![
-            r.name.to_string(),
-            r.num_layers.to_string(),
-            format!("{:.0}", r.median_n),
-            format!("{:.0}", r.median_ci),
-            sci(r.max_input),
-            format!("{:.1}", r.avg_k),
-            sci(r.total_weights),
-            format!("{:.0}", r.median_co),
-            format!("{:.0}", r.median_a),
-            format!("{pa:.0}"),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let rows: Arc<Vec<stats::Table1Row>> =
+        Arc::new(nets.iter().map(stats::table1_row).collect());
+    let col = |rows: &Arc<Vec<stats::Table1Row>>, f: fn(&stats::Table1Row) -> f64| {
+        let rows = rows.clone();
+        move |c: &RowCtx| f(&rows[c.index])
+    };
+    Scenario::new("Table I — conv-layer statistics (1 Mpx input; ours / paper)")
+        .networks(nets)
+        .over_networks()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("layers", 0, col(&rows, |r| r.num_layers as f64))
+        .num("med n", 0, col(&rows, |r| r.median_n))
+        .num("med Ci", 0, col(&rows, |r| r.median_ci))
+        .sci("max N", col(&rows, |r| r.max_input))
+        .num("avg k", 1, col(&rows, |r| r.avg_k))
+        .sci("total K", col(&rows, |r| r.total_weights))
+        .num("med Ci+1", 0, col(&rows, |r| r.median_co))
+        .num("med a", 0, col(&rows, |r| r.median_a))
+        .num("paper a", 0, |c: &RowCtx| {
+            paper1(c.net().name).map(|p| p.8).unwrap_or(f64::NAN)
+        })
 }
 
 /// Paper Table II rows: (name, L′, N′, M′).
@@ -77,34 +79,34 @@ pub const PAPER_TABLE2: &[(&str, f64, f64, f64)] = &[
     ("YOLOv3", 3844.0, 1024.0, 256.0),
 ];
 
+fn paper2(name: &str) -> (f64, f64, f64) {
+    PAPER_TABLE2
+        .iter()
+        .find(|p| p.0 == name)
+        .map(|p| (p.1, p.2, p.3))
+        .unwrap_or((f64::NAN, f64::NAN, f64::NAN))
+}
+
 /// Table II: median conv-as-matmul dimensions (eq. 16).
-pub fn table2(input: usize) -> Table {
-    let mut t = Table::new(
-        "Table II — median matmul dims (eq. 16; ours / paper)",
-        &["network", "layers", "L'", "N'", "M'", "paper L'", "paper N'", "paper M'"],
-    );
+pub fn table2(input: usize) -> Scenario {
     let nets = zoo(input);
-    for row in pool::par_map(&nets, |net| {
-        let r = stats::table2_row(net);
-        let p = PAPER_TABLE2
-            .iter()
-            .find(|p| p.0 == net.name)
-            .copied()
-            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
-        vec![
-            r.name.to_string(),
-            r.num_layers.to_string(),
-            format!("{:.0}", r.median_l),
-            format!("{:.0}", r.median_n),
-            format!("{:.0}", r.median_m),
-            format!("{:.0}", p.1),
-            format!("{:.0}", p.2),
-            format!("{:.0}", p.3),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let rows: Arc<Vec<stats::Table2Row>> =
+        Arc::new(nets.iter().map(stats::table2_row).collect());
+    let col = |rows: &Arc<Vec<stats::Table2Row>>, f: fn(&stats::Table2Row) -> f64| {
+        let rows = rows.clone();
+        move |c: &RowCtx| f(&rows[c.index])
+    };
+    Scenario::new("Table II — median matmul dims (eq. 16; ours / paper)")
+        .networks(nets)
+        .over_networks()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("layers", 0, col(&rows, |r| r.num_layers as f64))
+        .num("L'", 0, col(&rows, |r| r.median_l))
+        .num("N'", 0, col(&rows, |r| r.median_n))
+        .num("M'", 0, col(&rows, |r| r.median_m))
+        .num("paper L'", 0, |c: &RowCtx| paper2(c.net().name).0)
+        .num("paper N'", 0, |c: &RowCtx| paper2(c.net().name).1)
+        .num("paper M'", 0, |c: &RowCtx| paper2(c.net().name).2)
 }
 
 /// Paper Table III rows: (name, L, N, M) at C′ → ∞.
@@ -119,49 +121,49 @@ pub const PAPER_TABLE3: &[(&str, f64, f64, f64)] = &[
     ("YOLOv3", 3844.0, 512.0, 256.0),
 ];
 
+fn paper3(name: &str) -> (f64, f64, f64) {
+    PAPER_TABLE3
+        .iter()
+        .find(|p| p.0 == name)
+        .map(|p| (p.1, p.2, p.3))
+        .unwrap_or((f64::NAN, f64::NAN, f64::NAN))
+}
+
 /// Table III: median optical-4F amortization dims (eq. 23, infinite SLM).
-pub fn table3(input: usize) -> Table {
-    let mut t = Table::new(
-        "Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)",
-        &["network", "layers", "L", "N", "M", "paper L", "paper N", "paper M"],
-    );
+pub fn table3(input: usize) -> Scenario {
     let nets = zoo(input);
-    for row in pool::par_map(&nets, |net| {
-        let r = stats::table3_row(net, None);
-        let p = PAPER_TABLE3
-            .iter()
-            .find(|p| p.0 == net.name)
-            .copied()
-            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
-        vec![
-            r.name.to_string(),
-            r.num_layers.to_string(),
-            format!("{:.0}", r.median_l),
-            format!("{:.0}", r.median_n),
-            format!("{:.0}", r.median_m),
-            format!("{:.0}", p.1),
-            format!("{:.0}", p.2),
-            format!("{:.0}", p.3),
-        ]
-    }) {
-        t.row(row);
-    }
-    t
+    let rows: Arc<Vec<stats::Table3Row>> =
+        Arc::new(nets.iter().map(|n| stats::table3_row(n, None)).collect());
+    let col = |rows: &Arc<Vec<stats::Table3Row>>, f: fn(&stats::Table3Row) -> f64| {
+        let rows = rows.clone();
+        move |c: &RowCtx| f(&rows[c.index])
+    };
+    Scenario::new("Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)")
+        .networks(nets)
+        .over_networks()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("layers", 0, col(&rows, |r| r.num_layers as f64))
+        .num("L", 0, col(&rows, |r| r.median_l))
+        .num("N", 0, col(&rows, |r| r.median_n))
+        .num("M", 0, col(&rows, |r| r.median_m))
+        .num("paper L", 0, |c: &RowCtx| paper3(c.net().name).0)
+        .num("paper N", 0, |c: &RowCtx| paper3(c.net().name).1)
+        .num("paper M", 0, |c: &RowCtx| paper3(c.net().name).2)
 }
 
 /// Table IV (with Tables VI and VII as footer rows): energies per
-/// operation at 45 nm, 0.9 V, 8 bit — ours vs the paper's printed values.
-pub fn table4() -> Table {
-    let mut t = Table::new(
-        "Table IV — energy per operation (45 nm, 0.9 V, 8-bit)",
-        &["quantity", "ours (pJ)", "paper (pJ)"],
-    );
+/// operation at 45 nm, 0.9 V, 8 bit — ours vs the paper's printed
+/// values. A static item scenario: the typed rows are computed once
+/// here; the column specs only address them.
+pub fn table4() -> Scenario {
+    let arr = ReramArray::default();
+    let mut rows: Vec<(String, Value, Value)> = Vec::new();
     let mut row = |name: &str, ours_j: f64, paper_pj: f64| {
-        t.row(vec![
+        rows.push((
             name.to_string(),
-            format!("{:.4}", ours_j * 1e12),
-            format!("{paper_pj}"),
-        ]);
+            Value::Num(ours_j * 1e12),
+            Value::Num(paper_pj),
+        ));
     };
     row(
         "e_m (96kB SRAM, per byte)",
@@ -175,26 +177,39 @@ pub fn table4() -> Table {
     row("e_load 4um pitch N=256", presets::reram_256().energy(), 0.08);
     row("e_load 250um pitch N=40", presets::photonic_40().energy(), 0.8);
     row("e_load 2.5um pitch N=2048", presets::slm_2048().energy(), 0.04);
-    // §A2 ReRAM bound + Table VII γs as footer rows.
-    let arr = ReramArray::default();
+    // §A2 ReRAM bound + Table VII γs as footer rows (pre-formatted: the
+    // ceiling prints at one decimal, the γs as a compound cell).
     row("e_ReRAM per MAC (A11, 70 mV)", arr.energy_per_mac(), 0.05);
-    t.row(vec![
-        "ReRAM ceiling (TOPS/W)".into(),
-        format!("{:.1}", 1.0 / (arr.energy_per_mac() * 1e12)),
-        "20".into(),
-    ]);
-    t.row(vec![
-        "gamma_mac / adc / dac / opt".into(),
-        format!(
+    rows.push((
+        "ReRAM ceiling (TOPS/W)".to_string(),
+        Value::text(format!("{:.1}", 1.0 / (arr.energy_per_mac() * 1e12))),
+        Value::text("20"),
+    ));
+    rows.push((
+        "gamma_mac / adc / dac / opt".to_string(),
+        Value::text(format!(
             "{:.0} / {:.0} / {:.0} / {:.0}",
             constants::GAMMA_MAC_45NM,
             constants::GAMMA_ADC_45NM,
             constants::GAMMA_DAC,
             gamma_opt(0.5)
-        ),
-        "1.2e5 / 927* / 39 / 105".into(),
-    ]);
-    t
+        )),
+        Value::text("1.2e5 / 927* / 39 / 105"),
+    ));
+
+    let rows = Arc::new(rows);
+    let (r1, r2, r3) = (rows.clone(), rows.clone(), rows.clone());
+    Scenario::new("Table IV — energy per operation (45 nm, 0.9 V, 8-bit)")
+        .items(rows.len())
+        .column("quantity", NumFmt::Display, move |c: &RowCtx| {
+            Value::Text(r1[c.index].0.clone())
+        })
+        .column("ours (pJ)", NumFmt::Fixed(4), move |c: &RowCtx| {
+            r2[c.index].1.clone()
+        })
+        .column("paper (pJ)", NumFmt::Display, move |c: &RowCtx| {
+            r3[c.index].2.clone()
+        })
 }
 
 /// Networks helper reused by figures: the Table I zoo plus SmallCNN.
@@ -210,14 +225,14 @@ mod tests {
 
     #[test]
     fn table1_has_8_networks_and_10_columns() {
-        let t = table1(1000);
+        let t = table1(1000).table();
         assert_eq!(t.rows.len(), 8);
         assert_eq!(t.headers.len(), 10);
     }
 
     #[test]
     fn table1_ours_close_to_paper_for_vgg() {
-        let t = table1(1000);
+        let t = table1(1000).table();
         let vgg = t.rows.iter().find(|r| r[0] == "VGG16").unwrap();
         let ours: f64 = vgg[8].parse().unwrap();
         let paper: f64 = vgg[9].parse().unwrap();
@@ -226,8 +241,8 @@ mod tests {
 
     #[test]
     fn table2_table3_render() {
-        let t2 = table2(1000);
-        let t3 = table3(1000);
+        let t2 = table2(1000).table();
+        let t3 = table3(1000).table();
         assert_eq!(t2.rows.len(), 8);
         assert_eq!(t3.rows.len(), 8);
         assert!(t2.render().contains("VGG19"));
@@ -236,7 +251,7 @@ mod tests {
 
     #[test]
     fn table4_matches_paper_within_rounding() {
-        let t = table4();
+        let t = table4().table();
         for row in &t.rows {
             let (Ok(ours), Ok(paper)) = (row[1].parse::<f64>(), row[2].parse::<f64>()) else {
                 continue; // footer rows
@@ -252,7 +267,7 @@ mod tests {
 
     #[test]
     fn csv_export_works() {
-        let csv = table1(1000).to_csv();
+        let csv = table1(1000).table().to_csv();
         assert!(csv.lines().count() == 9);
         assert!(csv.starts_with("network,"));
     }

@@ -18,13 +18,23 @@
 //! [`sweep`] is the grid runner on top: every (machine × network × node)
 //! point, evaluated through a shared cache by [`crate::util::pool`]
 //! workers, with records returned in deterministic machine-major order.
+//!
+//! The cache also **persists**: [`SweepCache::save`] snapshots every
+//! entry to a text file with bit-exact (hex `f64`) values, and
+//! [`SweepCache::load`] restores it — keyed by (config fingerprint,
+//! node, layer shape), so entries never alias across machine configs or
+//! processes and a repeated CLI invocation with `--cache-dir` replays
+//! instead of re-simulating. A corrupt, truncated or version-mismatched
+//! snapshot is *ignored in full* (fresh simulation), never trusted in
+//! part.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::machine::Machine;
-use super::SimResult;
+use super::{Component, SimResult};
 use crate::networks::{ConvLayer, Network};
 use crate::util::pool::Pool;
 
@@ -112,6 +122,159 @@ impl SweepCache {
             100.0 * h as f64 / total as f64
         )
     }
+
+    /// Price a whole network with the unique layer shapes fanned out
+    /// over `pool` first (one worker per unique (shape) tuple), then the
+    /// usual in-layer-order merge — so a single-network CLI call uses
+    /// every core while the total stays **bit-identical** to the serial
+    /// [`SweepCache::simulate_network`] path (the merge never reorders).
+    ///
+    /// Counter semantics: the warm-up records one lookup per unique
+    /// shape and the merge one (hit) per layer, so hits/misses count
+    /// both passes' lookups — a higher reuse % than the serial walk of
+    /// the same cold network would report.
+    pub fn simulate_network_par(
+        &self,
+        pool: &Pool,
+        machine: &dyn Machine,
+        net: &Network,
+        node_nm: f64,
+    ) -> SimResult {
+        let mut seen = HashSet::new();
+        let uniq: Vec<ConvLayer> = net
+            .layers
+            .iter()
+            .filter(|l| seen.insert(**l))
+            .copied()
+            .collect();
+        pool.par_for_each(&uniq, |l| {
+            let _ = self.simulate_layer(machine, l, node_nm);
+        });
+        // Every shape is now cached: the merge below is pure hits.
+        self.simulate_network(machine, net, node_nm)
+    }
+
+    // ---- persistence -----------------------------------------------------
+
+    /// Snapshot every cache entry to `path`. Entries are sorted by key,
+    /// so identical cache contents produce identical files; every `f64`
+    /// is written as its IEEE-754 bit pattern in hex, so a reload is
+    /// bit-identical to the simulation that produced it. The write is
+    /// atomic (temp file + rename), so an interrupted or concurrent
+    /// save leaves either the old snapshot or the new one — never a
+    /// truncated file that would silently cost a full re-simulation.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let entries = self.entries.lock().unwrap();
+        let mut keys: Vec<&Key> = entries.keys().collect();
+        keys.sort_by_key(|(fp, node, l)| (*fp, *node, l.n, l.c_in, l.c_out, l.kh, l.kw, l.stride));
+        let mut out = String::with_capacity(64 + keys.len() * 160);
+        out.push_str(&format!("{SNAPSHOT_MAGIC} {}\n", keys.len()));
+        for key in keys {
+            let (fp, node, l) = key;
+            let r = &entries[key];
+            out.push_str(&format!(
+                "{fp:016x} {node:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
+                l.n,
+                l.c_in,
+                l.c_out,
+                l.kh,
+                l.kw,
+                l.stride,
+                r.macs.to_bits(),
+                r.ops.to_bits(),
+                r.time_units.to_bits(),
+            ));
+            for c in Component::ALL {
+                out.push_str(&format!(" {:016x}", r.ledger.get(c).to_bits()));
+            }
+            out.push('\n');
+        }
+        // Same-directory temp (rename is only atomic within a
+        // filesystem); pid-suffixed so concurrent savers never clobber
+        // each other's staging file.
+        let file = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("sweep-cache");
+        let tmp = path.with_file_name(format!("{file}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, out)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Restore a cache from a [`SweepCache::save`] snapshot. Any anomaly
+    /// — missing file, wrong magic/version, bad field, truncated or
+    /// over-long body, negative/NaN energy — discards the whole snapshot
+    /// and returns an **empty** cache, so corruption can only ever cost
+    /// re-simulation, never wrong numbers.
+    pub fn load(path: &Path) -> SweepCache {
+        let parsed = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| parse_snapshot(&text));
+        match parsed {
+            Some(map) => SweepCache {
+                entries: Mutex::new(map),
+                hits: AtomicUsize::new(0),
+                misses: AtomicUsize::new(0),
+            },
+            None => SweepCache::new(),
+        }
+    }
+}
+
+/// Snapshot header: format name + version. Bump the version on any
+/// layout change — old files then deliberately fail to load.
+const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v1";
+
+/// Strict snapshot parser: `None` on ANY deviation (see
+/// [`SweepCache::load`]).
+fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
+    let mut lines = text.lines();
+    let header = lines.next()?;
+    let count: usize = header.strip_prefix(SNAPSHOT_MAGIC)?.trim().parse().ok()?;
+    // `count` is untrusted input: cap the pre-allocation so a corrupt
+    // header can't abort on a huge reserve — the map still grows to any
+    // genuine size.
+    let mut map = HashMap::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        let line = lines.next()?;
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        if tok.len() != 11 + Component::ALL.len() {
+            return None;
+        }
+        let fp = u64::from_str_radix(tok[0], 16).ok()?;
+        let node = u64::from_str_radix(tok[1], 16).ok()?;
+        let layer = ConvLayer {
+            n: tok[2].parse().ok()?,
+            c_in: tok[3].parse().ok()?,
+            c_out: tok[4].parse().ok()?,
+            kh: tok[5].parse().ok()?,
+            kw: tok[6].parse().ok()?,
+            stride: tok[7].parse().ok()?,
+        };
+        let f64_at = |i: usize| -> Option<f64> {
+            let v = f64::from_bits(u64::from_str_radix(tok[i], 16).ok()?);
+            // Simulation outputs are finite and non-negative; anything
+            // else is corruption.
+            (v.is_finite() && v >= 0.0).then_some(v)
+        };
+        let mut r = SimResult {
+            macs: f64_at(8)?,
+            ops: f64_at(9)?,
+            time_units: f64_at(10)?,
+            ..SimResult::default()
+        };
+        for (i, c) in Component::ALL.iter().enumerate() {
+            r.ledger.add(*c, f64_at(11 + i)?);
+        }
+        if map.insert((fp, node, layer), r).is_some() {
+            return None; // duplicate key: corrupt writer
+        }
+    }
+    // Exactly `count` entries and nothing but trailing whitespace after.
+    if lines.any(|l| !l.trim().is_empty()) {
+        return None;
+    }
+    Some(map)
 }
 
 /// One evaluated grid point of a sweep.

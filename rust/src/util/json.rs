@@ -1,0 +1,446 @@
+//! Dependency-free JSON tree: build, render (compact or pretty) and
+//! parse. The report layer's JSON sink ([`crate::report::Dataset::to_json`])
+//! emits through this module; the parser exists so tests (and the CI
+//! smoke step's local twin) can validate round-trips without pulling
+//! serde into the offline build.
+//!
+//! Numbers are `f64` and render through Rust's shortest-round-trip
+//! `Display` (which never uses exponent notation, so every rendering is
+//! a valid JSON number). Non-finite numbers render as `null` — JSON has
+//! no NaN/∞ — and the parser never produces them.
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object (no map: key order is part of the
+    /// emitted document and tests pin it).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Compact rendering (no whitespace).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty rendering: 2-space indent, one element per line.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let pad = |out: &mut String, depth: usize| {
+            if let Some(w) = indent {
+                out.push('\n');
+                for _ in 0..w * depth {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => out.push_str(&render_number(*v)),
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                pad(out, depth);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str(if indent.is_some() { "\": " } else { "\":" });
+                    v.write(out, indent, depth + 1);
+                }
+                pad(out, depth);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document (trailing whitespace allowed,
+    /// trailing garbage is an error). Nesting is bounded at
+    /// [`MAX_DEPTH`] so hostile input errors instead of blowing the
+    /// recursion stack.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(value)
+    }
+}
+
+/// Maximum container nesting the parser accepts (the emitter produces
+/// depth ≤ 4; 128 leaves generous headroom while keeping the recursive
+/// descent far from the thread stack limit).
+pub const MAX_DEPTH: usize = 128;
+
+/// Render a finite f64 as a JSON number (`null` otherwise).
+fn render_number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Escape a string body for embedding between JSON quotes.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected {lit:?} at byte {}", *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", *pos));
+    }
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'n') => expect(b, pos, "null").map(|_| Json::Null),
+        Some(b't') => expect(b, pos, "true").map(|_| Json::Bool(true)),
+        Some(b'f') => expect(b, pos, "false").map(|_| Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                let value = parse_value(b, pos, depth + 1)?;
+                fields.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {}", *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or("truncated \\u escape")?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                        // Surrogates (paired or lone) are rejected: the
+                        // emitter never produces them.
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or(format!("\\u{hex} is not a scalar value"))?,
+                        );
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {}", *pos)),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => {
+                return Err(format!("raw control byte {c:#04x} in string"));
+            }
+            Some(_) => {
+                // Copy one UTF-8 scalar (b is valid UTF-8: it came from &str).
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|e| e.to_string())?;
+                let ch = s.chars().next().unwrap();
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+/// RFC 8259 `number` grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+/// `f64::from_str` alone is laxer ("+1", "01", "1.", ".5") — accepting
+/// those would make this parser a weaker validator than the CI smoke
+/// step's `python -m json.tool`, which it mirrors.
+fn is_json_number(t: &[u8]) -> bool {
+    let mut i = 0;
+    if t.first() == Some(&b'-') {
+        i += 1;
+    }
+    let int_start = i;
+    while i < t.len() && t[i].is_ascii_digit() {
+        i += 1;
+    }
+    let int_len = i - int_start;
+    if int_len == 0 || (int_len > 1 && t[int_start] == b'0') {
+        return false;
+    }
+    if i < t.len() && t[i] == b'.' {
+        i += 1;
+        let frac_start = i;
+        while i < t.len() && t[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac_start {
+            return false;
+        }
+    }
+    if i < t.len() && (t[i] == b'e' || t[i] == b'E') {
+        i += 1;
+        if i < t.len() && (t[i] == b'+' || t[i] == b'-') {
+            i += 1;
+        }
+        let exp_start = i;
+        while i < t.len() && t[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == exp_start {
+            return false;
+        }
+    }
+    i == t.len()
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+    if !is_json_number(text.as_bytes()) {
+        return Err(format!("bad number {text:?} at byte {start}"));
+    }
+    text.parse::<f64>()
+        .ok()
+        // `f64::from_str` saturates overflow to ±inf; JSON has no such
+        // value and this module's contract is that the parser never
+        // produces non-finite numbers.
+        .filter(|v| v.is_finite())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number {text:?} at byte {start}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_compact_and_pretty() {
+        let j = Json::Obj(vec![
+            ("a".into(), Json::Num(1.5)),
+            ("b".into(), Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())])),
+        ]);
+        assert_eq!(j.render(), r#"{"a":1.5,"b":[1,"x"]}"#);
+        let p = j.pretty();
+        assert!(p.contains("\"a\": 1.5"));
+        assert!(p.starts_with('{') && p.ends_with('}'));
+    }
+
+    #[test]
+    fn integers_render_without_decimal_point() {
+        assert_eq!(Json::Num(59.0).render(), "59");
+        assert_eq!(Json::Num(-3.0).render(), "-3");
+    }
+
+    #[test]
+    fn non_finite_renders_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn escapes_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        // Commas and unicode pass through untouched.
+        assert_eq!(escape("Fig. 8 — systolic, YOLOv3"), "Fig. 8 — systolic, YOLOv3");
+    }
+
+    #[test]
+    fn parse_round_trips_both_renderings() {
+        let j = Json::Obj(vec![
+            ("title".into(), Json::Str("a, \"quoted\" title\nline2".into())),
+            ("n".into(), Json::Num(-1.25e-3)),
+            ("flags".into(), Json::Arr(vec![Json::Bool(true), Json::Null])),
+            ("empty_arr".into(), Json::Arr(vec![])),
+            ("empty_obj".into(), Json::Obj(vec![])),
+        ]);
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("[1] x").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nulL").is_err());
+        // Overflowing literals must not saturate to ±inf.
+        assert!(Json::parse("1e309").is_err());
+        assert!(Json::parse("-1e309").is_err());
+    }
+
+    #[test]
+    fn parse_enforces_rfc8259_number_grammar() {
+        for bad in ["+1", "01", "1.", ".5", "-", "1e", "1e+", "--1", "0x10"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        for good in ["0", "-0", "1.5", "-0.00125", "1e3", "1E-3", "12.5e+2"] {
+            assert!(Json::parse(good).is_ok(), "{good:?} must parse");
+        }
+    }
+
+    #[test]
+    fn parse_bounds_nesting_depth() {
+        let deep_ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let hostile = "[".repeat(200_000);
+        assert!(
+            Json::parse(&hostile).is_err(),
+            "deep nesting must error, not overflow the stack"
+        );
+    }
+
+    #[test]
+    fn parse_handles_nested_and_ws() {
+        let j = Json::parse(" { \"a\" : [ 1 , { \"b\" : \"c\" } ] } ").unwrap();
+        match j {
+            Json::Obj(f) => {
+                assert_eq!(f[0].0, "a");
+                match &f[0].1 {
+                    Json::Arr(items) => assert_eq!(items.len(), 2),
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert!(Json::parse("\"\\ud800\"").is_err(), "lone surrogate rejected");
+    }
+}

@@ -7,7 +7,9 @@
 //! * [`rng`] — xorshift/splitmix PRNG (deterministic, seedable).
 //! * [`prop`] — a property-based test runner with shrinking.
 //! * [`cli`] — a small declarative argument parser for the `aimc` binary.
-//! * [`table`] — aligned-column text tables + CSV emission.
+//! * [`table`] — aligned-column text tables + RFC-4180 CSV emission.
+//! * [`json`] — dependency-free JSON tree: build/render/parse (the
+//!   report layer's `--format json` sink).
 //! * [`stats`] — medians/means over layer populations.
 //! * [`pool`] — scoped work-stealing thread pool (`par_map` /
 //!   `par_for_each`) driving the parallel sweep engine.
@@ -15,6 +17,7 @@
 //!   lock-free fast path (the coordinator's per-worker batch lanes).
 
 pub mod cli;
+pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;

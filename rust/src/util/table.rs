@@ -63,32 +63,41 @@ impl Table {
         out
     }
 
-    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    /// Render as CSV: header line then data lines, RFC-4180 escaping
+    /// (cells containing commas, quotes, CR or LF are quoted; embedded
+    /// quotes doubled). The title is deliberately NOT emitted — CSV has
+    /// no comment syntax, and a bare title line (figure titles contain
+    /// commas: "Fig. 8 — systolic array, YOLOv3 @ 1000 px") would parse
+    /// as a ragged data record. Sinks that need the title carry it out
+    /// of band (the JSON sink embeds it as a field).
     pub fn to_csv(&self) -> String {
-        let esc = |c: &str| -> String {
-            if c.contains(',') || c.contains('"') {
-                format!("\"{}\"", c.replace('"', "\"\""))
-            } else {
-                c.to_string()
-            }
-        };
         let mut out = String::new();
         out.push_str(
             &self
                 .headers
                 .iter()
-                .map(|h| esc(h))
+                .map(|h| csv_escape(h))
                 .collect::<Vec<_>>()
                 .join(","),
         );
         out.push('\n');
         for row in &self.rows {
             out.push_str(
-                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+                &row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","),
             );
             out.push('\n');
         }
         out
+    }
+}
+
+/// RFC-4180 field escaping: quote when the cell contains a comma, a
+/// quote, or a line break; double embedded quotes.
+pub fn csv_escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') || cell.contains('\r') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
     }
 }
 
@@ -136,6 +145,78 @@ mod tests {
         let mut t = Table::new("", &["x"]);
         t.row(vec!["a,b".into()]);
         assert!(t.to_csv().contains("\"a,b\""));
+    }
+
+    /// Minimal RFC-4180 reader for the round-trip regression below:
+    /// splits records on unquoted newlines, fields on unquoted commas,
+    /// undoubles quotes.
+    fn csv_parse(text: &str) -> Vec<Vec<String>> {
+        let mut records = vec![vec![String::new()]];
+        let mut quoted = false;
+        let mut chars = text.chars().peekable();
+        while let Some(ch) = chars.next() {
+            let rec = records.last_mut().unwrap();
+            if quoted {
+                match ch {
+                    '"' if chars.peek() == Some(&'"') => {
+                        chars.next();
+                        rec.last_mut().unwrap().push('"');
+                    }
+                    '"' => quoted = false,
+                    c => rec.last_mut().unwrap().push(c),
+                }
+            } else {
+                match ch {
+                    '"' => quoted = true,
+                    ',' => rec.push(String::new()),
+                    '\n' => records.push(vec![String::new()]),
+                    c => rec.last_mut().unwrap().push(c),
+                }
+            }
+        }
+        assert!(!quoted, "unterminated quoted field");
+        // Trailing newline leaves one empty record behind.
+        if records.last().map(|r| r == &[String::new()]) == Some(true) {
+            records.pop();
+        }
+        records
+    }
+
+    #[test]
+    fn csv_round_trips_commas_quotes_and_newlines() {
+        // Regression for the report-title case: a comma-laden title must
+        // never leak into the CSV body, and comma/quote/newline cells
+        // must survive an RFC-4180 read-back bit-for-bit.
+        let mut t = Table::new(
+            "Fig. 8 — systolic array, YOLOv3 @ 1000 px",
+            &["network, resolution", "eta \"best\"", "note"],
+        );
+        t.row(vec![
+            "YOLOv3, 1 Mpx".into(),
+            "3.141".into(),
+            "line1\nline2".into(),
+        ]);
+        t.row(vec!["plain".into(), "2".into(), "says \"hi\"".into()]);
+        let csv = t.to_csv();
+        // The title appears nowhere in the emitted CSV.
+        assert!(!csv.contains("Fig. 8"));
+        let parsed = csv_parse(&csv);
+        assert_eq!(parsed.len(), 3, "header + 2 records: {parsed:?}");
+        assert_eq!(
+            parsed[0],
+            vec!["network, resolution", "eta \"best\"", "note"]
+        );
+        assert_eq!(parsed[1], vec!["YOLOv3, 1 Mpx", "3.141", "line1\nline2"]);
+        assert_eq!(parsed[2], vec!["plain", "2", "says \"hi\""]);
+    }
+
+    #[test]
+    fn csv_escape_cases() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("a\nb"), "\"a\nb\"");
+        assert_eq!(csv_escape("a\rb"), "\"a\rb\"");
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Golden pins for the Scenario API redesign: the rendered text and CSV
+//! of every report subcommand must be **byte-identical** to the
+//! pre-scenario CLI. Each `legacy_*` function below is a faithful
+//! mirror of the hand-rolled driver the scenario replaced (same call
+//! sequence, same `format!` strings, same row order); the tests assert
+//! the new `Scenario → Dataset → sink` route reproduces it exactly.
+//!
+//! All tests share one process-wide [`SweepCache`]: legacy and scenario
+//! sides replay identical [`SimResult`]s from it, and repeated layer
+//! shapes across tests simulate once — the same dedup contract the CLI
+//! relies on.
+
+use std::sync::OnceLock;
+
+use aimc::analytic::{Processor, Workload};
+use aimc::networks::{by_name, zoo, Network};
+use aimc::report::figures::median_layer;
+use aimc::report::{self, EvalCtx};
+use aimc::simulator::machine::all_machines;
+use aimc::simulator::{optical4f, sweep, systolic, Component, Machine, SimResult, SweepCache};
+use aimc::technode::NODES;
+use aimc::util::json::Json;
+use aimc::util::pool::Pool;
+use aimc::util::table::{sci, Table};
+
+fn shared_cache() -> &'static SweepCache {
+    static CACHE: OnceLock<SweepCache> = OnceLock::new();
+    CACHE.get_or_init(SweepCache::new)
+}
+
+fn ctx() -> EvalCtx<'static> {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    EvalCtx {
+        pool: POOL.get_or_init(Pool::auto),
+        cache: shared_cache(),
+    }
+}
+
+/// Assert the scenario's text and CSV renderings both match the legacy
+/// table byte for byte.
+fn assert_golden(legacy: &Table, scenario: &report::Scenario) {
+    let ds = scenario.eval(&ctx());
+    assert_eq!(
+        legacy.render(),
+        ds.render(),
+        "text rendering drifted: {}",
+        legacy.title
+    );
+    assert_eq!(
+        legacy.to_csv(),
+        ds.to_csv(),
+        "CSV rendering drifted: {}",
+        legacy.title
+    );
+}
+
+fn net_or_yolo(name: Option<&str>, input: usize) -> Network {
+    name.and_then(|n| by_name(n, input))
+        .unwrap_or_else(|| aimc::networks::yolov3::yolov3(input))
+}
+
+// ---- legacy mirrors (verbatim ports of the pre-scenario drivers) -------
+
+fn legacy_fig6() -> Table {
+    let w = Workload::reference();
+    let mut t = Table::new(
+        "Fig. 6 — analytic efficiency vs technology node (TOPS/W, Table V layer)",
+        &["node (nm)", "CPU", "DIM", "SP", "O4F"],
+    );
+    for n in NODES {
+        let mut cells = vec![format!("{:.0}", n.nm)];
+        for p in Processor::ALL {
+            cells.push(format!("{:.3}", p.efficiency(&w, n.nm).tops_per_watt()));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+fn legacy_fig7() -> Table {
+    let w = Workload::reference();
+    let mut t = Table::new(
+        "Fig. 7 — energy per operation breakdown at 32 nm (pJ/op, Table V layer)",
+        &["processor", "memory", "compute", "total", "eta (TOPS/W)"],
+    );
+    for p in Processor::ALL {
+        let e = p.efficiency(&w, 32.0);
+        t.row(vec![
+            p.short().to_string(),
+            format!("{:.4}", e.e_mem * 1e12),
+            format!("{:.4}", e.e_comp * 1e12),
+            format!("{:.4}", e.per_op() * 1e12),
+            format!("{:.3}", e.tops_per_watt()),
+        ]);
+    }
+    t
+}
+
+fn legacy_fig8(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
+    let net = net_or_yolo(net, input);
+    let cfg = systolic::SystolicConfig::default();
+    let med_layer = median_layer(&net);
+    let w = Workload::from_layer(med_layer);
+    let mut t = Table::new(
+        &format!(
+            "Fig. 8 — systolic array, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
+            net.name, input
+        ),
+        &["node (nm)", "cycle-accurate", "analytic eq.(5)", "ratio"],
+    );
+    for n in NODES {
+        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
+        let ana = aimc::analytic::in_memory::Config::tpu_like()
+            .efficiency(&w, n.nm)
+            .tops_per_watt();
+        t.row(vec![
+            format!("{:.0}", n.nm),
+            format!("{sim:.3}"),
+            format!("{ana:.3}"),
+            format!("{:.2}", sim / ana),
+        ]);
+    }
+    t
+}
+
+fn legacy_fig9(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
+    let net = net_or_yolo(net, input);
+    let cfg = optical4f::Optical4FConfig::default();
+    let w = Workload::from_layer(median_layer(&net));
+    let mut t = Table::new(
+        &format!(
+            "Fig. 9 — optical 4F, {} @ {} px: cycle-accurate vs analytic (TOPS/W)",
+            net.name, input
+        ),
+        &["node (nm)", "cycle-accurate", "analytic eq.(24)", "ratio"],
+    );
+    for n in NODES {
+        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
+        let ana = aimc::analytic::optical4f::Config::default_4mpx()
+            .efficiency(&w, n.nm)
+            .tops_per_watt();
+        t.row(vec![
+            format!("{:.0}", n.nm),
+            format!("{sim:.3}"),
+            format!("{ana:.3}"),
+            format!("{:.2}", sim / ana),
+        ]);
+    }
+    t
+}
+
+fn legacy_fig10(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
+    let net = net_or_yolo(net, input);
+    let cfg = optical4f::Optical4FConfig::default();
+    let mut t = Table::new(
+        &format!(
+            "Fig. 10 — optical 4F energy distribution, {} @ {} px (pJ/MAC)",
+            net.name, input
+        ),
+        &["node (nm)", "DAC", "ADC", "SRAM", "laser", "total"],
+    );
+    for n in NODES {
+        let r = cache.simulate_network(&cfg, &net, n.nm);
+        let per = |c: Component| r.ledger.get(c) / r.macs * 1e12;
+        t.row(vec![
+            format!("{:.0}", n.nm),
+            format!("{:.4}", per(Component::Dac)),
+            format!("{:.4}", per(Component::Adc)),
+            format!("{:.4}", per(Component::Sram)),
+            format!("{:.4}", per(Component::Laser)),
+            format!("{:.4}", r.energy_per_mac() * 1e12),
+        ]);
+    }
+    t
+}
+
+fn legacy_crossval(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
+    let net = net_or_yolo(net, input);
+    let machines = all_machines();
+    let mut t = Table::new(
+        &format!(
+            "Cross-validation (extension) — cycle-accurate TOPS/W, {} @ {} px",
+            net.name, input
+        ),
+        &["node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
+    );
+    for n in NODES {
+        let mut cells = vec![format!("{:.0}", n.nm)];
+        for m in &machines {
+            cells.push(format!(
+                "{:.3}",
+                cache.simulate_network(m.as_ref(), &net, n.nm).tops_per_watt()
+            ));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+fn legacy_table1(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table I — conv-layer statistics (1 Mpx input; ours / paper)",
+        &[
+            "network", "layers", "med n", "med Ci", "max N", "avg k", "total K",
+            "med Ci+1", "med a", "paper a",
+        ],
+    );
+    for net in zoo(input) {
+        let r = aimc::networks::stats::table1_row(&net);
+        let pa = report::PAPER_TABLE1
+            .iter()
+            .find(|p| p.0 == net.name)
+            .map(|p| p.8)
+            .unwrap_or(f64::NAN);
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_ci),
+            sci(r.max_input),
+            format!("{:.1}", r.avg_k),
+            sci(r.total_weights),
+            format!("{:.0}", r.median_co),
+            format!("{:.0}", r.median_a),
+            format!("{pa:.0}"),
+        ]);
+    }
+    t
+}
+
+fn legacy_table2(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table II — median matmul dims (eq. 16; ours / paper)",
+        &["network", "layers", "L'", "N'", "M'", "paper L'", "paper N'", "paper M'"],
+    );
+    for net in zoo(input) {
+        let r = aimc::networks::stats::table2_row(&net);
+        let p = report::PAPER_TABLE2
+            .iter()
+            .find(|p| p.0 == net.name)
+            .copied()
+            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_l),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_m),
+            format!("{:.0}", p.1),
+            format!("{:.0}", p.2),
+            format!("{:.0}", p.3),
+        ]);
+    }
+    t
+}
+
+fn legacy_table3(input: usize) -> Table {
+    let mut t = Table::new(
+        "Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)",
+        &["network", "layers", "L", "N", "M", "paper L", "paper N", "paper M"],
+    );
+    for net in zoo(input) {
+        let r = aimc::networks::stats::table3_row(&net, None);
+        let p = report::PAPER_TABLE3
+            .iter()
+            .find(|p| p.0 == net.name)
+            .copied()
+            .unwrap_or((net.name, f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            r.name.to_string(),
+            r.num_layers.to_string(),
+            format!("{:.0}", r.median_l),
+            format!("{:.0}", r.median_n),
+            format!("{:.0}", r.median_m),
+            format!("{:.0}", p.1),
+            format!("{:.0}", p.2),
+            format!("{:.0}", p.3),
+        ]);
+    }
+    t
+}
+
+fn legacy_table4() -> Table {
+    use aimc::energy::{
+        constants,
+        converter::{adc_energy, dac_energy},
+        load::presets,
+        logic::mac_energy,
+        optical::{gamma_opt, optical_energy},
+        reram::ReramArray,
+        sram,
+    };
+    let mut t = Table::new(
+        "Table IV — energy per operation (45 nm, 0.9 V, 8-bit)",
+        &["quantity", "ours (pJ)", "paper (pJ)"],
+    );
+    let mut row = |name: &str, ours_j: f64, paper_pj: f64| {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.4}", ours_j * 1e12),
+            format!("{paper_pj}"),
+        ]);
+    };
+    row(
+        "e_m (96kB SRAM, per byte)",
+        sram::energy_per_byte_45nm(96 * 1024),
+        4.3,
+    );
+    row("e_mac", mac_energy(constants::GAMMA_MAC_45NM, 8), 0.23);
+    row("e_adc", adc_energy(constants::GAMMA_ADC_45NM, 8), 0.25);
+    row("e_dac", dac_energy(constants::GAMMA_DAC, 8), 0.01);
+    row("e_opt", optical_energy(constants::ETA_OPT, 8), 0.01);
+    row("e_load 4um pitch N=256", presets::reram_256().energy(), 0.08);
+    row("e_load 250um pitch N=40", presets::photonic_40().energy(), 0.8);
+    row("e_load 2.5um pitch N=2048", presets::slm_2048().energy(), 0.04);
+    let arr = ReramArray::default();
+    row("e_ReRAM per MAC (A11, 70 mV)", arr.energy_per_mac(), 0.05);
+    t.row(vec![
+        "ReRAM ceiling (TOPS/W)".into(),
+        format!("{:.1}", 1.0 / (arr.energy_per_mac() * 1e12)),
+        "20".into(),
+    ]);
+    t.row(vec![
+        "gamma_mac / adc / dac / opt".into(),
+        format!(
+            "{:.0} / {:.0} / {:.0} / {:.0}",
+            constants::GAMMA_MAC_45NM,
+            constants::GAMMA_ADC_45NM,
+            constants::GAMMA_DAC,
+            gamma_opt(0.5)
+        ),
+        "1.2e5 / 927* / 39 / 105".into(),
+    ]);
+    t
+}
+
+fn legacy_zoo(input: usize) -> Table {
+    let mut t = Table::new(
+        &format!("network zoo @ {input} px"),
+        &["network", "conv layers", "GMACs", "weights (M)"],
+    );
+    for net in zoo(input) {
+        t.row(vec![
+            net.name.to_string(),
+            net.num_layers().to_string(),
+            format!("{:.1}", net.total_macs() / 1e9),
+            format!("{:.1}", net.total_weights() / 1e6),
+        ]);
+    }
+    t
+}
+
+fn legacy_sweep(input: usize, cache: &SweepCache) -> Table {
+    let machines = all_machines();
+    let nets = zoo(input);
+    let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
+    let records = sweep::sweep_on(&Pool::auto(), &machines, &nets, &nodes, cache);
+    let mut t = Table::new(
+        &format!(
+            "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes @ {input} px",
+            machines.len(),
+            nets.len(),
+            nodes.len()
+        ),
+        &["network", "node (nm)", "systolic", "ReRAM", "photonic", "optical 4F"],
+    );
+    let stride = nets.len() * nodes.len();
+    for ni in 0..nets.len() {
+        for ki in 0..nodes.len() {
+            let mut cells = vec![nets[ni].name.to_string(), format!("{:.0}", nodes[ki])];
+            for mi in 0..machines.len() {
+                let r = &records[mi * stride + ni * nodes.len() + ki];
+                cells.push(format!("{:.3}", r.result.tops_per_watt()));
+            }
+            t.row(cells);
+        }
+    }
+    t
+}
+
+// ---- the pins ----------------------------------------------------------
+
+#[test]
+fn golden_fig6() {
+    assert_golden(&legacy_fig6(), &report::fig6());
+}
+
+#[test]
+fn golden_fig7() {
+    assert_golden(&legacy_fig7(), &report::fig7());
+}
+
+#[test]
+fn golden_fig8() {
+    assert_golden(&legacy_fig8(None, 1000, shared_cache()), &report::fig8(None, 1000));
+}
+
+#[test]
+fn golden_fig9() {
+    assert_golden(&legacy_fig9(None, 1000, shared_cache()), &report::fig9(None, 1000));
+}
+
+#[test]
+fn golden_fig10_both_networks() {
+    assert_golden(
+        &legacy_fig10(Some("VGG19"), 1000, shared_cache()),
+        &report::fig10(Some("VGG19"), 1000),
+    );
+    assert_golden(
+        &legacy_fig10(Some("YOLOv3"), 1000, shared_cache()),
+        &report::fig10(Some("YOLOv3"), 1000),
+    );
+}
+
+#[test]
+fn golden_crossval() {
+    assert_golden(
+        &legacy_crossval(None, 1000, shared_cache()),
+        &report::crossval(None, 1000),
+    );
+}
+
+#[test]
+fn golden_table1() {
+    assert_golden(&legacy_table1(1000), &report::table1(1000));
+}
+
+#[test]
+fn golden_table2() {
+    assert_golden(&legacy_table2(1000), &report::table2(1000));
+}
+
+#[test]
+fn golden_table3() {
+    assert_golden(&legacy_table3(1000), &report::table3(1000));
+}
+
+#[test]
+fn golden_table4() {
+    assert_golden(&legacy_table4(), &report::table4());
+}
+
+#[test]
+fn golden_zoo() {
+    assert_golden(&legacy_zoo(1000), &report::zoo_scenario(1000));
+}
+
+#[test]
+fn golden_sweep_grid() {
+    // Reduced input keeps the full 4×8×13 grid affordable in debug
+    // builds; both sides run at the same resolution, so the pin is as
+    // strict as at 1 Mpx.
+    let input = 240;
+    assert_golden(&legacy_sweep(input, shared_cache()), &report::sweep_scenario(input));
+}
+
+#[test]
+fn golden_all_list_matches_legacy_emission_order() {
+    let titles: Vec<String> = report::all_scenarios(None, 1000)
+        .iter()
+        .map(|s| s.title().to_string())
+        .collect();
+    assert_eq!(
+        titles,
+        vec![
+            "Table I — conv-layer statistics (1 Mpx input; ours / paper)".to_string(),
+            "Table II — median matmul dims (eq. 16; ours / paper)".into(),
+            "Table III — median optical-4F dims (eq. 23, C'→∞; ours / paper)".into(),
+            "Table IV — energy per operation (45 nm, 0.9 V, 8-bit)".into(),
+            "Fig. 6 — analytic efficiency vs technology node (TOPS/W, Table V layer)".into(),
+            "Fig. 7 — energy per operation breakdown at 32 nm (pJ/op, Table V layer)".into(),
+            "Fig. 8 — systolic array, YOLOv3 @ 1000 px: cycle-accurate vs analytic (TOPS/W)".into(),
+            "Fig. 9 — optical 4F, YOLOv3 @ 1000 px: cycle-accurate vs analytic (TOPS/W)".into(),
+            "Fig. 10 — optical 4F energy distribution, VGG19 @ 1000 px (pJ/MAC)".into(),
+            "Fig. 10 — optical 4F energy distribution, YOLOv3 @ 1000 px (pJ/MAC)".into(),
+        ]
+    );
+}
+
+#[test]
+fn json_sink_emits_one_valid_document_for_all() {
+    // Local twin of the CI smoke step: `aimc all --format json` buffers
+    // every dataset and prints one top-level array — build the same
+    // array here (small input) and require it to parse.
+    let input = 120;
+    let c = ctx();
+    let docs: Vec<Json> = report::all_scenarios(None, input)
+        .iter()
+        .map(|s| s.eval(&c).to_json())
+        .collect();
+    let rendered = Json::Arr(docs).pretty();
+    let parsed = Json::parse(&rendered).expect("aimc all --format json must be valid JSON");
+    match parsed {
+        Json::Arr(items) => {
+            assert_eq!(items.len(), 10);
+            // Every dataset object carries title/columns/rows with typed
+            // cells (numbers stay numbers — the sweep columns must not be
+            // strings).
+            for item in &items {
+                match item {
+                    Json::Obj(fields) => {
+                        assert_eq!(fields[0].0, "title");
+                        assert_eq!(fields[1].0, "columns");
+                        assert_eq!(fields[2].0, "rows");
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn persisted_cache_makes_second_sweep_pure_replay() {
+    // The `aimc sweep --cache-dir` contract: run once, persist, run
+    // again from the snapshot — the second run must be 100% cache reuse
+    // (zero misses) and byte-identical output.
+    let input = 160;
+    let path = std::env::temp_dir().join(format!(
+        "aimc-golden-sweepcache-{}.txt",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let pool = Pool::auto();
+    let first_cache = SweepCache::new();
+    let first = report::sweep_scenario(input).eval(&EvalCtx {
+        pool: &pool,
+        cache: &first_cache,
+    });
+    first_cache.save(&path).expect("snapshot written");
+
+    let second_cache = SweepCache::load(&path);
+    assert_eq!(second_cache.len(), first_cache.len(), "full snapshot restored");
+    let second = report::sweep_scenario(input).eval(&EvalCtx {
+        pool: &pool,
+        cache: &second_cache,
+    });
+    assert_eq!(second_cache.misses(), 0, "persisted run must not simulate");
+    assert!(second_cache.hits() > 0);
+    let reuse = second_cache.hits() as f64
+        / (second_cache.hits() + second_cache.misses()) as f64;
+    assert_eq!(reuse, 1.0, "reuse must be 100%: {}", second_cache.stats());
+    assert_eq!(first.render(), second.render(), "replayed output drifted");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The fan-out path behind `aimc simulate`: unique-layer `par_map`
+/// pricing must merge bit-identically to the serial network walk, for
+/// every machine.
+#[test]
+fn layer_fanout_merge_bit_identical() {
+    let net = aimc::networks::yolov3::yolov3(300);
+    for m in all_machines() {
+        let serial: SimResult = m.simulate_network(&net, 28.0);
+        for threads in [1, 4] {
+            let cache = SweepCache::new();
+            let par = cache.simulate_network_par(&Pool::new(threads), m.as_ref(), &net, 28.0);
+            assert_eq!(serial.macs, par.macs, "{}", m.name());
+            assert_eq!(serial.ops, par.ops, "{}", m.name());
+            assert_eq!(serial.time_units, par.time_units, "{}", m.name());
+            for c in Component::ALL {
+                assert_eq!(
+                    serial.ledger.get(c),
+                    par.ledger.get(c),
+                    "{} {c:?}",
+                    m.name()
+                );
+            }
+        }
+    }
+}

@@ -198,3 +198,150 @@ fn machine_lookup_round_trips_cli_names() {
         assert_eq!(again.fingerprint(), m.fingerprint());
     }
 }
+
+// ---- persistent cache (save/load snapshots) ----------------------------
+
+/// Unique temp path per test so parallel test threads never collide.
+fn temp_snapshot(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "aimc-sweepcache-test-{}-{tag}.txt",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn prop_snapshot_round_trip_bit_identical() {
+    let machines = all_machines();
+    let path = temp_snapshot("roundtrip");
+    check(15, |g| {
+        let net = random_net(g);
+        let node = *g.choose(&[45.0, 28.0, 7.0]);
+        let m = g.choose(&machines);
+        let cache = SweepCache::new();
+        let direct = cache.simulate_network(m.as_ref(), &net, node);
+        cache.save(&path).expect("save");
+        let restored = SweepCache::load(&path);
+        prop_assert(restored.len() == cache.len(), "entry count restored")?;
+        let replayed = restored.simulate_network(m.as_ref(), &net, node);
+        prop_assert(restored.misses() == 0, "replay must not simulate")?;
+        assert_bit_identical(&direct, &replayed, m.name())
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_corruption_is_ignored_not_trusted() {
+    let cache = SweepCache::new();
+    let net = aimc::networks::yolov3::yolov3(200);
+    let m = by_name("systolic").unwrap();
+    let _ = cache.simulate_network(m.as_ref(), &net, 45.0);
+    let path = temp_snapshot("corrupt");
+    cache.save(&path).expect("save");
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // A pristine snapshot loads in full…
+    assert_eq!(SweepCache::load(&path).len(), cache.len());
+
+    // …and every corruption mode loads as EMPTY (fresh simulation), not
+    // partially:
+    let cases: Vec<(&str, String)> = vec![
+        ("missing file", String::new()),
+        ("garbage", "not a snapshot at all\n".to_string()),
+        ("wrong version", good.replacen("-v1", "-v9", 1)),
+        ("truncated body", {
+            let cut = good.len() / 2;
+            good[..cut].to_string()
+        }),
+        ("dropped line", {
+            let mut lines: Vec<&str> = good.lines().collect();
+            lines.remove(lines.len() / 2);
+            format!("{}\n", lines.join("\n"))
+        }),
+        ("extra line", format!("{good}deadbeef\n")),
+        ("negative energy", {
+            // Flip one stored f64 to a negative value's bit pattern.
+            let neg = format!("{:016x}", (-1.0f64).to_bits());
+            let mut lines: Vec<String> = good.lines().map(String::from).collect();
+            let mut tok: Vec<String> =
+                lines[1].split_whitespace().map(String::from).collect();
+            let last = tok.len() - 1;
+            tok[last] = neg;
+            lines[1] = tok.join(" ");
+            format!("{}\n", lines.join("\n"))
+        }),
+    ];
+    for (what, text) in cases {
+        if what == "missing file" {
+            let _ = std::fs::remove_file(&path);
+        } else {
+            std::fs::write(&path, &text).unwrap();
+        }
+        let loaded = SweepCache::load(&path);
+        assert_eq!(loaded.len(), 0, "{what}: corrupt snapshot must load empty");
+        // And a fresh simulation through it still produces exact results.
+        let r = loaded.simulate_network(m.as_ref(), &net, 45.0);
+        let direct = m.simulate_network(&net, 45.0);
+        assert_bit_identical(&direct, &r, what).unwrap();
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_never_aliases_across_config_fingerprints() {
+    // Process A persists a cache built with one systolic config; process
+    // B (simulated here by a reload) runs a DIFFERENT config: the
+    // snapshot must contribute zero hits — fingerprints key the entries.
+    use aimc::simulator::systolic::SystolicConfig;
+    let layer = ConvLayer::square(64, 32, 32, 3, 1);
+    let net = Network {
+        name: "one-layer",
+        layers: vec![layer],
+    };
+    let small = SystolicConfig {
+        dim: 64,
+        banks: 64,
+        ..Default::default()
+    };
+    let big = SystolicConfig::default();
+
+    let path = temp_snapshot("alias");
+    let writer = SweepCache::new();
+    let small_result = writer.simulate_network(&small, &net, 45.0);
+    writer.save(&path).expect("save");
+
+    let reader = SweepCache::load(&path);
+    let big_result = reader.simulate_network(&big, &net, 45.0);
+    assert_eq!(reader.hits(), 0, "different fingerprint must not hit");
+    assert_eq!(reader.misses(), 1);
+    assert!(
+        small_result.ledger.total() != big_result.ledger.total(),
+        "distinct configs must price differently"
+    );
+    // Same config + same snapshot DOES hit, bit-identically.
+    let reader2 = SweepCache::load(&path);
+    let replay = reader2.simulate_network(&small, &net, 45.0);
+    assert_eq!(reader2.hits(), 1);
+    assert_eq!(reader2.misses(), 0);
+    assert_bit_identical(&small_result, &replay, "same fingerprint").unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_files_are_deterministic() {
+    // Same cache contents → same bytes (entries are key-sorted), so
+    // repeated CLI runs don't churn the cache directory.
+    let cache = SweepCache::new();
+    let net = aimc::networks::vgg::vgg16(200);
+    for m in all_machines() {
+        let _ = cache.simulate_network(m.as_ref(), &net, 28.0);
+    }
+    let (p1, p2) = (temp_snapshot("det1"), temp_snapshot("det2"));
+    cache.save(&p1).unwrap();
+    SweepCache::load(&p1).save(&p2).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&p1).unwrap(),
+        std::fs::read_to_string(&p2).unwrap()
+    );
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
