@@ -88,7 +88,9 @@ fn main() {
     }
 
     // ---- 4. electro-optic modulator energy (planar photonics) --------------
-    println!("\n4) silicon-photonic modulator energy (today 7 pJ → future 0.5 pJ → research 0.05 pJ):");
+    println!(
+        "\n4) silicon-photonic modulator energy (today 7 pJ → future 0.5 pJ → research 0.05 pJ):"
+    );
     for e_mod in [7e-12, 0.5e-12, 0.05e-12] {
         let cfg = photonic::Config {
             e_modulator: e_mod,

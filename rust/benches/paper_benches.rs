@@ -160,20 +160,29 @@ fn bench_sweep_engine(input: usize) {
 }
 
 /// Serving-path scaling harness: a (worker count × offered concurrency)
-/// grid, closed-loop with a bounded number of outstanding requests,
-/// recorded to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`).
-/// Runs against the real PJRT engine when artifacts are available and
-/// falls back to the deterministic [`SimExecutor`] otherwise, so the
-/// scaling record exists in every environment — the point is how
-/// throughput and p99 move with workers and load, which the sharded
-/// lanes determine, not the backend.
+/// grid, recorded to `BENCH_serve.json` (override with
+/// `BENCH_SERVE_JSON`). `offered` is realized as that many *client
+/// threads* in a closed loop (one outstanding request each), so high
+/// offered load exercises the sharded ingress the way production
+/// traffic would — many threads admitting concurrently — instead of one
+/// thread feeding a queue. Runs against the real PJRT engine when
+/// artifacts are available and falls back to the deterministic
+/// [`SimExecutor`] otherwise; the sim backend uses a deliberately small
+/// per-batch cost so the serving path (admission, ingress shards,
+/// dispatch, lanes, per-batch energy pricing) is the measured object,
+/// not the executor's sleep. Each run also records the per-batch energy
+/// accounting the workers accumulated — projected µJ/inference on the
+/// paper's machines for the exact workload the latency numbers came
+/// from.
 fn bench_serve() {
     use aimc::coordinator::exec::SimExecutor;
-    use std::collections::VecDeque;
 
     let have_engine = Engine::discover().is_ok();
     let backend = if have_engine { "pjrt" } else { "sim" };
-    let n = 256usize;
+    // Enough requests that a run's wall time swamps thread start-up; the
+    // PJRT backend is orders of magnitude slower per request, so it gets
+    // a smaller grid.
+    let n = if have_engine { 256usize } else { 4096 };
     let mut rng = Rng::new(2);
     // A small image pool: the bench times the server, not the PRNG.
     let images: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
@@ -191,44 +200,61 @@ fn bench_serve() {
             let server = if have_engine {
                 Server::start(cfg).unwrap()
             } else {
-                Server::start_sim(cfg, SimExecutor::default()).unwrap()
+                Server::start_sim(
+                    cfg,
+                    SimExecutor::new(Duration::from_micros(10), Duration::from_micros(1)),
+                )
+                .unwrap()
             };
             let _ = server.infer_blocking(images[0].clone()); // warm path
+            let per_client = n / offered;
+            let total = per_client * offered;
             let t0 = Instant::now();
-            let mut outstanding: VecDeque<_> = VecDeque::with_capacity(offered);
-            let mut ok = 0usize;
-            for i in 0..n {
-                outstanding.push_back(server.infer(images[i % images.len()].clone()));
-                if outstanding.len() >= offered {
-                    let rx = outstanding.pop_front().unwrap();
-                    if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
-                        ok += 1;
-                    }
+            let ok: usize = std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(offered);
+                for c in 0..offered {
+                    let server = &server;
+                    let images = &images;
+                    handles.push(s.spawn(move || {
+                        let mut ok = 0usize;
+                        for i in 0..per_client {
+                            let img = images[(c + i) % images.len()].clone();
+                            if server.infer_blocking(img).is_ok() {
+                                ok += 1;
+                            }
+                        }
+                        ok
+                    }));
                 }
-            }
-            while let Some(rx) = outstanding.pop_front() {
-                if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
-                    ok += 1;
-                }
-            }
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
             let wall = t0.elapsed().as_secs_f64();
             let m = server.shutdown();
-            let rps = n as f64 / wall;
+            let rps = total as f64 / wall;
             println!(
                 "serve[{backend}]: {workers} workers, {offered:>2} offered: \
-                 {rps:>8.0} req/s, p50 {:>7.2} ms, p99 {:>7.2} ms, mean batch {:.2}",
+                 {rps:>8.0} req/s, p50 {:>7.2} ms, p99 {:>7.2} ms, mean batch {:.2}, \
+                 {:.2} µJ/inf systolic",
                 m.percentile_us(50.0) as f64 / 1e3,
                 m.percentile_us(99.0) as f64 / 1e3,
                 m.mean_batch(),
+                m.systolic_uj_per_inference(),
             );
             runs.push(format!(
-                "    {{ \"workers\": {workers}, \"offered\": {offered}, \"requests\": {n}, \
+                "    {{ \"workers\": {workers}, \"offered\": {offered}, \"requests\": {total}, \
                  \"ok\": {ok}, \"throughput_rps\": {rps:.1}, \"p50_us\": {}, \"p99_us\": {}, \
-                 \"mean_batch\": {:.2}, \"rejected\": {} }}",
+                 \"mean_batch\": {:.2}, \"rejected\": {}, \"energy_node_nm\": {}, \
+                 \"sys_uj_per_inf\": {:.4}, \"opt_uj_per_inf\": {:.4}, \
+                 \"energy_batches\": {}, \"energy_images\": {} }}",
                 m.percentile_us(50.0),
                 m.percentile_us(99.0),
                 m.mean_batch(),
                 m.rejected(),
+                m.energy_node_nm(),
+                m.systolic_uj_per_inference(),
+                m.optical_uj_per_inference(),
+                m.energy_batches(),
+                m.energy_images(),
             ));
         }
     }

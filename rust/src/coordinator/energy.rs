@@ -1,9 +1,18 @@
-//! Per-request energy co-simulation.
+//! Per-batch energy co-simulation.
 //!
-//! While the PJRT engine computes the *answer*, the cycle-accurate
+//! While the execution backend computes the *answer*, the cycle-accurate
 //! simulators price the same layer schedule on the paper's machines, so
 //! every served batch carries a projected joules-per-inference for each
 //! architecture — the hw/sw-codesign readout of the serving stack.
+//!
+//! The server calls [`co_simulate_cached`] from each worker after every
+//! executed batch, against one [`SweepCache`] shared by all workers: the
+//! first batch anywhere simulates the layer schedule, every later batch
+//! is pure map lookups. The per-batch reports accumulate into the
+//! worker's metrics shard (`Metrics::record_energy`) and merge at
+//! shutdown, so `aimc serve` and `BENCH_serve.json` report measured
+//! latency/throughput alongside projected µJ-per-inference from the
+//! same workload.
 
 use crate::networks::Network;
 use crate::simulator::{optical4f, systolic, SimResult, SweepCache};

@@ -1,6 +1,9 @@
-//! Serving metrics: latency percentiles, throughput, batch-size histogram.
+//! Serving metrics: latency percentiles, throughput, batch-size
+//! histogram, per-batch energy accounting.
 
 use std::time::{Duration, Instant};
+
+use super::energy::EnergyReport;
 
 /// Accumulates per-request and per-batch observations.
 ///
@@ -8,6 +11,11 @@ use std::time::{Duration, Instant};
 /// the dispatcher for batch sizes), each owned `&mut` by its thread so
 /// recording never takes a lock; shards are [`Metrics::merge`]d into one
 /// aggregate when the server shuts down.
+///
+/// Energy fields accumulate the per-batch co-simulation each worker runs
+/// after executing a batch ([`Metrics::record_energy`]): total projected
+/// joules on the systolic and optical-4F machines, over how many images
+/// and batches they were accumulated.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
@@ -15,6 +23,12 @@ pub struct Metrics {
     rejected: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
+    energy_images: usize,
+    energy_batches: usize,
+    systolic_joules: f64,
+    optical_joules: f64,
+    /// Node the energy was priced at; 0.0 until the first record.
+    energy_node_nm: f64,
 }
 
 impl Metrics {
@@ -35,6 +49,19 @@ impl Metrics {
         self.rejected += n;
     }
 
+    /// Accumulate the energy projection for one executed batch of
+    /// `images` inferences: `report` prices a *single* inference, so the
+    /// batch's projected joules are `per-inference × images`. Recorded
+    /// whether or not the batch's results were usable — the (projected)
+    /// hardware burns the energy either way.
+    pub fn record_energy(&mut self, images: usize, report: &EnergyReport) {
+        self.energy_images += images;
+        self.energy_batches += 1;
+        self.systolic_joules += report.systolic_joules() * images as f64;
+        self.optical_joules += report.optical_joules() * images as f64;
+        self.energy_node_nm = report.node_nm;
+    }
+
     /// Set the throughput window explicitly (the server stamps serving
     /// start → shutdown on the merged aggregate).
     pub fn set_window(&mut self, started: Instant, finished: Instant) {
@@ -46,6 +73,13 @@ impl Metrics {
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
         self.rejected += other.rejected;
+        self.energy_images += other.energy_images;
+        self.energy_batches += other.energy_batches;
+        self.systolic_joules += other.systolic_joules;
+        self.optical_joules += other.optical_joules;
+        if other.energy_node_nm > 0.0 {
+            self.energy_node_nm = other.energy_node_nm;
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -54,6 +88,39 @@ impl Metrics {
 
     pub fn rejected(&self) -> usize {
         self.rejected
+    }
+
+    /// Inferences covered by the per-batch energy accounting.
+    pub fn energy_images(&self) -> usize {
+        self.energy_images
+    }
+
+    /// Batches priced by the per-batch energy accounting.
+    pub fn energy_batches(&self) -> usize {
+        self.energy_batches
+    }
+
+    /// Node (nm) the energy was priced at; 0.0 when nothing was priced.
+    pub fn energy_node_nm(&self) -> f64 {
+        self.energy_node_nm
+    }
+
+    /// Projected µJ per inference on the systolic machine (0 when no
+    /// batch was priced).
+    pub fn systolic_uj_per_inference(&self) -> f64 {
+        if self.energy_images == 0 {
+            return 0.0;
+        }
+        self.systolic_joules * 1e6 / self.energy_images as f64
+    }
+
+    /// Projected µJ per inference on the optical-4F machine (0 when no
+    /// batch was priced).
+    pub fn optical_uj_per_inference(&self) -> f64 {
+        if self.energy_images == 0 {
+            return 0.0;
+        }
+        self.optical_joules * 1e6 / self.energy_images as f64
     }
 
     /// Latency percentile in microseconds (nearest-rank).
@@ -98,6 +165,16 @@ impl Metrics {
         );
         if self.rejected > 0 {
             s.push_str(&format!(", {} rejected", self.rejected));
+        }
+        if self.energy_images > 0 {
+            s.push_str(&format!(
+                ", energy @{:.0} nm: {:.2} µJ/inf systolic | {:.2} µJ/inf optical-4F \
+                 ({} batches priced)",
+                self.energy_node_nm,
+                self.systolic_uj_per_inference(),
+                self.optical_uj_per_inference(),
+                self.energy_batches
+            ));
         }
         s
     }
@@ -169,5 +246,40 @@ mod tests {
         m.record_request(Duration::from_millis(1));
         let s = m.summary();
         assert!(s.contains("p50") && s.contains("req/s"));
+        assert!(!s.contains("µJ/inf"), "no energy without record_energy");
+    }
+
+    #[test]
+    fn energy_accumulates_and_merges() {
+        let report = crate::coordinator::energy::co_simulate(
+            &crate::coordinator::smallcnn_network(),
+            45.0,
+        );
+        let per_sys = report.systolic_joules() * 1e6;
+        let per_opt = report.optical_joules() * 1e6;
+
+        let mut a = Metrics::new();
+        a.record_energy(8, &report);
+        let mut b = Metrics::new();
+        b.record_energy(4, &report);
+        b.record_energy(1, &report);
+        a.merge(&b);
+
+        assert_eq!(a.energy_images(), 13);
+        assert_eq!(a.energy_batches(), 3);
+        assert_eq!(a.energy_node_nm(), 45.0);
+        // (8 + 4 + 1) × per-inference / 13 == per-inference.
+        assert!((a.systolic_uj_per_inference() - per_sys).abs() < per_sys * 1e-12);
+        assert!((a.optical_uj_per_inference() - per_opt).abs() < per_opt * 1e-12);
+        let s = a.summary();
+        assert!(s.contains("µJ/inf") && s.contains("@45 nm"), "{s}");
+    }
+
+    #[test]
+    fn empty_energy_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.energy_images(), 0);
+        assert_eq!(m.systolic_uj_per_inference(), 0.0);
+        assert_eq!(m.optical_uj_per_inference(), 0.0);
     }
 }

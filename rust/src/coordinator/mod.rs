@@ -9,20 +9,26 @@
 //!   channel-packing decision on the optical machine: batching amortizes
 //!   fixed per-execution cost over more useful work).
 //! * [`server`] — the sharded serving path (std threads; the offline
-//!   environment has no tokio): a bounded ingress with a `max_pending`
-//!   admission knob, a dispatcher that hands planned batches to
-//!   per-worker SPSC lanes (least-loaded), per-worker metrics shards
-//!   merged at shutdown, and a condvar drain barrier so shutdown (or
-//!   drop) answers every admitted request before joining threads.
+//!   environment has no tokio), sharded end to end: N bounded ingress
+//!   shards picked per client thread behind a sharded admission counter
+//!   (`max_pending`), a dispatcher that drains the shards round-robin
+//!   and hands planned batches to per-worker SPSC lanes (least-loaded),
+//!   per-worker metrics shards merged at shutdown, and a condvar drain
+//!   barrier so shutdown (or drop) answers every admitted request
+//!   before joining threads. See `coordinator/README.md` for the full
+//!   data flow.
 //! * [`exec`] — execution backends behind the [`exec::Executor`] trait:
 //!   the PJRT engine, or the deterministic [`exec::SimExecutor`] so the
 //!   serving path runs (tests, `cargo bench -- serve`) without
 //!   artifacts.
 //! * [`metrics`] — latency/throughput accounting (p50/p95/p99, batch
-//!   histogram, rejected count), sharded per worker.
-//! * [`energy`] — per-request energy co-simulation: every served batch is
-//!   also priced on the cycle-accurate systolic and optical-4F machines,
-//!   so the server reports joules-per-inference alongside latency.
+//!   histogram, rejected count) plus accumulated per-batch energy,
+//!   sharded per worker.
+//! * [`energy`] — per-batch energy co-simulation: each worker prices
+//!   every batch it executes on the cycle-accurate systolic and
+//!   optical-4F machines (through one shared layer-dedup cache), so the
+//!   server reports projected joules-per-inference alongside latency,
+//!   from the same workload.
 //!
 //! The SmallCNN layer schedule (mirroring `python/compile/model.py`) is
 //! defined in [`smallcnn_network`] for the co-simulation.

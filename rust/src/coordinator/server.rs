@@ -1,29 +1,49 @@
-//! The inference server: bounded ingress → dynamic batcher → sharded
-//! per-worker lanes.
+//! The inference server: sharded ingress → dynamic batcher → sharded
+//! per-worker lanes, with per-batch energy accounting in the workers.
 //!
 //! ```text
-//! infer() ──mpsc──▶ dispatcher ──spsc lane 0──▶ worker 0 (Executor + Metrics shard)
-//!  (admission:       (plans batches, ─lane 1──▶ worker 1 (…)
-//!   max_pending)      least-loaded lane)  ⋮         ⋮
+//! infer()  ──shard 0──▶            ──spsc lane 0──▶ worker 0 (Executor
+//! infer()  ──shard 1──▶ dispatcher ────lane 1────▶ worker 1  + Metrics
+//!   ⋮           ⋮        (round-robin   ⋮    ⋮        ⋮        shard +
+//! infer()  ──shard N──▶  drain, plans batches,          per-batch
+//!  (admission: sharded    least-loaded lane)            EnergyReport)
+//!   counter, max_pending)
 //! ```
 //!
+//! * **Sharded ingress** — `infer` picks an ingress shard from a
+//!   per-thread hint ([`shard::thread_shard_hint`]): each client's
+//!   requests land on "its" bounded FIFO, falling over to the next
+//!   shard when full, so concurrent clients no longer serialize on a
+//!   single channel's cache line. The dispatcher drains shards
+//!   round-robin with a rotating start, so no shard gets persistent
+//!   priority.
+//! * **Sharded admission** — [`ServerConfig::max_pending`] bounds
+//!   admitted-but-unanswered requests via a [`shard::ShardedCounter`]
+//!   (adds on the client's cell, subs on the worker's): beyond the
+//!   bound `infer` rejects immediately instead of queueing without
+//!   bound. The check-then-add pair is racy across concurrent callers,
+//!   so the bound can overshoot by the number of racing threads — fine
+//!   for a load-shedding knob.
 //! * **Sharded handoff** — every worker owns the consumer half of a
 //!   bounded [`spsc`] lane; the dispatcher hands each planned batch to
 //!   the least-loaded live lane. Workers never contend on a shared
 //!   mutexed receiver.
-//! * **Sharded metrics** — each worker records latencies into a private
-//!   [`Metrics`] shard returned from its thread on join, and the
-//!   dispatcher shards batch-size stats the same way; shards merge once
-//!   at shutdown. No `Mutex<Metrics>` on the request path.
-//! * **Drain-barrier lifecycle** — admission increments a completion
+//! * **Sharded metrics + per-batch energy** — each worker records
+//!   latencies into a private [`Metrics`] shard returned from its
+//!   thread on join, and accounts every executed batch's projected
+//!   energy into the same shard: the layer schedule is priced once per
+//!   worker ([`co_simulate_cached`] through one shared [`SweepCache`],
+//!   which dedups the cold simulation across workers) and the
+//!   batch-invariant report is replayed per batch from a worker-local
+//!   memo — no shared lock on the steady-state path. The dispatcher
+//!   shards batch-size stats the same way; shards merge once at
+//!   shutdown. No `Mutex<Metrics>` on the request path.
+//! * **Drain-barrier lifecycle** — admission increments the completion
 //!   counter, answering a request (result *or* error) decrements it;
 //!   `shutdown()` closes the ingress and parks on a condvar until the
 //!   counter hits zero instead of sleep-polling. Dropping the server
 //!   without calling `shutdown()` runs the same drain, so pending
 //!   requests are answered, never stranded.
-//! * **Backpressure** — [`ServerConfig::max_pending`] bounds
-//!   admitted-but-unanswered requests; beyond it `infer` rejects
-//!   immediately with an error instead of queueing without bound.
 //!
 //! PJRT client handles are `Rc`-based (not `Send`), so the engine cannot
 //! be shared across threads; each worker builds its own [`Executor`] via
@@ -40,10 +60,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{plan_batches, should_dispatch, BatchPolicy};
+use super::energy::{co_simulate_cached, EnergyReport};
 use super::exec::{Executor, SimExecutor};
 use super::metrics::Metrics;
 use super::{ConvPath, IMAGE_ELEMS, LOGITS};
 use crate::runtime::Engine;
+use crate::simulator::SweepCache;
+use crate::util::shard::{self, PushError, ShardedCounter, ShardedQueue};
 use crate::util::spsc;
 
 /// Longest the dispatcher blocks in one park: long enough that an idle
@@ -76,37 +99,41 @@ struct Batch {
 
 /// Completion counter + condvar. `add` on admission, `sub` once a
 /// request has been *answered*; `wait_zero` parks until fully drained.
-/// The counter itself is atomic, so the hot path never takes the mutex —
-/// the mutex/condvar pair is touched only on the reached-zero edge and
-/// by the (single) waiter.
+/// The counter is sharded ([`ShardedCounter`]), so admission from many
+/// client threads never contends on one cache line; the mutex/condvar
+/// pair is touched only on the reached-zero edge and by the (single)
+/// waiter. A sharded sum can transiently misread while add/sub pairs
+/// race, so the waiter re-polls on a bounded interval instead of
+/// trusting a single notify; once the ingress is closed the count
+/// decreases monotonically and the zero edge is detected exactly.
 struct DrainBarrier {
-    count: AtomicUsize,
+    count: ShardedCounter,
     lock: Mutex<()>,
     cv: Condvar,
 }
 
 impl DrainBarrier {
-    fn new() -> Self {
+    fn new(shards: usize) -> Self {
         DrainBarrier {
-            count: AtomicUsize::new(0),
+            count: ShardedCounter::new(shards),
             lock: Mutex::new(()),
             cv: Condvar::new(),
         }
     }
 
     fn count(&self) -> usize {
-        self.count.load(SeqCst)
+        self.count.value()
     }
 
-    fn add(&self, n: usize) {
-        self.count.fetch_add(n, SeqCst);
+    fn add(&self, hint: usize, n: usize) {
+        self.count.add(hint, n);
     }
 
-    fn sub(&self, n: usize) {
+    fn sub(&self, hint: usize, n: usize) {
         if n == 0 {
             return;
         }
-        if self.count.fetch_sub(n, SeqCst) == n {
+        if self.count.sub(hint, n) {
             // Hit zero. Taking the lock before notifying closes the race
             // with a waiter that has read a non-zero count but not yet
             // parked: it holds the lock until it waits, so this notify
@@ -120,12 +147,15 @@ impl DrainBarrier {
     fn wait_zero(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         let mut guard = self.lock.lock().unwrap();
-        while self.count.load(SeqCst) > 0 {
+        while self.count.value() > 0 {
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            // Bounded park: a notify lost to a racy sharded-sum read
+            // costs one re-poll interval, not the whole deadline.
+            let park = (deadline - now).min(Duration::from_millis(50));
+            let (g, _) = self.cv.wait_timeout(guard, park).unwrap();
             guard = g;
         }
         true
@@ -157,6 +187,17 @@ pub struct ServerConfig {
     /// Admission bound: requests admitted but not yet answered. Beyond
     /// it `infer` rejects immediately instead of queueing without bound.
     pub max_pending: usize,
+    /// Ingress shards (0 = auto: scales with `workers`, clamped to
+    /// [4, 16]). More shards spread client admission over more cache
+    /// lines; the dispatcher drains them all either way.
+    pub ingress_shards: usize,
+    /// Price every executed batch on the cycle simulators into the
+    /// executing worker's metrics shard (see [`co_simulate_cached`]).
+    /// After the first batch the layer schedule is fully cached, so the
+    /// steady-state cost is a handful of map lookups per batch.
+    pub energy: bool,
+    /// Technology node (nm) for the per-batch energy pricing.
+    pub energy_node_nm: f64,
 }
 
 impl Default for ServerConfig {
@@ -168,17 +209,20 @@ impl Default for ServerConfig {
             artifacts_dir: None,
             warm_start: true,
             max_pending: 1024,
+            ingress_shards: 0,
+            energy: true,
+            energy_node_nm: 45.0,
         }
     }
 }
 
 /// Handle to a running server.
 pub struct Server {
-    /// Ingress sender; `None` once shutdown has begun. Dropping it is
-    /// the stop signal: the dispatcher drains, then closes the lanes.
-    tx: Option<Sender<Request>>,
+    /// Sharded ingress; closing it is the stop signal: the dispatcher
+    /// drains the shards, then closes the worker lanes.
+    ingress: Arc<ShardedQueue<Request>>,
     barrier: Arc<DrainBarrier>,
-    rejected: Arc<AtomicUsize>,
+    rejected: Arc<ShardedCounter>,
     max_pending: usize,
     started: Instant,
     dispatcher: Option<JoinHandle<Metrics>>,
@@ -212,8 +256,22 @@ impl Server {
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
         let workers_n = cfg.workers.max(1);
-        let (tx, rx) = channel::<Request>();
-        let barrier = Arc::new(DrainBarrier::new());
+        let shards_n = if cfg.ingress_shards == 0 {
+            (workers_n * 2).clamp(4, 16)
+        } else {
+            cfg.ingress_shards
+        };
+        let max_pending = cfg.max_pending.max(1);
+        // Per-shard capacity sized so the shards together hold exactly
+        // the admission bound: `max_pending` stays the binding limit and
+        // a full-ingress `Full` reject means the server really is at it.
+        let cap_per_shard = max_pending.div_ceil(shards_n);
+        let ingress = Arc::new(ShardedQueue::<Request>::new(shards_n, cap_per_shard));
+        let barrier = Arc::new(DrainBarrier::new(shards_n));
+        // One layer-dedup cache shared by every worker's per-batch
+        // energy pricing: the first batch anywhere simulates the layer
+        // schedule, every later batch replays it.
+        let energy_cache = Arc::new(SweepCache::new());
         let factory = Arc::new(factory);
 
         // Workers: each owns the consumer half of its lane, a private
@@ -231,9 +289,12 @@ impl Server {
             });
             let factory = factory.clone();
             let barrier = barrier.clone();
+            let energy_cache = energy_cache.clone();
             let ready_tx = ready_tx.clone();
             let path = cfg.path;
             let warm = cfg.warm_start;
+            let energy = cfg.energy;
+            let node_nm = cfg.energy_node_nm;
             workers.push(std::thread::spawn(move || {
                 let exec = match (*factory)(w) {
                     Ok(e) => e,
@@ -256,13 +317,32 @@ impl Server {
                 }
                 let _ = ready_tx.send(Ok(()));
                 let mut shard = Metrics::new();
+                let net = super::smallcnn_network();
+                // The energy model is batch-size-independent today, so
+                // each worker prices the schedule once (the shared cache
+                // still dedups that cold simulation across workers) and
+                // replays the report per batch — zero shared-lock
+                // traffic in steady state. Drop the memo and re-price
+                // per batch if a batch-aware energy model lands.
+                let mut energy_memo: Option<EnergyReport> = None;
                 // Exit when the dispatcher drops the lane producer and
                 // the ring has drained.
                 while let Ok(job) = lane_rx.recv() {
                     let retired = job.requests.len();
                     run_batch(&exec, job, &mut shard);
+                    // run_batch answered every request, so retire them
+                    // from the in-flight accounting BEFORE the energy
+                    // pricing — admission and the least-loaded lane pick
+                    // must not see already-answered requests as pending
+                    // while the co-simulation runs.
                     depth.fetch_sub(retired, SeqCst);
-                    barrier.sub(retired);
+                    barrier.sub(w, retired);
+                    if energy {
+                        let report = energy_memo.get_or_insert_with(|| {
+                            co_simulate_cached(&net, node_nm, &energy_cache)
+                        });
+                        shard.record_energy(retired, report);
+                    }
                 }
                 shard
             }));
@@ -281,19 +361,20 @@ impl Server {
             }
         }
 
-        // Dispatcher: owns the ingress receiver and all lane producers.
+        // Dispatcher: drains the ingress shards, owns all lane producers.
         let dispatcher = {
+            let ingress = ingress.clone();
             let policy = cfg.policy;
             let path = cfg.path;
             let barrier = barrier.clone();
-            std::thread::spawn(move || dispatcher_loop(rx, lanes, policy, path, &barrier))
+            std::thread::spawn(move || dispatcher_loop(&ingress, lanes, policy, path, &barrier))
         };
 
         Ok(Server {
-            tx: Some(tx),
+            ingress,
             barrier,
-            rejected: Arc::new(AtomicUsize::new(0)),
-            max_pending: cfg.max_pending.max(1),
+            rejected: Arc::new(ShardedCounter::new(shards_n)),
+            max_pending,
             started: Instant::now(),
             dispatcher: Some(dispatcher),
             workers,
@@ -311,11 +392,12 @@ impl Server {
             )));
             return resp_rx;
         }
+        let hint = shard::thread_shard_hint();
         // Admission control. The check-then-add pair is racy across
         // concurrent callers, so the bound can overshoot by the number
         // of racing threads — fine for a load-shedding knob.
         if self.barrier.count() >= self.max_pending {
-            self.rejected.fetch_add(1, SeqCst);
+            self.rejected.add(hint, 1);
             let _ = resp_tx.send(Err(anyhow::anyhow!(
                 "server overloaded: {} requests in flight (max_pending {})",
                 self.barrier.count(),
@@ -323,26 +405,29 @@ impl Server {
             )));
             return resp_rx;
         }
-        self.barrier.add(1);
+        self.barrier.add(hint, 1);
         let req = Request {
             image,
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        match &self.tx {
-            Some(tx) => {
-                if let Err(send_err) = tx.send(req) {
-                    // Dispatcher gone (shutdown raced us): answer here.
-                    let _ = send_err
-                        .0
-                        .resp
-                        .send(Err(anyhow::anyhow!("server stopped")));
-                    self.barrier.sub(1);
-                }
+        match self.ingress.push(hint, req) {
+            Ok(()) => {}
+            Err(PushError::Full(req)) => {
+                // Every shard at capacity — the queues together hold
+                // max_pending, so this is the admission bound asserting
+                // itself through the ingress.
+                self.rejected.add(hint, 1);
+                let _ = req.resp.send(Err(anyhow::anyhow!(
+                    "server overloaded: ingress full (max_pending {})",
+                    self.max_pending
+                )));
+                self.barrier.sub(hint, 1);
             }
-            None => {
+            Err(PushError::Closed(req)) => {
+                // Shutdown raced us: answer here.
                 let _ = req.resp.send(Err(anyhow::anyhow!("server stopped")));
-                self.barrier.sub(1);
+                self.barrier.sub(hint, 1);
             }
         }
         resp_rx
@@ -357,7 +442,7 @@ impl Server {
 
     /// Requests refused at admission so far.
     pub fn rejected(&self) -> usize {
-        self.rejected.load(SeqCst)
+        self.rejected.value()
     }
 
     /// Requests admitted and not yet answered.
@@ -373,9 +458,9 @@ impl Server {
 
     fn shutdown_inner(&mut self) -> Metrics {
         // Closing the ingress is the stop signal: the dispatcher flushes
-        // its pending set, drops the lane producers, and each worker
-        // drains its ring before exiting.
-        drop(self.tx.take());
+        // the shards and its pending set, drops the lane producers, and
+        // each worker drains its ring before exiting.
+        self.ingress.close();
         let drained = self.barrier.wait_zero(DRAIN_DEADLINE);
         let mut agg = Metrics::new();
         if drained {
@@ -405,7 +490,7 @@ impl Server {
             self.dispatcher.take();
             self.workers.clear();
         }
-        agg.record_rejected(self.rejected.swap(0, SeqCst));
+        agg.record_rejected(self.rejected.value());
         agg.set_window(self.started, Instant::now());
         agg
     }
@@ -421,11 +506,11 @@ impl Drop for Server {
     }
 }
 
-/// Dispatcher thread body: drain the ingress, apply the batching
-/// policy, hand plans to the least-loaded lane. Returns its metrics
-/// shard (batch-size histogram).
+/// Dispatcher thread body: drain the ingress shards round-robin, apply
+/// the batching policy, hand plans to the least-loaded lane. Returns its
+/// metrics shard (batch-size histogram).
 fn dispatcher_loop(
-    rx: Receiver<Request>,
+    ingress: &ShardedQueue<Request>,
     mut lanes: Vec<Lane>,
     policy: BatchPolicy,
     path: ConvPath,
@@ -433,28 +518,21 @@ fn dispatcher_loop(
 ) -> Metrics {
     let mut shard = Metrics::new();
     let mut pending: Vec<Request> = Vec::new();
-    let mut ingress_open = true;
+    let mut rr = 0usize;
     loop {
-        // Pull everything immediately available.
-        loop {
-            match rx.try_recv() {
-                Ok(r) => pending.push(r),
-                Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                    ingress_open = false;
-                    break;
-                }
-            }
-        }
+        // Read the close flag BEFORE draining: if this drain then comes
+        // up empty, no request can be stranded — pushes serialize with
+        // the drain on the shard locks, and any push that lost that race
+        // observes the (earlier) close and hands the request back.
+        let closed = ingress.is_closed();
+        ingress.drain_rotating(&mut rr, &mut pending);
         let oldest = pending
             .first()
             .map(|r| r.enqueued.elapsed())
             .unwrap_or(Duration::ZERO);
         // Closed ingress flushes immediately: there is nothing to wait
         // for once no new request can arrive.
-        if should_dispatch(&policy, pending.len(), oldest)
-            || (!ingress_open && !pending.is_empty())
-        {
+        if should_dispatch(&policy, pending.len(), oldest) || (closed && !pending.is_empty()) {
             let take = pending.len().min(policy.max_batch);
             let mut round: Vec<Request> = pending.drain(..take).collect();
             for b in plan_batches(round.len(), path.available_batches()) {
@@ -470,7 +548,7 @@ fn dispatcher_loop(
                     barrier,
                 );
             }
-        } else if !ingress_open {
+        } else if closed && pending.is_empty() {
             // Drained and the server is shutting down: dropping the
             // lane producers tells the workers to finish and exit.
             return shard;
@@ -485,13 +563,7 @@ fn dispatcher_loop(
                     .saturating_sub(oldest)
                     .clamp(Duration::from_micros(50), IDLE_PARK)
             };
-            match rx.recv_timeout(park) {
-                Ok(r) => pending.push(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    ingress_open = false;
-                }
-            }
+            ingress.wait_nonempty(park);
         }
     }
 }
@@ -511,7 +583,7 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier) {
                     .resp
                     .send(Err(anyhow::anyhow!("no live workers to serve request")));
             }
-            barrier.sub(n);
+            barrier.sub(0, n);
             return;
         }
         // Try lanes in load order. Depth is incremented *before* the
@@ -623,16 +695,18 @@ mod tests {
 
     #[test]
     fn drain_barrier_counts_and_wakes() {
-        let b = Arc::new(DrainBarrier::new());
-        b.add(3);
+        let b = Arc::new(DrainBarrier::new(4));
+        b.add(0, 3);
         assert_eq!(b.count(), 3);
         assert!(!b.wait_zero(Duration::from_millis(10)));
         let waiter = {
             let b = b.clone();
             std::thread::spawn(move || b.wait_zero(Duration::from_secs(10)))
         };
-        b.sub(1);
-        b.sub(2);
+        // Subs on different cells than the add: the sharded sum must
+        // still detect the zero edge.
+        b.sub(1, 1);
+        b.sub(2, 2);
         assert!(waiter.join().unwrap(), "waiter must wake on zero");
         assert!(b.wait_zero(Duration::ZERO));
     }
@@ -653,6 +727,54 @@ mod tests {
         assert_eq!(out.len(), LOGITS);
         let m = s.shutdown();
         assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn every_batch_is_priced_for_energy() {
+        let s = sim_server(2, 64, SimExecutor::instant());
+        let mut rng = Rng::new(21);
+        let rxs: Vec<_> = (0..12)
+            .map(|_| s.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.energy_images(), 12, "every served image priced");
+        assert!(m.energy_batches() >= 1);
+        assert!(m.systolic_uj_per_inference() > 0.0);
+        assert!(m.optical_uj_per_inference() > 0.0);
+        assert!(m.summary().contains("µJ/inf"), "{}", m.summary());
+        // Per-inference energy must equal the standalone co-simulation:
+        // accumulation is (per-inference × images) / images.
+        let reference = super::super::energy::co_simulate(&super::super::smallcnn_network(), 45.0);
+        let tol = 1e-9;
+        assert!(
+            (m.systolic_uj_per_inference() - reference.systolic_joules() * 1e6).abs() < tol,
+            "{} vs {}",
+            m.systolic_uj_per_inference(),
+            reference.systolic_joules() * 1e6
+        );
+    }
+
+    #[test]
+    fn energy_accounting_can_be_disabled() {
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 64,
+                energy: false,
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(22);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        let m = s.shutdown();
+        assert_eq!(m.energy_images(), 0);
+        assert!(!m.summary().contains("µJ/inf"));
     }
 
     #[test]
@@ -749,6 +871,25 @@ mod tests {
         // the batch histogram alone can't prove spreading, but the drain
         // finishing with every response delivered does prove no lane
         // deadlocked while others idled.
+    }
+
+    #[test]
+    fn explicit_ingress_shard_count_is_honoured() {
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 8,
+                ingress_shards: 3,
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        assert_eq!(s.ingress.shards(), 3);
+        let mut rng = Rng::new(23);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        s.shutdown();
     }
 
     #[test]

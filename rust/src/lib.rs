@@ -25,12 +25,14 @@
 //!   (machine × network × node) grid runner [`simulator::sweep::sweep`].
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
 //!   (behind the `pjrt` cargo feature; a stub engine otherwise).
-//! * [`coordinator`] — the sharded serving path on top of [`runtime`]:
-//!   bounded ingress with a `max_pending` admission knob, a dispatcher
-//!   feeding per-worker [`util::spsc`] batch lanes (least-loaded),
-//!   per-worker metrics shards merged at shutdown, a condvar drain
-//!   barrier for the lifecycle, per-request energy co-simulation, and
-//!   an executor abstraction ([`coordinator::exec`]) so serving runs
+//! * [`coordinator`] — the serving path on top of [`runtime`], sharded
+//!   end to end: N bounded ingress shards picked per client thread
+//!   ([`util::shard`]) behind a sharded `max_pending` admission
+//!   counter, a dispatcher draining the shards round-robin into
+//!   per-worker [`util::spsc`] batch lanes (least-loaded), per-worker
+//!   metrics shards with per-batch energy co-simulation merged at
+//!   shutdown, a condvar drain barrier for the lifecycle, and an
+//!   executor abstraction ([`coordinator::exec`]) so serving runs
 //!   against PJRT or a deterministic in-process backend.
 //! * [`report`] — the Scenario → Dataset → sink pipeline: every table,
 //!   figure and sweep of the paper's evaluation section is a declarative
@@ -41,9 +43,11 @@
 //!   sinks.
 //! * [`util`] — in-tree CLI/property-test/bench/PRNG mini-frameworks plus
 //!   the [`util::pool`] work-stealing thread pool, the [`util::spsc`]
-//!   bounded SPSC channel, and the [`util::json`] dependency-free JSON
-//!   tree behind the report layer's `--format json` sink (the build
-//!   environment is offline; only `xla` + `anyhow` are available).
+//!   bounded SPSC channel, the [`util::shard`] sharded counter/queue
+//!   behind the serving ingress, and the [`util::json`] dependency-free
+//!   JSON tree behind the report layer's `--format json` sink (the
+//!   build environment is offline; only `xla` + `anyhow` are
+//!   available).
 
 pub mod analytic;
 pub mod coordinator;

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use aimc::coordinator::exec::SimExecutor;
 use aimc::coordinator::server::{Server, ServerConfig};
-use aimc::coordinator::{energy as co_energy, smallcnn_network, ConvPath, IMAGE_ELEMS};
+use aimc::coordinator::{smallcnn_network, ConvPath, IMAGE_ELEMS};
 use aimc::networks::by_name;
 use aimc::networks::DEFAULT_INPUT;
 use aimc::report::{self, Dataset, EvalCtx, OutputFormat};
@@ -306,10 +306,11 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     let n_req = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
     let max_pending = args.get_usize("max-pending", 1024)?;
+    let node = args.get_f64("node", 45.0)?;
     let synthetic = args.flag("synthetic");
     println!(
         "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}{}",
+         max_pending {max_pending}, energy @{node} nm{}",
         if synthetic { ", synthetic backend" } else { "" }
     );
 
@@ -317,6 +318,7 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         path,
         workers,
         max_pending,
+        energy_node_nm: node,
         ..Default::default()
     };
     let server = if synthetic {
@@ -338,9 +340,18 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     }
     let metrics = server.shutdown();
     println!("served {ok}/{n_req} OK — {}", metrics.summary());
-
-    // Energy co-simulation for the served workload.
-    let report = co_energy::co_simulate(&smallcnn_network(), 45.0);
-    println!("energy co-simulation (per inference) {}", report.summary());
+    if metrics.energy_images() > 0 {
+        // Per-batch accounting accumulated in the worker shards — the
+        // same workload the latency numbers above were measured on.
+        println!(
+            "energy (per-batch co-simulation over {} batches / {} inferences) @{} nm: \
+             systolic {:.2} µJ/inf | optical-4F {:.2} µJ/inf",
+            metrics.energy_batches(),
+            metrics.energy_images(),
+            metrics.energy_node_nm(),
+            metrics.systolic_uj_per_inference(),
+            metrics.optical_uj_per_inference(),
+        );
+    }
     Ok(())
 }

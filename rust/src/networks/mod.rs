@@ -52,7 +52,7 @@ impl ConvLayer {
     /// Output spatial size (same-padding bookkeeping, matching how the
     /// architectures are actually built).
     pub fn n_out(&self) -> usize {
-        (self.n + self.stride - 1) / self.stride
+        self.n.div_ceil(self.stride)
     }
 
     /// Effective k² (= kh·kw for rectangular kernels).
@@ -190,12 +190,20 @@ impl Builder {
     /// Push a conv at the current spatial size; advance size by stride.
     pub fn conv(&mut self, c_in: usize, c_out: usize, k: usize, stride: usize) {
         self.layers.push(ConvLayer::square(self.n, c_in, c_out, k, stride));
-        self.n = (self.n + stride - 1) / stride;
+        self.n = self.n.div_ceil(stride);
     }
 
     /// Push a conv that does NOT advance the tracked spatial size
     /// (parallel branch of an inception module).
-    pub fn branch_conv(&mut self, n: usize, c_in: usize, c_out: usize, kh: usize, kw: usize, stride: usize) {
+    pub fn branch_conv(
+        &mut self,
+        n: usize,
+        c_in: usize,
+        c_out: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) {
         self.layers.push(ConvLayer {
             n,
             c_in,
@@ -208,7 +216,7 @@ impl Builder {
 
     /// Pooling: just advance the spatial tracker.
     pub fn pool(&mut self, stride: usize) {
-        self.n = (self.n + stride - 1) / stride;
+        self.n = self.n.div_ceil(stride);
     }
 
     pub fn finish(self, name: &'static str) -> Network {

@@ -70,7 +70,12 @@ impl Spec {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.opts.push(Opt {
             name,
             help,

@@ -15,12 +15,15 @@
 //!   `par_for_each`) driving the parallel sweep engine.
 //! * [`spsc`] — bounded single-producer/single-consumer channel with a
 //!   lock-free fast path (the coordinator's per-worker batch lanes).
+//! * [`shard`] — sharded counter + sharded bounded MPSC queue (the
+//!   coordinator's ingress shards and admission counter).
 
 pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod shard;
 pub mod spsc;
 pub mod stats;
 pub mod table;

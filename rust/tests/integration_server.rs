@@ -4,8 +4,10 @@
 //! Two sections:
 //! * **Synthetic backend** ([`SimExecutor`]) — always runs, including in
 //!   the offline build environment: lifecycle (shutdown-under-load,
-//!   drop-with-pending), backpressure, and the exactly-one-response
-//!   property over the sharded lanes.
+//!   drop-with-pending), backpressure/admission across the ingress
+//!   shards, and the exactly-one-response property over the sharded
+//!   ingress + lanes (including concurrent client threads, which land
+//!   on different ingress shards).
 //! * **PJRT engine** — skips gracefully when artifacts / the `pjrt`
 //!   feature are unavailable.
 
@@ -105,16 +107,19 @@ fn drop_server_with_pending_requests_answers_all() {
 
 #[test]
 fn every_request_gets_exactly_one_response_prop() {
-    // Property over the sharded path: for random worker counts, batch
-    // policies and request counts, every submitted request receives
-    // exactly one response, and served + rejected == submitted.
+    // Property over the sharded path: for random worker counts, ingress
+    // shard counts, batch policies and request counts, every submitted
+    // request receives exactly one response, and served + rejected ==
+    // submitted.
     check(25, |g| {
         let workers = g.usize(1, 4);
+        let ingress_shards = g.usize(1, 6);
         let max_batch = g.usize(1, 8);
         let n = g.usize(0, 60);
         let server = Server::start_sim(
             ServerConfig {
                 workers,
+                ingress_shards,
                 policy: BatchPolicy {
                     max_batch,
                     max_wait: Duration::from_micros(500),
@@ -158,6 +163,166 @@ fn every_request_gets_exactly_one_response_prop() {
         }
         prop_assert(true, "")
     });
+}
+
+#[test]
+fn exactly_one_response_across_concurrent_clients_prop() {
+    // The multi-client variant: several client threads admit
+    // concurrently, each landing on its own ingress shard (per-thread
+    // hint). Every request must still get exactly one response, and the
+    // books must balance at shutdown.
+    check(8, |g| {
+        let workers = g.usize(1, 4);
+        let ingress_shards = g.usize(1, 6);
+        let clients = g.usize(1, 6);
+        let per_client = g.usize(0, 24);
+        let base_seed = g.seed;
+        let server = Server::start_sim(
+            ServerConfig {
+                workers,
+                ingress_shards,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(500),
+                },
+                warm_start: false,
+                max_pending: 4096, // admission disabled for this property
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let answered: Result<usize, String> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(clients);
+            for c in 0..clients {
+                let server = &server;
+                let seed = base_seed.wrapping_mul(31).wrapping_add(c as u64);
+                handles.push(s.spawn(move || -> Result<usize, String> {
+                    let mut rng = Rng::new(seed);
+                    let mut answered = 0usize;
+                    for _ in 0..per_client {
+                        let rx = server.infer(rng.normal_vec(IMAGE_ELEMS));
+                        // Exactly one: a first recv must succeed…
+                        match rx.recv() {
+                            Ok(Ok(out)) if out.len() != LOGITS => {
+                                return Err("bad logits length".into())
+                            }
+                            Ok(_) => answered += 1,
+                            Err(_) => return Err("request got zero responses".into()),
+                        }
+                        // …and a second must find a closed channel.
+                        if rx.try_recv().is_ok() {
+                            return Err("request got two responses".into());
+                        }
+                    }
+                    Ok(answered)
+                }));
+            }
+            let mut total = 0usize;
+            for h in handles {
+                total += h.join().unwrap()?;
+            }
+            Ok(total)
+        });
+        let m = server.shutdown();
+        let answered = match answered {
+            Ok(a) => a,
+            Err(msg) => return Err(msg),
+        };
+        if answered != clients * per_client {
+            return prop_assert(false, "response count mismatch");
+        }
+        prop_assert(
+            m.count() + m.rejected() == clients * per_client,
+            "served + rejected != submitted",
+        )
+    });
+}
+
+#[test]
+fn admission_bound_is_strict_for_a_single_client() {
+    // One client thread bursting against a stalled worker: with no
+    // concurrent admitters the racy check-then-add pair cannot
+    // overshoot, so admitted must stay ≤ max_pending even though the
+    // requests spread across ingress shards (per-shard capacity is
+    // max_pending / shards; the push probe chain fills every shard
+    // before the ingress reports Full).
+    let server = Server::start_sim(
+        ServerConfig {
+            workers: 1,
+            warm_start: false,
+            max_pending: 8,
+            ingress_shards: 4,
+            ..Default::default()
+        },
+        SimExecutor::new(Duration::from_millis(500), Duration::ZERO),
+    )
+    .unwrap();
+    let mut rng = Rng::new(31);
+    let rxs: Vec<_> = (0..64)
+        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+        .collect();
+    let m = server.shutdown();
+    let (mut served, mut shed) = (0, 0);
+    for rx in rxs {
+        match rx.recv().expect("one response per request") {
+            Ok(_) => served += 1,
+            Err(e) => {
+                assert!(e.to_string().contains("overloaded"), "unexpected: {e:#}");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, 64);
+    assert!(served >= 1, "something must be admitted");
+    assert!(served <= 8, "admitted {served} > max_pending 8");
+    assert_eq!(m.count(), served);
+    assert_eq!(m.rejected(), shed);
+}
+
+#[test]
+fn drain_on_shutdown_with_uneven_shard_load() {
+    // Client threads with skewed request counts land on different
+    // ingress shards; shutting down mid-flight must answer every
+    // admitted request no matter which shard it sits in.
+    let server = Server::start_sim(
+        ServerConfig {
+            workers: 2,
+            warm_start: false,
+            max_pending: 4096,
+            ingress_shards: 5,
+            ..Default::default()
+        },
+        SimExecutor::new(Duration::from_millis(1), Duration::ZERO),
+    )
+    .unwrap();
+    let counts = [40usize, 8, 1];
+    let rxs: Vec<Vec<_>> = std::thread::scope(|s| {
+        let handles: Vec<_> = counts
+            .iter()
+            .enumerate()
+            .map(|(t, &k)| {
+                let server = &server;
+                s.spawn(move || {
+                    let mut rng = Rng::new(40 + t as u64);
+                    (0..k)
+                        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let m = server.shutdown();
+    let mut answered = 0;
+    for rx in rxs.into_iter().flatten() {
+        rx.recv()
+            .expect("request stranded without a response")
+            .expect("admitted request must be served through the drain");
+        answered += 1;
+    }
+    assert_eq!(answered, 49);
+    assert_eq!(m.count(), 49);
 }
 
 #[test]

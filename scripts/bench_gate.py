@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Compares a fresh bench run against the committed baseline and fails the
+build when either guarded metric regresses more than the tolerance:
+
+  * serve  — throughput at the high-offered-load grid point
+             (4 workers x 32 offered) from BENCH_serve.json
+  * sweep  — persistent-cache warm_speedup from BENCH_sweep.json
+
+Usage:
+    python3 scripts/bench_gate.py BENCH_baseline.json \
+        rust/BENCH_serve.json rust/BENCH_sweep.json
+
+    # refresh the baseline from a measured run (commit the result):
+    python3 scripts/bench_gate.py --update BENCH_baseline.json \
+        rust/BENCH_serve.json rust/BENCH_sweep.json
+
+Tolerance defaults to 0.15 (15%); override with BENCH_GATE_TOLERANCE.
+A baseline marked "provisional": true (floor values that were never
+measured on CI hardware) runs the same comparison but is ADVISORY: a
+miss is printed loudly and exits 0, so a guessed floor can never block
+CI. Re-baseline from a green run via --update (which drops the
+provisional flag) to make the gate binding.
+
+Stdlib only — no pip dependencies.
+"""
+
+import json
+import os
+import sys
+
+GUARD_WORKERS = 4
+GUARD_OFFERED = 32
+
+
+def fail(msg):
+    print(f"bench gate: FAIL — {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot read {path}: {e}")
+
+
+def serve_rps(serve, path):
+    for run in serve.get("runs", []):
+        if run.get("workers") == GUARD_WORKERS and run.get("offered") == GUARD_OFFERED:
+            return float(run["throughput_rps"])
+    fail(
+        f"{path} has no {GUARD_WORKERS}-worker / {GUARD_OFFERED}-offered run "
+        "(bench grid changed without updating the gate?)"
+    )
+
+
+def warm_speedup(sweep, path):
+    try:
+        return float(sweep["persistent_cache"]["warm_speedup"])
+    except (KeyError, TypeError, ValueError):
+        fail(f"{path} has no persistent_cache.warm_speedup field")
+
+
+def main(argv):
+    update = "--update" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 3:
+        print(__doc__)
+        sys.exit(2)
+    baseline_path, serve_path, sweep_path = paths
+
+    measured = {
+        "serve_4w_32offered_rps": serve_rps(load(serve_path), serve_path),
+        "warm_speedup": warm_speedup(load(sweep_path), sweep_path),
+    }
+
+    if update:
+        doc = {
+            "note": (
+                "Bench-regression baseline enforced by scripts/bench_gate.py. "
+                "Refresh with: python3 scripts/bench_gate.py --update "
+                "BENCH_baseline.json rust/BENCH_serve.json rust/BENCH_sweep.json"
+            ),
+            "serve_4w_32offered_rps": round(measured["serve_4w_32offered_rps"], 1),
+            "warm_speedup": round(measured["warm_speedup"], 2),
+        }
+        with open(baseline_path, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"bench gate: baseline updated — {baseline_path}: {doc}")
+        return
+
+    baseline = load(baseline_path)
+    tol = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.15"))
+    provisional = bool(baseline.get("provisional"))
+    if provisional:
+        print(
+            "bench gate: NOTE — baseline is provisional (floor values never "
+            "measured on CI hardware), so misses are ADVISORY, not failures. "
+            "Re-baseline with --update (drops the flag) to make the gate bind."
+        )
+
+    failures = []
+    for key, got in measured.items():
+        want = baseline.get(key)
+        if want is None:
+            failures.append(f"baseline missing {key!r}")
+            continue
+        floor = float(want) * (1.0 - tol)
+        verdict = "ok" if got >= floor else "REGRESSED"
+        print(
+            f"bench gate: {key}: measured {got:.2f} vs baseline {float(want):.2f} "
+            f"(floor {floor:.2f}, tolerance {tol:.0%}) — {verdict}"
+        )
+        if got < floor:
+            failures.append(
+                f"{key} regressed: {got:.2f} < {floor:.2f} "
+                f"({float(want):.2f} - {tol:.0%})"
+            )
+    if failures:
+        if provisional:
+            print(
+                "bench gate: ADVISORY MISS (provisional baseline, not failing "
+                "the build) — " + "; ".join(failures)
+            )
+            print("bench gate: PASS (advisory)")
+            return
+        fail("; ".join(failures))
+    print("bench gate: PASS")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
