@@ -159,8 +159,8 @@ fn bench_sweep_engine(input: usize) {
     }
 }
 
-/// Serving-path scaling harness: a (worker count × offered concurrency)
-/// grid, recorded to `BENCH_serve.json` (override with
+/// Serving-path scaling harness: a (worker count × offered concurrency
+/// × pricing mode) grid, recorded to `BENCH_serve.json` (override with
 /// `BENCH_SERVE_JSON`). `offered` is realized as that many *client
 /// threads* in a closed loop (one outstanding request each), so high
 /// offered load exercises the sharded ingress the way production
@@ -170,12 +170,19 @@ fn bench_sweep_engine(input: usize) {
 /// [`SimExecutor`] otherwise; the sim backend uses a deliberately small
 /// per-batch cost so the serving path (admission, ingress shards,
 /// dispatch, lanes, per-batch energy pricing) is the measured object,
-/// not the executor's sleep. Each run also records the per-batch energy
-/// accounting the workers accumulated — projected µJ/inference on the
-/// paper's machines for the exact workload the latency numbers came
-/// from.
+/// not the executor's sleep. Each run carries a `"pricing"` tag
+/// (`"cosim"` | `"surrogate"` | `"off"`) plus the energy accounting the
+/// workers accumulated (omitted — not zeroed — when nothing was
+/// priced), and the file ends with a pricing-path microbench:
+/// `surrogate_vs_cosim_speedup` = fresh co-simulation time over
+/// closed-form quote time for the resident network, the number the CI
+/// bench gate floors.
 fn bench_serve() {
     use aimc::coordinator::exec::SimExecutor;
+    use aimc::coordinator::{energy, smallcnn_network};
+    use aimc::energy::surrogate::{MachineKind, SurrogateTable};
+    use aimc::networks::ConvLayer;
+    use std::sync::Arc;
 
     let have_engine = Engine::discover().is_ok();
     let backend = if have_engine { "pjrt" } else { "sim" };
@@ -187,79 +194,145 @@ fn bench_serve() {
     // A small image pool: the bench times the server, not the PRNG.
     let images: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
 
+    // Fit the surrogate once, over the resident family padded with a few
+    // same-family shapes so the fits are well-conditioned — the exact
+    // table `aimc fit-surrogate && aimc serve --surrogate` would use for
+    // this workload, minus the rest of the corpus.
+    let table = {
+        let mut layers = smallcnn_network().layers;
+        layers.push(ConvLayer::square(32, 16, 64, 3, 1));
+        layers.push(ConvLayer::square(16, 64, 8, 3, 1));
+        layers.push(ConvLayer::square(96, 8, 24, 3, 1));
+        layers.push(ConvLayer::square(12, 48, 48, 3, 1));
+        Arc::new(
+            SurrogateTable::fit(
+                &SweepCache::new(),
+                &[MachineKind::Systolic, MachineKind::Optical4F],
+                &[45.0],
+                &layers,
+            )
+            .expect("surrogate fit for the serving bench"),
+        )
+    };
+
     let mut runs = Vec::new();
-    for &workers in &[1usize, 2, 4] {
-        for &offered in &[1usize, 8, 32] {
-            let cfg = ServerConfig {
-                path: ConvPath::Exact,
-                workers,
-                warm_start: have_engine,
-                max_pending: 4096,
-                ..Default::default()
-            };
-            let server = if have_engine {
-                Server::start(cfg).unwrap()
-            } else {
-                Server::start_sim(
-                    cfg,
-                    SimExecutor::new(Duration::from_micros(10), Duration::from_micros(1)),
-                )
-                .unwrap()
-            };
-            let _ = server.infer_blocking(images[0].clone()); // warm path
-            let per_client = n / offered;
-            let total = per_client * offered;
-            let t0 = Instant::now();
-            let ok: usize = std::thread::scope(|s| {
-                let mut handles = Vec::with_capacity(offered);
-                for c in 0..offered {
-                    let server = &server;
-                    let images = &images;
-                    handles.push(s.spawn(move || {
-                        let mut ok = 0usize;
-                        for i in 0..per_client {
-                            let img = images[(c + i) % images.len()].clone();
-                            if server.infer_blocking(img).is_ok() {
-                                ok += 1;
-                            }
+    let mut run_one = |workers: usize, offered: usize, pricing: &str| {
+        let cfg = ServerConfig {
+            path: ConvPath::Exact,
+            workers,
+            warm_start: have_engine,
+            max_pending: 4096,
+            energy: pricing != "off",
+            surrogate: (pricing == "surrogate").then(|| table.clone()),
+            ..Default::default()
+        };
+        let server = if have_engine {
+            Server::start(cfg).unwrap()
+        } else {
+            Server::start_sim(
+                cfg,
+                SimExecutor::new(Duration::from_micros(10), Duration::from_micros(1)),
+            )
+            .unwrap()
+        };
+        let _ = server.infer_blocking(images[0].clone()); // warm path
+        let per_client = n / offered;
+        let total = per_client * offered;
+        let t0 = Instant::now();
+        let ok: usize = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(offered);
+            for c in 0..offered {
+                let server = &server;
+                let images = &images;
+                handles.push(s.spawn(move || {
+                    let mut ok = 0usize;
+                    for i in 0..per_client {
+                        let img = images[(c + i) % images.len()].clone();
+                        if server.infer_blocking(img).is_ok() {
+                            ok += 1;
                         }
-                        ok
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().unwrap()).sum()
-            });
-            let wall = t0.elapsed().as_secs_f64();
-            let m = server.shutdown();
-            let rps = total as f64 / wall;
-            println!(
-                "serve[{backend}]: {workers} workers, {offered:>2} offered: \
-                 {rps:>8.0} req/s, p50 {:>7.2} ms, p99 {:>7.2} ms, mean batch {:.2}, \
-                 {:.2} µJ/inf systolic",
-                m.percentile_us(50.0) as f64 / 1e3,
-                m.percentile_us(99.0) as f64 / 1e3,
-                m.mean_batch(),
-                m.systolic_uj_per_inference(),
-            );
-            runs.push(format!(
-                "    {{ \"workers\": {workers}, \"offered\": {offered}, \"requests\": {total}, \
-                 \"ok\": {ok}, \"throughput_rps\": {rps:.1}, \"p50_us\": {}, \"p99_us\": {}, \
-                 \"mean_batch\": {:.2}, \"rejected\": {}, \"energy_node_nm\": {}, \
-                 \"sys_uj_per_inf\": {:.4}, \"opt_uj_per_inf\": {:.4}, \
-                 \"energy_batches\": {}, \"energy_images\": {} }}",
-                m.percentile_us(50.0),
-                m.percentile_us(99.0),
-                m.mean_batch(),
-                m.rejected(),
+                    }
+                    ok
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let rps = total as f64 / wall;
+        let energy_note = match m.systolic_uj_per_inference() {
+            Some(sys) => format!("{sys:.2} µJ/inf systolic ({})", m.energy_source()),
+            None => "energy n/a".to_string(),
+        };
+        println!(
+            "serve[{backend}/{pricing}]: {workers} workers, {offered:>2} offered: \
+             {rps:>8.0} req/s, p50 {:>7.2} ms, p99 {:>7.2} ms, mean batch {:.2}, {energy_note}",
+            m.percentile_us(50.0) as f64 / 1e3,
+            m.percentile_us(99.0) as f64 / 1e3,
+            m.mean_batch(),
+        );
+        // Energy fields appear only when batches were actually priced —
+        // absent, not 0.0, so a gate or plot can't mistake "pricing
+        // disabled" for "free inference".
+        let energy_fields = match (m.systolic_uj_per_inference(), m.optical_uj_per_inference()) {
+            (Some(sys), Some(opt)) => format!(
+                ", \"energy_node_nm\": {}, \"sys_uj_per_inf\": {sys:.4}, \
+                 \"opt_uj_per_inf\": {opt:.4}, \"energy_batches\": {}, \"energy_images\": {}",
                 m.energy_node_nm(),
-                m.systolic_uj_per_inference(),
-                m.optical_uj_per_inference(),
                 m.energy_batches(),
                 m.energy_images(),
-            ));
+            ),
+            _ => String::new(),
+        };
+        runs.push(format!(
+            "    {{ \"workers\": {workers}, \"offered\": {offered}, \"pricing\": \"{pricing}\", \
+             \"requests\": {total}, \"ok\": {ok}, \"throughput_rps\": {rps:.1}, \
+             \"p50_us\": {}, \"p99_us\": {}, \"mean_batch\": {:.2}, \
+             \"rejected\": {}{energy_fields} }}",
+            m.percentile_us(50.0),
+            m.percentile_us(99.0),
+            m.mean_batch(),
+            m.rejected(),
+        ));
+    };
+    for &workers in &[1usize, 2, 4] {
+        for &offered in &[1usize, 8, 32] {
+            run_one(workers, offered, "cosim");
+            run_one(workers, offered, "surrogate");
         }
     }
+    // One pricing-off run at the guard cell: the latency cost of the
+    // accounting itself.
+    run_one(4, 32, "off");
+
+    // Pricing-path microbench: what each path costs per quote of the
+    // resident network. Co-simulation is timed cold (fresh cache — the
+    // first batch anywhere on a worker) per sample; the surrogate quote
+    // is so cheap it is timed in blocks.
+    let net = smallcnn_network();
+    let cosim_samples = time_it(20, || {
+        let _ = energy::co_simulate(&net, 45.0);
+    });
+    let cosim_us = median_us(&cosim_samples);
+    const QUOTES_PER_SAMPLE: usize = 1000;
+    let quote_samples = time_it(20, || {
+        for _ in 0..QUOTES_PER_SAMPLE {
+            let _ = table.quote_network(&net, 45.0);
+        }
+    });
+    let quote_us = median_us(&quote_samples) / QUOTES_PER_SAMPLE as f64;
+    let speedup = cosim_us / quote_us;
+    report_time("serve: cosim price (cold)", &cosim_samples, None);
+    println!(
+        "bench serve: surrogate quote                {quote_us:>10.3} µs/quote   \
+         ({speedup:.0}x over cold co-simulation)"
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ],\n  \
+         \"pricing_path\": {{ \"cosim_cold_us\": {cosim_us:.3}, \
+         \"surrogate_quote_us\": {quote_us:.4} }},\n  \
+         \"surrogate_vs_cosim_speedup\": {speedup:.1}\n}}\n",
         runs.join(",\n")
     );
     let path =

@@ -5,14 +5,24 @@
 //! every served batch carries a projected joules-per-inference for each
 //! architecture — the hw/sw-codesign readout of the serving stack.
 //!
-//! The server calls [`co_simulate_cached`] from each worker after every
-//! executed batch, against one [`SweepCache`] shared by all workers: the
-//! first batch anywhere simulates the layer schedule, every later batch
-//! is pure map lookups. The per-batch reports accumulate into the
-//! worker's metrics shard (`Metrics::record_energy`) and merge at
-//! shutdown, so `aimc serve` and `BENCH_serve.json` report measured
-//! latency/throughput alongside projected µJ-per-inference from the
-//! same workload.
+//! Two pricing paths feed the metrics:
+//!
+//! * **co-simulation** — workers call [`co_simulate_cached`] against one
+//!   [`SweepCache`] shared by all workers: the first batch anywhere
+//!   simulates the layer schedule, every later batch is map lookups.
+//! * **surrogate** — when the server was started with a fitted
+//!   [`crate::energy::surrogate::SurrogateTable`], the network is priced
+//!   *once* at startup through the closed-form models
+//!   (`SurrogateTable::quote_network`) and the steady-state loop never
+//!   touches a simulator: per-batch accounting is a multiply, and the
+//!   same quote powers per-request µJ attribution and the
+//!   `max_uj_per_inf` admission policy.
+//!
+//! Either way the per-batch reports accumulate into the worker's metrics
+//! shard (`Metrics::record_energy` / `record_priced_energy`, tagged with
+//! the pricing source) and merge at shutdown, so `aimc serve` and
+//! `BENCH_serve.json` report measured latency/throughput alongside
+//! projected µJ-per-inference from the same workload.
 
 use crate::networks::Network;
 use crate::simulator::{optical4f, systolic, SimResult, SweepCache};

@@ -29,6 +29,13 @@ pub struct Metrics {
     optical_joules: f64,
     /// Node the energy was priced at; 0.0 until the first record.
     energy_node_nm: f64,
+    /// How the energy numbers were produced ("co-simulation" or
+    /// "surrogate"); empty until the first record.
+    energy_source: &'static str,
+    /// Requests refused by the energy-budget admission policy
+    /// (`ServerConfig::max_uj_per_inf`), counted separately from
+    /// backpressure rejections.
+    budget_rejected: usize,
 }
 
 impl Metrics {
@@ -55,11 +62,37 @@ impl Metrics {
     /// whether or not the batch's results were usable — the (projected)
     /// hardware burns the energy either way.
     pub fn record_energy(&mut self, images: usize, report: &EnergyReport) {
+        self.record_priced_energy(
+            images,
+            report.systolic_joules(),
+            report.optical_joules(),
+            report.node_nm,
+            "co-simulation",
+        );
+    }
+
+    /// [`Metrics::record_energy`] with explicit per-inference joules and
+    /// a pricing-source label — the surrogate fast path records through
+    /// this without materializing an [`EnergyReport`].
+    pub fn record_priced_energy(
+        &mut self,
+        images: usize,
+        systolic_j_per_inf: f64,
+        optical_j_per_inf: f64,
+        node_nm: f64,
+        source: &'static str,
+    ) {
         self.energy_images += images;
         self.energy_batches += 1;
-        self.systolic_joules += report.systolic_joules() * images as f64;
-        self.optical_joules += report.optical_joules() * images as f64;
-        self.energy_node_nm = report.node_nm;
+        self.systolic_joules += systolic_j_per_inf * images as f64;
+        self.optical_joules += optical_j_per_inf * images as f64;
+        self.energy_node_nm = node_nm;
+        self.energy_source = source;
+    }
+
+    /// Count requests refused by the energy-budget admission policy.
+    pub fn record_budget_rejected(&mut self, n: usize) {
+        self.budget_rejected += n;
     }
 
     /// Set the throughput window explicitly (the server stamps serving
@@ -80,6 +113,10 @@ impl Metrics {
         if other.energy_node_nm > 0.0 {
             self.energy_node_nm = other.energy_node_nm;
         }
+        if !other.energy_source.is_empty() {
+            self.energy_source = other.energy_source;
+        }
+        self.budget_rejected += other.budget_rejected;
     }
 
     pub fn count(&self) -> usize {
@@ -105,22 +142,34 @@ impl Metrics {
         self.energy_node_nm
     }
 
-    /// Projected µJ per inference on the systolic machine (0 when no
-    /// batch was priced).
-    pub fn systolic_uj_per_inference(&self) -> f64 {
-        if self.energy_images == 0 {
-            return 0.0;
-        }
-        self.systolic_joules * 1e6 / self.energy_images as f64
+    /// Pricing-source label ("co-simulation" or "surrogate"); empty when
+    /// nothing was priced.
+    pub fn energy_source(&self) -> &'static str {
+        self.energy_source
     }
 
-    /// Projected µJ per inference on the optical-4F machine (0 when no
-    /// batch was priced).
-    pub fn optical_uj_per_inference(&self) -> f64 {
+    /// Requests refused by the energy-budget admission policy.
+    pub fn budget_rejected(&self) -> usize {
+        self.budget_rejected
+    }
+
+    /// Projected µJ per inference on the systolic machine. `None` when
+    /// no batch was priced — callers must render "n/a" / omit the field
+    /// rather than report a meaningless 0.0.
+    pub fn systolic_uj_per_inference(&self) -> Option<f64> {
         if self.energy_images == 0 {
-            return 0.0;
+            return None;
         }
-        self.optical_joules * 1e6 / self.energy_images as f64
+        Some(self.systolic_joules * 1e6 / self.energy_images as f64)
+    }
+
+    /// Projected µJ per inference on the optical-4F machine. `None` when
+    /// no batch was priced.
+    pub fn optical_uj_per_inference(&self) -> Option<f64> {
+        if self.energy_images == 0 {
+            return None;
+        }
+        Some(self.optical_joules * 1e6 / self.energy_images as f64)
     }
 
     /// Latency percentile in microseconds (nearest-rank).
@@ -166,13 +215,20 @@ impl Metrics {
         if self.rejected > 0 {
             s.push_str(&format!(", {} rejected", self.rejected));
         }
-        if self.energy_images > 0 {
+        if self.budget_rejected > 0 {
+            s.push_str(&format!(", {} over-budget", self.budget_rejected));
+        }
+        if let (Some(sys), Some(opt)) = (
+            self.systolic_uj_per_inference(),
+            self.optical_uj_per_inference(),
+        ) {
             s.push_str(&format!(
-                ", energy @{:.0} nm: {:.2} µJ/inf systolic | {:.2} µJ/inf optical-4F \
-                 ({} batches priced)",
+                ", energy ({}) @{:.0} nm: {:.2} µJ/inf systolic | {:.2} µJ/inf \
+                 optical-4F ({} batches priced)",
+                self.energy_source,
                 self.energy_node_nm,
-                self.systolic_uj_per_inference(),
-                self.optical_uj_per_inference(),
+                sys,
+                opt,
                 self.energy_batches
             ));
         }
@@ -268,18 +324,46 @@ mod tests {
         assert_eq!(a.energy_images(), 13);
         assert_eq!(a.energy_batches(), 3);
         assert_eq!(a.energy_node_nm(), 45.0);
+        assert_eq!(a.energy_source(), "co-simulation");
         // (8 + 4 + 1) × per-inference / 13 == per-inference.
-        assert!((a.systolic_uj_per_inference() - per_sys).abs() < per_sys * 1e-12);
-        assert!((a.optical_uj_per_inference() - per_opt).abs() < per_opt * 1e-12);
+        let sys = a.systolic_uj_per_inference().unwrap();
+        let opt = a.optical_uj_per_inference().unwrap();
+        assert!((sys - per_sys).abs() < per_sys * 1e-12);
+        assert!((opt - per_opt).abs() < per_opt * 1e-12);
         let s = a.summary();
         assert!(s.contains("µJ/inf") && s.contains("@45 nm"), "{s}");
+        assert!(s.contains("(co-simulation)"), "{s}");
     }
 
     #[test]
-    fn empty_energy_is_zero() {
+    fn empty_energy_is_absent_not_zero() {
         let m = Metrics::new();
         assert_eq!(m.energy_images(), 0);
-        assert_eq!(m.systolic_uj_per_inference(), 0.0);
-        assert_eq!(m.optical_uj_per_inference(), 0.0);
+        assert_eq!(m.systolic_uj_per_inference(), None);
+        assert_eq!(m.optical_uj_per_inference(), None);
+        assert_eq!(m.energy_source(), "");
+        assert!(!m.summary().contains("µJ/inf"));
+    }
+
+    #[test]
+    fn surrogate_source_and_budget_rejections_surface() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(10));
+        m.record_priced_energy(4, 2e-6, 5e-6, 45.0, "surrogate");
+        m.record_budget_rejected(3);
+        assert_eq!(m.budget_rejected(), 3);
+        assert_eq!(m.energy_source(), "surrogate");
+        let sys = m.systolic_uj_per_inference().unwrap();
+        assert!((sys - 2.0).abs() < 1e-9, "{sys}");
+        let s = m.summary();
+        assert!(s.contains("(surrogate)"), "{s}");
+        assert!(s.contains("3 over-budget"), "{s}");
+
+        // Merge keeps both counters and the label.
+        let mut other = Metrics::new();
+        other.record_budget_rejected(2);
+        m.merge(&other);
+        assert_eq!(m.budget_rejected(), 5);
+        assert_eq!(m.energy_source(), "surrogate");
     }
 }

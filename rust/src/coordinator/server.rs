@@ -38,6 +38,16 @@
 //!   memo — no shared lock on the steady-state path. The dispatcher
 //!   shards batch-size stats the same way; shards merge once at
 //!   shutdown. No `Mutex<Metrics>` on the request path.
+//! * **Surrogate pricing + energy-budget admission** — with
+//!   [`ServerConfig::surrogate`] the resident network is priced *once*
+//!   at startup through the fitted closed-form table
+//!   ([`SurrogateTable::quote_network`]) and workers account each batch
+//!   with a multiply — no simulator anywhere in the steady-state loop.
+//!   The same quote powers per-request µJ attribution
+//!   ([`Server::request_quote`]) and, with
+//!   [`ServerConfig::max_uj_per_inf`], an admission policy that rejects
+//!   requests whose predicted energy exceeds the budget (counted
+//!   separately from backpressure rejections).
 //! * **Drain-barrier lifecycle** — admission increments the completion
 //!   counter, answering a request (result *or* error) decrements it;
 //!   `shutdown()` closes the ingress and parks on a condvar until the
@@ -64,6 +74,7 @@ use super::energy::{co_simulate_cached, EnergyReport};
 use super::exec::{Executor, SimExecutor};
 use super::metrics::Metrics;
 use super::{ConvPath, IMAGE_ELEMS, LOGITS};
+use crate::energy::surrogate::{EnergyQuote, SurrogateTable};
 use crate::runtime::Engine;
 use crate::simulator::SweepCache;
 use crate::util::shard::{self, PushError, ShardedCounter, ShardedQueue};
@@ -198,6 +209,19 @@ pub struct ServerConfig {
     pub energy: bool,
     /// Technology node (nm) for the per-batch energy pricing.
     pub energy_node_nm: f64,
+    /// Fitted closed-form energy models (see
+    /// [`crate::energy::surrogate`]). When present and covering the
+    /// resident network, the quote is computed once at startup and the
+    /// workers price batches with a multiply — no simulator on the
+    /// steady-state path. Falls back to co-simulation (with a warning)
+    /// if the table lacks coverage.
+    pub surrogate: Option<Arc<SurrogateTable>>,
+    /// Energy-budget admission policy: reject any request whose
+    /// predicted worst-case energy ([`EnergyQuote::worst_uj`]) exceeds
+    /// this many µJ per inference. The quote comes from the surrogate
+    /// when available, else from one startup co-simulation. `None`
+    /// disables the policy.
+    pub max_uj_per_inf: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -212,6 +236,8 @@ impl Default for ServerConfig {
             ingress_shards: 0,
             energy: true,
             energy_node_nm: 45.0,
+            surrogate: None,
+            max_uj_per_inf: None,
         }
     }
 }
@@ -223,7 +249,13 @@ pub struct Server {
     ingress: Arc<ShardedQueue<Request>>,
     barrier: Arc<DrainBarrier>,
     rejected: Arc<ShardedCounter>,
+    budget_rejected: Arc<ShardedCounter>,
     max_pending: usize,
+    /// Per-request energy quote (surrogate-priced when a table was
+    /// given, else the startup co-simulation backing the budget check).
+    quote: Option<EnergyQuote>,
+    /// Admission energy budget, µJ per inference.
+    max_uj_per_inf: Option<f64>,
     started: Instant,
     dispatcher: Option<JoinHandle<Metrics>>,
     workers: Vec<JoinHandle<Metrics>>,
@@ -273,6 +305,36 @@ impl Server {
         // schedule, every later batch replays it.
         let energy_cache = Arc::new(SweepCache::new());
         let factory = Arc::new(factory);
+
+        // Resolve the resident network's energy quote once, up front.
+        // With a covering surrogate table this is the only pricing work
+        // the whole server ever does; without one the workers keep the
+        // per-batch co-simulation path (memoized, see below) and only an
+        // energy-budget policy forces a single startup co-simulation.
+        let resident = super::smallcnn_network();
+        let surrogate_quote: Option<EnergyQuote> = cfg.surrogate.as_ref().and_then(|table| {
+            let q = table.quote_network(&resident, cfg.energy_node_nm);
+            if q.is_none() {
+                eprintln!(
+                    "warn: surrogate table does not cover the resident network at {} nm; \
+                     falling back to per-batch co-simulation",
+                    cfg.energy_node_nm
+                );
+            }
+            q
+        });
+        let admission_quote: Option<EnergyQuote> = match (cfg.max_uj_per_inf, surrogate_quote) {
+            (None, q) => q,
+            (Some(_), Some(q)) => Some(q),
+            (Some(_), None) => {
+                let r = co_simulate_cached(&resident, cfg.energy_node_nm, &energy_cache);
+                Some(EnergyQuote {
+                    systolic_j: r.systolic_joules(),
+                    optical_j: r.optical_joules(),
+                    node_nm: r.node_nm,
+                })
+            }
+        };
 
         // Workers: each owns the consumer half of its lane, a private
         // executor (compilation is per-worker and lazy unless warmed),
@@ -338,10 +400,24 @@ impl Server {
                     depth.fetch_sub(retired, SeqCst);
                     barrier.sub(w, retired);
                     if energy {
-                        let report = energy_memo.get_or_insert_with(|| {
-                            co_simulate_cached(&net, node_nm, &energy_cache)
-                        });
-                        shard.record_energy(retired, report);
+                        match surrogate_quote {
+                            // Closed-form fast path: the quote was
+                            // computed once at startup; accounting a
+                            // batch is a handful of adds.
+                            Some(q) => shard.record_priced_energy(
+                                retired,
+                                q.systolic_j,
+                                q.optical_j,
+                                q.node_nm,
+                                "surrogate",
+                            ),
+                            None => {
+                                let report = energy_memo.get_or_insert_with(|| {
+                                    co_simulate_cached(&net, node_nm, &energy_cache)
+                                });
+                                shard.record_energy(retired, report);
+                            }
+                        }
                     }
                 }
                 shard
@@ -374,7 +450,10 @@ impl Server {
             ingress,
             barrier,
             rejected: Arc::new(ShardedCounter::new(shards_n)),
+            budget_rejected: Arc::new(ShardedCounter::new(shards_n)),
             max_pending,
+            quote: admission_quote,
+            max_uj_per_inf: cfg.max_uj_per_inf,
             started: Instant::now(),
             dispatcher: Some(dispatcher),
             workers,
@@ -393,6 +472,22 @@ impl Server {
             return resp_rx;
         }
         let hint = shard::thread_shard_hint();
+        // Energy-budget admission: every request runs the resident
+        // network, so its predicted cost is the startup quote. Checked
+        // before the load-shedding bound — an over-budget request is
+        // refused even on an idle server.
+        if let (Some(max_uj), Some(q)) = (self.max_uj_per_inf, self.quote) {
+            if q.worst_uj() > max_uj {
+                self.budget_rejected.add(hint, 1);
+                let _ = resp_tx.send(Err(anyhow::anyhow!(
+                    "request over energy budget: predicted {:.2} µJ/inf exceeds \
+                     max_uj_per_inf {:.2}",
+                    q.worst_uj(),
+                    max_uj
+                )));
+                return resp_rx;
+            }
+        }
         // Admission control. The check-then-add pair is racy across
         // concurrent callers, so the bound can overshoot by the number
         // of racing threads — fine for a load-shedding knob.
@@ -440,9 +535,23 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("server dropped the request"))?
     }
 
-    /// Requests refused at admission so far.
+    /// Requests refused at admission so far (backpressure only; budget
+    /// refusals are counted separately, see [`Server::budget_rejected`]).
     pub fn rejected(&self) -> usize {
         self.rejected.value()
+    }
+
+    /// Requests refused by the energy-budget admission policy so far.
+    pub fn budget_rejected(&self) -> usize {
+        self.budget_rejected.value()
+    }
+
+    /// Predicted per-request energy: the quote every admitted inference
+    /// is attributed (surrogate-priced when the server was started with
+    /// a covering table, else the startup co-simulation backing an
+    /// energy budget; `None` when neither applies).
+    pub fn request_quote(&self) -> Option<EnergyQuote> {
+        self.quote
     }
 
     /// Requests admitted and not yet answered.
@@ -491,6 +600,7 @@ impl Server {
             self.workers.clear();
         }
         agg.record_rejected(self.rejected.value());
+        agg.record_budget_rejected(self.budget_rejected.value());
         agg.set_window(self.started, Instant::now());
         agg
     }
@@ -742,19 +852,177 @@ mod tests {
         let m = s.shutdown();
         assert_eq!(m.energy_images(), 12, "every served image priced");
         assert!(m.energy_batches() >= 1);
-        assert!(m.systolic_uj_per_inference() > 0.0);
-        assert!(m.optical_uj_per_inference() > 0.0);
+        let sys = m.systolic_uj_per_inference().expect("energy priced");
+        let opt = m.optical_uj_per_inference().expect("energy priced");
+        assert!(sys > 0.0);
+        assert!(opt > 0.0);
+        assert_eq!(m.energy_source(), "co-simulation");
         assert!(m.summary().contains("µJ/inf"), "{}", m.summary());
         // Per-inference energy must equal the standalone co-simulation:
         // accumulation is (per-inference × images) / images.
         let reference = super::super::energy::co_simulate(&super::super::smallcnn_network(), 45.0);
         let tol = 1e-9;
         assert!(
-            (m.systolic_uj_per_inference() - reference.systolic_joules() * 1e6).abs() < tol,
+            (sys - reference.systolic_joules() * 1e6).abs() < tol,
             "{} vs {}",
-            m.systolic_uj_per_inference(),
+            sys,
             reference.systolic_joules() * 1e6
         );
+    }
+
+    /// Fit a surrogate whose coverage includes SmallCNN's (3, 3, 1)
+    /// family, padded with a few same-family shapes so the least-squares
+    /// systems are well-conditioned.
+    fn smallcnn_surrogate() -> SurrogateTable {
+        use crate::energy::surrogate::MachineKind;
+        use crate::networks::ConvLayer;
+        let mut layers = super::super::smallcnn_network().layers;
+        layers.push(ConvLayer::square(32, 16, 64, 3, 1));
+        layers.push(ConvLayer::square(16, 64, 8, 3, 1));
+        layers.push(ConvLayer::square(96, 8, 24, 3, 1));
+        layers.push(ConvLayer::square(12, 48, 48, 3, 1));
+        SurrogateTable::fit(
+            &SweepCache::new(),
+            &[MachineKind::Systolic, MachineKind::Optical4F],
+            &[45.0],
+            &layers,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn surrogate_pricing_matches_cosim_and_tags_source() {
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 2,
+                warm_start: false,
+                max_pending: 64,
+                surrogate: Some(Arc::new(smallcnn_surrogate())),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let q = s.request_quote().expect("surrogate covers the resident network");
+        let mut rng = Rng::new(31);
+        let rxs: Vec<_> = (0..10)
+            .map(|_| s.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.energy_images(), 10);
+        assert_eq!(m.energy_source(), "surrogate");
+        let sys = m.systolic_uj_per_inference().expect("priced");
+        let opt = m.optical_uj_per_inference().expect("priced");
+        // Per-request attribution is the startup quote...
+        assert!((sys - q.systolic_uj()).abs() < 1e-9);
+        assert!((opt - q.optical_uj()).abs() < 1e-9);
+        // ...and the closed-form prediction agrees with the cycle
+        // simulators on the resident network.
+        let reference = super::super::energy::co_simulate(&super::super::smallcnn_network(), 45.0);
+        let sys_rel = (sys - reference.systolic_joules() * 1e6).abs()
+            / (reference.systolic_joules() * 1e6);
+        let opt_rel =
+            (opt - reference.optical_joules() * 1e6).abs() / (reference.optical_joules() * 1e6);
+        assert!(sys_rel < 0.01, "systolic surrogate off by {sys_rel}");
+        assert!(opt_rel < 0.01, "optical surrogate off by {opt_rel}");
+    }
+
+    #[test]
+    fn uncovered_surrogate_falls_back_to_cosim() {
+        // A fitted table that lacks the resident family (5×5 kernels
+        // only) must not break serving: pricing falls back to the
+        // co-simulation path.
+        use crate::energy::surrogate::MachineKind;
+        use crate::networks::ConvLayer;
+        let off_family = [
+            ConvLayer::square(64, 3, 8, 5, 1),
+            ConvLayer::square(32, 8, 16, 5, 1),
+            ConvLayer::square(16, 16, 32, 5, 1),
+            ConvLayer::square(48, 4, 12, 5, 1),
+            ConvLayer::square(24, 24, 24, 5, 1),
+            ConvLayer::square(12, 32, 8, 5, 1),
+        ];
+        let table = SurrogateTable::fit(
+            &SweepCache::new(),
+            &[MachineKind::Systolic, MachineKind::Optical4F],
+            &[45.0],
+            &off_family,
+        )
+        .unwrap();
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 64,
+                surrogate: Some(Arc::new(table)),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        assert!(s.request_quote().is_none(), "no quote without coverage");
+        let mut rng = Rng::new(32);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        let m = s.shutdown();
+        assert_eq!(m.energy_images(), 1);
+        assert_eq!(m.energy_source(), "co-simulation");
+    }
+
+    #[test]
+    fn energy_budget_rejects_over_budget_requests() {
+        // SmallCNN costs a few µJ on either machine; a 1e-3 µJ budget
+        // must shed everything, distinctly from backpressure.
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 64,
+                surrogate: Some(Arc::new(smallcnn_surrogate())),
+                max_uj_per_inf: Some(1e-3),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(33);
+        for _ in 0..5 {
+            let err = s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap_err();
+            assert!(err.to_string().contains("energy budget"), "{err:#}");
+        }
+        assert_eq!(s.budget_rejected(), 5);
+        assert_eq!(s.rejected(), 0, "budget refusals are not backpressure");
+        let m = s.shutdown();
+        assert_eq!(m.budget_rejected(), 5);
+        assert_eq!(m.count(), 0);
+        assert!(m.summary().contains("over-budget"), "{}", m.summary());
+    }
+
+    #[test]
+    fn generous_energy_budget_admits_and_cosim_backs_the_quote() {
+        // Budget without a surrogate: one startup co-simulation supplies
+        // the quote; a generous bound admits everything.
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 64,
+                max_uj_per_inf: Some(1e9),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let q = s.request_quote().expect("co-simulation backs the budget");
+        assert!(q.worst_uj() > 0.0);
+        let mut rng = Rng::new(34);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        assert_eq!(s.budget_rejected(), 0);
+        let m = s.shutdown();
+        assert_eq!(m.count(), 1);
+        assert_eq!(m.energy_source(), "co-simulation");
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! | eq. (A8) shot-noise laser floor | [`optical::optical_energy`] |
 //! | eqs. (A9)–(A13) ReRAM array | [`reram`] |
 //! | Table IV / Table VII constants | [`constants`] |
+//!
+//! [`surrogate`] sits on top: closed-form energy models fitted from the
+//! cycle simulators' outputs, so the serving path can price inferences
+//! without a simulator in the hot loop.
 
 pub mod constants;
 pub mod converter;
@@ -23,6 +27,7 @@ pub mod logic;
 pub mod optical;
 pub mod reram;
 pub mod sram;
+pub mod surrogate;
 
 pub use constants::*;
 

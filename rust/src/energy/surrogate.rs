@@ -1,0 +1,776 @@
+//! Surrogate energy-pricing models fitted from cycle-accurate sweeps.
+//!
+//! The serving path used to put a cycle-accurate co-simulation in the
+//! hot loop to price batches. This module replaces that with the LASANA
+//! recipe: run the slow simulators once over a training grid (through
+//! [`SweepCache`], so sweep results are reused), fit a cheap closed-form
+//! model per **machine × node × layer-shape family**, and serve every
+//! later pricing query as a handful of multiply-adds.
+//!
+//! The models are *linear* in per-machine shape features. That is not an
+//! approximation of convenience: for a fixed machine config and node,
+//! each cycle simulator's per-layer energy is an exact linear
+//! combination of features computable from the layer shape alone (MAC
+//! count, Toeplitz/tile traffic terms, converter counts — see
+//! [`MachineKind::features`]), so a least-squares fit over a
+//! representative corpus recovers the simulator's own coefficients and
+//! crossval error sits at floating-point noise, far inside the ≤7%
+//! bound the evaluation scenario enforces. Fits are solved with
+//! [`crate::util::stats::least_squares`] (no external dependencies) and
+//! weighted by 1/energy so the minimized quantity is **relative** error.
+//!
+//! Tables serialize through [`crate::util::json`] (`aimc fit-surrogate`
+//! writes one, `aimc serve --surrogate` loads it at startup). Loading is
+//! strict: any structural anomaly is an error, and the caller falls back
+//! to co-simulation rather than trusting a corrupt model.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::networks::{zoo, ConvLayer, Network};
+use crate::simulator::machine::Machine;
+use crate::simulator::optical4f::Optical4FConfig;
+use crate::simulator::photonic::PhotonicConfig;
+use crate::simulator::reram::ReramConfig;
+use crate::simulator::systolic::SystolicConfig;
+use crate::simulator::SweepCache;
+use crate::util::json::Json;
+use crate::util::stats::least_squares;
+
+/// Serialization header; bump on any layout change so old tables
+/// deliberately fail to load.
+pub const SURROGATE_FORMAT: &str = "aimc-surrogate-v1";
+
+/// Acceptance bound on surrogate-vs-cycle-simulator relative energy
+/// error: the crossval scenario, its test, and `aimc surrogate-crossval`
+/// all fail any (machine × node) whose worst layer error exceeds this.
+pub const ERR_BOUND: f64 = 0.07;
+
+/// The four cycle-modeled processor classes a surrogate can price.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MachineKind {
+    Systolic,
+    Reram,
+    Photonic,
+    Optical4F,
+}
+
+impl MachineKind {
+    pub const ALL: [MachineKind; 4] = [
+        MachineKind::Systolic,
+        MachineKind::Reram,
+        MachineKind::Photonic,
+        MachineKind::Optical4F,
+    ];
+
+    /// Stable name, matching [`Machine::name`] for the same class.
+    pub fn name(self) -> &'static str {
+        match self {
+            MachineKind::Systolic => "systolic",
+            MachineKind::Reram => "reram",
+            MachineKind::Photonic => "photonic",
+            MachineKind::Optical4F => "optical4f",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "systolic" => Some(MachineKind::Systolic),
+            "reram" | "memristor" => Some(MachineKind::Reram),
+            "photonic" | "sp" => Some(MachineKind::Photonic),
+            "optical4f" | "optical" | "4f" => Some(MachineKind::Optical4F),
+            _ => None,
+        }
+    }
+
+    /// The default-config cycle machine this kind models. Surrogates are
+    /// fitted against (and only valid for) these default configs — the
+    /// same ones the coordinator and the report scenarios use.
+    pub fn machine(self) -> Box<dyn Machine> {
+        match self {
+            MachineKind::Systolic => Box::new(SystolicConfig::default()),
+            MachineKind::Reram => Box::new(ReramConfig::default()),
+            MachineKind::Photonic => Box::new(PhotonicConfig::default()),
+            MachineKind::Optical4F => Box::new(Optical4FConfig::default()),
+        }
+    }
+
+    /// Number of shape features (= fitted coefficients) for this kind.
+    pub fn feature_count(self) -> usize {
+        match self {
+            MachineKind::Systolic => 4,
+            MachineKind::Reram => 6,
+            MachineKind::Photonic => 5,
+            MachineKind::Optical4F => 5,
+        }
+    }
+
+    /// Shape features whose span contains the machine's per-layer energy
+    /// exactly (fixed config + node). Derived term-by-term from the
+    /// cycle simulators' tile loops:
+    ///
+    /// * **systolic** — `[L·N·M, L·N·tm, L·M, L·M·(tn−1)]`: MAC/register
+    ///   + hop terms are ∝ MACs; activation reads stream N per output
+    ///   tile column; partial-sum SRAM traffic is the output surface plus
+    ///   a 2·psum_bytes spill per extra contraction pass.
+    /// * **reram** — adds `N·M` (amortized weight programming) and an
+    ///   indicator `L·M·[tn>1]` (the 5/8-byte psum spill schedule is
+    ///   affine in tn only for tn ≥ 2).
+    /// * **photonic** — `[L·N, L·M, N·M, L·N·tm, L·M·tn]`: one SRAM read
+    ///   per Toeplitz element and write per output, weight reconfig over
+    ///   the tile grid, input DACs re-driven per output tile, ADC reads
+    ///   per contraction pass.
+    /// * **optical-4F** — per-patch/per-group loop of the 4F machine:
+    ///   load-phase pixel traffic `P·s̄²·Cᵢ`, kernel writes
+    ///   `P·k²·Cᵢ·Cᵢ₊₁`, laser shots `P·g·(1+Cᵢ₊₁)`, and output reads /
+    ///   psum spills spanned by `n_out·Cᵢ₊₁·g` and `n_out·Cᵢ₊₁`.
+    ///
+    /// Tile counts use the same clamping as the simulators, so the
+    /// feature map agrees with them on degenerate shapes too.
+    pub fn features(self, layer: &ConvLayer) -> Vec<f64> {
+        match self {
+            MachineKind::Systolic => {
+                let (l, n, m, tn, tm) = tiled_dims(layer, SystolicConfig::default().dim);
+                vec![l * n * m, l * n * tm, l * m, l * m * (tn - 1.0)]
+            }
+            MachineKind::Reram => {
+                let (l, n, m, tn, tm) = tiled_dims(layer, ReramConfig::default().dim);
+                let spill = if tn > 1.0 { l * m } else { 0.0 };
+                vec![l * n * m, n * m, l * n * tm, l * m * tn, l * m, spill]
+            }
+            MachineKind::Photonic => {
+                let (l, n, m, tn, tm) = tiled_dims(layer, PhotonicConfig::default().dim);
+                vec![l * n, l * m, n * m, l * n * tm, l * m * tn]
+            }
+            MachineKind::Optical4F => {
+                let cfg = Optical4FConfig::default();
+                let n = layer.n;
+                let k = layer.kh.max(layer.kw);
+                let ci = layer.c_in;
+                let co = layer.c_out as f64;
+                let n_out = {
+                    let span = n.saturating_sub(k) / layer.stride + 1;
+                    (span * span) as f64
+                };
+                let patches = cfg.spatial_patches(n, k);
+                let s2 = if patches == 1 {
+                    ((n + k - 1) * (n + k - 1)) as f64
+                } else {
+                    cfg.slm_pixels as f64
+                };
+                let c_prime = cfg.channels_at_once(s2.sqrt() as usize, ci);
+                let groups = ci.div_ceil(c_prime) as f64;
+                let p = patches as f64;
+                let cif = ci as f64;
+                let kk = (k * k) as f64;
+                vec![
+                    p * s2 * cif,
+                    p * kk * cif * co,
+                    p * groups * (1.0 + co),
+                    n_out * co * groups,
+                    n_out * co,
+                ]
+            }
+        }
+    }
+}
+
+/// Matmul dims + tile counts with the simulators' degenerate-shape
+/// clamps applied.
+fn tiled_dims(layer: &ConvLayer, dim: usize) -> (f64, f64, f64, f64, f64) {
+    let (l, n, m) = layer.matmul_dims();
+    let l = l.max(1.0);
+    let n = n.max(1.0) as usize;
+    let m = m.max(1.0) as usize;
+    let tn = n.div_ceil(dim) as f64;
+    let tm = m.div_ceil(dim) as f64;
+    (l, n as f64, m as f64, tn, tm)
+}
+
+/// Layer-shape family a model is fitted for: kernel geometry + stride.
+/// Within a family the tile/patch features vary smoothly with (n, Cᵢ,
+/// Cᵢ₊₁); keying on the kernel keeps each fit on one scheduling regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Family {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+}
+
+impl Family {
+    pub fn of(layer: &ConvLayer) -> Self {
+        Family {
+            kh: layer.kh,
+            kw: layer.kw,
+            stride: layer.stride,
+        }
+    }
+}
+
+/// Model key: machine class, exact node bits (same convention as
+/// [`SweepCache`] keys — no tolerance games), shape family.
+type ModelKey = (MachineKind, u64, Family);
+
+/// A fitted table of per-(machine × node × family) linear models.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SurrogateTable {
+    models: HashMap<ModelKey, Vec<f64>>,
+}
+
+/// Predicted per-inference energy for the coordinator's co-simulation
+/// pair (systolic + optical-4F), joules.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyQuote {
+    pub systolic_j: f64,
+    pub optical_j: f64,
+    pub node_nm: f64,
+}
+
+impl EnergyQuote {
+    pub fn systolic_uj(&self) -> f64 {
+        self.systolic_j * 1e6
+    }
+
+    pub fn optical_uj(&self) -> f64 {
+        self.optical_j * 1e6
+    }
+
+    /// Conservative per-inference µJ figure for admission control: the
+    /// worse of the two priced machines.
+    pub fn worst_uj(&self) -> f64 {
+        self.systolic_uj().max(self.optical_uj())
+    }
+}
+
+impl SurrogateTable {
+    /// Fit one model per (machine × node × family) over the training
+    /// `layers`. Energy targets are served through `cache`, so grid
+    /// points already simulated by earlier sweeps are replayed rather
+    /// than re-simulated. Rows are weighted by 1/energy, making the
+    /// solver minimize relative error — the quantity
+    /// [`crossval`] bounds.
+    pub fn fit(
+        cache: &SweepCache,
+        kinds: &[MachineKind],
+        nodes: &[f64],
+        layers: &[ConvLayer],
+    ) -> Result<SurrogateTable, String> {
+        if kinds.is_empty() || nodes.is_empty() || layers.is_empty() {
+            return Err("surrogate fit needs at least one machine, node and layer".into());
+        }
+        let mut models = HashMap::new();
+        for &kind in kinds {
+            let machine = kind.machine();
+            for &node in nodes {
+                if !node.is_finite() || node <= 0.0 {
+                    return Err(format!("bad node {node}"));
+                }
+                // Deterministic grouping: families in first-seen order.
+                let mut order: Vec<Family> = Vec::new();
+                let mut by_family: HashMap<Family, (Vec<Vec<f64>>, Vec<f64>)> = HashMap::new();
+                for (layer, joules) in cache.training_rows(machine.as_ref(), layers, node) {
+                    if !joules.is_finite() || joules <= 0.0 {
+                        return Err(format!(
+                            "{} @{node} nm: non-positive energy for {layer:?}",
+                            kind.name()
+                        ));
+                    }
+                    let fam = Family::of(&layer);
+                    let entry = by_family.entry(fam).or_insert_with(|| {
+                        order.push(fam);
+                        (Vec::new(), Vec::new())
+                    });
+                    let row: Vec<f64> =
+                        kind.features(&layer).iter().map(|f| f / joules).collect();
+                    entry.0.push(row);
+                    entry.1.push(1.0);
+                }
+                for fam in order {
+                    let (a, b) = &by_family[&fam];
+                    let coeffs = least_squares(a, b).ok_or_else(|| {
+                        format!(
+                            "{} @{node} nm family {fam:?}: singular fit over {} layers",
+                            kind.name(),
+                            a.len()
+                        )
+                    })?;
+                    models.insert((kind, node.to_bits(), fam), coeffs);
+                }
+            }
+        }
+        Ok(SurrogateTable { models })
+    }
+
+    /// Number of fitted (machine × node × family) models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Predicted energy for one layer, joules. `None` when no model
+    /// covers this (machine, node, family).
+    pub fn predict_layer(&self, kind: MachineKind, node_nm: f64, layer: &ConvLayer) -> Option<f64> {
+        let coeffs = self
+            .models
+            .get(&(kind, node_nm.to_bits(), Family::of(layer)))?;
+        let e: f64 = kind
+            .features(layer)
+            .iter()
+            .zip(coeffs)
+            .map(|(f, c)| f * c)
+            .sum();
+        Some(e)
+    }
+
+    /// Predicted energy for a whole network, joules. `None` when any
+    /// layer lacks a model — partial coverage must not silently
+    /// under-price a network.
+    pub fn predict_network(&self, kind: MachineKind, node_nm: f64, net: &Network) -> Option<f64> {
+        let mut total = 0.0;
+        for layer in &net.layers {
+            total += self.predict_layer(kind, node_nm, layer)?;
+        }
+        Some(total)
+    }
+
+    /// Price `net` for the coordinator's co-simulation pair. `None`
+    /// unless every layer has a model for both machines at `node_nm`.
+    pub fn quote_network(&self, net: &Network, node_nm: f64) -> Option<EnergyQuote> {
+        Some(EnergyQuote {
+            systolic_j: self.predict_network(MachineKind::Systolic, node_nm, net)?,
+            optical_j: self.predict_network(MachineKind::Optical4F, node_nm, net)?,
+            node_nm,
+        })
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Deterministic JSON document (models sorted by key).
+    pub fn to_json(&self) -> Json {
+        let mut keys: Vec<ModelKey> = self.models.keys().copied().collect();
+        keys.sort();
+        let models: Vec<Json> = keys
+            .iter()
+            .map(|key| {
+                let (kind, node_bits, fam) = *key;
+                Json::Obj(vec![
+                    ("machine".into(), Json::Str(kind.name().into())),
+                    ("node_nm".into(), Json::Num(f64::from_bits(node_bits))),
+                    ("kh".into(), Json::Num(fam.kh as f64)),
+                    ("kw".into(), Json::Num(fam.kw as f64)),
+                    ("stride".into(), Json::Num(fam.stride as f64)),
+                    (
+                        "coeffs".into(),
+                        Json::Arr(self.models[key].iter().map(|&c| Json::Num(c)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("format".into(), Json::Str(SURROGATE_FORMAT.into())),
+            ("models".into(), Json::Arr(models)),
+        ])
+    }
+
+    /// Strict deserialization: wrong format tag, unknown machine,
+    /// non-finite numbers, wrong coefficient count, duplicate or empty
+    /// models all fail. Callers treat any error as "do not serve with
+    /// this table".
+    pub fn from_json(doc: &Json) -> Result<SurrogateTable, String> {
+        let format = as_str(field(doc, "format")?)?;
+        if format != SURROGATE_FORMAT {
+            return Err(format!(
+                "format {format:?} is not {SURROGATE_FORMAT:?}"
+            ));
+        }
+        let Json::Arr(entries) = field(doc, "models")? else {
+            return Err("\"models\" is not an array".into());
+        };
+        if entries.is_empty() {
+            return Err("empty model table".into());
+        }
+        let mut models = HashMap::new();
+        for entry in entries {
+            let name = as_str(field(entry, "machine")?)?;
+            let kind = MachineKind::parse(name)
+                .ok_or_else(|| format!("unknown machine {name:?}"))?;
+            let node = as_num(field(entry, "node_nm")?)?;
+            if node <= 0.0 {
+                return Err(format!("bad node_nm {node}"));
+            }
+            let fam = Family {
+                kh: as_usize(field(entry, "kh")?)?,
+                kw: as_usize(field(entry, "kw")?)?,
+                stride: as_usize(field(entry, "stride")?)?,
+            };
+            if fam.kh == 0 || fam.kw == 0 || fam.stride == 0 {
+                return Err(format!("degenerate family {fam:?}"));
+            }
+            let Json::Arr(raw) = field(entry, "coeffs")? else {
+                return Err("\"coeffs\" is not an array".into());
+            };
+            let coeffs: Vec<f64> = raw
+                .iter()
+                .map(as_num)
+                .collect::<Result<_, _>>()?;
+            if coeffs.len() != kind.feature_count() {
+                return Err(format!(
+                    "{} expects {} coefficients, found {}",
+                    kind.name(),
+                    kind.feature_count(),
+                    coeffs.len()
+                ));
+            }
+            if models.insert((kind, node.to_bits(), fam), coeffs).is_some() {
+                return Err(format!(
+                    "duplicate model for {} @{node} nm {fam:?}",
+                    kind.name()
+                ));
+            }
+        }
+        Ok(SurrogateTable { models })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+
+    pub fn load(path: &Path) -> Result<SurrogateTable, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let doc =
+            Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        SurrogateTable::from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+// ---- JSON field helpers (strict) -----------------------------------------
+
+fn field<'a>(obj: &'a Json, name: &str) -> Result<&'a Json, String> {
+    let Json::Obj(pairs) = obj else {
+        return Err(format!("expected object while reading {name:?}"));
+    };
+    pairs
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field {name:?}"))
+}
+
+fn as_str(j: &Json) -> Result<&str, String> {
+    match j {
+        Json::Str(s) => Ok(s),
+        other => Err(format!("expected string, found {other:?}")),
+    }
+}
+
+fn as_num(j: &Json) -> Result<f64, String> {
+    match j {
+        Json::Num(v) if v.is_finite() => Ok(*v),
+        other => Err(format!("expected number, found {other:?}")),
+    }
+}
+
+fn as_usize(j: &Json) -> Result<usize, String> {
+    let v = as_num(j)?;
+    if v < 0.0 || v.fract() != 0.0 || v > usize::MAX as f64 {
+        return Err(format!("expected non-negative integer, found {v}"));
+    }
+    Ok(v as usize)
+}
+
+// ---- training corpus & crossval ------------------------------------------
+
+/// Order-preserving shape dedup.
+pub fn dedup_layers(layers: impl IntoIterator<Item = ConvLayer>) -> Vec<ConvLayer> {
+    let mut seen = std::collections::HashSet::new();
+    layers.into_iter().filter(|l| seen.insert(*l)).collect()
+}
+
+/// Default training corpus: every unique conv shape of the Table I zoo
+/// at `input` resolution, plus the Table V reference layer — so the
+/// shapes the crossval scenario scores are interpolations of the fit,
+/// never extrapolations. Callers append whatever else they serve (e.g.
+/// the coordinator's resident CNN) before fitting.
+pub fn training_corpus(input: usize) -> Vec<ConvLayer> {
+    let mut layers: Vec<ConvLayer> = Vec::new();
+    for net in zoo(input) {
+        layers.extend(net.layers);
+    }
+    layers.push(ConvLayer::square(512, 128, 128, 3, 1));
+    dedup_layers(layers)
+}
+
+/// The full technology ladder, the default node grid for fitting.
+pub fn default_nodes() -> Vec<f64> {
+    crate::technode::NODES.iter().map(|n| n.nm).collect()
+}
+
+/// One crossval verdict: surrogate vs cycle simulator for a machine ×
+/// node over a layer set.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossvalPoint {
+    pub kind: MachineKind,
+    pub node_nm: f64,
+    pub layers: usize,
+    pub max_rel_err: f64,
+    pub mean_rel_err: f64,
+}
+
+/// Score `table` against the cycle simulators (through `cache`) for
+/// every machine × node over the unique shapes of `layers`. A layer with
+/// no fitted model counts as 100% error, so a coverage hole can never
+/// pass a bound check.
+pub fn crossval(
+    table: &SurrogateTable,
+    cache: &SweepCache,
+    kinds: &[MachineKind],
+    nodes: &[f64],
+    layers: &[ConvLayer],
+) -> Vec<CrossvalPoint> {
+    let uniq = dedup_layers(layers.iter().copied());
+    let mut out = Vec::with_capacity(kinds.len() * nodes.len());
+    for &kind in kinds {
+        let machine = kind.machine();
+        for &node in nodes {
+            let mut max_rel = 0.0f64;
+            let mut sum_rel = 0.0f64;
+            for layer in &uniq {
+                let truth = cache.simulate_layer(machine.as_ref(), layer, node);
+                let truth_j = truth.ledger.total().max(f64::MIN_POSITIVE);
+                let rel = match table.predict_layer(kind, node, layer) {
+                    Some(pred) => (pred - truth_j).abs() / truth_j,
+                    None => 1.0,
+                };
+                max_rel = max_rel.max(rel);
+                sum_rel += rel;
+            }
+            out.push(CrossvalPoint {
+                kind,
+                node_nm: node,
+                layers: uniq.len(),
+                max_rel_err: max_rel,
+                mean_rel_err: sum_rel / uniq.len().max(1) as f64,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Small but heterogeneous corpus: zoo at a reduced input resolution
+    /// (all kernel families, strides, channel ranges) plus the Table V
+    /// reference layer (already appended by `training_corpus`).
+    fn test_corpus() -> Vec<ConvLayer> {
+        training_corpus(300)
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "aimc-surrogate-{tag}-{}.json",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn crossval_error_bounded_on_table_v_shapes() {
+        // The acceptance bound: ≤7% relative energy error per machine ×
+        // node (LASANA's figure). Because the fitted families are linear
+        // in the features, the observed error is FP noise.
+        let cache = SweepCache::new();
+        let corpus = test_corpus();
+        let nodes = [45.0, 7.0];
+        let table =
+            SurrogateTable::fit(&cache, &MachineKind::ALL, &nodes, &corpus).unwrap();
+        // Table V reference layer + resident-CNN-sized shapes + a
+        // held-out (not in corpus) same-family shape.
+        let eval = vec![
+            ConvLayer::square(512, 128, 128, 3, 1),
+            ConvLayer::square(64, 3, 8, 3, 1),
+            ConvLayer::square(14, 16, 32, 3, 1),
+            ConvLayer::square(96, 48, 64, 3, 1),
+        ];
+        for p in crossval(&table, &cache, &MachineKind::ALL, &nodes, &eval) {
+            assert!(
+                p.max_rel_err <= ERR_BOUND,
+                "{} @{} nm: max rel err {:.4} over {} layers",
+                p.kind.name(),
+                p.node_nm,
+                p.max_rel_err,
+                p.layers
+            );
+        }
+    }
+
+    #[test]
+    fn network_prediction_matches_cycle_sum() {
+        let cache = SweepCache::new();
+        let corpus = test_corpus();
+        let table =
+            SurrogateTable::fit(&cache, &MachineKind::ALL, &[45.0], &corpus).unwrap();
+        let net = crate::networks::vgg::vgg16(300);
+        for kind in MachineKind::ALL {
+            let truth = cache
+                .simulate_network(kind.machine().as_ref(), &net, 45.0)
+                .ledger
+                .total();
+            let pred = table.predict_network(kind, 45.0, &net).unwrap();
+            let rel = (pred - truth).abs() / truth;
+            assert!(rel < 0.01, "{}: rel {rel}", kind.name());
+        }
+    }
+
+    #[test]
+    fn fitted_predictions_deterministic_across_runs() {
+        // Property: two independent fits over a seeded random corpus
+        // produce bit-identical predictions (no HashMap-order leakage
+        // into the solver).
+        let mut rng = Rng::new(0xA1C0_5EED);
+        let mut layers = Vec::new();
+        for _ in 0..40 {
+            let k = *rng.choose(&[1usize, 3, 5]);
+            let stride = *rng.choose(&[1usize, 2]);
+            layers.push(ConvLayer::square(
+                rng.range_usize(16, 128),
+                rng.range_usize(1, 64),
+                rng.range_usize(1, 64),
+                k,
+                stride,
+            ));
+        }
+        let nodes = [45.0, 14.0];
+        let t1 =
+            SurrogateTable::fit(&SweepCache::new(), &MachineKind::ALL, &nodes, &layers)
+                .unwrap();
+        let t2 =
+            SurrogateTable::fit(&SweepCache::new(), &MachineKind::ALL, &nodes, &layers)
+                .unwrap();
+        assert_eq!(t1, t2, "fits must be bit-identical");
+        for kind in MachineKind::ALL {
+            for &node in &nodes {
+                for layer in &layers {
+                    let a = t1.predict_layer(kind, node, layer).unwrap();
+                    let b = t2.predict_layer(kind, node, layer).unwrap();
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let cache = SweepCache::new();
+        let table = SurrogateTable::fit(
+            &cache,
+            &MachineKind::ALL,
+            &[45.0, 7.0],
+            &test_corpus(),
+        )
+        .unwrap();
+        let path = tmp_path("roundtrip");
+        table.save(&path).unwrap();
+        let back = SurrogateTable::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // `{v}` rendering is shortest-roundtrip, so equality is exact.
+        assert_eq!(table, back);
+    }
+
+    #[test]
+    fn corrupt_tables_are_rejected() {
+        let cache = SweepCache::new();
+        let table = SurrogateTable::fit(
+            &cache,
+            &[MachineKind::Systolic],
+            &[45.0],
+            &test_corpus(),
+        )
+        .unwrap();
+        let path = tmp_path("corrupt");
+
+        // Truncated file.
+        let mut text = table.to_json().pretty();
+        text.truncate(text.len() / 2);
+        std::fs::write(&path, &text).unwrap();
+        assert!(SurrogateTable::load(&path).is_err());
+
+        // Wrong format tag.
+        std::fs::write(
+            &path,
+            "{\"format\": \"aimc-surrogate-v999\", \"models\": []}",
+        )
+        .unwrap();
+        assert!(SurrogateTable::load(&path).is_err());
+
+        // Wrong coefficient count for the machine.
+        std::fs::write(
+            &path,
+            format!(
+                "{{\"format\": \"{SURROGATE_FORMAT}\", \"models\": [{{\
+                 \"machine\": \"systolic\", \"node_nm\": 45.0, \
+                 \"kh\": 3, \"kw\": 3, \"stride\": 1, \"coeffs\": [1.0]}}]}}"
+            ),
+        )
+        .unwrap();
+        assert!(SurrogateTable::load(&path).is_err());
+
+        // Missing file.
+        std::fs::remove_file(&path).ok();
+        assert!(SurrogateTable::load(&path).is_err());
+    }
+
+    #[test]
+    fn partial_coverage_returns_none() {
+        let cache = SweepCache::new();
+        let table = SurrogateTable::fit(
+            &cache,
+            &[MachineKind::Systolic],
+            &[45.0],
+            &[ConvLayer::square(64, 8, 8, 3, 1)],
+        )
+        .unwrap();
+        let covered = ConvLayer::square(32, 4, 4, 3, 1); // same family
+        let missing_family = ConvLayer::square(32, 4, 4, 5, 1);
+        assert!(table.predict_layer(MachineKind::Systolic, 45.0, &covered).is_some());
+        assert!(table
+            .predict_layer(MachineKind::Systolic, 45.0, &missing_family)
+            .is_none());
+        assert!(table.predict_layer(MachineKind::Systolic, 7.0, &covered).is_none());
+        assert!(table.predict_layer(MachineKind::Reram, 45.0, &covered).is_none());
+        let net = Network {
+            name: "mixed",
+            layers: vec![covered, missing_family],
+        };
+        assert!(table.predict_network(MachineKind::Systolic, 45.0, &net).is_none());
+    }
+
+    #[test]
+    fn quote_worst_is_max_of_pair() {
+        let q = EnergyQuote {
+            systolic_j: 2e-6,
+            optical_j: 5e-6,
+            node_nm: 45.0,
+        };
+        assert!((q.worst_uj() - 5.0).abs() < 1e-9);
+        assert!((q.systolic_uj() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn machine_kind_names_round_trip() {
+        let probe = ConvLayer::square(64, 8, 8, 3, 1);
+        for kind in MachineKind::ALL {
+            assert_eq!(MachineKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.machine().name(), kind.name());
+            assert_eq!(kind.feature_count(), kind.features(&probe).len());
+        }
+        assert!(MachineKind::parse("nope").is_none());
+    }
+}

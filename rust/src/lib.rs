@@ -13,7 +13,13 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`energy`] — Appendix-A energy parameter models (SRAM, MAC, ADC/DAC,
-//!   line loads, laser, ReRAM).
+//!   line loads, laser, ReRAM), plus [`energy::surrogate`]: closed-form
+//!   per-(machine × node × layer-family) energy models least-squares
+//!   fitted from cycle-accurate [`simulator::SweepCache`] results
+//!   (`aimc fit-surrogate`), serialized via [`util::json`], so the
+//!   serving path can price batches in nanoseconds instead of
+//!   re-simulating (cross-validated against the simulators to
+//!   [`energy::surrogate::ERR_BOUND`]).
 //! * [`technode`] — CMOS technology-node energy scaling (Stillmaker & Baas).
 //! * [`networks`] — conv-layer shape zoo for the eight CNNs of Table I.
 //! * [`analytic`] — closed-form efficiency models (eqs. 3, 5, 14, 24).
@@ -30,8 +36,11 @@
 //!   ([`util::shard`]) behind a sharded `max_pending` admission
 //!   counter, a dispatcher draining the shards round-robin into
 //!   per-worker [`util::spsc`] batch lanes (least-loaded), per-worker
-//!   metrics shards with per-batch energy co-simulation merged at
-//!   shutdown, a condvar drain barrier for the lifecycle, and an
+//!   metrics shards with per-batch energy pricing (fitted surrogate
+//!   quote when configured, co-simulation otherwise) merged at
+//!   shutdown, optional energy-budget admission
+//!   (`ServerConfig::max_uj_per_inf`), a condvar drain barrier for the
+//!   lifecycle, and an
 //!   executor abstraction ([`coordinator::exec`]) so serving runs
 //!   against PJRT or a deterministic in-process backend.
 //! * [`report`] — the Scenario → Dataset → sink pipeline: every table,

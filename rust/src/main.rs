@@ -8,8 +8,12 @@
 //! invocations — keyed by (machine-config fingerprint, node, layer), so
 //! a repeated run replays instead of re-simulating. The remaining
 //! subcommands run the cycle simulators directly (`simulate`), verify
-//! the AOT artifacts against their goldens (`verify`), and serve
-//! inference through the PJRT coordinator (`serve`).
+//! the AOT artifacts against their goldens (`verify`), fit the
+//! closed-form energy surrogate from the same cache (`fit-surrogate`),
+//! and serve inference through the PJRT coordinator (`serve` — with
+//! `--surrogate` the workers price batches through the fitted table
+//! instead of co-simulating, and `--max-uj-per-inf` arms the
+//! energy-budget admission policy).
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -32,7 +36,7 @@ fn spec() -> Spec {
         "aimc",
         "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
          commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
-         crossval all simulate sweep zoo verify serve",
+         crossval surrogate-crossval all simulate sweep zoo verify fit-surrogate serve",
     )
     .opt("net", "network name (fig8/fig9/fig10/simulate)", None)
     .opt("input", "input resolution (pixels per side)", Some("1000"))
@@ -60,6 +64,16 @@ fn spec() -> Spec {
         "max-pending",
         "serve: admission bound on in-flight requests (reject beyond)",
         Some("1024"),
+    )
+    .opt(
+        "surrogate",
+        "fit-surrogate: output path; serve: fitted table to price batches with",
+        None,
+    )
+    .opt(
+        "max-uj-per-inf",
+        "serve: reject requests whose predicted energy exceeds this many µJ/inf",
+        None,
     )
     .flag(
         "synthetic",
@@ -180,6 +194,32 @@ fn run() -> anyhow::Result<()> {
                     }
                 }
                 "crossval" => sink.emit(&report::crossval(net, input).eval(&ctx)),
+                "surrogate-crossval" => {
+                    let ds = report::surrogate_crossval_scenario(input).eval(&ctx);
+                    sink.emit(&ds);
+                    // Acceptance gate: any machine × node over the bound
+                    // fails the command (and the CI job running it).
+                    let bound_pct = aimc::energy::surrogate::ERR_BOUND * 100.0;
+                    let worst = ds
+                        .rows
+                        .iter()
+                        .flat_map(|r| r.iter().skip(1))
+                        .filter_map(|v| match v {
+                            report::Value::Num(pct) => Some(*pct),
+                            _ => None,
+                        })
+                        .fold(0.0, f64::max);
+                    if worst > bound_pct {
+                        anyhow::bail!(
+                            "surrogate crossval failed: worst rel err {worst:.3}% \
+                             exceeds the {bound_pct}% bound"
+                        );
+                    }
+                    eprintln!(
+                        "surrogate crossval OK: worst rel err {worst:.4}% \
+                         (bound {bound_pct}%)"
+                    );
+                }
                 "zoo" => sink.emit(&report::zoo_scenario(input).eval(&ctx)),
                 "simulate" => cmd_simulate(&args, input, &pool, &cache)?,
                 "sweep" => {
@@ -196,6 +236,7 @@ fn run() -> anyhow::Result<()> {
                     );
                 }
                 "verify" => cmd_verify()?,
+                "fit-surrogate" => cmd_fit_surrogate(&args, input, &cache)?,
                 "serve" => cmd_serve(&args)?,
                 other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
             }
@@ -300,6 +341,43 @@ fn cmd_verify() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fit the closed-form energy surrogate from the cycle simulators (via
+/// the invocation's shared sweep cache — with `--cache-dir` the grid
+/// persists and a refit replays it) and write the model table to disk.
+fn cmd_fit_surrogate(
+    args: &aimc::util::cli::Args,
+    input: usize,
+    cache: &SweepCache,
+) -> anyhow::Result<()> {
+    use aimc::energy::surrogate::{self, MachineKind, SurrogateTable};
+    let out = PathBuf::from(args.get_or("surrogate", "surrogate.json"));
+    // Zoo shapes + the Table V reference layer + the serving network, so
+    // both the crossval scenario and `serve --surrogate` are covered.
+    let mut layers = surrogate::training_corpus(input);
+    layers.extend(smallcnn_network().layers);
+    let layers = surrogate::dedup_layers(layers);
+    let nodes = surrogate::default_nodes();
+    let t0 = Instant::now();
+    let table = SurrogateTable::fit(cache, &MachineKind::ALL, &nodes, &layers)
+        .map_err(|e| anyhow::anyhow!("surrogate fit failed: {e}"))?;
+    let points = surrogate::crossval(&table, cache, &MachineKind::ALL, &nodes, &layers);
+    let worst = points.iter().map(|p| p.max_rel_err).fold(0.0, f64::max);
+    table.save(&out)?;
+    println!(
+        "fitted {} models ({} machines × {} nodes, {} layers) in {:.2} s \
+         (cache {}); worst in-sample rel err {:.3}%; wrote {}",
+        table.len(),
+        MachineKind::ALL.len(),
+        nodes.len(),
+        layers.len(),
+        t0.elapsed().as_secs_f64(),
+        cache.stats(),
+        worst * 100.0,
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     let path = ConvPath::parse(args.get_or("path", "exact"))
         .ok_or_else(|| anyhow::anyhow!("bad --path (exact | systolic | fft)"))?;
@@ -308,9 +386,29 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     let max_pending = args.get_usize("max-pending", 1024)?;
     let node = args.get_f64("node", 45.0)?;
     let synthetic = args.flag("synthetic");
+    // A corrupt/missing table must not take serving down: warn and fall
+    // back to per-batch co-simulation.
+    let surrogate = args.get("surrogate").and_then(|p| {
+        match aimc::energy::surrogate::SurrogateTable::load(Path::new(p)) {
+            Ok(t) => Some(std::sync::Arc::new(t)),
+            Err(e) => {
+                eprintln!("warn: refusing surrogate table: {e}; falling back to co-simulation");
+                None
+            }
+        }
+    });
+    let max_uj_per_inf = match args.get("max-uj-per-inf") {
+        Some(_) => Some(args.get_f64("max-uj-per-inf", 0.0)?),
+        None => None,
+    };
     println!(
         "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}, energy @{node} nm{}",
+         max_pending {max_pending}, energy @{node} nm ({} pricing){}{}",
+        if surrogate.is_some() { "surrogate" } else { "co-simulation" },
+        match max_uj_per_inf {
+            Some(b) => format!(", budget {b} µJ/inf"),
+            None => String::new(),
+        },
         if synthetic { ", synthetic backend" } else { "" }
     );
 
@@ -319,6 +417,8 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         workers,
         max_pending,
         energy_node_nm: node,
+        surrogate,
+        max_uj_per_inf,
         ..Default::default()
     };
     let server = if synthetic {
@@ -326,8 +426,14 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     } else {
         Server::start(cfg)?
     };
-    // Warm up compilation before timing.
-    let _ = server.infer_blocking(vec![0.0; IMAGE_ELEMS])?;
+    // Warm up compilation before timing. With an energy budget armed
+    // the warm-up itself may be shed — that is the policy working, not
+    // a startup failure.
+    if let Err(e) = server.infer_blocking(vec![0.0; IMAGE_ELEMS]) {
+        if max_uj_per_inf.is_none() {
+            return Err(e);
+        }
+    }
 
     let mut rng = Rng::new(7);
     let images: Vec<Vec<f32>> = (0..n_req).map(|_| rng.normal_vec(IMAGE_ELEMS)).collect();
@@ -338,19 +444,41 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
             ok += 1;
         }
     }
+    let quote = server.request_quote();
     let metrics = server.shutdown();
     println!("served {ok}/{n_req} OK — {}", metrics.summary());
-    if metrics.energy_images() > 0 {
-        // Per-batch accounting accumulated in the worker shards — the
-        // same workload the latency numbers above were measured on.
+    if let Some(q) = quote {
         println!(
-            "energy (per-batch co-simulation over {} batches / {} inferences) @{} nm: \
-             systolic {:.2} µJ/inf | optical-4F {:.2} µJ/inf",
+            "per-request attribution @{} nm: systolic {:.2} µJ | optical-4F {:.2} µJ \
+             (worst {:.2} µJ)",
+            q.node_nm,
+            q.systolic_uj(),
+            q.optical_uj(),
+            q.worst_uj(),
+        );
+    }
+    // Accounting accumulated in the worker shards — the same workload
+    // the latency numbers above were measured on. Absent (not zero)
+    // when no batch was priced.
+    match (
+        metrics.systolic_uj_per_inference(),
+        metrics.optical_uj_per_inference(),
+    ) {
+        (Some(sys), Some(opt)) => println!(
+            "energy ({} pricing over {} batches / {} inferences) @{} nm: \
+             systolic {sys:.2} µJ/inf | optical-4F {opt:.2} µJ/inf",
+            metrics.energy_source(),
             metrics.energy_batches(),
             metrics.energy_images(),
             metrics.energy_node_nm(),
-            metrics.systolic_uj_per_inference(),
-            metrics.optical_uj_per_inference(),
+        ),
+        _ => println!("energy: n/a (no batch was priced)"),
+    }
+    if metrics.budget_rejected() > 0 {
+        println!(
+            "energy budget shed {} requests (max {} µJ/inf)",
+            metrics.budget_rejected(),
+            max_uj_per_inf.unwrap_or(f64::NAN),
         );
     }
     Ok(())

@@ -24,6 +24,7 @@
 //! | [`figures::crossval`] | extension — all four machines cross-validated |
 //! | [`zoo_scenario`] | `aimc zoo` — network inventory |
 //! | [`sweep_scenario`] | `aimc sweep` — full machine × network × node grid |
+//! | [`surrogate_crossval_scenario`] | `aimc surrogate-crossval` — fitted energy surrogate vs cycle sims |
 //!
 //! [`all_scenarios`] is the `aimc all` list: one shared cache/pool
 //! evaluates the lot, so layer shapes repeated across artifacts
@@ -79,6 +80,60 @@ pub fn sweep_scenario(input: usize) -> Scenario {
     s
 }
 
+/// `aimc surrogate-crossval`: fit the closed-form energy surrogate from
+/// the cycle simulators, then score it against them — one row per node
+/// of the ladder, one column per machine holding the worst per-layer
+/// relative energy error (%) over the full training corpus (zoo shapes
+/// + the Table V reference layer + the serving CNN). Every cell must
+/// stay within [`crate::energy::surrogate::ERR_BOUND`]; the CLI command exits non-zero
+/// on any violation, and `report::tests` pins the bound.
+///
+/// Fit and scoring both run at construction time through one private
+/// cache (the fit is the expensive part; scoring replays its layer
+/// simulations as cache hits), so the scenario itself is purely derived
+/// — `eval` just assembles the precomputed grid.
+///
+/// Deliberately NOT in [`all_scenarios`]: it is an acceptance gate for
+/// the serving fast path, not a paper artifact.
+pub fn surrogate_crossval_scenario(input: usize) -> Scenario {
+    use crate::energy::surrogate::{self, MachineKind, SurrogateTable};
+    use crate::simulator::SweepCache;
+
+    let cache = SweepCache::new();
+    let mut layers = surrogate::training_corpus(input);
+    layers.extend(crate::coordinator::smallcnn_network().layers);
+    let layers = surrogate::dedup_layers(layers);
+    let nodes = surrogate::default_nodes();
+    let table = SurrogateTable::fit(&cache, &MachineKind::ALL, &nodes, &layers)
+        .expect("surrogate fit over the zoo corpus");
+    let points = surrogate::crossval(&table, &cache, &MachineKind::ALL, &nodes, &layers);
+
+    let title = format!(
+        "surrogate crossval — worst |rel err| % vs cycle sims over {} layers @ {input} px \
+         (bound {:.0}%)",
+        layers.len(),
+        surrogate::ERR_BOUND * 100.0
+    );
+    let nodes_col = nodes.clone();
+    let mut s = Scenario::new(title)
+        .items(nodes.len())
+        .num("node (nm)", 0, move |c: &RowCtx| nodes_col[c.index]);
+    for kind in MachineKind::ALL {
+        let per_node: Vec<f64> = nodes
+            .iter()
+            .map(|&nm| {
+                points
+                    .iter()
+                    .find(|p| p.kind == kind && p.node_nm == nm)
+                    .map(|p| p.max_rel_err * 100.0)
+                    .unwrap_or(100.0)
+            })
+            .collect();
+        s = s.num(kind.name(), 4, move |c: &RowCtx| per_node[c.index]);
+    }
+    s
+}
+
 /// The `aimc all` scenario list, in the CLI's historical emission order.
 pub fn all_scenarios(net: Option<&str>, input: usize) -> Vec<Scenario> {
     vec![
@@ -116,6 +171,29 @@ mod tests {
         let s = sweep_scenario(200);
         assert_eq!(s.grid_points(), 4 * 8 * crate::technode::NODES.len());
         assert_eq!(s.row_count(), 8 * crate::technode::NODES.len());
+    }
+
+    #[test]
+    fn surrogate_crossval_stays_within_bound() {
+        // The acceptance gate behind `aimc serve --surrogate`: on every
+        // machine × node of the ladder, the fitted models must agree
+        // with the cycle simulators within ERR_BOUND on every corpus
+        // layer. Small input keeps the fit quick; the shapes still span
+        // all four families of the zoo.
+        let ds = surrogate_crossval_scenario(120).dataset();
+        assert_eq!(ds.rows.len(), crate::technode::NODES.len());
+        let bound_pct = crate::energy::surrogate::ERR_BOUND * 100.0;
+        for row in &ds.rows {
+            for (cell, col) in row.iter().zip(&ds.columns).skip(1) {
+                match cell {
+                    Value::Num(pct) => assert!(
+                        *pct <= bound_pct,
+                        "{col}: {pct:.4}% exceeds {bound_pct}% in {row:?}"
+                    ),
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
     }
 
     #[test]

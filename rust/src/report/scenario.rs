@@ -26,7 +26,7 @@
 
 use std::collections::HashSet;
 
-use crate::networks::Network;
+use crate::networks::{ConvLayer, Network};
 use crate::simulator::{Machine, SimResult, SweepCache};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
@@ -417,10 +417,13 @@ impl Scenario {
 
     /// Evaluate through the shared pool + cache into a typed [`Dataset`].
     ///
-    /// Two parallel phases: (1) prefetch — every (machine, network,
-    /// node) grid point a row could touch is simulated across the pool
-    /// through the cache (at grid-point granularity so skewed rows
-    /// don't serialize) and the merged results are kept; (2) assembly —
+    /// Two parallel phases: (1) prefetch — the unique (machine, layer,
+    /// node) jobs behind every grid point a row could touch fan out
+    /// across the pool first (so one huge network, or a grid skewed
+    /// toward a few networks × many nodes, spreads over all workers
+    /// instead of serializing inside grid points), then the (machine,
+    /// network, node) merges — now pure cache hits — are kept; (2)
+    /// assembly —
     /// rows are built in parallel, their column closures served from
     /// the kept grid results, so a column reading the same point twice
     /// costs a map lookup, not a re-merge, and the cache's hit/miss
@@ -442,6 +445,24 @@ impl Scenario {
                     }
                 }
             }
+            // Per-layer fan-out: warm the shared cache over the unique
+            // (machine, layer, node) jobs of the whole grid in one pool
+            // pass. Layer results are keyed deterministically in the
+            // cache, so the merges below are bit-identical to a cold
+            // serial evaluation (golden-pinned in scenario_golden.rs) —
+            // only the parallel grain changes.
+            let mut layer_seen = HashSet::new();
+            let mut layer_jobs: Vec<(usize, ConvLayer, f64)> = Vec::new();
+            for &(mi, ni, node) in &points {
+                for layer in &self.networks[ni].layers {
+                    if layer_seen.insert((mi, *layer, node.to_bits())) {
+                        layer_jobs.push((mi, *layer, node));
+                    }
+                }
+            }
+            ctx.pool.par_for_each(&layer_jobs, |&(mi, ref layer, node)| {
+                ctx.cache.simulate_layer(self.machines[mi].as_ref(), layer, node);
+            });
             let results = ctx.pool.par_map(&points, |&(mi, ni, node)| {
                 ctx.cache
                     .simulate_network(self.machines[mi].as_ref(), &self.networks[ni], node)

@@ -154,6 +154,26 @@ impl SweepCache {
         self.simulate_network(machine, net, node_nm)
     }
 
+    /// Training rows for the [`crate::energy::surrogate`] fitter: one
+    /// `(layer, total energy in joules)` pair per unique shape in
+    /// `layers`, for one machine × node. Served through the cache, so
+    /// grid points warmed by earlier sweeps are replayed bit-exactly and
+    /// anything missing is simulated once and retained for later
+    /// callers (the crossval pass reuses the same entries).
+    pub fn training_rows(
+        &self,
+        machine: &dyn Machine,
+        layers: &[ConvLayer],
+        node_nm: f64,
+    ) -> Vec<(ConvLayer, f64)> {
+        let mut seen = HashSet::new();
+        layers
+            .iter()
+            .filter(|l| seen.insert(**l))
+            .map(|l| (*l, self.simulate_layer(machine, l, node_nm).ledger.total()))
+            .collect()
+    }
+
     // ---- persistence -----------------------------------------------------
 
     /// Snapshot every cache entry to `path`. Entries are sorted by key,

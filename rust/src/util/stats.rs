@@ -1,5 +1,7 @@
 //! Small statistics helpers used by the network-zoo summaries (Table I-III
-//! report *medians* over a network's conv layers).
+//! report *medians* over a network's conv layers) and the dense
+//! least-squares solver behind [`crate::energy::surrogate`]'s fitted
+//! energy models.
 
 /// Median of a slice (average of the two central elements for even length).
 /// Returns 0.0 for an empty slice.
@@ -39,6 +41,127 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (s / xs.len() as f64).exp()
 }
 
+/// Ridge term applied to the equilibrated normal-equation diagonal when
+/// the plain solve is rank-deficient. Small enough that a consistent
+/// system is still reproduced to ~1e-10 relative.
+const RIDGE: f64 = 1e-10;
+
+/// Pivot threshold for the equilibrated (unit-diagonal-scale) normal
+/// matrix below which a column is treated as numerically dependent.
+const PIVOT_EPS: f64 = 1e-12;
+
+/// Solve the linear least-squares problem `min ‖A·x − b‖₂` (rows of `a`
+/// are observations) and return the coefficient vector.
+///
+/// Strategy: equilibrate columns to unit RMS so the tolerances are
+/// scale-free, form the normal equations `AᵀA·x = Aᵀb`, and solve by
+/// Gaussian elimination with partial pivoting. A (near-)rank-deficient
+/// system — collinear features are routine when a surrogate family has
+/// few distinct layer shapes — is retried with a tiny ridge term on the
+/// equilibrated diagonal, which picks a small-coefficient solution among
+/// the equivalent minimizers instead of failing.
+///
+/// Returns `None` for empty/ragged input, non-finite values, or when
+/// even the ridge-regularized system is numerically singular.
+pub fn least_squares(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let m = a.len();
+    if m == 0 || m != b.len() {
+        return None;
+    }
+    let k = a[0].len();
+    if k == 0 || a.iter().any(|row| row.len() != k) {
+        return None;
+    }
+    if a.iter().flatten().chain(b.iter()).any(|v| !v.is_finite()) {
+        return None;
+    }
+
+    // Column equilibration: unit-RMS columns. An all-zero column keeps
+    // scale 1 and falls out of the solve with coefficient 0 (via ridge).
+    let mut scale = vec![0.0f64; k];
+    for row in a {
+        for (s, v) in scale.iter_mut().zip(row) {
+            *s += v * v;
+        }
+    }
+    for s in scale.iter_mut() {
+        *s = (*s / m as f64).sqrt();
+        if *s == 0.0 {
+            *s = 1.0;
+        }
+    }
+
+    // Normal equations on the equilibrated system, divided by the row
+    // count so a well-conditioned system has an O(1) diagonal.
+    let mut g = vec![vec![0.0f64; k]; k];
+    let mut c = vec![0.0f64; k];
+    for (row, &y) in a.iter().zip(b) {
+        for i in 0..k {
+            let ai = row[i] / scale[i];
+            c[i] += ai * y / m as f64;
+            for j in i..k {
+                g[i][j] += ai * (row[j] / scale[j]) / m as f64;
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            g[i][j] = g[j][i];
+        }
+    }
+
+    let solved = solve_dense(g.clone(), c.clone()).or_else(|| {
+        let mut ridged = g;
+        for (i, row) in ridged.iter_mut().enumerate() {
+            row[i] += RIDGE;
+        }
+        solve_dense(ridged, c)
+    })?;
+    let x: Vec<f64> = solved.iter().zip(&scale).map(|(v, s)| v / s).collect();
+    x.iter().all(|v| v.is_finite()).then_some(x)
+}
+
+/// Gaussian elimination with partial pivoting on a small dense system.
+/// `None` when a pivot falls under [`PIVOT_EPS`].
+fn solve_dense(mut g: Vec<Vec<f64>>, mut c: Vec<f64>) -> Option<Vec<f64>> {
+    let k = c.len();
+    for col in 0..k {
+        let mut piv = col;
+        for r in col + 1..k {
+            if g[r][col].abs() > g[piv][col].abs() {
+                piv = r;
+            }
+        }
+        let pval = g[piv][col].abs();
+        if pval.is_nan() || pval < PIVOT_EPS {
+            return None;
+        }
+        g.swap(col, piv);
+        c.swap(col, piv);
+        let prow = g[col].clone();
+        let pc = c[col];
+        for row in col + 1..k {
+            let f = g[row][col] / prow[col];
+            if f == 0.0 {
+                continue;
+            }
+            for (target, p) in g[row].iter_mut().zip(&prow).skip(col) {
+                *target -= f * p;
+            }
+            c[row] -= f * pc;
+        }
+    }
+    let mut x = vec![0.0; k];
+    for col in (0..k).rev() {
+        let mut v = c[col];
+        for j in col + 1..k {
+            v -= g[col][j] * x[j];
+        }
+        x[col] = v / g[col][col];
+    }
+    Some(x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +199,68 @@ mod tests {
     #[test]
     fn geomean_powers() {
         assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_coefficients() {
+        // Quadratic through 6 points: unique minimizer, zero residual.
+        let truth = [2.0, -3.0, 0.5];
+        let a: Vec<Vec<f64>> = (0..6)
+            .map(|i| {
+                let x = i as f64;
+                vec![1.0, x, x * x]
+            })
+            .collect();
+        let b: Vec<f64> = a
+            .iter()
+            .map(|r| r.iter().zip(&truth).map(|(f, c)| f * c).sum())
+            .collect();
+        let x = least_squares(&a, &b).unwrap();
+        for (got, want) in x.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-9, "{x:?} vs {truth:?}");
+        }
+    }
+
+    #[test]
+    fn least_squares_overdetermined_minimizes() {
+        // y = 3x with one perturbed observation: slope stays near 3 and
+        // beats the perturbed naive estimate in residual.
+        let a: Vec<Vec<f64>> = (1..=5).map(|i| vec![i as f64]).collect();
+        let b = [3.0, 6.0, 9.6, 12.0, 15.0];
+        let x = least_squares(&a, &b).unwrap();
+        assert!((x[0] - 3.0).abs() < 0.05, "slope {}", x[0]);
+    }
+
+    #[test]
+    fn least_squares_rank_deficient_still_fits() {
+        // Duplicate column: infinitely many exact solutions; the ridge
+        // fallback must return one that reproduces the targets.
+        let a: Vec<Vec<f64>> = (1..=4)
+            .map(|i| vec![i as f64, 2.0 * i as f64])
+            .collect();
+        let b: Vec<f64> = (1..=4).map(|i| 5.0 * i as f64).collect();
+        let x = least_squares(&a, &b).unwrap();
+        for (row, want) in a.iter().zip(&b) {
+            let got: f64 = row.iter().zip(&x).map(|(f, c)| f * c).sum();
+            assert!((got - want).abs() / want < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn least_squares_zero_column_is_inert() {
+        let a: Vec<Vec<f64>> = (1..=4).map(|i| vec![i as f64, 0.0]).collect();
+        let b: Vec<f64> = (1..=4).map(|i| 7.0 * i as f64).collect();
+        let x = least_squares(&a, &b).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-6);
+        assert!(x[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_rejects_bad_input() {
+        assert!(least_squares(&[], &[]).is_none());
+        assert!(least_squares(&[vec![1.0]], &[1.0, 2.0]).is_none());
+        assert!(least_squares(&[vec![1.0], vec![1.0, 2.0]], &[1.0, 2.0]).is_none());
+        assert!(least_squares(&[vec![f64::NAN]], &[1.0]).is_none());
+        assert!(least_squares(&[vec![1.0]], &[f64::INFINITY]).is_none());
     }
 }

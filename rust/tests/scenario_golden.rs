@@ -546,6 +546,35 @@ fn persisted_cache_makes_second_sweep_pure_replay() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// The per-layer prefetch inside `Scenario::eval` (the unique
+/// (machine, layer, node) warm-up pass that fans the grid out across
+/// the pool) must not change a single bit of any dataset: a
+/// single-thread evaluation on a cold cache and a many-thread one must
+/// produce identical typed cells, not merely identical renderings.
+#[test]
+fn scenario_layer_prefetch_bit_identical_datasets() {
+    let input = 160;
+    let scenarios = [
+        report::sweep_scenario(input),
+        report::fig8(None, input),
+        report::crossval(None, input),
+    ];
+    for s in &scenarios {
+        let serial_cache = SweepCache::new();
+        let serial = s.eval(&EvalCtx {
+            pool: &Pool::new(1),
+            cache: &serial_cache,
+        });
+        let par_cache = SweepCache::new();
+        let par = s.eval(&EvalCtx {
+            pool: &Pool::new(8),
+            cache: &par_cache,
+        });
+        assert_eq!(serial.columns, par.columns, "{}", s.title());
+        assert_eq!(serial.rows, par.rows, "{}: dataset drifted", s.title());
+    }
+}
+
 /// The fan-out path behind `aimc simulate`: unique-layer `par_map`
 /// pricing must merge bit-identically to the serial network walk, for
 /// every machine.

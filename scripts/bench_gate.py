@@ -5,7 +5,11 @@ Compares a fresh bench run against the committed baseline and fails the
 build when either guarded metric regresses more than the tolerance:
 
   * serve  — throughput at the high-offered-load grid point
-             (4 workers x 32 offered) from BENCH_serve.json
+             (4 workers x 32 offered, co-simulation pricing) from
+             BENCH_serve.json
+  * serve  — surrogate_vs_cosim_speedup: closed-form energy quote vs a
+             cold co-simulation of the resident network, also from
+             BENCH_serve.json
   * sweep  — persistent-cache warm_speedup from BENCH_sweep.json
 
 Usage:
@@ -49,12 +53,24 @@ def load(path):
 
 def serve_rps(serve, path):
     for run in serve.get("runs", []):
+        # The grid carries several pricing modes per (workers, offered)
+        # cell; the throughput guard pins the historical co-simulation
+        # path ("pricing" absent = pre-surrogate file layout).
+        if run.get("pricing") not in (None, "cosim"):
+            continue
         if run.get("workers") == GUARD_WORKERS and run.get("offered") == GUARD_OFFERED:
             return float(run["throughput_rps"])
     fail(
-        f"{path} has no {GUARD_WORKERS}-worker / {GUARD_OFFERED}-offered run "
-        "(bench grid changed without updating the gate?)"
+        f"{path} has no {GUARD_WORKERS}-worker / {GUARD_OFFERED}-offered "
+        "cosim-priced run (bench grid changed without updating the gate?)"
     )
+
+
+def surrogate_speedup(serve, path):
+    try:
+        return float(serve["surrogate_vs_cosim_speedup"])
+    except (KeyError, TypeError, ValueError):
+        fail(f"{path} has no surrogate_vs_cosim_speedup field")
 
 
 def warm_speedup(sweep, path):
@@ -72,8 +88,10 @@ def main(argv):
         sys.exit(2)
     baseline_path, serve_path, sweep_path = paths
 
+    serve_doc = load(serve_path)
     measured = {
-        "serve_4w_32offered_rps": serve_rps(load(serve_path), serve_path),
+        "serve_4w_32offered_rps": serve_rps(serve_doc, serve_path),
+        "surrogate_vs_cosim_speedup": surrogate_speedup(serve_doc, serve_path),
         "warm_speedup": warm_speedup(load(sweep_path), sweep_path),
     }
 
@@ -85,6 +103,9 @@ def main(argv):
                 "BENCH_baseline.json rust/BENCH_serve.json rust/BENCH_sweep.json"
             ),
             "serve_4w_32offered_rps": round(measured["serve_4w_32offered_rps"], 1),
+            "surrogate_vs_cosim_speedup": round(
+                measured["surrogate_vs_cosim_speedup"], 1
+            ),
             "warm_speedup": round(measured["warm_speedup"], 2),
         }
         with open(baseline_path, "w", encoding="utf-8") as f:
