@@ -14,7 +14,7 @@ use aimc::coordinator::{ConvPath, IMAGE_ELEMS};
 use aimc::networks::{yolov3::yolov3, zoo};
 use aimc::report;
 use aimc::runtime::Engine;
-use aimc::simulator::{optical4f, photonic, reram, sweep, systolic, SweepCache};
+use aimc::simulator::{optical4f, photonic, reram, sweep, systolic, OperatingPoint, SweepCache};
 use aimc::technode::NODES;
 use aimc::util::pool::Pool;
 use aimc::util::rng::Rng;
@@ -57,6 +57,7 @@ fn median_us(samples: &[Duration]) -> f64 {
 fn bench_sweep_engine(input: usize) {
     let nets = zoo(input);
     let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
+    let ops = sweep::ops_at_nodes(&nodes);
     let machines = aimc::simulator::all_machines();
     let scfg = systolic::SystolicConfig::default();
     let ocfg = optical4f::Optical4FConfig::default();
@@ -68,10 +69,11 @@ fn bench_sweep_engine(input: usize) {
     let serial = time_it(5, || {
         for net in &nets {
             for &nm in &nodes {
-                let _ = systolic::simulate_network(&scfg, net, nm);
-                let _ = reram::simulate_network(&rcfg, net, nm);
-                let _ = photonic::simulate_network(&pcfg, net, nm);
-                let _ = optical4f::simulate_network(&ocfg, net, nm);
+                let op = OperatingPoint::node(nm);
+                let _ = systolic::simulate_network(&scfg, net, &op);
+                let _ = reram::simulate_network(&rcfg, net, &op);
+                let _ = photonic::simulate_network(&pcfg, net, &op);
+                let _ = optical4f::simulate_network(&ocfg, net, &op);
             }
         }
     });
@@ -80,7 +82,7 @@ fn bench_sweep_engine(input: usize) {
     // Engine, single worker: isolates the layer-dedup memoization win.
     let engine_1t = time_it(5, || {
         let cache = SweepCache::new();
-        let _ = sweep::sweep_on(&Pool::new(1), &machines, &nets, &nodes, &cache);
+        let _ = sweep::sweep_on(&Pool::new(1), &machines, &nets, &ops, &cache);
     });
     report_time("sweep: engine 1 thread (memo only)", &engine_1t, None);
 
@@ -89,11 +91,24 @@ fn bench_sweep_engine(input: usize) {
     let shared_cache = SweepCache::new();
     let engine = time_it(5, || {
         let cache = SweepCache::new();
-        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &ops, &cache);
     });
     report_time("sweep: engine parallel", &engine, None);
     // One extra pass on a shared cache for the hit/miss statistics.
-    let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &shared_cache);
+    let _ = sweep::sweep_on(&pool, &machines, &nets, &ops, &shared_cache);
+
+    // Precision axis: the same grid at 2 operating points per node (8x8
+    // and 4x4) — the `aimc sweep --bits 8,4` path. The per-point cost
+    // must stay flat: precision only rescales coefficients.
+    let ops2: Vec<OperatingPoint> = nodes
+        .iter()
+        .flat_map(|&nm| [OperatingPoint::node(nm), OperatingPoint::node(nm).bits(4, 4)])
+        .collect();
+    let engine_bits = time_it(3, || {
+        let cache = SweepCache::new();
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &ops2, &cache);
+    });
+    report_time("sweep: engine parallel x2 precisions", &engine_bits, None);
 
     // Full report regeneration (Fig. 6 + Tables I–III + Figs. 8–10 +
     // crossval) through the new engine.
@@ -121,14 +136,14 @@ fn bench_sweep_engine(input: usize) {
     let cold = time_it(3, || {
         let _ = std::fs::remove_file(&snapshot);
         let cache = SweepCache::load(&snapshot); // always empty: cold start
-        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &ops, &cache);
         cache.save(&snapshot).expect("snapshot save");
     });
     report_time("sweep: persistent cache cold", &cold, None);
     let mut warm_reuse = 0.0;
     let warm = time_it(3, || {
         let cache = SweepCache::load(&snapshot); // populated by the cold pass
-        let _ = sweep::sweep_on(&pool, &machines, &nets, &nodes, &cache);
+        let _ = sweep::sweep_on(&pool, &machines, &nets, &ops, &cache);
         let total = (cache.hits() + cache.misses()).max(1);
         warm_reuse = 100.0 * cache.hits() as f64 / total as f64;
     });
@@ -138,10 +153,11 @@ fn bench_sweep_engine(input: usize) {
     let serial_ms = median_us(&serial) / 1e3;
     let engine_1t_ms = median_us(&engine_1t) / 1e3;
     let engine_ms = median_us(&engine) / 1e3;
+    let engine_bits2_ms = median_us(&engine_bits) / 1e3;
     let cold_ms = median_us(&cold) / 1e3;
     let warm_ms = median_us(&warm) / 1e3;
     let json = format!(
-        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"persistent_cache\": {{ \"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.3}, \"warm_speedup\": {:.2}, \"warm_reuse_pct\": {warm_reuse:.1} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"engine_parallel_bits2_ms\": {engine_bits2_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"persistent_cache\": {{ \"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.3}, \"warm_speedup\": {:.2}, \"warm_reuse_pct\": {warm_reuse:.1} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
         machines.len(),
         nets.len(),
         nodes.len(),
@@ -276,9 +292,12 @@ fn bench_serve() {
         // disabled" for "free inference".
         let energy_fields = match (m.systolic_uj_per_inference(), m.optical_uj_per_inference()) {
             (Some(sys), Some(opt)) => format!(
-                ", \"energy_node_nm\": {}, \"sys_uj_per_inf\": {sys:.4}, \
+                ", \"energy_node_nm\": {}, \"energy_bits\": \"{}x{}\", \
+                 \"sys_uj_per_inf\": {sys:.4}, \
                  \"opt_uj_per_inf\": {opt:.4}, \"energy_batches\": {}, \"energy_images\": {}",
                 m.energy_node_nm(),
+                m.energy_bits().0,
+                m.energy_bits().1,
                 m.energy_batches(),
                 m.energy_images(),
             ),
@@ -311,7 +330,7 @@ fn bench_serve() {
     // is so cheap it is timed in blocks.
     let net = smallcnn_network();
     let cosim_samples = time_it(20, || {
-        let _ = energy::co_simulate(&net, 45.0);
+        let _ = energy::co_simulate(&net, &OperatingPoint::node(45.0));
     });
     let cosim_us = median_us(&cosim_samples);
     const QUOTES_PER_SAMPLE: usize = 1000;
@@ -423,14 +442,14 @@ fn main() {
         report_time(
             "sim: systolic YOLOv3 (1 net·node)",
             &time_it(50, || {
-                let _ = systolic::simulate_network(&scfg, &net, 28.0);
+                let _ = systolic::simulate_network(&scfg, &net, &OperatingPoint::node(28.0));
             }),
             Some((net.num_layers() as f64, "layers/s")),
         );
         report_time(
             "sim: optical4f YOLOv3 (1 net·node)",
             &time_it(50, || {
-                let _ = optical4f::simulate_network(&ocfg, &net, 28.0);
+                let _ = optical4f::simulate_network(&ocfg, &net, &OperatingPoint::node(28.0));
             }),
             Some((net.num_layers() as f64, "layers/s")),
         );
@@ -442,8 +461,9 @@ fn main() {
         report_time("sweep: 8 nets × 13 nodes × 2 machines", &time_it(5, || {
             for net in &nets {
                 for node in aimc::technode::NODES {
-                    let _ = systolic::simulate_network(&scfg, net, node.nm);
-                    let _ = optical4f::simulate_network(&ocfg, net, node.nm);
+                    let op = OperatingPoint::node(node.nm);
+                    let _ = systolic::simulate_network(&scfg, net, &op);
+                    let _ = optical4f::simulate_network(&ocfg, net, &op);
                 }
             }
         }), None);

@@ -13,10 +13,14 @@
 //! * **surrogate** — when the server was started with a fitted
 //!   [`crate::energy::surrogate::SurrogateTable`], the network is priced
 //!   *once* at startup through the closed-form models
-//!   (`SurrogateTable::quote_network`) and the steady-state loop never
+//!   (`SurrogateTable::quote_network_op`) and the steady-state loop never
 //!   touches a simulator: per-batch accounting is a multiply, and the
 //!   same quote powers per-request µJ attribution and the
 //!   `max_uj_per_inf` admission policy.
+//!
+//! Both paths price at the server's full [`OperatingPoint`] — node *and*
+//! bit widths (`--bits` on `aimc serve`) — so precision shows up in the
+//! per-batch µJ, the admission decisions and the bench JSON.
 //!
 //! Either way the per-batch reports accumulate into the worker's metrics
 //! shard (`Metrics::record_energy` / `record_priced_energy`, tagged with
@@ -25,14 +29,14 @@
 //! projected µJ-per-inference from the same workload.
 
 use crate::networks::Network;
-use crate::simulator::{optical4f, systolic, SimResult, SweepCache};
+use crate::simulator::{optical4f, systolic, OperatingPoint, SimResult, SweepCache};
 
-/// Energy projections for one inference of `net` at `node_nm`.
+/// Energy projections for one inference of `net` at an operating point.
 #[derive(Clone, Debug)]
 pub struct EnergyReport {
     pub systolic: SimResult,
     pub optical4f: SimResult,
-    pub node_nm: f64,
+    pub op: OperatingPoint,
 }
 
 impl EnergyReport {
@@ -48,8 +52,9 @@ impl EnergyReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "@{} nm: systolic {:.2} µJ ({:.2} TOPS/W) | optical-4F {:.2} µJ ({:.2} TOPS/W)",
-            self.node_nm,
+            "@{} nm {}b: systolic {:.2} µJ ({:.2} TOPS/W) | optical-4F {:.2} µJ ({:.2} TOPS/W)",
+            self.op.node_nm,
+            self.op.bits_label(),
             self.systolic_joules() * 1e6,
             self.systolic.tops_per_watt(),
             self.optical_joules() * 1e6,
@@ -59,19 +64,19 @@ impl EnergyReport {
 }
 
 /// Price one inference of `net` on both machines.
-pub fn co_simulate(net: &Network, node_nm: f64) -> EnergyReport {
-    co_simulate_cached(net, node_nm, &SweepCache::new())
+pub fn co_simulate(net: &Network, op: &OperatingPoint) -> EnergyReport {
+    co_simulate_cached(net, op, &SweepCache::new())
 }
 
 /// [`co_simulate`] through a shared layer-dedup cache — a server pricing
 /// the same layer schedule on every batch pays the simulators once.
-pub fn co_simulate_cached(net: &Network, node_nm: f64, cache: &SweepCache) -> EnergyReport {
+pub fn co_simulate_cached(net: &Network, op: &OperatingPoint, cache: &SweepCache) -> EnergyReport {
     let sys = systolic::SystolicConfig::default();
     let opt = optical4f::Optical4FConfig::default();
     EnergyReport {
-        systolic: cache.simulate_network(&sys, net, node_nm),
-        optical4f: cache.simulate_network(&opt, net, node_nm),
-        node_nm,
+        systolic: cache.simulate_network(&sys, net, op),
+        optical4f: cache.simulate_network(&opt, net, op),
+        op: *op,
     }
 }
 
@@ -80,23 +85,28 @@ mod tests {
     use super::*;
     use crate::coordinator::smallcnn_network;
 
+    fn op45() -> OperatingPoint {
+        OperatingPoint::node(45.0)
+    }
+
     #[test]
     fn co_sim_smallcnn() {
-        let r = co_simulate(&smallcnn_network(), 45.0);
+        let r = co_simulate(&smallcnn_network(), &op45());
         assert!(r.systolic_joules() > 0.0);
         assert!(r.optical_joules() > 0.0);
         assert_eq!(r.systolic.macs, r.optical4f.macs);
         assert!(r.summary().contains("TOPS/W"));
+        assert!(r.summary().contains("8x8b"), "{}", r.summary());
     }
 
     #[test]
     fn cached_co_sim_identical_and_reuses_entries() {
         let net = smallcnn_network();
-        let direct = co_simulate(&net, 45.0);
+        let direct = co_simulate(&net, &op45());
         let cache = SweepCache::new();
-        let first = co_simulate_cached(&net, 45.0, &cache);
+        let first = co_simulate_cached(&net, &op45(), &cache);
         let misses_after_first = cache.misses();
-        let second = co_simulate_cached(&net, 45.0, &cache);
+        let second = co_simulate_cached(&net, &op45(), &cache);
         assert_eq!(direct.systolic_joules(), first.systolic_joules());
         assert_eq!(direct.optical_joules(), second.optical_joules());
         assert_eq!(
@@ -107,12 +117,22 @@ mod tests {
     }
 
     #[test]
+    fn lower_serving_precision_prices_below_default() {
+        let net = smallcnn_network();
+        let full = co_simulate(&net, &op45());
+        let quant = co_simulate(&net, &op45().bits(4, 4));
+        assert!(quant.systolic_joules() < full.systolic_joules());
+        assert!(quant.optical_joules() < full.optical_joules());
+        assert_eq!(full.systolic.macs, quant.systolic.macs, "same work, cheaper events");
+    }
+
+    #[test]
     fn small_images_favor_systolic() {
         // SmallCNN's 64×64 maps under-fill the 4 Mpx SLM: the full-
         // aperture laser cost is amortized over almost no work, so the
         // optical machine loses at tiny scale — the paper's scaling
         // argument run in reverse (analog wins only at scale).
-        let r = co_simulate(&smallcnn_network(), 45.0);
+        let r = co_simulate(&smallcnn_network(), &op45());
         assert!(
             r.optical4f.tops_per_watt() < r.systolic.tops_per_watt(),
             "optical {} vs systolic {}",
@@ -124,7 +144,7 @@ mod tests {
     #[test]
     fn yolo_favors_optical() {
         // …and at the paper's 1 Mpx scale the ordering flips.
-        let r = co_simulate(&crate::networks::yolov3::yolov3(1000), 45.0);
+        let r = co_simulate(&crate::networks::yolov3::yolov3(1000), &op45());
         assert!(r.optical4f.tops_per_watt() > r.systolic.tops_per_watt());
     }
 }

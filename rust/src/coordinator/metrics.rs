@@ -29,6 +29,9 @@ pub struct Metrics {
     optical_joules: f64,
     /// Node the energy was priced at; 0.0 until the first record.
     energy_node_nm: f64,
+    /// `(bits_x, bits_w)` the energy was priced at; (0, 0) until the
+    /// first record.
+    energy_bits: (u32, u32),
     /// How the energy numbers were produced ("co-simulation" or
     /// "surrogate"); empty until the first record.
     energy_source: &'static str,
@@ -66,13 +69,15 @@ impl Metrics {
             images,
             report.systolic_joules(),
             report.optical_joules(),
-            report.node_nm,
+            report.op.node_nm,
+            (report.op.bits_x, report.op.bits_w),
             "co-simulation",
         );
     }
 
-    /// [`Metrics::record_energy`] with explicit per-inference joules and
-    /// a pricing-source label — the surrogate fast path records through
+    /// [`Metrics::record_energy`] with explicit per-inference joules,
+    /// the priced operating point (node + bit widths) and a
+    /// pricing-source label — the surrogate fast path records through
     /// this without materializing an [`EnergyReport`].
     pub fn record_priced_energy(
         &mut self,
@@ -80,6 +85,7 @@ impl Metrics {
         systolic_j_per_inf: f64,
         optical_j_per_inf: f64,
         node_nm: f64,
+        bits: (u32, u32),
         source: &'static str,
     ) {
         self.energy_images += images;
@@ -87,6 +93,7 @@ impl Metrics {
         self.systolic_joules += systolic_j_per_inf * images as f64;
         self.optical_joules += optical_j_per_inf * images as f64;
         self.energy_node_nm = node_nm;
+        self.energy_bits = bits;
         self.energy_source = source;
     }
 
@@ -112,6 +119,9 @@ impl Metrics {
         self.optical_joules += other.optical_joules;
         if other.energy_node_nm > 0.0 {
             self.energy_node_nm = other.energy_node_nm;
+        }
+        if other.energy_bits != (0, 0) {
+            self.energy_bits = other.energy_bits;
         }
         if !other.energy_source.is_empty() {
             self.energy_source = other.energy_source;
@@ -140,6 +150,12 @@ impl Metrics {
     /// Node (nm) the energy was priced at; 0.0 when nothing was priced.
     pub fn energy_node_nm(&self) -> f64 {
         self.energy_node_nm
+    }
+
+    /// `(bits_x, bits_w)` the energy was priced at; (0, 0) when nothing
+    /// was priced.
+    pub fn energy_bits(&self) -> (u32, u32) {
+        self.energy_bits
     }
 
     /// Pricing-source label ("co-simulation" or "surrogate"); empty when
@@ -223,10 +239,12 @@ impl Metrics {
             self.optical_uj_per_inference(),
         ) {
             s.push_str(&format!(
-                ", energy ({}) @{:.0} nm: {:.2} µJ/inf systolic | {:.2} µJ/inf \
+                ", energy ({}) @{:.0} nm {}x{}b: {:.2} µJ/inf systolic | {:.2} µJ/inf \
                  optical-4F ({} batches priced)",
                 self.energy_source,
                 self.energy_node_nm,
+                self.energy_bits.0,
+                self.energy_bits.1,
                 sys,
                 opt,
                 self.energy_batches
@@ -309,7 +327,7 @@ mod tests {
     fn energy_accumulates_and_merges() {
         let report = crate::coordinator::energy::co_simulate(
             &crate::coordinator::smallcnn_network(),
-            45.0,
+            &crate::simulator::OperatingPoint::node(45.0),
         );
         let per_sys = report.systolic_joules() * 1e6;
         let per_opt = report.optical_joules() * 1e6;
@@ -324,6 +342,7 @@ mod tests {
         assert_eq!(a.energy_images(), 13);
         assert_eq!(a.energy_batches(), 3);
         assert_eq!(a.energy_node_nm(), 45.0);
+        assert_eq!(a.energy_bits(), (8, 8));
         assert_eq!(a.energy_source(), "co-simulation");
         // (8 + 4 + 1) × per-inference / 13 == per-inference.
         let sys = a.systolic_uj_per_inference().unwrap();
@@ -332,6 +351,7 @@ mod tests {
         assert!((opt - per_opt).abs() < per_opt * 1e-12);
         let s = a.summary();
         assert!(s.contains("µJ/inf") && s.contains("@45 nm"), "{s}");
+        assert!(s.contains("8x8b"), "{s}");
         assert!(s.contains("(co-simulation)"), "{s}");
     }
 
@@ -349,7 +369,7 @@ mod tests {
     fn surrogate_source_and_budget_rejections_surface() {
         let mut m = Metrics::new();
         m.record_request(Duration::from_micros(10));
-        m.record_priced_energy(4, 2e-6, 5e-6, 45.0, "surrogate");
+        m.record_priced_energy(4, 2e-6, 5e-6, 45.0, (8, 4), "surrogate");
         m.record_budget_rejected(3);
         assert_eq!(m.budget_rejected(), 3);
         assert_eq!(m.energy_source(), "surrogate");

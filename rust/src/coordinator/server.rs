@@ -76,7 +76,7 @@ use super::metrics::Metrics;
 use super::{ConvPath, IMAGE_ELEMS, LOGITS};
 use crate::energy::surrogate::{EnergyQuote, SurrogateTable};
 use crate::runtime::Engine;
-use crate::simulator::SweepCache;
+use crate::simulator::{OperatingPoint, SweepCache};
 use crate::util::shard::{self, PushError, ShardedCounter, ShardedQueue};
 use crate::util::spsc;
 
@@ -209,6 +209,10 @@ pub struct ServerConfig {
     pub energy: bool,
     /// Technology node (nm) for the per-batch energy pricing.
     pub energy_node_nm: f64,
+    /// Bit widths `(bits_x, bits_w)` for the per-batch energy pricing —
+    /// together with [`ServerConfig::energy_node_nm`] they form the
+    /// serving [`OperatingPoint`] (`--bits` on `aimc serve`).
+    pub energy_bits: (u32, u32),
     /// Fitted closed-form energy models (see
     /// [`crate::energy::surrogate`]). When present and covering the
     /// resident network, the quote is computed once at startup and the
@@ -236,6 +240,7 @@ impl Default for ServerConfig {
             ingress_shards: 0,
             energy: true,
             energy_node_nm: 45.0,
+            energy_bits: (8, 8),
             surrogate: None,
             max_uj_per_inf: None,
         }
@@ -312,13 +317,16 @@ impl Server {
         // per-batch co-simulation path (memoized, see below) and only an
         // energy-budget policy forces a single startup co-simulation.
         let resident = super::smallcnn_network();
+        let serving_op = OperatingPoint::node(cfg.energy_node_nm)
+            .bits(cfg.energy_bits.0, cfg.energy_bits.1);
         let surrogate_quote: Option<EnergyQuote> = cfg.surrogate.as_ref().and_then(|table| {
-            let q = table.quote_network(&resident, cfg.energy_node_nm);
+            let q = table.quote_network_op(&resident, &serving_op);
             if q.is_none() {
                 eprintln!(
-                    "warn: surrogate table does not cover the resident network at {} nm; \
-                     falling back to per-batch co-simulation",
-                    cfg.energy_node_nm
+                    "warn: surrogate table does not cover the resident network at {} nm \
+                     {}b; falling back to per-batch co-simulation",
+                    serving_op.node_nm,
+                    serving_op.bits_label()
                 );
             }
             q
@@ -327,11 +335,13 @@ impl Server {
             (None, q) => q,
             (Some(_), Some(q)) => Some(q),
             (Some(_), None) => {
-                let r = co_simulate_cached(&resident, cfg.energy_node_nm, &energy_cache);
+                let r = co_simulate_cached(&resident, &serving_op, &energy_cache);
                 Some(EnergyQuote {
                     systolic_j: r.systolic_joules(),
                     optical_j: r.optical_joules(),
-                    node_nm: r.node_nm,
+                    node_nm: r.op.node_nm,
+                    bits_x: r.op.bits_x,
+                    bits_w: r.op.bits_w,
                 })
             }
         };
@@ -356,7 +366,7 @@ impl Server {
             let path = cfg.path;
             let warm = cfg.warm_start;
             let energy = cfg.energy;
-            let node_nm = cfg.energy_node_nm;
+            let worker_op = serving_op;
             workers.push(std::thread::spawn(move || {
                 let exec = match (*factory)(w) {
                     Ok(e) => e,
@@ -409,11 +419,12 @@ impl Server {
                                 q.systolic_j,
                                 q.optical_j,
                                 q.node_nm,
+                                (q.bits_x, q.bits_w),
                                 "surrogate",
                             ),
                             None => {
                                 let report = energy_memo.get_or_insert_with(|| {
-                                    co_simulate_cached(&net, node_nm, &energy_cache)
+                                    co_simulate_cached(&net, &worker_op, &energy_cache)
                                 });
                                 shard.record_energy(retired, report);
                             }
@@ -860,7 +871,11 @@ mod tests {
         assert!(m.summary().contains("µJ/inf"), "{}", m.summary());
         // Per-inference energy must equal the standalone co-simulation:
         // accumulation is (per-inference × images) / images.
-        let reference = super::super::energy::co_simulate(&super::super::smallcnn_network(), 45.0);
+        let reference = super::super::energy::co_simulate(
+            &super::super::smallcnn_network(),
+            &OperatingPoint::node(45.0),
+        );
+        assert_eq!(m.energy_bits(), (8, 8), "default serving precision");
         let tol = 1e-9;
         assert!(
             (sys - reference.systolic_joules() * 1e6).abs() < tol,
@@ -868,6 +883,33 @@ mod tests {
             sys,
             reference.systolic_joules() * 1e6
         );
+    }
+
+    #[test]
+    fn reduced_precision_serving_prices_cheaper_and_tags_bits() {
+        let serve_at = |bits: (u32, u32)| {
+            let s = Server::start_sim(
+                ServerConfig {
+                    workers: 1,
+                    warm_start: false,
+                    max_pending: 64,
+                    energy_bits: bits,
+                    ..Default::default()
+                },
+                SimExecutor::instant(),
+            )
+            .unwrap();
+            let mut rng = Rng::new(35);
+            s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+            s.shutdown()
+        };
+        let full = serve_at((8, 8));
+        let quant = serve_at((4, 4));
+        assert_eq!(quant.energy_bits(), (4, 4));
+        assert!(quant.summary().contains("4x4b"), "{}", quant.summary());
+        let full_uj = full.systolic_uj_per_inference().unwrap();
+        let quant_uj = quant.systolic_uj_per_inference().unwrap();
+        assert!(quant_uj < full_uj, "{quant_uj} vs {full_uj}");
     }
 
     /// Fit a surrogate whose coverage includes SmallCNN's (3, 3, 1)
@@ -921,7 +963,10 @@ mod tests {
         assert!((opt - q.optical_uj()).abs() < 1e-9);
         // ...and the closed-form prediction agrees with the cycle
         // simulators on the resident network.
-        let reference = super::super::energy::co_simulate(&super::super::smallcnn_network(), 45.0);
+        let reference = super::super::energy::co_simulate(
+            &super::super::smallcnn_network(),
+            &OperatingPoint::node(45.0),
+        );
         let sys_rel = (sys - reference.systolic_joules() * 1e6).abs()
             / (reference.systolic_joules() * 1e6);
         let opt_rel =

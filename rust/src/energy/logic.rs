@@ -18,6 +18,23 @@ pub fn mac_energy(gamma_mac: f64, bits: u32) -> f64 {
     gamma_mac * mac_gate_count(bits) as f64 * KT
 }
 
+/// Gate count of a mixed-precision Bx × Bw MAC: the serial-parallel
+/// multiplier needs 6·Bx·Bw gates, the accumulator adder is sized by
+/// the wider operand (9·max(Bx,Bw)). Collapses to [`mac_gate_count`]
+/// when Bx == Bw.
+pub fn mac_gate_count_xw(bits_x: u32, bits_w: u32) -> u64 {
+    let bx = bits_x as u64;
+    let bw = bits_w as u64;
+    6 * bx * bw + 9 * bx.max(bw)
+}
+
+/// Energy of one mixed-precision Bx × Bw MAC at calibration (45 nm).
+/// Bit-identical to [`mac_energy`] at Bx == Bw (same gate count, same
+/// multiply order).
+pub fn mac_energy_xw(gamma_mac: f64, bits_x: u32, bits_w: u32) -> f64 {
+    gamma_mac * mac_gate_count_xw(bits_x, bits_w) as f64 * KT
+}
+
 /// The Landauer lower bound for the same gate count (γ = ln 2).
 pub fn mac_landauer_bound(bits: u32) -> f64 {
     std::f64::consts::LN_2 * mac_gate_count(bits) as f64 * KT
@@ -52,6 +69,27 @@ mod tests {
         let ratio = e16 / e8;
         // (6·256+144)/(6·64+72) ≈ 3.68
         assert!((ratio - 3.68).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn mixed_precision_collapses_to_symmetric() {
+        for b in [1u32, 4, 8, 12, 16] {
+            assert_eq!(mac_gate_count_xw(b, b), mac_gate_count(b));
+            assert_eq!(
+                mac_energy_xw(GAMMA_MAC_45NM, b, b).to_bits(),
+                mac_energy(GAMMA_MAC_45NM, b).to_bits(),
+                "must be bit-identical at Bx == Bw = {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_precision_is_symmetric_and_monotone() {
+        assert_eq!(mac_gate_count_xw(8, 4), mac_gate_count_xw(4, 8));
+        // 6·32 + 9·8 = 264, between the 4-bit (132) and 8-bit (456) MACs.
+        assert_eq!(mac_gate_count_xw(8, 4), 264);
+        assert!(mac_gate_count_xw(8, 4) > mac_gate_count(4));
+        assert!(mac_gate_count_xw(8, 4) < mac_gate_count(8));
     }
 
     #[test]

@@ -80,6 +80,35 @@ impl Default for EnergyParams {
     }
 }
 
+/// Per-op energies at a full [`crate::simulator::OperatingPoint`]:
+/// mixed activation (Bx) / weight (Bw) precision resolved per circuit.
+/// Samples crossing a converter carry the activation width; weight
+/// writes carry the weight width; the digital MAC is Bx × Bw.
+///
+/// At the default 8×8 point every field is **bit-identical** to the
+/// corresponding [`OpEnergies`] field from [`EnergyParams::at_node`] —
+/// the simulators rely on this for the golden-output contract.
+#[derive(Clone, Copy, Debug)]
+pub struct MixedOpEnergies {
+    /// Technology node in nm this was evaluated at.
+    pub node_nm: f64,
+    /// Activation bit width.
+    pub bits_x: u32,
+    /// Weight bit width.
+    pub bits_w: u32,
+    /// Digital Bx × Bw MAC, J.
+    pub e_mac: f64,
+    /// ADC conversion of one output sample (activation width), J.
+    pub e_adc: f64,
+    /// DAC conversion of one activation sample (excl. load), J.
+    pub e_dac_x: f64,
+    /// DAC conversion of one weight sample (excl. load), J.
+    pub e_dac_w: f64,
+    /// Laser energy per measured pixel (shot-noise floor at the
+    /// activation/output width; node-independent), J.
+    pub e_opt: f64,
+}
+
 impl EnergyParams {
     /// Evaluate all CMOS energies at a technology node (nm). CMOS terms are
     /// scaled from their 45 nm calibration by [`crate::technode::scale`];
@@ -93,6 +122,25 @@ impl EnergyParams {
             e_adc: converter::adc_energy(self.gamma_adc, self.bits) * s,
             e_dac: converter::dac_energy(self.gamma_dac, self.bits) * s,
             e_opt: optical::optical_energy(self.eta_opt, self.bits),
+        }
+    }
+
+    /// Evaluate all energies at a full operating point (node + mixed
+    /// precision). `self.bits` is ignored — the operating point's
+    /// widths govern. The γ calibrations and node scaling are shared
+    /// with [`EnergyParams::at_node`], so at 8×8 the two agree bit for
+    /// bit (pinned by `at_op_default_matches_at_node` below).
+    pub fn at_op(&self, op: &crate::simulator::OperatingPoint) -> MixedOpEnergies {
+        let s = crate::technode::scale_from_45nm(op.node_nm);
+        MixedOpEnergies {
+            node_nm: op.node_nm,
+            bits_x: op.bits_x,
+            bits_w: op.bits_w,
+            e_mac: logic::mac_energy_xw(self.gamma_mac, op.bits_x, op.bits_w) * s,
+            e_adc: converter::adc_energy(self.gamma_adc, op.bits_x) * s,
+            e_dac_x: converter::dac_energy(self.gamma_dac, op.bits_x) * s,
+            e_dac_w: converter::dac_energy(self.gamma_dac, op.bits_w) * s,
+            e_opt: optical::optical_energy(self.eta_opt, op.bits_x),
         }
     }
 }
@@ -120,6 +168,42 @@ mod tests {
         assert!(e7.e_mac < e45.e_mac);
         assert!(e7.e_adc < e45.e_adc);
         assert_eq!(e7.e_opt, e45.e_opt, "laser floor is node-independent");
+    }
+
+    #[test]
+    fn at_op_default_matches_at_node() {
+        // The keystone of the OperatingPoint refactor: at the default
+        // 8×8 precision, the mixed-precision evaluation is bit-identical
+        // to the legacy single-width one at every node.
+        use crate::simulator::OperatingPoint;
+        let p = EnergyParams::default();
+        for node in crate::technode::NODES {
+            let nm = node.nm;
+            let legacy = p.at_node(nm);
+            let mixed = p.at_op(&OperatingPoint::node(nm));
+            assert_eq!(mixed.e_mac.to_bits(), legacy.e_mac.to_bits(), "e_mac @{nm}");
+            assert_eq!(mixed.e_adc.to_bits(), legacy.e_adc.to_bits(), "e_adc @{nm}");
+            assert_eq!(mixed.e_dac_x.to_bits(), legacy.e_dac.to_bits(), "e_dac_x @{nm}");
+            assert_eq!(mixed.e_dac_w.to_bits(), legacy.e_dac.to_bits(), "e_dac_w @{nm}");
+            assert_eq!(mixed.e_opt.to_bits(), legacy.e_opt.to_bits(), "e_opt @{nm}");
+        }
+    }
+
+    #[test]
+    fn at_op_resolves_mixed_widths_per_circuit() {
+        use crate::simulator::OperatingPoint;
+        let p = EnergyParams::default();
+        let e = p.at_op(&OperatingPoint::node(45.0).bits(8, 4));
+        // ADC / activation DAC / laser follow the 8-bit activations...
+        let e8 = p.at_node(45.0);
+        assert_eq!(e.e_adc.to_bits(), e8.e_adc.to_bits());
+        assert_eq!(e.e_dac_x.to_bits(), e8.e_dac.to_bits());
+        assert_eq!(e.e_opt.to_bits(), e8.e_opt.to_bits());
+        // ...the weight DAC follows the 4-bit weights (2^2B law → 256×)...
+        assert!(e.e_dac_w < e.e_dac_x / 100.0);
+        // ...and the MAC sits between the 4-bit and 8-bit symmetric MACs.
+        let lo = EnergyParams { bits: 4, ..p }.at_node(45.0);
+        assert!(e.e_mac > lo.e_mac && e.e_mac < e8.e_mac);
     }
 
     #[test]

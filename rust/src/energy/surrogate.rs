@@ -4,25 +4,36 @@
 //! hot loop to price batches. This module replaces that with the LASANA
 //! recipe: run the slow simulators once over a training grid (through
 //! [`SweepCache`], so sweep results are reused), fit a cheap closed-form
-//! model per **machine × node × layer-shape family**, and serve every
-//! later pricing query as a handful of multiply-adds.
+//! model per **machine × operating point × layer-shape family**, and
+//! serve every later pricing query as a handful of multiply-adds.
 //!
 //! The models are *linear* in per-machine shape features. That is not an
-//! approximation of convenience: for a fixed machine config and node,
-//! each cycle simulator's per-layer energy is an exact linear
-//! combination of features computable from the layer shape alone (MAC
-//! count, Toeplitz/tile traffic terms, converter counts — see
+//! approximation of convenience: for a fixed machine config and
+//! operating point, each cycle simulator's per-layer energy is an exact
+//! linear combination of features computable from the layer shape alone
+//! (MAC count, Toeplitz/tile traffic terms, converter counts — see
 //! [`MachineKind::features`]), so a least-squares fit over a
 //! representative corpus recovers the simulator's own coefficients and
 //! crossval error sits at floating-point noise, far inside the ≤7%
-//! bound the evaluation scenario enforces. Fits are solved with
+//! bound the evaluation scenario enforces. Precision and noise enter the
+//! key, not the features: the features stay shape-only, and each fitted
+//! coefficient vector absorbs the (bits, noise)-dependent energy scale
+//! of its own operating point — so the exact-span argument (and the 7%
+//! bound) holds at every precision. Fits are solved with
 //! [`crate::util::stats::least_squares`] (no external dependencies) and
 //! weighted by 1/energy so the minimized quantity is **relative** error.
 //!
 //! Tables serialize through [`crate::util::json`] (`aimc fit-surrogate`
 //! writes one, `aimc serve --surrogate` loads it at startup). Loading is
 //! strict: any structural anomaly is an error, and the caller falls back
-//! to co-simulation rather than trusting a corrupt model.
+//! to co-simulation rather than trusting a corrupt model. The v2 format
+//! added per-model precision/noise fields; v1 tables predate them and
+//! are rejected by the format tag.
+//!
+//! The plain-`node_nm` entry points (`fit`, `predict_layer`, …) are
+//! default-precision conveniences over the `*_op`/`*_ops` variants: they
+//! price at [`OperatingPoint::node`]`(node_nm)` — 8×8 bits, noiseless —
+//! which is exactly the pre-precision behaviour.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -33,17 +44,19 @@ use crate::simulator::optical4f::Optical4FConfig;
 use crate::simulator::photonic::PhotonicConfig;
 use crate::simulator::reram::ReramConfig;
 use crate::simulator::systolic::SystolicConfig;
-use crate::simulator::SweepCache;
+use crate::simulator::{OpKey, OperatingPoint, SweepCache};
 use crate::util::json::Json;
 use crate::util::stats::least_squares;
 
 /// Serialization header; bump on any layout change so old tables
-/// deliberately fail to load.
-pub const SURROGATE_FORMAT: &str = "aimc-surrogate-v1";
+/// deliberately fail to load. v2 added bits_x/bits_w and the noise
+/// sigmas to every model entry.
+pub const SURROGATE_FORMAT: &str = "aimc-surrogate-v2";
 
 /// Acceptance bound on surrogate-vs-cycle-simulator relative energy
 /// error: the crossval scenario, its test, and `aimc surrogate-crossval`
-/// all fail any (machine × node) whose worst layer error exceeds this.
+/// all fail any (machine × operating point) whose worst layer error
+/// exceeds this.
 pub const ERR_BOUND: f64 = 0.07;
 
 /// The four cycle-modeled processor classes a surrogate can price.
@@ -106,8 +119,8 @@ impl MachineKind {
     }
 
     /// Shape features whose span contains the machine's per-layer energy
-    /// exactly (fixed config + node). Derived term-by-term from the
-    /// cycle simulators' tile loops:
+    /// exactly (fixed config + operating point). Derived term-by-term
+    /// from the cycle simulators' tile loops:
     ///
     /// * **systolic** — `[L·N·M, L·N·tm, L·M, L·M·(tn−1)]`: MAC/register
     ///   + hop terms are ∝ MACs; activation reads stream N per output
@@ -124,6 +137,10 @@ impl MachineKind {
     ///   load-phase pixel traffic `P·s̄²·Cᵢ`, kernel writes
     ///   `P·k²·Cᵢ·Cᵢ₊₁`, laser shots `P·g·(1+Cᵢ₊₁)`, and output reads /
     ///   psum spills spanned by `n_out·Cᵢ₊₁·g` and `n_out·Cᵢ₊₁`.
+    ///
+    /// Precision/noise deliberately do **not** appear here: they rescale
+    /// the per-event energies uniformly across a layer, which the fitted
+    /// coefficients of that operating point's model absorb exactly.
     ///
     /// Tile counts use the same clamping as the simulators, so the
     /// feature map agrees with them on degenerate shapes too.
@@ -207,23 +224,26 @@ impl Family {
     }
 }
 
-/// Model key: machine class, exact node bits (same convention as
-/// [`SweepCache`] keys — no tolerance games), shape family.
-type ModelKey = (MachineKind, u64, Family);
+/// Model key: machine class, exact operating point (bit patterns — same
+/// convention as [`SweepCache`] keys, no tolerance games), shape family.
+type ModelKey = (MachineKind, OpKey, Family);
 
-/// A fitted table of per-(machine × node × family) linear models.
+/// A fitted table of per-(machine × operating point × family) linear
+/// models.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SurrogateTable {
     models: HashMap<ModelKey, Vec<f64>>,
 }
 
 /// Predicted per-inference energy for the coordinator's co-simulation
-/// pair (systolic + optical-4F), joules.
+/// pair (systolic + optical-4F), joules, at a stated precision.
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyQuote {
     pub systolic_j: f64,
     pub optical_j: f64,
     pub node_nm: f64,
+    pub bits_x: u32,
+    pub bits_w: u32,
 }
 
 impl EnergyQuote {
@@ -243,36 +263,40 @@ impl EnergyQuote {
 }
 
 impl SurrogateTable {
-    /// Fit one model per (machine × node × family) over the training
-    /// `layers`. Energy targets are served through `cache`, so grid
-    /// points already simulated by earlier sweeps are replayed rather
-    /// than re-simulated. Rows are weighted by 1/energy, making the
-    /// solver minimize relative error — the quantity
+    /// Fit one model per (machine × operating point × family) over the
+    /// training `layers`. Energy targets are served through `cache`, so
+    /// grid points already simulated by earlier sweeps are replayed
+    /// rather than re-simulated. Rows are weighted by 1/energy, making
+    /// the solver minimize relative error — the quantity
     /// [`crossval`] bounds.
-    pub fn fit(
+    pub fn fit_ops(
         cache: &SweepCache,
         kinds: &[MachineKind],
-        nodes: &[f64],
+        ops: &[OperatingPoint],
         layers: &[ConvLayer],
     ) -> Result<SurrogateTable, String> {
-        if kinds.is_empty() || nodes.is_empty() || layers.is_empty() {
-            return Err("surrogate fit needs at least one machine, node and layer".into());
+        if kinds.is_empty() || ops.is_empty() || layers.is_empty() {
+            return Err(
+                "surrogate fit needs at least one machine, operating point and layer".into(),
+            );
         }
         let mut models = HashMap::new();
         for &kind in kinds {
             let machine = kind.machine();
-            for &node in nodes {
-                if !node.is_finite() || node <= 0.0 {
-                    return Err(format!("bad node {node}"));
+            for op in ops {
+                if !op.node_nm.is_finite() || op.node_nm <= 0.0 {
+                    return Err(format!("bad node {}", op.node_nm));
                 }
                 // Deterministic grouping: families in first-seen order.
                 let mut order: Vec<Family> = Vec::new();
                 let mut by_family: HashMap<Family, (Vec<Vec<f64>>, Vec<f64>)> = HashMap::new();
-                for (layer, joules) in cache.training_rows(machine.as_ref(), layers, node) {
+                for (layer, joules) in cache.training_rows(machine.as_ref(), layers, op) {
                     if !joules.is_finite() || joules <= 0.0 {
                         return Err(format!(
-                            "{} @{node} nm: non-positive energy for {layer:?}",
-                            kind.name()
+                            "{} @{} nm {}b: non-positive energy for {layer:?}",
+                            kind.name(),
+                            op.node_nm,
+                            op.bits_label()
                         ));
                     }
                     let fam = Family::of(&layer);
@@ -289,19 +313,33 @@ impl SurrogateTable {
                     let (a, b) = &by_family[&fam];
                     let coeffs = least_squares(a, b).ok_or_else(|| {
                         format!(
-                            "{} @{node} nm family {fam:?}: singular fit over {} layers",
+                            "{} @{} nm {}b family {fam:?}: singular fit over {} layers",
                             kind.name(),
+                            op.node_nm,
+                            op.bits_label(),
                             a.len()
                         )
                     })?;
-                    models.insert((kind, node.to_bits(), fam), coeffs);
+                    models.insert((kind, op.key(), fam), coeffs);
                 }
             }
         }
         Ok(SurrogateTable { models })
     }
 
-    /// Number of fitted (machine × node × family) models.
+    /// [`SurrogateTable::fit_ops`] at default precision (8×8, noiseless)
+    /// over a plain node grid — the pre-precision entry point.
+    pub fn fit(
+        cache: &SweepCache,
+        kinds: &[MachineKind],
+        nodes: &[f64],
+        layers: &[ConvLayer],
+    ) -> Result<SurrogateTable, String> {
+        let ops: Vec<OperatingPoint> = nodes.iter().map(|&nm| OperatingPoint::node(nm)).collect();
+        SurrogateTable::fit_ops(cache, kinds, &ops, layers)
+    }
+
+    /// Number of fitted (machine × operating point × family) models.
     pub fn len(&self) -> usize {
         self.models.len()
     }
@@ -311,11 +349,14 @@ impl SurrogateTable {
     }
 
     /// Predicted energy for one layer, joules. `None` when no model
-    /// covers this (machine, node, family).
-    pub fn predict_layer(&self, kind: MachineKind, node_nm: f64, layer: &ConvLayer) -> Option<f64> {
-        let coeffs = self
-            .models
-            .get(&(kind, node_nm.to_bits(), Family::of(layer)))?;
+    /// covers this (machine, operating point, family).
+    pub fn predict_layer_op(
+        &self,
+        kind: MachineKind,
+        op: &OperatingPoint,
+        layer: &ConvLayer,
+    ) -> Option<f64> {
+        let coeffs = self.models.get(&(kind, op.key(), Family::of(layer)))?;
         let e: f64 = kind
             .features(layer)
             .iter()
@@ -325,25 +366,47 @@ impl SurrogateTable {
         Some(e)
     }
 
+    /// [`SurrogateTable::predict_layer_op`] at default precision.
+    pub fn predict_layer(&self, kind: MachineKind, node_nm: f64, layer: &ConvLayer) -> Option<f64> {
+        self.predict_layer_op(kind, &OperatingPoint::node(node_nm), layer)
+    }
+
     /// Predicted energy for a whole network, joules. `None` when any
     /// layer lacks a model — partial coverage must not silently
     /// under-price a network.
-    pub fn predict_network(&self, kind: MachineKind, node_nm: f64, net: &Network) -> Option<f64> {
+    pub fn predict_network_op(
+        &self,
+        kind: MachineKind,
+        op: &OperatingPoint,
+        net: &Network,
+    ) -> Option<f64> {
         let mut total = 0.0;
         for layer in &net.layers {
-            total += self.predict_layer(kind, node_nm, layer)?;
+            total += self.predict_layer_op(kind, op, layer)?;
         }
         Some(total)
     }
 
+    /// [`SurrogateTable::predict_network_op`] at default precision.
+    pub fn predict_network(&self, kind: MachineKind, node_nm: f64, net: &Network) -> Option<f64> {
+        self.predict_network_op(kind, &OperatingPoint::node(node_nm), net)
+    }
+
     /// Price `net` for the coordinator's co-simulation pair. `None`
-    /// unless every layer has a model for both machines at `node_nm`.
-    pub fn quote_network(&self, net: &Network, node_nm: f64) -> Option<EnergyQuote> {
+    /// unless every layer has a model for both machines at `op`.
+    pub fn quote_network_op(&self, net: &Network, op: &OperatingPoint) -> Option<EnergyQuote> {
         Some(EnergyQuote {
-            systolic_j: self.predict_network(MachineKind::Systolic, node_nm, net)?,
-            optical_j: self.predict_network(MachineKind::Optical4F, node_nm, net)?,
-            node_nm,
+            systolic_j: self.predict_network_op(MachineKind::Systolic, op, net)?,
+            optical_j: self.predict_network_op(MachineKind::Optical4F, op, net)?,
+            node_nm: op.node_nm,
+            bits_x: op.bits_x,
+            bits_w: op.bits_w,
         })
+    }
+
+    /// [`SurrogateTable::quote_network_op`] at default precision.
+    pub fn quote_network(&self, net: &Network, node_nm: f64) -> Option<EnergyQuote> {
+        self.quote_network_op(net, &OperatingPoint::node(node_nm))
     }
 
     // ---- serialization ---------------------------------------------------
@@ -355,10 +418,15 @@ impl SurrogateTable {
         let models: Vec<Json> = keys
             .iter()
             .map(|key| {
-                let (kind, node_bits, fam) = *key;
+                let (kind, opk, fam) = *key;
+                let op = opk.to_op();
                 Json::Obj(vec![
                     ("machine".into(), Json::Str(kind.name().into())),
-                    ("node_nm".into(), Json::Num(f64::from_bits(node_bits))),
+                    ("node_nm".into(), Json::Num(op.node_nm)),
+                    ("bits_x".into(), Json::Num(op.bits_x as f64)),
+                    ("bits_w".into(), Json::Num(op.bits_w as f64)),
+                    ("weight_sigma".into(), Json::Num(op.noise.weight_sigma)),
+                    ("output_sigma".into(), Json::Num(op.noise.output_sigma)),
                     ("kh".into(), Json::Num(fam.kh as f64)),
                     ("kw".into(), Json::Num(fam.kw as f64)),
                     ("stride".into(), Json::Num(fam.stride as f64)),
@@ -376,9 +444,9 @@ impl SurrogateTable {
     }
 
     /// Strict deserialization: wrong format tag, unknown machine,
-    /// non-finite numbers, wrong coefficient count, duplicate or empty
-    /// models all fail. Callers treat any error as "do not serve with
-    /// this table".
+    /// non-finite numbers, out-of-range bit widths, negative sigmas,
+    /// wrong coefficient count, duplicate or empty models all fail.
+    /// Callers treat any error as "do not serve with this table".
     pub fn from_json(doc: &Json) -> Result<SurrogateTable, String> {
         let format = as_str(field(doc, "format")?)?;
         if format != SURROGATE_FORMAT {
@@ -401,6 +469,24 @@ impl SurrogateTable {
             if node <= 0.0 {
                 return Err(format!("bad node_nm {node}"));
             }
+            let bits_x = as_usize(field(entry, "bits_x")?)?;
+            let bits_w = as_usize(field(entry, "bits_w")?)?;
+            if !(1..=32).contains(&bits_x) || !(1..=32).contains(&bits_w) {
+                return Err(format!("bit widths out of range: {bits_x}x{bits_w}"));
+            }
+            let weight_sigma = as_num(field(entry, "weight_sigma")?)?;
+            let output_sigma = as_num(field(entry, "output_sigma")?)?;
+            if weight_sigma < 0.0 || output_sigma < 0.0 {
+                return Err(format!(
+                    "negative noise sigma: {weight_sigma} / {output_sigma}"
+                ));
+            }
+            let op = OperatingPoint::node(node)
+                .bits(bits_x as u32, bits_w as u32)
+                .with_noise(crate::simulator::NoiseModel {
+                    weight_sigma,
+                    output_sigma,
+                });
             let fam = Family {
                 kh: as_usize(field(entry, "kh")?)?,
                 kw: as_usize(field(entry, "kw")?)?,
@@ -424,10 +510,11 @@ impl SurrogateTable {
                     coeffs.len()
                 ));
             }
-            if models.insert((kind, node.to_bits(), fam), coeffs).is_some() {
+            if models.insert((kind, op.key(), fam), coeffs).is_some() {
                 return Err(format!(
-                    "duplicate model for {} @{node} nm {fam:?}",
-                    kind.name()
+                    "duplicate model for {} @{node} nm {}b {fam:?}",
+                    kind.name(),
+                    op.bits_label()
                 ));
             }
         }
@@ -512,38 +599,40 @@ pub fn default_nodes() -> Vec<f64> {
 }
 
 /// One crossval verdict: surrogate vs cycle simulator for a machine ×
-/// node over a layer set.
+/// operating point over a layer set.
 #[derive(Clone, Copy, Debug)]
 pub struct CrossvalPoint {
     pub kind: MachineKind,
     pub node_nm: f64,
+    pub bits_x: u32,
+    pub bits_w: u32,
     pub layers: usize,
     pub max_rel_err: f64,
     pub mean_rel_err: f64,
 }
 
 /// Score `table` against the cycle simulators (through `cache`) for
-/// every machine × node over the unique shapes of `layers`. A layer with
-/// no fitted model counts as 100% error, so a coverage hole can never
-/// pass a bound check.
-pub fn crossval(
+/// every machine × operating point over the unique shapes of `layers`.
+/// A layer with no fitted model counts as 100% error, so a coverage
+/// hole can never pass a bound check.
+pub fn crossval_ops(
     table: &SurrogateTable,
     cache: &SweepCache,
     kinds: &[MachineKind],
-    nodes: &[f64],
+    ops: &[OperatingPoint],
     layers: &[ConvLayer],
 ) -> Vec<CrossvalPoint> {
     let uniq = dedup_layers(layers.iter().copied());
-    let mut out = Vec::with_capacity(kinds.len() * nodes.len());
+    let mut out = Vec::with_capacity(kinds.len() * ops.len());
     for &kind in kinds {
         let machine = kind.machine();
-        for &node in nodes {
+        for op in ops {
             let mut max_rel = 0.0f64;
             let mut sum_rel = 0.0f64;
             for layer in &uniq {
-                let truth = cache.simulate_layer(machine.as_ref(), layer, node);
+                let truth = cache.simulate_layer(machine.as_ref(), layer, op);
                 let truth_j = truth.ledger.total().max(f64::MIN_POSITIVE);
-                let rel = match table.predict_layer(kind, node, layer) {
+                let rel = match table.predict_layer_op(kind, op, layer) {
                     Some(pred) => (pred - truth_j).abs() / truth_j,
                     None => 1.0,
                 };
@@ -552,7 +641,9 @@ pub fn crossval(
             }
             out.push(CrossvalPoint {
                 kind,
-                node_nm: node,
+                node_nm: op.node_nm,
+                bits_x: op.bits_x,
+                bits_w: op.bits_w,
                 layers: uniq.len(),
                 max_rel_err: max_rel,
                 mean_rel_err: sum_rel / uniq.len().max(1) as f64,
@@ -560,6 +651,18 @@ pub fn crossval(
         }
     }
     out
+}
+
+/// [`crossval_ops`] at default precision over a plain node grid.
+pub fn crossval(
+    table: &SurrogateTable,
+    cache: &SweepCache,
+    kinds: &[MachineKind],
+    nodes: &[f64],
+    layers: &[ConvLayer],
+) -> Vec<CrossvalPoint> {
+    let ops: Vec<OperatingPoint> = nodes.iter().map(|&nm| OperatingPoint::node(nm)).collect();
+    crossval_ops(table, cache, kinds, &ops, layers)
 }
 
 #[cfg(test)]
@@ -612,15 +715,80 @@ mod tests {
     }
 
     #[test]
+    fn crossval_error_bounded_across_precisions() {
+        // The exact-span argument holds per operating point: fitting and
+        // scoring at 4×4 / 8×4 / 8×8 must stay inside the same bound.
+        let cache = SweepCache::new();
+        let corpus = test_corpus();
+        let ops = [
+            OperatingPoint::node(45.0).bits(4, 4),
+            OperatingPoint::node(45.0).bits(8, 4),
+            OperatingPoint::node(45.0),
+            OperatingPoint::node(7.0).bits(6, 6),
+        ];
+        let table =
+            SurrogateTable::fit_ops(&cache, &MachineKind::ALL, &ops, &corpus).unwrap();
+        let eval = vec![
+            ConvLayer::square(512, 128, 128, 3, 1),
+            ConvLayer::square(96, 48, 64, 3, 1),
+        ];
+        for p in crossval_ops(&table, &cache, &MachineKind::ALL, &ops, &eval) {
+            assert!(
+                p.max_rel_err <= ERR_BOUND,
+                "{} @{} nm {}x{}b: max rel err {:.4}",
+                p.kind.name(),
+                p.node_nm,
+                p.bits_x,
+                p.bits_w,
+                p.max_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn precision_keys_never_alias() {
+        let cache = SweepCache::new();
+        let corpus = test_corpus();
+        let ops = [
+            OperatingPoint::node(45.0),
+            OperatingPoint::node(45.0).bits(4, 4),
+        ];
+        let table =
+            SurrogateTable::fit_ops(&cache, &[MachineKind::Systolic], &ops, &corpus).unwrap();
+        let layer = ConvLayer::square(96, 48, 64, 3, 1);
+        let e8 = table
+            .predict_layer_op(MachineKind::Systolic, &ops[0], &layer)
+            .unwrap();
+        let e4 = table
+            .predict_layer_op(MachineKind::Systolic, &ops[1], &layer)
+            .unwrap();
+        assert!(e4 < e8, "4-bit prediction must price below 8-bit");
+        // An operating point that was never fitted has no model.
+        assert!(table
+            .predict_layer_op(
+                MachineKind::Systolic,
+                &OperatingPoint::node(45.0).bits(6, 6),
+                &layer
+            )
+            .is_none());
+        // And the default-precision wrapper hits the 8×8 model exactly.
+        assert_eq!(
+            table.predict_layer(MachineKind::Systolic, 45.0, &layer).unwrap().to_bits(),
+            e8.to_bits()
+        );
+    }
+
+    #[test]
     fn network_prediction_matches_cycle_sum() {
         let cache = SweepCache::new();
         let corpus = test_corpus();
         let table =
             SurrogateTable::fit(&cache, &MachineKind::ALL, &[45.0], &corpus).unwrap();
         let net = crate::networks::vgg::vgg16(300);
+        let op = OperatingPoint::node(45.0);
         for kind in MachineKind::ALL {
             let truth = cache
-                .simulate_network(kind.machine().as_ref(), &net, 45.0)
+                .simulate_network(kind.machine().as_ref(), &net, &op)
                 .ledger
                 .total();
             let pred = table.predict_network(kind, 45.0, &net).unwrap();
@@ -669,10 +837,17 @@ mod tests {
     #[test]
     fn json_round_trip_is_lossless() {
         let cache = SweepCache::new();
-        let table = SurrogateTable::fit(
+        let ops = [
+            OperatingPoint::node(45.0),
+            OperatingPoint::node(7.0).bits(4, 8).with_noise(crate::simulator::NoiseModel {
+                weight_sigma: 0.01,
+                output_sigma: 0.02,
+            }),
+        ];
+        let table = SurrogateTable::fit_ops(
             &cache,
             &MachineKind::ALL,
-            &[45.0, 7.0],
+            &ops,
             &test_corpus(),
         )
         .unwrap();
@@ -702,10 +877,11 @@ mod tests {
         std::fs::write(&path, &text).unwrap();
         assert!(SurrogateTable::load(&path).is_err());
 
-        // Wrong format tag.
+        // Wrong format tag (v1 tables land here too — they predate the
+        // precision fields).
         std::fs::write(
             &path,
-            "{\"format\": \"aimc-surrogate-v999\", \"models\": []}",
+            "{\"format\": \"aimc-surrogate-v1\", \"models\": []}",
         )
         .unwrap();
         assert!(SurrogateTable::load(&path).is_err());
@@ -716,7 +892,24 @@ mod tests {
             format!(
                 "{{\"format\": \"{SURROGATE_FORMAT}\", \"models\": [{{\
                  \"machine\": \"systolic\", \"node_nm\": 45.0, \
+                 \"bits_x\": 8, \"bits_w\": 8, \
+                 \"weight_sigma\": 0.0, \"output_sigma\": 0.0, \
                  \"kh\": 3, \"kw\": 3, \"stride\": 1, \"coeffs\": [1.0]}}]}}"
+            ),
+        )
+        .unwrap();
+        assert!(SurrogateTable::load(&path).is_err());
+
+        // Out-of-range bit width.
+        std::fs::write(
+            &path,
+            format!(
+                "{{\"format\": \"{SURROGATE_FORMAT}\", \"models\": [{{\
+                 \"machine\": \"systolic\", \"node_nm\": 45.0, \
+                 \"bits_x\": 0, \"bits_w\": 8, \
+                 \"weight_sigma\": 0.0, \"output_sigma\": 0.0, \
+                 \"kh\": 3, \"kw\": 3, \"stride\": 1, \
+                 \"coeffs\": [1.0, 1.0, 1.0, 1.0]}}]}}"
             ),
         )
         .unwrap();
@@ -758,6 +951,8 @@ mod tests {
             systolic_j: 2e-6,
             optical_j: 5e-6,
             node_nm: 45.0,
+            bits_x: 8,
+            bits_w: 8,
         };
         assert!((q.worst_uj() - 5.0).abs() < 1e-9);
         assert!((q.systolic_uj() - 2.0).abs() < 1e-9);

@@ -13,11 +13,13 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`energy`] — Appendix-A energy parameter models (SRAM, MAC, ADC/DAC,
-//!   line loads, laser, ReRAM), plus [`energy::surrogate`]: closed-form
-//!   per-(machine × node × layer-family) energy models least-squares
-//!   fitted from cycle-accurate [`simulator::SweepCache`] results
-//!   (`aimc fit-surrogate`), serialized via [`util::json`], so the
-//!   serving path can price batches in nanoseconds instead of
+//!   line loads, laser, ReRAM), precision-aware through
+//!   [`energy::EnergyParams::at_op`] (mixed activation × weight bit
+//!   widths), plus [`energy::surrogate`]: closed-form
+//!   per-(machine × operating point × layer-family) energy models
+//!   least-squares fitted from cycle-accurate [`simulator::SweepCache`]
+//!   results (`aimc fit-surrogate`), serialized via [`util::json`], so
+//!   the serving path can price batches in nanoseconds instead of
 //!   re-simulating (cross-validated against the simulators to
 //!   [`energy::surrogate::ERR_BOUND`]).
 //! * [`technode`] — CMOS technology-node energy scaling (Stillmaker & Baas).
@@ -25,10 +27,16 @@
 //! * [`analytic`] — closed-form efficiency models (eqs. 3, 5, 14, 24).
 //! * [`simulator`] — cycle-accurate machines for all four processor
 //!   classes (systolic, ReRAM, planar photonic, optical 4F), unified
-//!   behind the [`simulator::Machine`] trait, with layer-dedup
-//!   memoization ([`simulator::SweepCache`], persistable to disk keyed
-//!   by (config fingerprint, node, layer)) and the parallel
-//!   (machine × network × node) grid runner [`simulator::sweep::sweep`].
+//!   behind the [`simulator::Machine`] trait and priced at a full
+//!   [`simulator::OperatingPoint`] (technology node × activation/weight
+//!   bit widths × [`simulator::NoiseModel`]; the default reproduces the
+//!   paper's 45 nm / 8-bit / noiseless setting exactly), with
+//!   layer-dedup memoization ([`simulator::SweepCache`], persistable to
+//!   disk keyed by (config fingerprint, operating point, layer)), the
+//!   parallel (machine × network × operating point) grid runner
+//!   [`simulator::sweep::sweep`], and the deterministic seeded-RNG
+//!   effective-SNR/accuracy estimator [`simulator::accuracy`] behind
+//!   the `aimc pareto` energy × latency × accuracy frontier.
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
 //!   (behind the `pjrt` cargo feature; a stub engine otherwise).
 //! * [`coordinator`] — the serving path on top of [`runtime`], sharded

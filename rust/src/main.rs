@@ -1,9 +1,12 @@
 //! `aimc` — CLI for the analog in-memory compute reproduction.
 //!
-//! Every report subcommand (tables, figures, crossval, zoo, sweep, all)
-//! is a declarative [`aimc::report::Scenario`] evaluated through ONE
-//! shared pool + sweep cache per invocation, then rendered by the sink
-//! picked with `--format text|csv|json` (`--csv` is a legacy alias).
+//! Every report subcommand (tables, figures, crossval, zoo, sweep,
+//! pareto, all) is a declarative [`aimc::report::Scenario`] evaluated
+//! through ONE shared pool + sweep cache per invocation, then rendered
+//! by the sink picked with `--format text|csv|json` (`--csv` is a
+//! legacy alias). `--bits` adds a precision axis to `sweep`/`pareto`
+//! (and pins the serving/simulate operating point), threading bit
+//! widths through the same cache keys as the node axis.
 //! With `--cache-dir` the sweep cache additionally persists across
 //! invocations — keyed by (machine-config fingerprint, node, layer), so
 //! a repeated run replays instead of re-simulating. The remaining
@@ -25,7 +28,7 @@ use aimc::networks::by_name;
 use aimc::networks::DEFAULT_INPUT;
 use aimc::report::{self, Dataset, EvalCtx, OutputFormat};
 use aimc::runtime::Engine;
-use aimc::simulator::{machine, SweepCache};
+use aimc::simulator::{machine, OperatingPoint, SweepCache};
 use aimc::util::cli::Spec;
 use aimc::util::json::Json;
 use aimc::util::pool::Pool;
@@ -36,11 +39,17 @@ fn spec() -> Spec {
         "aimc",
         "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
          commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
-         crossval surrogate-crossval all simulate sweep zoo verify fit-surrogate serve",
+         crossval surrogate-crossval all simulate sweep pareto zoo verify fit-surrogate serve",
     )
     .opt("net", "network name (fig8/fig9/fig10/simulate)", None)
     .opt("input", "input resolution (pixels per side)", Some("1000"))
-    .opt("node", "technology node in nm (simulate)", Some("45"))
+    .opt("node", "technology node in nm (simulate/serve)", Some("45"))
+    .opt(
+        "bits",
+        "bit widths, entries \"B\" or \"BXxBW\" (e.g. 8 or 8x4); comma-separated \
+         list adds a precision axis to sweep/pareto; simulate/serve take one entry",
+        None,
+    )
     .opt(
         "machine",
         "simulate on: systolic | optical4f | photonic | reram",
@@ -83,9 +92,38 @@ fn spec() -> Spec {
 }
 
 /// Where a cache directory keeps its snapshot (the version is in the
-/// file's own header; the name just keeps it greppable).
+/// file's own header; the name just keeps it greppable). Bumped to v2
+/// with the operating-point cache keys — a v1 file is simply ignored.
 fn cache_file(dir: &Path) -> PathBuf {
-    dir.join("sweep-cache.v1.txt")
+    dir.join("sweep-cache.v2.txt")
+}
+
+/// Parse `--bits`: comma-separated entries, each `"B"` (symmetric) or
+/// `"BXxBW"` (activation × weight), widths in 1..=32.
+fn parse_bits(spec: &str) -> anyhow::Result<Vec<(u32, u32)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        let (bx, bw) = match entry.split_once(['x', 'X']) {
+            Some((x, w)) => (x.trim().parse::<u32>(), w.trim().parse::<u32>()),
+            None => {
+                let b = entry.parse::<u32>();
+                (b.clone(), b)
+            }
+        };
+        let (bx, bw) = match (bx, bw) {
+            (Ok(x), Ok(w)) => (x, w),
+            _ => anyhow::bail!("bad --bits entry {entry:?} (expected e.g. 8 or 8x4)"),
+        };
+        if !(1..=32).contains(&bx) || !(1..=32).contains(&bw) {
+            anyhow::bail!("--bits widths must be in 1..=32, got {entry:?}");
+        }
+        out.push((bx, bw));
+    }
+    if out.is_empty() {
+        anyhow::bail!("--bits needs at least one entry");
+    }
+    Ok(out)
 }
 
 /// Output sink: text and CSV stream per dataset exactly as the
@@ -223,7 +261,11 @@ fn run() -> anyhow::Result<()> {
                 "zoo" => sink.emit(&report::zoo_scenario(input).eval(&ctx)),
                 "simulate" => cmd_simulate(&args, input, &pool, &cache)?,
                 "sweep" => {
-                    let sc = report::sweep_scenario(input);
+                    let bits = match args.get("bits") {
+                        Some(spec) => parse_bits(spec)?,
+                        None => Vec::new(),
+                    };
+                    let sc = report::sweep_scenario_with_bits(input, &bits);
                     let t0 = Instant::now();
                     let ds = sc.eval(&ctx);
                     let elapsed = t0.elapsed().as_secs_f64();
@@ -232,6 +274,23 @@ fn run() -> anyhow::Result<()> {
                         "swept {} grid points in {elapsed:.2} s on {} threads (cache: {})",
                         sc.grid_points(),
                         pool.threads(),
+                        cache.stats()
+                    );
+                }
+                "pareto" => {
+                    let sc = match args.get("bits") {
+                        Some(spec) => {
+                            report::pareto_scenario_with_bits(input, &parse_bits(spec)?)
+                        }
+                        None => report::pareto_scenario(input),
+                    };
+                    let t0 = Instant::now();
+                    let ds = sc.eval(&ctx);
+                    sink.emit(&ds);
+                    eprintln!(
+                        "pareto grid: {} rows in {:.2} s (cache: {})",
+                        sc.row_count(),
+                        t0.elapsed().as_secs_f64(),
                         cache.stats()
                     );
                 }
@@ -266,6 +325,16 @@ fn cmd_simulate(
     cache: &SweepCache,
 ) -> anyhow::Result<()> {
     let node = args.get_f64("node", 45.0)?;
+    let op = match args.get("bits") {
+        Some(spec) => {
+            let bits = parse_bits(spec)?;
+            if bits.len() != 1 {
+                anyhow::bail!("simulate takes exactly one --bits entry");
+            }
+            OperatingPoint::node(node).bits(bits[0].0, bits[0].1)
+        }
+        None => OperatingPoint::node(node),
+    };
     let name = args.get("net").unwrap_or("YOLOv3");
     let net = if name.eq_ignore_ascii_case("smallcnn") {
         smallcnn_network()
@@ -280,11 +349,12 @@ fn cmd_simulate(
     let t0 = Instant::now();
     // Unique layer shapes fan out over the pool; the merge stays in
     // layer order, bit-identical to a serial pass.
-    let r = cache.simulate_network_par(pool, m.as_ref(), &net, node);
+    let r = cache.simulate_network_par(pool, m.as_ref(), &net, &op);
     println!(
-        "{} on {} @ {node} nm  ({} layers, {:.1} GMACs, simulated in {:.1} ms, cache {})",
+        "{} on {} @ {node} nm {}b  ({} layers, {:.1} GMACs, simulated in {:.1} ms, cache {})",
         net.name,
         m.name(),
+        op.bits_label(),
         net.num_layers(),
         r.macs / 1e9,
         t0.elapsed().as_secs_f64() * 1e3,
@@ -385,6 +455,16 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     let workers = args.get_usize("workers", 2)?;
     let max_pending = args.get_usize("max-pending", 1024)?;
     let node = args.get_f64("node", 45.0)?;
+    let energy_bits = match args.get("bits") {
+        Some(spec) => {
+            let bits = parse_bits(spec)?;
+            if bits.len() != 1 {
+                anyhow::bail!("serve takes exactly one --bits entry");
+            }
+            bits[0]
+        }
+        None => (8, 8),
+    };
     let synthetic = args.flag("synthetic");
     // A corrupt/missing table must not take serving down: warn and fall
     // back to per-batch co-simulation.
@@ -403,7 +483,9 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     };
     println!(
         "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}, energy @{node} nm ({} pricing){}{}",
+         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing){}{}",
+        energy_bits.0,
+        energy_bits.1,
         if surrogate.is_some() { "surrogate" } else { "co-simulation" },
         match max_uj_per_inf {
             Some(b) => format!(", budget {b} µJ/inf"),
@@ -417,6 +499,7 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         workers,
         max_pending,
         energy_node_nm: node,
+        energy_bits,
         surrogate,
         max_uj_per_inf,
         ..Default::default()
@@ -449,9 +532,11 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     println!("served {ok}/{n_req} OK — {}", metrics.summary());
     if let Some(q) = quote {
         println!(
-            "per-request attribution @{} nm: systolic {:.2} µJ | optical-4F {:.2} µJ \
+            "per-request attribution @{} nm {}x{}b: systolic {:.2} µJ | optical-4F {:.2} µJ \
              (worst {:.2} µJ)",
             q.node_nm,
+            q.bits_x,
+            q.bits_w,
             q.systolic_uj(),
             q.optical_uj(),
             q.worst_uj(),
@@ -465,12 +550,14 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         metrics.optical_uj_per_inference(),
     ) {
         (Some(sys), Some(opt)) => println!(
-            "energy ({} pricing over {} batches / {} inferences) @{} nm: \
+            "energy ({} pricing over {} batches / {} inferences) @{} nm {}x{}b: \
              systolic {sys:.2} µJ/inf | optical-4F {opt:.2} µJ/inf",
             metrics.energy_source(),
             metrics.energy_batches(),
             metrics.energy_images(),
             metrics.energy_node_nm(),
+            metrics.energy_bits().0,
+            metrics.energy_bits().1,
         ),
         _ => println!("energy: n/a (no batch was priced)"),
     }

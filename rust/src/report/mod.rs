@@ -24,7 +24,9 @@
 //! | [`figures::crossval`] | extension — all four machines cross-validated |
 //! | [`zoo_scenario`] | `aimc zoo` — network inventory |
 //! | [`sweep_scenario`] | `aimc sweep` — full machine × network × node grid |
+//! | [`sweep_scenario_with_bits`] | `aimc sweep --bits` — the grid crossed with bit widths |
 //! | [`surrogate_crossval_scenario`] | `aimc surrogate-crossval` — fitted energy surrogate vs cycle sims |
+//! | [`pareto_scenario`] | `aimc pareto` — energy × latency × accuracy over node × bits |
 //!
 //! [`all_scenarios`] is the `aimc all` list: one shared cache/pool
 //! evaluates the lot, so layer shapes repeated across artifacts
@@ -76,6 +78,123 @@ pub fn sweep_scenario(input: usize) -> Scenario {
         .enumerate()
     {
         s = s.num(col, 3, move |c: &RowCtx| c.sim(mi).tops_per_watt());
+    }
+    s
+}
+
+/// [`sweep_scenario`] crossed with explicit `(bits_x, bits_w)` pairs:
+/// each (network, node) row fans out bits-minor into one row per pair,
+/// with a `bits` label column inserted after the node. An empty `bits`
+/// list falls back to the plain (unlabeled, default-precision) sweep, so
+/// `aimc sweep` without `--bits` is byte-identical to before.
+pub fn sweep_scenario_with_bits(input: usize, bits: &[(u32, u32)]) -> Scenario {
+    if bits.is_empty() {
+        return sweep_scenario(input);
+    }
+    let machines = crate::simulator::machine::all_machines();
+    let nets = zoo(input);
+    let nodes: Vec<f64> = crate::technode::NODES.iter().map(|n| n.nm).collect();
+    let title = format!(
+        "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes × {} precisions @ {input} px",
+        machines.len(),
+        nets.len(),
+        nodes.len(),
+        bits.len()
+    );
+    let mut s = Scenario::new(title)
+        .machines(machines)
+        .networks(nets)
+        .nodes(&nodes)
+        .bits(bits)
+        .over_network_nodes()
+        .text("network", |c: &RowCtx| c.net().name.to_string())
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .text("bits", |c: &RowCtx| c.bits_label());
+    for (mi, col) in ["systolic", "ReRAM", "photonic", "optical 4F"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(col, 3, move |c: &RowCtx| c.sim(mi).tops_per_watt());
+    }
+    s
+}
+
+/// The default `aimc pareto` precision grid.
+pub const PARETO_DEFAULT_BITS: [(u32, u32); 4] = [(4, 4), (6, 6), (8, 8), (12, 12)];
+
+/// The default `aimc pareto` node grid: the scaling-era slice of the
+/// ladder the paper's §VII discussion centers on.
+pub const PARETO_NODES: [f64; 4] = [45.0, 28.0, 14.0, 7.0];
+
+/// `aimc pareto`: the energy × latency × accuracy frontier over a
+/// (node × bits) grid for all four cycle machines on YOLOv3. Each row is
+/// one operating point: the seeded-RNG estimator
+/// ([`crate::simulator::accuracy`]) supplies effective SNR / ENOB / an
+/// accuracy-retention proxy, and the cycle simulators supply µJ/inference
+/// and schedule time per machine — everything needed to read off which
+/// precision dominates at which node.
+///
+/// Deliberately NOT in [`all_scenarios`]: it is a design-space tool, not
+/// a paper artifact (the golden test pins `all_scenarios` to the paper's
+/// ten outputs).
+pub fn pareto_scenario(input: usize) -> Scenario {
+    pareto_scenario_with_bits(input, &PARETO_DEFAULT_BITS)
+}
+
+/// [`pareto_scenario`] over an explicit precision grid (`--bits`).
+pub fn pareto_scenario_with_bits(input: usize, bits: &[(u32, u32)]) -> Scenario {
+    use crate::simulator::accuracy::{estimate_network, AccuracyEstimate};
+    use crate::simulator::{OpKey, OperatingPoint};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let net = crate::networks::yolov3::yolov3(input);
+    let bits: Vec<(u32, u32)> = if bits.is_empty() {
+        PARETO_DEFAULT_BITS.to_vec()
+    } else {
+        bits.to_vec()
+    };
+    // The accuracy estimate depends only on (network, operating point) —
+    // precompute it per grid point so the three derived columns share
+    // one estimate instead of re-running the Monte-Carlo per column.
+    let mut estimates: HashMap<OpKey, AccuracyEstimate> = HashMap::new();
+    for &nm in &PARETO_NODES {
+        for &(bx, bw) in &bits {
+            let op = OperatingPoint::node(nm).bits(bx, bw);
+            estimates.insert(op.key(), estimate_network(&net, &op));
+        }
+    }
+    let estimates = Arc::new(estimates);
+
+    let title = format!(
+        "pareto — energy × latency × accuracy, {} @ {input} px over {} nodes × {} precisions",
+        net.name,
+        PARETO_NODES.len(),
+        bits.len()
+    );
+    let est = |f: fn(&AccuracyEstimate) -> f64| {
+        let estimates = Arc::clone(&estimates);
+        move |c: &RowCtx| f(&estimates[&c.op().key()])
+    };
+    let mut s = Scenario::new(title)
+        .machines(crate::simulator::machine::all_machines())
+        .network(net)
+        .nodes(&PARETO_NODES)
+        .bits(&bits)
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .text("bits", |c: &RowCtx| c.bits_label())
+        .num("SNR (dB)", 2, est(|e| e.snr_db))
+        .num("eff. bits", 2, est(|e| e.effective_bits))
+        .num("accuracy", 4, est(|e| e.retention));
+    for (mi, m) in ["systolic", "reram", "photonic", "optical4f"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(&format!("{m} uJ/inf"), 3, move |c: &RowCtx| {
+            c.sim(mi).ledger.total() * 1e6
+        });
+        s = s.sci(&format!("{m} time"), move |c: &RowCtx| c.sim(mi).time_units);
     }
     s
 }
@@ -171,6 +290,43 @@ mod tests {
         let s = sweep_scenario(200);
         assert_eq!(s.grid_points(), 4 * 8 * crate::technode::NODES.len());
         assert_eq!(s.row_count(), 8 * crate::technode::NODES.len());
+    }
+
+    #[test]
+    fn pareto_scenario_spans_nodes_times_bits() {
+        let s = pareto_scenario(120);
+        assert_eq!(
+            s.row_count(),
+            PARETO_NODES.len() * PARETO_DEFAULT_BITS.len()
+        );
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 16);
+        // Columns: node, bits, 3 accuracy-derived, then (µJ, time) × 4.
+        assert_eq!(ds.columns.len(), 5 + 8);
+        // Within one node, retention rises and energy falls with bits ×
+        // energy rises with bits (monotone trade-off the frontier is
+        // built from).
+        let num = |v: &Value| match v {
+            Value::Num(x) => *x,
+            other => panic!("{other:?}"),
+        };
+        let acc4 = num(&ds.rows[0][4]);
+        let acc12 = num(&ds.rows[3][4]);
+        assert!(acc4 < acc12, "retention must rise with bits");
+        let e4 = num(&ds.rows[0][5]);
+        let e12 = num(&ds.rows[3][5]);
+        assert!(e4 < e12, "systolic energy must rise with bits");
+    }
+
+    #[test]
+    fn sweep_with_bits_adds_rows_and_label_column() {
+        let plain = sweep_scenario(120);
+        let with = sweep_scenario_with_bits(120, &[(8, 8), (4, 4)]);
+        assert_eq!(with.row_count(), 2 * plain.row_count());
+        // Empty bits list falls back to the byte-identical plain sweep.
+        let fallback = sweep_scenario_with_bits(120, &[]);
+        assert_eq!(fallback.title(), plain.title());
+        assert_eq!(fallback.row_count(), plain.row_count());
     }
 
     #[test]

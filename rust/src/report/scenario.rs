@@ -2,11 +2,14 @@
 //!
 //! A [`Scenario`] is a typed experiment spec — machines (cycle-accurate
 //! *and* analytic, via [`crate::simulator::AnalyticMachine`]) × networks
-//! × technology nodes × derived columns — with one of four row axes.
+//! × technology nodes (× optionally bit widths, via [`Scenario::bits`],
+//! which crosses every node with every `(bits_x, bits_w)` pair
+//! bits-minor) × derived columns — with one of four row axes.
 //! One engine ([`Scenario::eval`]) evaluates every scenario the same
-//! way: the (machine × network × node) grid is prefetched through a
-//! shared [`Pool`] into a shared [`SweepCache`] (so repeated layer
-//! shapes simulate once, across *all* scenarios of a CLI invocation),
+//! way: the (machine × network × operating point) grid is prefetched
+//! through a shared [`Pool`] into a shared [`SweepCache`] (so repeated
+//! layer shapes simulate once, across *all* scenarios of a CLI
+//! invocation),
 //! then rows are assembled in parallel and returned as a typed
 //! [`Dataset`] — named columns of [`Value::Num`]/[`Value::Text`] cells,
 //! not pre-formatted strings.
@@ -27,7 +30,7 @@
 use std::collections::HashSet;
 
 use crate::networks::{ConvLayer, Network};
-use crate::simulator::{Machine, SimResult, SweepCache};
+use crate::simulator::{Machine, OpKey, OperatingPoint, SimResult, SweepCache};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::table::{sci, Table};
@@ -165,13 +168,15 @@ impl OutputFormat {
 /// What one table row ranges over.
 #[derive(Clone, Debug)]
 enum RowAxis {
-    /// One row per technology node (the scenario's first network is the
-    /// row's network).
+    /// One row per operating point — technology node, crossed bits-minor
+    /// with the scenario's bit widths when [`Scenario::bits`] was set
+    /// (the scenario's first network is the row's network).
     Nodes,
-    /// One row per network (the scenario's first node, if any, is the
-    /// row's node).
+    /// One row per network (the scenario's first operating point, if
+    /// any, is the row's point).
     Networks,
-    /// Network-major × node-minor cross product (the `sweep` grid).
+    /// Network-major × operating-point-minor cross product (the `sweep`
+    /// grid).
     NetworkNode,
     /// `n` free-form rows addressed by [`RowCtx::index`] (static tables
     /// like Table IV, or per-processor rows like Fig. 7).
@@ -179,8 +184,8 @@ enum RowAxis {
 }
 
 /// Results of the prefetch phase, keyed by (machine index, network
-/// index, node bits) — what [`RowCtx::sim`] serves from.
-type GridResults = std::collections::HashMap<(usize, usize, u64), SimResult>;
+/// index, operating-point key) — what [`RowCtx::sim`] serves from.
+type GridResults = std::collections::HashMap<(usize, usize, OpKey), SimResult>;
 
 /// Everything a column closure may ask about its row. Simulation goes
 /// through [`RowCtx::sim`], which serves the evaluation's prefetched
@@ -193,7 +198,7 @@ pub struct RowCtx<'a> {
     pub index: usize,
     net_idx: Option<usize>,
     network: Option<&'a Network>,
-    node_nm: Option<f64>,
+    op: Option<OperatingPoint>,
     machines: &'a [Box<dyn Machine>],
     cache: &'a SweepCache,
     grid: &'a GridResults,
@@ -205,24 +210,36 @@ impl RowCtx<'_> {
         self.network.expect("scenario has no network for this row")
     }
 
+    /// The row's operating point. Panics if the scenario declared no
+    /// nodes.
+    pub fn op(&self) -> OperatingPoint {
+        self.op.expect("scenario has no operating point for this row")
+    }
+
     /// The row's technology node in nm. Panics if the scenario declared
     /// none.
     pub fn node(&self) -> f64 {
-        self.node_nm.expect("scenario has no node for this row")
+        self.op().node_nm
+    }
+
+    /// The row's bit widths as a `"8x8"`-style label.
+    pub fn bits_label(&self) -> String {
+        self.op().bits_label()
     }
 
     /// Simulation result of machine `mi` (index into the scenario's
-    /// machine list) on the row's (network, node): served from the
-    /// prefetched grid, falling back to the shared cache for any
-    /// combination the prefetch didn't cover (e.g. an `items` axis).
+    /// machine list) on the row's (network, operating point): served
+    /// from the prefetched grid, falling back to the shared cache for
+    /// any combination the prefetch didn't cover (e.g. an `items` axis).
     pub fn sim(&self, mi: usize) -> SimResult {
-        if let (Some(ni), Some(node)) = (self.net_idx, self.node_nm) {
-            if let Some(r) = self.grid.get(&(mi, ni, node.to_bits())) {
+        if let (Some(ni), Some(op)) = (self.net_idx, self.op) {
+            if let Some(r) = self.grid.get(&(mi, ni, op.key())) {
                 return r.clone();
             }
         }
+        let op = self.op();
         self.cache
-            .simulate_network(self.machines[mi].as_ref(), self.net(), self.node())
+            .simulate_network(self.machines[mi].as_ref(), self.net(), &op)
     }
 }
 
@@ -250,6 +267,10 @@ pub struct Scenario {
     machines: Vec<Box<dyn Machine>>,
     networks: Vec<Network>,
     nodes: Vec<f64>,
+    /// `(bits_x, bits_w)` pairs crossed bits-minor with `nodes`. Empty
+    /// means default precision (8×8, noiseless) — the pre-precision
+    /// behaviour every golden test pins.
+    bits: Vec<(u32, u32)>,
     axis: RowAxis,
     columns: Vec<ColumnSpec>,
 }
@@ -261,6 +282,7 @@ impl Scenario {
             machines: Vec::new(),
             networks: Vec::new(),
             nodes: Vec::new(),
+            bits: Vec::new(),
             axis: RowAxis::Items(0),
             columns: Vec::new(),
         }
@@ -297,6 +319,15 @@ impl Scenario {
     pub fn node_ladder(self) -> Self {
         let ladder: Vec<f64> = crate::technode::NODES.iter().map(|n| n.nm).collect();
         self.nodes(&ladder)
+    }
+
+    /// Cross every node with these `(bits_x, bits_w)` pairs, bits-minor:
+    /// each node's rows appear consecutively, one per pair. Leaving this
+    /// unset evaluates at default precision (8×8, noiseless) exactly as
+    /// before the precision axis existed.
+    pub fn bits(mut self, bits: &[(u32, u32)]) -> Self {
+        self.bits.extend_from_slice(bits);
+        self
     }
 
     // ---- row axis --------------------------------------------------------
@@ -368,50 +399,77 @@ impl Scenario {
         &self.title
     }
 
+    /// The scenario's operating points: nodes crossed bits-minor with
+    /// the `bits` pairs, or plain default-precision nodes when no bits
+    /// were set.
+    fn operating_points(&self) -> Vec<OperatingPoint> {
+        if self.bits.is_empty() {
+            self.nodes.iter().map(|&nm| OperatingPoint::node(nm)).collect()
+        } else {
+            let mut out = Vec::with_capacity(self.nodes.len() * self.bits.len());
+            for &nm in &self.nodes {
+                for &(bx, bw) in &self.bits {
+                    out.push(OperatingPoint::node(nm).bits(bx, bw));
+                }
+            }
+            out
+        }
+    }
+
+    /// Operating points per node (≥ 1; the bits-axis multiplier).
+    fn bits_arity(&self) -> usize {
+        self.bits.len().max(1)
+    }
+
     /// Rows this scenario will produce.
     pub fn row_count(&self) -> usize {
         match self.axis {
-            RowAxis::Nodes => self.nodes.len(),
+            RowAxis::Nodes => self.nodes.len() * self.bits_arity(),
             RowAxis::Networks => self.networks.len(),
-            RowAxis::NetworkNode => self.networks.len() * self.nodes.len(),
+            RowAxis::NetworkNode => {
+                self.networks.len() * self.nodes.len() * self.bits_arity()
+            }
             RowAxis::Items(n) => n,
         }
     }
 
-    /// (machine × network × node) simulation grid points behind this
-    /// scenario (0 for purely derived scenarios).
+    /// (machine × network × operating point) simulation grid points
+    /// behind this scenario (0 for purely derived scenarios).
     pub fn grid_points(&self) -> usize {
-        self.machines.len() * self.networks.len().max(1) * self.nodes.len().max(1)
+        self.machines.len()
+            * self.networks.len().max(1)
+            * (self.nodes.len() * self.bits_arity()).max(1)
     }
 
     // ---- evaluation ------------------------------------------------------
 
-    /// One row descriptor per axis position: (index, network index, node).
-    fn row_specs(&self) -> Vec<(usize, Option<usize>, Option<f64>)> {
+    /// One row descriptor per axis position: (index, network index,
+    /// operating point).
+    fn row_specs(&self) -> Vec<(usize, Option<usize>, Option<OperatingPoint>)> {
         let first_net = if self.networks.is_empty() { None } else { Some(0) };
-        let first_node = self.nodes.first().copied();
+        let ops = self.operating_points();
+        let first_op = ops.first().copied();
         match self.axis {
-            RowAxis::Nodes => self
-                .nodes
+            RowAxis::Nodes => ops
                 .iter()
                 .enumerate()
-                .map(|(i, &nm)| (i, first_net, Some(nm)))
+                .map(|(i, &op)| (i, first_net, Some(op)))
                 .collect(),
             RowAxis::Networks => (0..self.networks.len())
-                .map(|i| (i, Some(i), first_node))
+                .map(|i| (i, Some(i), first_op))
                 .collect(),
             RowAxis::NetworkNode => {
-                let mut out = Vec::with_capacity(self.networks.len() * self.nodes.len());
+                let mut out = Vec::with_capacity(self.networks.len() * ops.len());
                 let mut index = 0;
                 for ni in 0..self.networks.len() {
-                    for &nm in &self.nodes {
-                        out.push((index, Some(ni), Some(nm)));
+                    for &op in &ops {
+                        out.push((index, Some(ni), Some(op)));
                         index += 1;
                     }
                 }
                 out
             }
-            RowAxis::Items(n) => (0..n).map(|i| (i, first_net, first_node)).collect(),
+            RowAxis::Items(n) => (0..n).map(|i| (i, first_net, first_op)).collect(),
         }
     }
 
@@ -435,49 +493,49 @@ impl Scenario {
         let mut grid = GridResults::new();
         if !self.machines.is_empty() {
             let mut seen = HashSet::new();
-            let mut points: Vec<(usize, usize, f64)> = Vec::new();
-            for &(_, ni, node) in &specs {
-                if let (Some(ni), Some(node)) = (ni, node) {
-                    if seen.insert((ni, node.to_bits())) {
+            let mut points: Vec<(usize, usize, OperatingPoint)> = Vec::new();
+            for &(_, ni, op) in &specs {
+                if let (Some(ni), Some(op)) = (ni, op) {
+                    if seen.insert((ni, op.key())) {
                         for mi in 0..self.machines.len() {
-                            points.push((mi, ni, node));
+                            points.push((mi, ni, op));
                         }
                     }
                 }
             }
             // Per-layer fan-out: warm the shared cache over the unique
-            // (machine, layer, node) jobs of the whole grid in one pool
-            // pass. Layer results are keyed deterministically in the
-            // cache, so the merges below are bit-identical to a cold
-            // serial evaluation (golden-pinned in scenario_golden.rs) —
-            // only the parallel grain changes.
+            // (machine, layer, operating point) jobs of the whole grid
+            // in one pool pass. Layer results are keyed deterministically
+            // in the cache, so the merges below are bit-identical to a
+            // cold serial evaluation (golden-pinned in
+            // scenario_golden.rs) — only the parallel grain changes.
             let mut layer_seen = HashSet::new();
-            let mut layer_jobs: Vec<(usize, ConvLayer, f64)> = Vec::new();
-            for &(mi, ni, node) in &points {
+            let mut layer_jobs: Vec<(usize, ConvLayer, OperatingPoint)> = Vec::new();
+            for &(mi, ni, op) in &points {
                 for layer in &self.networks[ni].layers {
-                    if layer_seen.insert((mi, *layer, node.to_bits())) {
-                        layer_jobs.push((mi, *layer, node));
+                    if layer_seen.insert((mi, *layer, op.key())) {
+                        layer_jobs.push((mi, *layer, op));
                     }
                 }
             }
-            ctx.pool.par_for_each(&layer_jobs, |&(mi, ref layer, node)| {
-                ctx.cache.simulate_layer(self.machines[mi].as_ref(), layer, node);
+            ctx.pool.par_for_each(&layer_jobs, |&(mi, ref layer, op)| {
+                ctx.cache.simulate_layer(self.machines[mi].as_ref(), layer, &op);
             });
-            let results = ctx.pool.par_map(&points, |&(mi, ni, node)| {
+            let results = ctx.pool.par_map(&points, |&(mi, ni, op)| {
                 ctx.cache
-                    .simulate_network(self.machines[mi].as_ref(), &self.networks[ni], node)
+                    .simulate_network(self.machines[mi].as_ref(), &self.networks[ni], &op)
             });
-            for (&(mi, ni, node), r) in points.iter().zip(results) {
-                grid.insert((mi, ni, node.to_bits()), r);
+            for (&(mi, ni, op), r) in points.iter().zip(results) {
+                grid.insert((mi, ni, op.key()), r);
             }
         }
         let grid = &grid;
-        let rows = ctx.pool.par_map(&specs, |&(index, ni, node)| {
+        let rows = ctx.pool.par_map(&specs, |&(index, ni, op)| {
             let rc = RowCtx {
                 index,
                 net_idx: ni,
                 network: ni.map(|i| &self.networks[i]),
-                node_nm: node,
+                op,
                 machines: &self.machines,
                 cache: ctx.cache,
                 grid,
@@ -565,7 +623,7 @@ mod tests {
     fn sim_columns_match_direct_simulation_bit_for_bit() {
         let net = yolov3(200);
         let cfg = systolic::SystolicConfig::default();
-        let direct = systolic::simulate_network(&cfg, &net, 45.0);
+        let direct = systolic::simulate_network(&cfg, &net, &OperatingPoint::node(45.0));
         let s = Scenario::new("sim")
             .machine(Box::new(cfg))
             .network(net)
@@ -631,6 +689,54 @@ mod tests {
                     other => panic!("{other:?}"),
                 }
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bits_axis_crosses_nodes_bits_minor() {
+        let s = Scenario::new("bits")
+            .machine(Box::new(systolic::SystolicConfig::default()))
+            .network(yolov3(100))
+            .nodes(&[45.0, 7.0])
+            .bits(&[(8, 8), (4, 4)])
+            .over_nodes()
+            .num("node (nm)", 0, |c: &RowCtx| c.node())
+            .text("bits", |c: &RowCtx| c.bits_label())
+            .sci("J/inf", |c: &RowCtx| c.sim(0).ledger.total());
+        assert_eq!(s.row_count(), 4);
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 4);
+        // Bits-minor: 45/8x8, 45/4x4, 7/8x8, 7/4x4.
+        assert_eq!(ds.rows[0][0], Value::Num(45.0));
+        assert_eq!(ds.rows[0][1], Value::text("8x8"));
+        assert_eq!(ds.rows[1][1], Value::text("4x4"));
+        assert_eq!(ds.rows[2][0], Value::Num(7.0));
+        // Lower precision prices below 8×8 at the same node.
+        let (Value::Num(e8), Value::Num(e4)) = (&ds.rows[0][2], &ds.rows[1][2]) else {
+            panic!("numeric cells expected");
+        };
+        assert!(e4 < e8);
+    }
+
+    #[test]
+    fn default_precision_rows_unchanged_without_bits() {
+        // No `.bits(…)` call ⇒ identical row structure and values to the
+        // pre-precision engine (the golden tests pin full outputs; this
+        // pins the engine-level equivalence directly).
+        let net = yolov3(100);
+        let cfg = systolic::SystolicConfig::default();
+        let direct = systolic::simulate_network(&cfg, &net, &OperatingPoint::node(45.0));
+        let s = Scenario::new("plain")
+            .machine(Box::new(cfg))
+            .network(net)
+            .nodes(&[45.0])
+            .over_nodes()
+            .sci("J/inf", |c: &RowCtx| c.sim(0).ledger.total());
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 1);
+        match &ds.rows[0][0] {
+            Value::Num(v) => assert_eq!(v.to_bits(), direct.ledger.total().to_bits()),
             other => panic!("{other:?}"),
         }
     }

@@ -1,0 +1,258 @@
+//! Effective-SNR / accuracy estimator for an [`OperatingPoint`].
+//!
+//! Energy and latency fall monotonically with bit width, so an
+//! energy-only sweep always "prefers" the lowest precision — the missing
+//! third axis is *how much signal survives*. This module estimates it
+//! with a small seeded Monte-Carlo experiment per layer shape: random
+//! Gaussian activations and weights are pushed through a quantize +
+//! perturb + dot-product pipeline at the operating point's bit widths
+//! and [`super::op::NoiseModel`] sigmas, and the resulting output error
+//! power yields an effective SNR (dB), an effective number of bits
+//! (ENOB) and a logistic accuracy-retention proxy in `[0, 1]`.
+//!
+//! Everything is **deterministic**: the RNG seed is derived (FNV-1a)
+//! from the layer shape and the operating-point key, so the same
+//! (layer, op) pair produces bit-identical estimates on every call,
+//! thread and platform — the Pareto scenario goldens depend on it.
+//! No wall-clock, no global RNG, no platform intrinsics.
+//!
+//! This is a *proxy*, not a task benchmark: it ranks operating points by
+//! signal integrity (quantization + analog noise) without claiming a
+//! specific ImageNet top-1. The logistic retention curve maps SNR to a
+//! [0, 1] score with its knee near 10 dB, consistent with the precision
+//! cliffs reported for analog in-memory inference.
+
+use super::machine::fnv1a;
+use super::op::OperatingPoint;
+use crate::networks::{ConvLayer, Network};
+use crate::util::rng::Rng;
+
+/// Monte-Carlo trials per (layer, op) estimate. 256 keeps the estimator
+/// sub-millisecond per unique shape while the seeded RNG makes the
+/// variance irrelevant for ranking (the estimate is deterministic).
+const TRIALS: usize = 256;
+
+/// Dot-product fan-in is capped so huge layers don't make the estimate
+/// arbitrarily slow; SNR per element is what matters, and it has
+/// converged long before 512 terms.
+const FAN_IN_CAP: usize = 512;
+
+/// Signal-integrity estimate for one (layer, operating point) pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccuracyEstimate {
+    /// Effective output signal-to-noise ratio, dB.
+    pub snr_db: f64,
+    /// Effective number of bits: (SNR_dB − 1.76) / 6.02.
+    pub effective_bits: f64,
+    /// Logistic accuracy-retention proxy in `[0, 1]` (≈1 when noise and
+    /// quantization are negligible, rolling off below ~10 dB SNR).
+    pub retention: f64,
+}
+
+/// Deterministic seed for one (layer, op) experiment.
+fn seed_for(layer: &ConvLayer, op: &OperatingPoint) -> u64 {
+    let k = op.key();
+    let s = format!(
+        "accuracy {} {} {} {} {} {} | {:016x} {} {} {:016x} {:016x}",
+        layer.n,
+        layer.c_in,
+        layer.c_out,
+        layer.kh,
+        layer.kw,
+        layer.stride,
+        k.node_bits,
+        k.bits_x,
+        k.bits_w,
+        k.wsig_bits,
+        k.osig_bits,
+    );
+    fnv1a(s.as_bytes())
+}
+
+/// Mid-rise uniform quantizer over a ±4σ clipping range (standard-normal
+/// inputs): step = 8 / 2ᵇ. Clipping noise is negligible at 4σ and the
+/// quantization error power follows the classic step²/12 law, which is
+/// what makes `effective_bits` track `bits` closely in the noiseless
+/// case (the in-module test pins this).
+fn quantize(x: f64, bits: u32) -> f64 {
+    let step = 8.0 / (1u64 << bits.min(52)) as f64;
+    (x.clamp(-4.0, 4.0) / step).round() * step
+}
+
+/// Estimate signal integrity for one layer at `op`.
+pub fn estimate_layer(layer: &ConvLayer, op: &OperatingPoint) -> AccuracyEstimate {
+    let fan_in = (layer.kh * layer.kw * layer.c_in).clamp(1, FAN_IN_CAP);
+    let mut rng = Rng::new(seed_for(layer, op));
+    let mut sig_power = 0.0;
+    let mut err_power = 0.0;
+    for _ in 0..TRIALS {
+        let mut exact = 0.0;
+        let mut noisy = 0.0;
+        for _ in 0..fan_in {
+            let x = rng.normal();
+            let w = rng.normal();
+            // Device-level perturbations: quantize both operands, then
+            // add per-device conductance error to the stored weight.
+            let qx = quantize(x, op.bits_x);
+            let qw = quantize(w, op.bits_w) + op.noise.weight_sigma * rng.normal();
+            exact += x * w;
+            noisy += qx * qw;
+        }
+        // Output-referred analog noise (ADC / shot / thermal) scales
+        // with the accumulation length like an RSS of per-term noise.
+        noisy += op.noise.output_sigma * (fan_in as f64).sqrt() * rng.normal();
+        sig_power += exact * exact;
+        err_power += (noisy - exact) * (noisy - exact);
+    }
+    snr_to_estimate(if err_power == 0.0 {
+        // Perfectly clean channel (unreachable with finite bits, but the
+        // guard keeps the math total): report the 160 dB ceiling.
+        1e16
+    } else {
+        sig_power / err_power
+    })
+}
+
+fn snr_to_estimate(snr_linear: f64) -> AccuracyEstimate {
+    let snr_db = (10.0 * snr_linear.log10()).min(160.0);
+    AccuracyEstimate {
+        snr_db,
+        effective_bits: (snr_db - 1.76) / 6.02,
+        retention: 1.0 / (1.0 + (-(snr_db - 10.0) / 4.0).exp()),
+    }
+}
+
+/// Network-level estimate: per-unique-shape estimates combined as a
+/// MAC-weighted harmonic mean of the *linear* SNR — the layers with the
+/// most accumulated work and the worst channels dominate, mirroring how
+/// a single noisy bottleneck layer drags end-to-end accuracy.
+pub fn estimate_network(net: &Network, op: &OperatingPoint) -> AccuracyEstimate {
+    let mut memo: Vec<(ConvLayer, f64)> = Vec::new();
+    let mut weight_sum = 0.0;
+    let mut inv_sum = 0.0;
+    for layer in &net.layers {
+        let snr_linear = match memo.iter().find(|(l, _)| l == layer) {
+            Some(&(_, s)) => s,
+            None => {
+                let e = estimate_layer(layer, op);
+                let s = 10f64.powf(e.snr_db / 10.0);
+                memo.push((*layer, s));
+                s
+            }
+        };
+        let w = layer.macs();
+        weight_sum += w;
+        inv_sum += w / snr_linear;
+    }
+    if weight_sum == 0.0 || inv_sum == 0.0 {
+        return snr_to_estimate(1e16);
+    }
+    snr_to_estimate(weight_sum / inv_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::yolov3::yolov3;
+    use crate::simulator::NoiseModel;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::square(64, 128, 128, 3, 1)
+    }
+
+    #[test]
+    fn deterministic_across_calls_and_threads() {
+        let l = layer();
+        let op = OperatingPoint::node(45.0).bits(6, 6).with_noise(NoiseModel {
+            weight_sigma: 0.01,
+            output_sigma: 0.02,
+        });
+        let here = estimate_layer(&l, &op);
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || estimate_layer(&l, &op)))
+            .collect();
+        for h in handles {
+            let other = h.join().unwrap();
+            assert_eq!(here.snr_db.to_bits(), other.snr_db.to_bits());
+            assert_eq!(here.retention.to_bits(), other.retention.to_bits());
+        }
+        // And bit-identical on a plain repeat.
+        let again = estimate_layer(&l, &op);
+        assert_eq!(here.snr_db.to_bits(), again.snr_db.to_bits());
+    }
+
+    #[test]
+    fn effective_bits_track_quantizer_bits_when_noiseless() {
+        let l = layer();
+        for bits in [4u32, 6, 8, 10] {
+            let e = estimate_layer(&l, &OperatingPoint::node(45.0).bits(bits, bits));
+            // Two quantized operands per product: ENOB lands near the
+            // operand width (within ~2 bits), and always below it.
+            assert!(
+                e.effective_bits > bits as f64 - 2.5 && e.effective_bits < bits as f64 + 0.5,
+                "bits={bits} enob={}",
+                e.effective_bits
+            );
+        }
+    }
+
+    #[test]
+    fn snr_is_monotone_in_bits_and_noise() {
+        let l = layer();
+        let e4 = estimate_layer(&l, &OperatingPoint::node(45.0).bits(4, 4));
+        let e8 = estimate_layer(&l, &OperatingPoint::node(45.0));
+        let e12 = estimate_layer(&l, &OperatingPoint::node(45.0).bits(12, 12));
+        assert!(e4.snr_db < e8.snr_db && e8.snr_db < e12.snr_db);
+        assert!(e4.retention <= e8.retention && e8.retention <= e12.retention);
+
+        let noisy = estimate_layer(
+            &l,
+            &OperatingPoint::node(45.0).with_noise(NoiseModel {
+                weight_sigma: 0.1,
+                output_sigma: 0.1,
+            }),
+        );
+        assert!(noisy.snr_db < e8.snr_db);
+        assert!(noisy.retention < e8.retention);
+    }
+
+    #[test]
+    fn node_does_not_change_the_estimate() {
+        // Signal integrity is a precision/noise property; the technology
+        // node only scales energy.
+        let l = layer();
+        let a = estimate_layer(&l, &OperatingPoint::node(45.0).bits(6, 6));
+        let b = estimate_layer(&l, &OperatingPoint::node(7.0).bits(6, 6));
+        // Different node ⇒ different seed, so estimates differ slightly —
+        // but by sampling noise only, not systematically.
+        assert!((a.snr_db - b.snr_db).abs() < 3.0, "{} vs {}", a.snr_db, b.snr_db);
+    }
+
+    #[test]
+    fn network_estimate_is_work_weighted_and_deterministic() {
+        let net = yolov3(200);
+        let op = OperatingPoint::node(45.0).bits(6, 6);
+        let a = estimate_network(&net, &op);
+        let b = estimate_network(&net, &op);
+        assert_eq!(a.snr_db.to_bits(), b.snr_db.to_bits());
+        // Harmonic mean sits at or below the best layer's SNR and keeps
+        // ordering in bits.
+        let lo = estimate_network(&net, &OperatingPoint::node(45.0).bits(4, 4));
+        assert!(lo.snr_db < a.snr_db);
+        assert!(a.retention > 0.9, "8-ish bit channel retains accuracy");
+    }
+
+    #[test]
+    fn heavy_noise_floors_retention() {
+        let l = layer();
+        let e = estimate_layer(
+            &l,
+            &OperatingPoint::node(45.0).bits(2, 2).with_noise(NoiseModel {
+                weight_sigma: 0.5,
+                output_sigma: 0.5,
+            }),
+        );
+        assert!(e.retention < 0.5, "retention {}", e.retention);
+        assert!(e.snr_db < 10.0);
+    }
+}

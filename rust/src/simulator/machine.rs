@@ -7,14 +7,20 @@
 //! `simulate_layer` / `simulate_network` functions — the physics stays
 //! where it is documented; this module only provides the common shape
 //! plus a stable config [fingerprint](Machine::fingerprint) for the
-//! [`crate::simulator::SweepCache`] memo key.
+//! [`crate::simulator::SweepCache`] memo key. Fingerprints hash each
+//! config **field by field** (see [`Fp`]) rather than through `Debug`
+//! output, so renaming a field or changing derive formatting can never
+//! silently re-key (or worse, alias) persisted cache entries. The
+//! [`OperatingPoint`] is *not* part of the fingerprint — it joins the
+//! cache key separately as an [`super::op::OpKey`].
 
+use super::op::OperatingPoint;
 use super::{optical4f, photonic, reram, systolic, Component, SimResult};
 use crate::analytic::{Processor, Workload};
 use crate::networks::{ConvLayer, Network};
 
 /// A simulated inference machine: anything that can price one conv layer
-/// (and, by summation, a network) at a technology node.
+/// (and, by summation, a network) at an operating point.
 ///
 /// `Send + Sync` is part of the contract so trait objects can be shared
 /// across the [`crate::util::pool`] workers of a parallel sweep.
@@ -29,25 +35,25 @@ pub trait Machine: Send + Sync {
     /// across configs.
     fn fingerprint(&self) -> u64;
 
-    /// Price one conv layer at `node_nm`.
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult;
+    /// Price one conv layer at `op`.
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult;
 
-    /// Price a whole network at `node_nm`. The default merges per-layer
+    /// Price a whole network at `op`. The default merges per-layer
     /// results in layer order — implementations may override with a
     /// coefficient-hoisted fast path, but must produce bit-identical
     /// sums (the memoization tests rely on it).
-    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
+    fn simulate_network(&self, net: &Network, op: &OperatingPoint) -> SimResult {
         let mut total = SimResult::default();
         for layer in &net.layers {
-            total += &self.simulate_layer(layer, node_nm);
+            total += &self.simulate_layer(layer, op);
         }
         total
     }
 }
 
 /// FNV-1a over a byte string — tiny, dependency-free, stable across
-/// runs (the memo key only ever lives for one process, but stability
-/// makes bench logs comparable).
+/// runs (persistent cache snapshots key on it, so stability is part of
+/// the on-disk contract).
 pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
@@ -57,11 +63,63 @@ pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Fingerprint a config through its (stable, field-complete) Debug
-/// rendering, domain-tagged so two machines with coincidentally equal
-/// field lists still differ.
-fn config_fingerprint(tag: &str, debug: &str) -> u64 {
-    fnv1a(format!("{tag}:{debug}").as_bytes())
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Field-explicit fingerprint builder: a running FNV-1a hash seeded by a
+/// domain tag, extended one *named order of fields* at a time. Unlike
+/// hashing `format!("{self:?}")`, the digest depends only on the field
+/// values an impl feeds in — not on struct/field names, derive
+/// formatting, or field display order changes — so a fingerprint changes
+/// exactly when an impl's field list or a field value changes.
+///
+/// Every field is mixed as a fixed 8-byte little-endian word behind a
+/// separator byte, so adjacent fields can never alias across boundaries.
+pub(crate) struct Fp(u64);
+
+impl Fp {
+    pub(crate) fn new(tag: &str) -> Fp {
+        Fp(fnv1a(tag.as_bytes()))
+    }
+
+    fn mix(mut self, bytes: &[u8]) -> Fp {
+        // Separator: keeps (a, bc) distinct from (ab, c).
+        self.0 ^= 0x1f;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub(crate) fn u64(self, v: u64) -> Fp {
+        self.mix(&v.to_le_bytes())
+    }
+
+    pub(crate) fn usize(self, v: usize) -> Fp {
+        self.u64(v as u64)
+    }
+
+    pub(crate) fn u32(self, v: u32) -> Fp {
+        self.u64(v as u64)
+    }
+
+    pub(crate) fn bool(self, v: bool) -> Fp {
+        self.u64(v as u64)
+    }
+
+    /// Floats hash by IEEE-754 bit pattern — exact, no tolerance.
+    pub(crate) fn f64(self, v: f64) -> Fp {
+        self.u64(v.to_bits())
+    }
+
+    pub(crate) fn str(self, s: &str) -> Fp {
+        self.mix(s.as_bytes())
+    }
+
+    pub(crate) fn finish(self) -> u64 {
+        self.0
+    }
 }
 
 impl Machine for systolic::SystolicConfig {
@@ -70,15 +128,24 @@ impl Machine for systolic::SystolicConfig {
     }
 
     fn fingerprint(&self) -> u64 {
-        config_fingerprint("systolic", &format!("{self:?}"))
+        Fp::new("systolic")
+            .usize(self.dim)
+            .usize(self.sram_bytes)
+            .usize(self.banks)
+            .u32(self.hop_bits)
+            .f64(self.reg_bytes_per_mac)
+            .f64(self.e_dram_per_byte)
+            .f64(self.act_bytes)
+            .f64(self.psum_bytes)
+            .finish()
     }
 
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
-        systolic::simulate_layer(self, layer, node_nm)
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+        systolic::simulate_layer(self, layer, op)
     }
 
-    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
-        systolic::simulate_network(self, net, node_nm)
+    fn simulate_network(&self, net: &Network, op: &OperatingPoint) -> SimResult {
+        systolic::simulate_network(self, net, op)
     }
 }
 
@@ -88,15 +155,22 @@ impl Machine for optical4f::Optical4FConfig {
     }
 
     fn fingerprint(&self) -> u64 {
-        config_fingerprint("optical4f", &format!("{self:?}"))
+        Fp::new("optical4f")
+            .usize(self.slm_pixels)
+            .usize(self.sram_bytes)
+            .usize(self.banks)
+            .f64(self.act_bytes)
+            .f64(self.psum_bytes)
+            .bool(self.laser_full_aperture)
+            .finish()
     }
 
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
-        optical4f::simulate_layer(self, layer, node_nm)
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+        optical4f::simulate_layer(self, layer, op)
     }
 
-    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
-        optical4f::simulate_network(self, net, node_nm)
+    fn simulate_network(&self, net: &Network, op: &OperatingPoint) -> SimResult {
+        optical4f::simulate_network(self, net, op)
     }
 }
 
@@ -106,15 +180,25 @@ impl Machine for reram::ReramConfig {
     }
 
     fn fingerprint(&self) -> u64 {
-        config_fingerprint("reram", &format!("{self:?}"))
+        Fp::new("reram")
+            .usize(self.dim)
+            .usize(self.sram_bytes)
+            .usize(self.banks)
+            .u32(self.array.bits)
+            .f64(self.array.v_rms)
+            .f64(self.array.dt)
+            .f64(self.reuse)
+            .f64(self.e_program)
+            .f64(self.signed_factor)
+            .finish()
     }
 
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
-        reram::simulate_layer(self, layer, node_nm)
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+        reram::simulate_layer(self, layer, op)
     }
 
-    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
-        reram::simulate_network(self, net, node_nm)
+    fn simulate_network(&self, net: &Network, op: &OperatingPoint) -> SimResult {
+        reram::simulate_network(self, net, op)
     }
 }
 
@@ -124,15 +208,22 @@ impl Machine for photonic::PhotonicConfig {
     }
 
     fn fingerprint(&self) -> u64 {
-        config_fingerprint("photonic", &format!("{self:?}"))
+        Fp::new("photonic")
+            .usize(self.dim)
+            .usize(self.sram_bytes)
+            .usize(self.banks)
+            .f64(self.e_modulator)
+            .f64(self.dacs_per_weight)
+            .f64(self.signed_factor)
+            .finish()
     }
 
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
-        photonic::simulate_layer(self, layer, node_nm)
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+        photonic::simulate_layer(self, layer, op)
     }
 
-    fn simulate_network(&self, net: &Network, node_nm: f64) -> SimResult {
-        photonic::simulate_network(self, net, node_nm)
+    fn simulate_network(&self, net: &Network, op: &OperatingPoint) -> SimResult {
+        photonic::simulate_network(self, net, op)
     }
 }
 
@@ -140,6 +231,10 @@ impl Machine for photonic::PhotonicConfig {
 /// each layer is priced by its own eq. (8)/(9) workload, with the
 /// memory/compute split mapped onto the ledger (SRAM/MAC buckets) so
 /// analytic and cycle-accurate results render through the same tables.
+///
+/// The closed forms are calibrated at the paper's fixed 8-bit operand
+/// width, so only `op.node_nm` is consumed here; precision sweeps are a
+/// cycle-simulator feature.
 #[derive(Clone, Copy, Debug)]
 pub struct AnalyticMachine(pub Processor);
 
@@ -149,12 +244,12 @@ impl Machine for AnalyticMachine {
     }
 
     fn fingerprint(&self) -> u64 {
-        config_fingerprint("analytic", &format!("{self:?}"))
+        Fp::new("analytic").str(self.0.short()).finish()
     }
 
-    fn simulate_layer(&self, layer: &ConvLayer, node_nm: f64) -> SimResult {
+    fn simulate_layer(&self, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
         let w = Workload::from_layer(*layer);
-        let e = self.0.efficiency(&w, node_nm);
+        let e = self.0.efficiency(&w, op.node_nm);
         let ops = layer.ops();
         let mut r = SimResult::default();
         r.macs = layer.macs();
@@ -203,12 +298,16 @@ mod tests {
     use super::*;
     use crate::networks::yolov3::yolov3;
 
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
+
     #[test]
     fn trait_network_matches_free_function() {
         let net = yolov3(1000);
         let cfg = systolic::SystolicConfig::default();
-        let direct = systolic::simulate_network(&cfg, &net, 32.0);
-        let via_trait = (&cfg as &dyn Machine).simulate_network(&net, 32.0);
+        let direct = systolic::simulate_network(&cfg, &net, &op(32.0));
+        let via_trait = (&cfg as &dyn Machine).simulate_network(&net, &op(32.0));
         assert_eq!(direct.macs, via_trait.macs);
         assert_eq!(direct.ledger.total(), via_trait.ledger.total());
         assert_eq!(direct.time_units, via_trait.time_units);
@@ -226,14 +325,14 @@ mod tests {
             fn fingerprint(&self) -> u64 {
                 0
             }
-            fn simulate_layer(&self, l: &ConvLayer, n: f64) -> SimResult {
-                systolic::simulate_layer(&self.0, l, n)
+            fn simulate_layer(&self, l: &ConvLayer, o: &OperatingPoint) -> SimResult {
+                systolic::simulate_layer(&self.0, l, o)
             }
         }
         let net = yolov3(1000);
         let cfg = systolic::SystolicConfig::default();
-        let a = (&cfg as &dyn Machine).simulate_network(&net, 45.0);
-        let b = PerLayer(cfg).simulate_network(&net, 45.0);
+        let a = (&cfg as &dyn Machine).simulate_network(&net, &op(45.0));
+        let b = PerLayer(cfg).simulate_network(&net, &op(45.0));
         assert_eq!(a.macs, b.macs);
         assert_eq!(a.ops, b.ops);
         assert_eq!(a.time_units, b.time_units);
@@ -271,6 +370,69 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_covers_every_field() {
+        // Field-explicit hashing must react to EVERY knob, including the
+        // ones a Debug-derived hash could silently drop in a refactor.
+        let base = Machine::fingerprint(&systolic::SystolicConfig::default());
+        let variants = [
+            systolic::SystolicConfig {
+                sram_bytes: 1,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                banks: 7,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                hop_bits: 41,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                reg_bytes_per_mac: 6.0,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                e_dram_per_byte: 1e-12,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                act_bytes: 2.0,
+                ..Default::default()
+            },
+            systolic::SystolicConfig {
+                psum_bytes: 8.0,
+                ..Default::default()
+            },
+        ];
+        let mut fps: Vec<u64> = variants.iter().map(Machine::fingerprint).collect();
+        fps.push(base);
+        let n = fps.len();
+        fps.sort();
+        fps.dedup();
+        assert_eq!(fps.len(), n, "every field change must re-fingerprint");
+
+        let r = reram::ReramConfig::default();
+        let r2 = reram::ReramConfig {
+            array: crate::energy::reram::ReramArray {
+                v_rms: 0.08,
+                ..r.array
+            },
+            ..r
+        };
+        assert_ne!(Machine::fingerprint(&r), Machine::fingerprint(&r2));
+    }
+
+    #[test]
+    fn field_boundaries_do_not_alias() {
+        // (a, bc) vs (ab, c)-style shifts must hash differently.
+        let a = Fp::new("t").u64(1).u64(0).finish();
+        let b = Fp::new("t").u64(0).u64(1).finish();
+        assert_ne!(a, b);
+        assert_ne!(Fp::new("t").str("ab").str("c").finish(), Fp::new("t").str("a").str("bc").finish());
+        assert_ne!(Fp::new("x").finish(), Fp::new("y").finish());
+    }
+
+    #[test]
     fn by_name_aliases() {
         for (alias, want) in [
             ("systolic", "systolic"),
@@ -288,7 +450,7 @@ mod tests {
     fn analytic_machine_matches_processor_efficiency() {
         let layer = ConvLayer::square(512, 128, 128, 3, 1);
         let m = AnalyticMachine(Processor::Optical4F);
-        let r = m.simulate_layer(&layer, 32.0);
+        let r = m.simulate_layer(&layer, &op(32.0));
         let w = Workload::from_layer(layer);
         let want = Processor::Optical4F.efficiency(&w, 32.0).tops_per_watt();
         assert!((r.tops_per_watt() - want).abs() / want < 1e-12);

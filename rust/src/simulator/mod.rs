@@ -18,14 +18,23 @@
 //! Every joule is attributed to a [`ledger::Component`] so Fig. 10's
 //! energy-distribution stacks fall out directly.
 //!
+//! Every simulation entry point takes an [`OperatingPoint`] — node,
+//! activation/weight bit widths, and a device [`NoiseModel`] — with
+//! `OperatingPoint::default()` reproducing the legacy fixed 45 nm / 8×8
+//! configuration bit-exactly. The [`accuracy`] module estimates the
+//! effective SNR / task-accuracy retention of a point, so the `aimc
+//! pareto` scenario can trace the energy × latency × accuracy frontier.
+//!
 //! Sweep drivers do not call the machines directly: the [`machine`]
 //! module unifies all four (plus the analytic models) behind the
 //! [`Machine`] trait, and [`sweep`] adds layer-dedup memoization
-//! ([`SweepCache`]) plus the parallel (machine × network × node) grid
-//! runner built on [`crate::util::pool`].
+//! ([`SweepCache`]) plus the parallel (machine × network ×
+//! operating-point) grid runner built on [`crate::util::pool`].
 
+pub mod accuracy;
 pub mod ledger;
 pub mod machine;
+pub mod op;
 pub mod optical4f;
 pub mod photonic;
 pub mod reram;
@@ -34,6 +43,7 @@ pub mod systolic;
 
 pub use ledger::{Component, EnergyLedger};
 pub use machine::{all_machines, AnalyticMachine, Machine};
+pub use op::{NoiseModel, OpKey, OperatingPoint};
 pub use sweep::{SweepCache, SweepRecord};
 
 /// Result of simulating one network on one machine at one node.

@@ -1,0 +1,222 @@
+//! The operating point: technology node, bit precision and device noise
+//! as one value threaded through every simulation entry point.
+//!
+//! The paper's efficiency claims scale with "the size, arithmetic
+//! intensity, and bit precision of the computation", so precision cannot
+//! stay a frozen constant inside `energy/constants.rs`. An
+//! [`OperatingPoint`] carries everything a simulator needs beyond the
+//! layer shape: the CMOS node, separate activation and weight bit
+//! widths, and a [`NoiseModel`] for the per-device non-idealities the
+//! accuracy estimator ([`crate::simulator::accuracy`]) consumes.
+//!
+//! **Compatibility contract:** `OperatingPoint::default()` is 45 nm,
+//! 8×8-bit, noiseless — and every simulator is written so that results
+//! at the default precision are **bit-identical** to the pre-refactor
+//! fixed-precision code paths (the golden tests in
+//! `tests/scenario_golden.rs` pin this). The precision scale factors
+//! [`OperatingPoint::sx`]/[`OperatingPoint::sw`] are exactly 1.0 at
+//! 8 bits, and multiplying by 1.0 is an IEEE-754 identity for finite
+//! values.
+
+/// Per-device noise description for the accuracy estimator. Sigmas are
+/// relative to unit-variance signals (i.e. a `weight_sigma` of 0.05
+/// means 5% rms conductance/phase error per stored weight).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct NoiseModel {
+    /// RMS error on each stored weight (programming / drift variation).
+    pub weight_sigma: f64,
+    /// RMS error added per dot-product readout (ADC / shot noise),
+    /// in units of one input element's contribution.
+    pub output_sigma: f64,
+}
+
+impl NoiseModel {
+    pub fn is_noiseless(&self) -> bool {
+        self.weight_sigma == 0.0 && self.output_sigma == 0.0
+    }
+}
+
+/// One point in the (node × precision × noise) design space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Technology node, nm.
+    pub node_nm: f64,
+    /// Activation (input / output sample) bit width.
+    pub bits_x: u32,
+    /// Weight bit width.
+    pub bits_w: u32,
+    /// Per-device noise model (only the accuracy estimator reads it;
+    /// the energy models are deterministic).
+    pub noise: NoiseModel,
+}
+
+impl Default for OperatingPoint {
+    /// The pre-refactor fixed configuration: 45 nm, 8-bit activations
+    /// and weights, no noise.
+    fn default() -> Self {
+        OperatingPoint {
+            node_nm: 45.0,
+            bits_x: 8,
+            bits_w: 8,
+            noise: NoiseModel::default(),
+        }
+    }
+}
+
+impl OperatingPoint {
+    /// Default precision at an explicit node — the direct replacement
+    /// for every old `(…, node_nm: f64)` call site.
+    pub fn node(node_nm: f64) -> Self {
+        OperatingPoint {
+            node_nm,
+            ..Default::default()
+        }
+    }
+
+    /// Builder: set both bit widths.
+    pub fn bits(self, bits_x: u32, bits_w: u32) -> Self {
+        OperatingPoint {
+            bits_x,
+            bits_w,
+            ..self
+        }
+    }
+
+    /// Builder: set the noise model.
+    pub fn with_noise(self, noise: NoiseModel) -> Self {
+        OperatingPoint { noise, ..self }
+    }
+
+    /// Activation storage scale vs the 8-bit calibration (bytes per
+    /// element multiplier). Exactly 1.0 at 8 bits.
+    pub fn sx(&self) -> f64 {
+        self.bits_x as f64 / 8.0
+    }
+
+    /// Weight storage scale vs the 8-bit calibration.
+    pub fn sw(&self) -> f64 {
+        self.bits_w as f64 / 8.0
+    }
+
+    /// Does this point reproduce the pre-refactor fixed precision?
+    pub fn is_default_precision(&self) -> bool {
+        self.bits_x == 8 && self.bits_w == 8 && self.noise.is_noiseless()
+    }
+
+    /// Short "BXxBW" label for tables and CLI output ("8x8", "6x4").
+    pub fn bits_label(&self) -> String {
+        format!("{}x{}", self.bits_x, self.bits_w)
+    }
+
+    /// Exact-bits cache key (same convention as `f64::to_bits` node
+    /// keys everywhere else in the cache layer — no tolerance games).
+    pub fn key(&self) -> OpKey {
+        OpKey {
+            node_bits: self.node_nm.to_bits(),
+            bits_x: self.bits_x,
+            bits_w: self.bits_w,
+            wsig_bits: self.noise.weight_sigma.to_bits(),
+            osig_bits: self.noise.output_sigma.to_bits(),
+        }
+    }
+}
+
+/// Hashable/orderable identity of an [`OperatingPoint`]: IEEE-754 bit
+/// patterns for the floats, so distinct points never alias and equal
+/// points always collide. Used by [`crate::simulator::SweepCache`] memo
+/// keys, the persistent snapshot format, and the surrogate table key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpKey {
+    pub node_bits: u64,
+    pub bits_x: u32,
+    pub bits_w: u32,
+    pub wsig_bits: u64,
+    pub osig_bits: u64,
+}
+
+impl OpKey {
+    /// Reconstruct the operating point this key identifies.
+    pub fn to_op(self) -> OperatingPoint {
+        OperatingPoint {
+            node_nm: f64::from_bits(self.node_bits),
+            bits_x: self.bits_x,
+            bits_w: self.bits_w,
+            noise: NoiseModel {
+                weight_sigma: f64::from_bits(self.wsig_bits),
+                output_sigma: f64::from_bits(self.osig_bits),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_legacy_fixed_point() {
+        let op = OperatingPoint::default();
+        assert_eq!(op.node_nm, 45.0);
+        assert_eq!((op.bits_x, op.bits_w), (8, 8));
+        assert!(op.noise.is_noiseless());
+        assert!(op.is_default_precision());
+        // The storage multipliers are *exactly* 1.0 — the bit-identity
+        // contract of the whole refactor rests on this.
+        assert_eq!(op.sx().to_bits(), 1.0f64.to_bits());
+        assert_eq!(op.sw().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn node_constructor_keeps_default_precision() {
+        let op = OperatingPoint::node(7.0);
+        assert_eq!(op.node_nm, 7.0);
+        assert!(op.is_default_precision());
+        assert_eq!(op, OperatingPoint::node(7.0));
+    }
+
+    #[test]
+    fn builders_compose() {
+        let op = OperatingPoint::node(28.0).bits(6, 4).with_noise(NoiseModel {
+            weight_sigma: 0.05,
+            output_sigma: 0.01,
+        });
+        assert_eq!(op.bits_label(), "6x4");
+        assert!(!op.is_default_precision());
+        assert!((op.sx() - 0.75).abs() < 1e-15);
+        assert!((op.sw() - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn key_round_trips_and_distinguishes() {
+        let a = OperatingPoint::node(45.0).bits(8, 8);
+        let b = OperatingPoint::node(45.0).bits(8, 4);
+        let c = OperatingPoint::node(7.0).bits(8, 8);
+        let d = a.with_noise(NoiseModel {
+            weight_sigma: 0.1,
+            output_sigma: 0.0,
+        });
+        assert_ne!(a.key(), b.key());
+        assert_ne!(a.key(), c.key());
+        assert_ne!(a.key(), d.key());
+        assert_eq!(a.key(), OperatingPoint::default().key());
+        for op in [a, b, c, d] {
+            assert_eq!(op.key().to_op(), op);
+        }
+    }
+
+    #[test]
+    fn keys_are_ordered_deterministically() {
+        let mut keys = vec![
+            OperatingPoint::node(7.0).key(),
+            OperatingPoint::node(45.0).bits(4, 4).key(),
+            OperatingPoint::node(45.0).key(),
+        ];
+        keys.sort();
+        let again = {
+            let mut k = keys.clone();
+            k.sort();
+            k
+        };
+        assert_eq!(keys, again);
+    }
+}

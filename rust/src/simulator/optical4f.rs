@@ -21,6 +21,13 @@
 //! per shot proportional to the full metasurface size rather than folded
 //! into e_dac.
 
+//!
+//! All entry points take an [`OperatingPoint`]: activation SLM writes /
+//! CIS reads / the laser shot-noise budget follow `bits_x`, kernel SLM
+//! writes follow `bits_w`, and the default 8×8 point reproduces the
+//! fixed-precision model bit-exactly.
+
+use super::op::OperatingPoint;
 use super::{Component, EnergyLedger, SimResult};
 use crate::energy::{
     constants::{SLM_PIXELS, TOTAL_SRAM_BYTES},
@@ -88,30 +95,41 @@ impl Optical4FConfig {
 }
 
 struct Coeffs {
+    /// Activation-pixel SLM write (bits_x DAC + line load).
     e_dac_px: f64,
+    /// Kernel-pixel SLM write (bits_w DAC + line load).
+    e_dac_kern_px: f64,
     e_adc: f64,
     e_opt_px: f64,
     e_sram_byte: f64,
+    /// Bytes per stored activation at this precision.
+    act_bytes: f64,
+    /// Bytes per stored kernel element at this precision.
+    wgt_bytes: f64,
 }
 
 impl Coeffs {
-    fn new(cfg: &Optical4FConfig, node_nm: f64) -> Self {
-        let e = EnergyParams::default().at_node(node_nm);
+    fn new(cfg: &Optical4FConfig, op: &OperatingPoint) -> Self {
+        let e = EnergyParams::default().at_op(op);
+        // Pixel-wise DAC: converter circuit + segmented active-matrix
+        // line load (node-independent wire term).
+        let slm_line = presets::slm_2048().energy();
         Coeffs {
-            // Pixel-wise DAC: converter circuit + segmented active-matrix
-            // line load (node-independent wire term).
-            e_dac_px: e.e_dac + presets::slm_2048().energy(),
+            e_dac_px: e.e_dac_x + slm_line,
+            e_dac_kern_px: e.e_dac_w + slm_line,
             e_adc: e.e_adc,
             e_opt_px: e.e_opt,
-            e_sram_byte: Sram::at_node(cfg.bank_bytes(), node_nm).energy_per_byte,
+            e_sram_byte: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte,
+            act_bytes: cfg.act_bytes * op.sx(),
+            wgt_bytes: cfg.act_bytes * op.sw(),
         }
     }
 }
 
 /// Simulate one conv layer (stride supported; the FFT is computed on the
 /// full input, only the CIS readout is stride-decimated).
-pub fn simulate_layer(cfg: &Optical4FConfig, layer: &ConvLayer, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_layer(cfg: &Optical4FConfig, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     simulate_layer_with(cfg, layer, &c)
 }
 
@@ -158,7 +176,7 @@ fn simulate_layer_with(
 
             // ---- Load phase (eq. 18) ----
             // Activations out of SRAM to drive the object SLM.
-            ledger.add(Component::Sram, act_px * cfg.act_bytes * c.e_sram_byte);
+            ledger.add(Component::Sram, act_px * c.act_bytes * c.e_sram_byte);
             // Complex write of the input (2 DACs/px).
             ledger.add(Component::Dac, 2.0 * act_px * c.e_dac_px);
             // One laser shot for the optical FFT.
@@ -179,17 +197,17 @@ fn simulate_layer_with(
             // Kernel stacks from SRAM, complex writes to the object SLM.
             ledger.add(
                 Component::Sram,
-                cof * kern_px * cfg.act_bytes * c.e_sram_byte,
+                cof * kern_px * c.wgt_bytes * c.e_sram_byte,
             );
-            ledger.add(Component::Dac, cof * 2.0 * kern_px * c.e_dac_px);
+            ledger.add(Component::Dac, cof * 2.0 * kern_px * c.e_dac_kern_px);
             // One laser shot per output channel for Λ·Ux + second FFT.
             ledger.add(Component::Laser, cof * laser_px * c.e_opt_px);
             executions += cof;
             // CIS reads the (stride-decimated) output field.
             let out_px = n_out / patches as f64;
             ledger.add(Component::Adc, cof * 2.0 * out_px * c.e_adc);
-            // Output buffering: final group writes the 8-bit result;
-            // earlier groups spill 32-bit partial fields.
+            // Output buffering: final group writes the bits_x-wide
+            // result; earlier groups spill 32-bit partial fields.
             if groups > 1 && remaining > 0 {
                 ledger.add(
                     Component::Sram,
@@ -198,7 +216,7 @@ fn simulate_layer_with(
             } else {
                 ledger.add(
                     Component::Sram,
-                    cof * out_px * cfg.act_bytes * c.e_sram_byte,
+                    cof * out_px * c.act_bytes * c.e_sram_byte,
                 );
             }
         }
@@ -216,13 +234,13 @@ fn simulate_layer_with(
     }
 }
 
-/// Simulate a whole network at a node.
+/// Simulate a whole network at an operating point.
 pub fn simulate_network(
     cfg: &Optical4FConfig,
     net: &Network,
-    node_nm: f64,
+    op: &OperatingPoint,
 ) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+    let c = Coeffs::new(cfg, op);
     let mut total = SimResult::default();
     for layer in &net.layers {
         total += &simulate_layer_with(cfg, layer, &c);
@@ -234,6 +252,10 @@ pub fn simulate_network(
 mod tests {
     use super::*;
     use crate::networks::yolov3::yolov3;
+
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
 
     #[test]
     fn channels_at_once_eq22() {
@@ -259,7 +281,7 @@ mod tests {
         // Groups = ⌈Cᵢ/C′⌉; executions = groups·(1 + Cᵢ₊₁).
         let cfg = Optical4FConfig::default();
         let l = ConvLayer::square(512, 128, 64, 3, 1);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         // Padded tile is 514² px → C′ = ⌊4 Mpx/514²⌋ = 15 → 9 groups.
         let c_prime = cfg.channels_at_once(514, 128);
         assert_eq!(c_prime, 15);
@@ -273,8 +295,8 @@ mod tests {
         // 4·n̄²Cᵢ (load) + 2·k²CᵢCᵢ₊₁ (compute), n̄ = n+k-1.
         let cfg = Optical4FConfig::default();
         let l = ConvLayer::square(100, 4, 8, 3, 1);
-        let c = Coeffs::new(&cfg, 45.0);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let c = Coeffs::new(&cfg, &op(45.0));
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let s2 = (102 * 102) as f64;
         let expect_dacs = 4.0 * s2 * 4.0 + 2.0 * 9.0 * 4.0 * 8.0;
         let got = r.ledger.get(Component::Dac) / c.e_dac_px;
@@ -285,8 +307,8 @@ mod tests {
     fn adc_count_matches_eq18_eq19() {
         let cfg = Optical4FConfig::default();
         let l = ConvLayer::square(100, 4, 8, 3, 1);
-        let c = Coeffs::new(&cfg, 45.0);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let c = Coeffs::new(&cfg, &op(45.0));
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let s2 = (102 * 102) as f64;
         let out = (98 * 98) as f64;
         let expect = 2.0 * s2 * 4.0 + 2.0 * out * 8.0;
@@ -298,7 +320,7 @@ mod tests {
     fn efficiency_band_45nm_yolo() {
         // Fig. 9: tens of TOPS/W at 45 nm for YOLOv3.
         let cfg = Optical4FConfig::default();
-        let r = simulate_network(&cfg, &yolov3(1000), 45.0);
+        let r = simulate_network(&cfg, &yolov3(1000), &op(45.0));
         let eta = r.tops_per_watt();
         assert!(eta > 10.0 && eta < 400.0, "η = {eta}");
     }
@@ -309,8 +331,8 @@ mod tests {
         // digital systolic array on the same network and node.
         use crate::simulator::systolic::{simulate_network as sys, SystolicConfig};
         let net = yolov3(1000);
-        let o = simulate_network(&Optical4FConfig::default(), &net, 32.0);
-        let s = sys(&SystolicConfig::default(), &net, 32.0);
+        let o = simulate_network(&Optical4FConfig::default(), &net, &op(32.0));
+        let s = sys(&SystolicConfig::default(), &net, &op(32.0));
         assert!(
             o.tops_per_watt() > 5.0 * s.tops_per_watt(),
             "4F {} vs systolic {}",
@@ -323,8 +345,8 @@ mod tests {
     fn laser_energy_flat_across_nodes() {
         let cfg = Optical4FConfig::default();
         let net = yolov3(1000);
-        let a = simulate_network(&cfg, &net, 45.0);
-        let b = simulate_network(&cfg, &net, 7.0);
+        let a = simulate_network(&cfg, &net, &op(45.0));
+        let b = simulate_network(&cfg, &net, &op(7.0));
         let la = a.ledger.get(Component::Laser);
         let lb = b.ledger.get(Component::Laser);
         assert!((la - lb).abs() / la < 1e-12, "laser is node-independent");
@@ -340,8 +362,8 @@ mod tests {
         // over the figure's 45 → 7 nm span.
         let cfg = Optical4FConfig::default();
         let net = yolov3(1000);
-        let a = simulate_network(&cfg, &net, 45.0);
-        let b = simulate_network(&cfg, &net, 7.0);
+        let a = simulate_network(&cfg, &net, &op(45.0));
+        let b = simulate_network(&cfg, &net, &op(7.0));
         let ratio = b.ledger.get(Component::Dac) / a.ledger.get(Component::Dac);
         assert!(ratio > 0.6, "DAC should be ≳60% flat 45→7 nm, got {ratio}");
         // While SRAM scales nearly fully with CMOS.
@@ -357,8 +379,8 @@ mod tests {
             ..full
         };
         let l = ConvLayer::square(100, 4, 8, 3, 1); // tiny active area
-        let rf = simulate_layer(&full, &l, 45.0);
-        let rs = simulate_layer(&shuttered, &l, 45.0);
+        let rf = simulate_layer(&full, &l, &op(45.0));
+        let rs = simulate_layer(&shuttered, &l, &op(45.0));
         assert!(
             rs.ledger.get(Component::Laser) < rf.ledger.get(Component::Laser) / 10.0
         );
@@ -369,8 +391,8 @@ mod tests {
         let cfg = Optical4FConfig::default();
         let s1 = ConvLayer::square(200, 8, 8, 3, 1);
         let s2 = ConvLayer::square(200, 8, 8, 3, 2);
-        let r1 = simulate_layer(&cfg, &s1, 45.0);
-        let r2 = simulate_layer(&cfg, &s2, 45.0);
+        let r1 = simulate_layer(&cfg, &s1, &op(45.0));
+        let r2 = simulate_layer(&cfg, &s2, &op(45.0));
         assert!(r2.ledger.get(Component::Adc) < r1.ledger.get(Component::Adc));
         assert_eq!(r2.ledger.get(Component::Dac), r1.ledger.get(Component::Dac));
         // …and stride-2 performs ~1/4 the MACs: efficiency drops (the
@@ -384,11 +406,35 @@ mod tests {
         // 512²-padded channels: C′=15 < Cᵢ=30 → 2 groups → 32-bit spill.
         let multi = ConvLayer::square(510, 30, 4, 3, 1);
         let single = ConvLayer::square(510, 15, 4, 3, 1);
-        let rm = simulate_layer(&cfg, &multi, 45.0);
-        let rs = simulate_layer(&cfg, &single, 45.0);
+        let rm = simulate_layer(&cfg, &multi, &op(45.0));
+        let rs = simulate_layer(&cfg, &single, &op(45.0));
         // Per MAC, the multi-group layer pays more SRAM.
         let per_mac_m = rm.ledger.get(Component::Sram) / rm.macs;
         let per_mac_s = rs.ledger.get(Component::Sram) / rs.macs;
         assert!(per_mac_m > per_mac_s, "{per_mac_m} !> {per_mac_s}");
+    }
+
+    #[test]
+    fn kernel_and_activation_precision_split() {
+        let cfg = Optical4FConfig::default();
+        let l = ConvLayer::square(100, 4, 8, 3, 1);
+        let r88 = simulate_layer(&cfg, &l, &op(45.0));
+        // Narrower kernels cut only the kernel SLM writes…
+        let r84 = simulate_layer(&cfg, &l, &op(45.0).bits(8, 4));
+        assert!(r84.ledger.get(Component::Dac) < r88.ledger.get(Component::Dac));
+        assert_eq!(
+            r84.ledger.get(Component::Adc).to_bits(),
+            r88.ledger.get(Component::Adc).to_bits()
+        );
+        assert_eq!(
+            r84.ledger.get(Component::Laser).to_bits(),
+            r88.ledger.get(Component::Laser).to_bits()
+        );
+        // …while narrower activations collapse the 2^2B ADC and
+        // shot-noise laser laws.
+        let r48 = simulate_layer(&cfg, &l, &op(45.0).bits(4, 8));
+        assert!(r48.ledger.get(Component::Adc) < r88.ledger.get(Component::Adc) / 100.0);
+        assert!(r48.ledger.get(Component::Laser) < r88.ledger.get(Component::Laser) / 100.0);
+        assert_eq!(r48.time_units, r88.time_units, "executions are shape-only");
     }
 }

@@ -11,6 +11,13 @@
 //! photons in, tile_m coherent ADC reads out, everything ×2 for signed
 //! values (§IV.A). No MAC energy — the mesh computes by interference.
 
+//!
+//! All entry points take an [`OperatingPoint`]: input DACs / output
+//! ADCs / the shot-noise laser budget follow `bits_x`, weight-reconfig
+//! DACs follow `bits_w`, and the default 8×8 point reproduces the
+//! fixed-precision model bit-exactly.
+
+use super::op::OperatingPoint;
 use super::{Component, EnergyLedger, SimResult};
 use crate::energy::{
     constants::{E_EO_MODULATOR_FUTURE, PHOTONIC_DIM, PITCH_PHOTONIC, TOTAL_SRAM_BYTES},
@@ -60,31 +67,32 @@ struct Coeffs {
     e_dac_in: f64,
     e_dac_weight: f64,
     e_adc: f64,
-    e_sram_byte: f64,
+    /// SRAM cost of one activation/output element at bits_x precision.
+    e_sram_act: f64,
     /// Small near-converter buffer traffic (row buffer + digital
     /// accumulator registers), 8 KB-class energy scaled to a word.
     e_reg_byte: f64,
 }
 
 impl Coeffs {
-    fn new(cfg: &PhotonicConfig, node_nm: f64) -> Self {
-        let e = EnergyParams::default().at_node(node_nm);
+    fn new(cfg: &PhotonicConfig, op: &OperatingPoint) -> Self {
+        let e = EnergyParams::default().at_op(op);
         let line = LoadModel::new(PITCH_PHOTONIC, cfg.dim).energy();
         Coeffs {
             // Input: DAC + modulator + shot-noise laser budget (eq. A7/A8).
-            e_dac_in: e.e_dac + cfg.e_modulator + e.e_opt,
+            e_dac_in: e.e_dac_x + cfg.e_modulator + e.e_opt,
             // Weight reconfig: DAC + modulator + mesh line load (eq. A5).
-            e_dac_weight: e.e_dac + cfg.e_modulator + line,
+            e_dac_weight: e.e_dac_w + cfg.e_modulator + line,
             e_adc: e.e_adc,
-            e_sram_byte: Sram::at_node(cfg.bank_bytes(), node_nm).energy_per_byte,
-            e_reg_byte: Sram::at_node(5, node_nm).energy_per_byte,
+            e_sram_act: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte * op.sx(),
+            e_reg_byte: Sram::at_node(5, op.node_nm).energy_per_byte,
         }
     }
 }
 
 /// Simulate one conv layer (im2col GEMM mapping).
-pub fn simulate_layer(cfg: &PhotonicConfig, layer: &ConvLayer, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_layer(cfg: &PhotonicConfig, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     simulate_layer_with(cfg, layer, &c)
 }
 
@@ -112,9 +120,9 @@ fn simulate_layer_with(cfg: &PhotonicConfig, layer: &ConvLayer, c: &Coeffs) -> S
     let mut reconfigs = 0.0;
 
     // Activations: one SRAM read per Toeplitz element (row buffer).
-    ledger.add(Component::Sram, l_rows * n_dim as f64 * c.e_sram_byte);
-    // Outputs: one 8-bit write per element.
-    ledger.add(Component::Sram, l_rows * m_dim as f64 * c.e_sram_byte);
+    ledger.add(Component::Sram, l_rows * n_dim as f64 * c.e_sram_act);
+    // Outputs: one bits_x-wide write per element.
+    ledger.add(Component::Sram, l_rows * m_dim as f64 * c.e_sram_act);
 
     for ti in 0..tn {
         let tile_n = (n_dim - ti * dim).min(dim) as f64;
@@ -161,8 +169,8 @@ fn simulate_layer_with(cfg: &PhotonicConfig, layer: &ConvLayer, c: &Coeffs) -> S
 }
 
 /// Simulate a whole network.
-pub fn simulate_network(cfg: &PhotonicConfig, net: &Network, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_network(cfg: &PhotonicConfig, net: &Network, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     let mut total = SimResult::default();
     for layer in &net.layers {
         total += &simulate_layer_with(cfg, layer, &c);
@@ -176,11 +184,15 @@ mod tests {
     use crate::networks::yolov3::yolov3;
     use crate::simulator::{optical4f, systolic};
 
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
+
     #[test]
     fn mac_conservation() {
         let cfg = PhotonicConfig::default();
         let l = ConvLayer::square(64, 16, 32, 3, 1);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (lp, np, mp) = l.matmul_dims();
         assert!((r.macs - lp * np * mp).abs() < 1.0);
     }
@@ -196,14 +208,14 @@ mod tests {
         // maintaining an efficiency advantage over digital compute in
         // memory" at practical mesh sizes.
         let net = yolov3(1000);
-        let node = 32.0;
-        let s = systolic::simulate_network(&systolic::SystolicConfig::default(), &net, node)
+        let node = op(32.0);
+        let s = systolic::simulate_network(&systolic::SystolicConfig::default(), &net, &node)
             .tops_per_watt();
-        let p = simulate_network(&PhotonicConfig::default(), &net, node).tops_per_watt();
+        let p = simulate_network(&PhotonicConfig::default(), &net, &node).tops_per_watt();
         let o = optical4f::simulate_network(
             &optical4f::Optical4FConfig::default(),
             &net,
-            node,
+            &node,
         )
         .tops_per_watt();
         assert!(p > s, "photonic {p} !> systolic {s}");
@@ -217,7 +229,7 @@ mod tests {
         let r = simulate_layer(
             &PhotonicConfig::default(),
             &ConvLayer::square(64, 16, 32, 3, 1),
-            45.0,
+            &op(45.0),
         );
         assert_eq!(r.ledger.get(Component::Mac), 0.0);
         assert!(r.ledger.get(Component::Dac) > 0.0);
@@ -227,7 +239,7 @@ mod tests {
     fn reconfig_count_is_tile_grid() {
         let cfg = PhotonicConfig::default(); // 40×40
         let l = ConvLayer::square(64, 16, 32, 3, 1); // N′=144, M′=32
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         assert_eq!(r.time_units, (144f64 / 40.0).ceil() * 1.0); // 4×1 tiles
     }
 
@@ -244,8 +256,8 @@ mod tests {
             banks: 128,
             ..Default::default()
         };
-        let rs = simulate_layer(&small, &l, 45.0);
-        let rb = simulate_layer(&big, &l, 45.0);
+        let rs = simulate_layer(&small, &l, &op(45.0));
+        let rb = simulate_layer(&big, &l, &op(45.0));
         assert!(
             rs.energy_per_mac() > rb.energy_per_mac(),
             "eq. (11): efficiency grows with processor scale"
@@ -263,8 +275,8 @@ mod tests {
             ..Default::default()
         };
         let future = PhotonicConfig::default();
-        let rt = simulate_layer(&today, &l, 45.0);
-        let rf = simulate_layer(&future, &l, 45.0);
+        let rt = simulate_layer(&today, &l, &op(45.0));
+        let rf = simulate_layer(&future, &l, &op(45.0));
         let ratio = rt.ledger.get(Component::Dac) / rf.ledger.get(Component::Dac);
         assert!(ratio > 5.0, "DAC component ratio {ratio}");
         assert!(rt.energy_per_mac() > 1.5 * rf.energy_per_mac());
@@ -278,7 +290,7 @@ mod tests {
         // schedule on a deep-contraction layer. Computed side by side.
         let l = ConvLayer::square(512, 128, 128, 3, 1); // N' = 1152 » 40
         let cfg = PhotonicConfig::default();
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         // Tile-major psum traffic it would have paid:
         let (lr, nd, md) = l.matmul_dims();
         let tn = (nd as usize).div_ceil(cfg.dim) as f64;
@@ -297,7 +309,7 @@ mod tests {
         use crate::analytic::{photonic, Workload};
         let l = ConvLayer::square(512, 128, 128, 3, 1);
         let w = Workload::from_layer(l);
-        let sim = simulate_layer(&PhotonicConfig::default(), &l, 45.0).tops_per_watt();
+        let sim = simulate_layer(&PhotonicConfig::default(), &l, &op(45.0)).tops_per_watt();
         let ana = photonic::Config::typical()
             .efficiency(&w, 45.0)
             .tops_per_watt();
@@ -305,5 +317,23 @@ mod tests {
         // The cycle model re-DACs inputs tm times and charges real
         // reconfiguration; the analytic eq. (14) is the optimistic bound.
         assert!((0.15..1.5).contains(&ratio), "sim {sim} vs analytic {ana}");
+    }
+
+    #[test]
+    fn activation_bits_dominate_converter_scaling() {
+        // The 2^2B ADC/laser laws make bits_x the expensive axis here;
+        // weight bits only touch the (amortized) reconfig DACs.
+        let cfg = PhotonicConfig::default();
+        let l = ConvLayer::square(64, 16, 32, 3, 1);
+        let r88 = simulate_layer(&cfg, &l, &op(45.0));
+        let r48 = simulate_layer(&cfg, &l, &op(45.0).bits(4, 8));
+        let r84 = simulate_layer(&cfg, &l, &op(45.0).bits(8, 4));
+        assert!(r48.ledger.get(Component::Adc) < r88.ledger.get(Component::Adc) / 100.0);
+        assert_eq!(
+            r84.ledger.get(Component::Adc).to_bits(),
+            r88.ledger.get(Component::Adc).to_bits()
+        );
+        assert!(r84.ledger.get(Component::Dac) < r88.ledger.get(Component::Dac));
+        assert_eq!(r88.time_units, r84.time_units, "reconfig count is shape-only");
     }
 }

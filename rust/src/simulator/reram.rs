@@ -12,6 +12,13 @@
 //! e_ReRAM per MAC — the term that caps this architecture at ~20 TOPS/W
 //! no matter how large the arrays get.
 
+//!
+//! All entry points take an [`OperatingPoint`]: the row DACs / column
+//! ADCs follow `bits_x`, the programmed conductance resolution follows
+//! `bits_w` (overriding `ReramConfig::array.bits`), and the default 8×8
+//! point reproduces the fixed-precision model bit-exactly.
+
+use super::op::OperatingPoint;
 use super::{Component, EnergyLedger, SimResult};
 use crate::energy::{
     constants::{PITCH_RERAM, TOTAL_SRAM_BYTES},
@@ -68,22 +75,31 @@ struct Coeffs {
     e_adc: f64,
     e_cell_mac: f64,
     e_sram_byte: f64,
+    /// SRAM cost of one activation element at bits_x precision.
+    e_sram_act: f64,
     e_program_amortized: f64,
 }
 
 impl Coeffs {
-    fn new(cfg: &ReramConfig, node_nm: f64) -> Self {
-        let e = EnergyParams::default().at_node(node_nm);
+    fn new(cfg: &ReramConfig, op: &OperatingPoint) -> Self {
+        let e = EnergyParams::default().at_op(op);
         // Row drive: DAC circuit + bit-line load (eq. A6 at the ReRAM
-        // pitch; node-independent wire term).
+        // pitch; node-independent wire term). Inputs are activations.
         let line = LoadModel::new(PITCH_RERAM, cfg.dim).energy();
+        let e_sram_byte = Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte;
         Coeffs {
-            e_dac_row: e.e_dac + line,
+            e_dac_row: e.e_dac_x + line,
             e_adc: e.e_adc,
             // eq. (A11): per-MAC dissipation in the cells — no node
-            // scaling (set by quantum conductance + noise floor).
-            e_cell_mac: cfg.array.energy_per_mac(),
-            e_sram_byte: Sram::at_node(cfg.bank_bytes(), node_nm).energy_per_byte,
+            // scaling (set by quantum conductance + noise floor), but
+            // the mean programmed conductance follows bits_w.
+            e_cell_mac: ReramArray {
+                bits: op.bits_w,
+                ..cfg.array
+            }
+            .energy_per_mac(),
+            e_sram_byte,
+            e_sram_act: e_sram_byte * op.sx(),
             e_program_amortized: cfg.e_program / cfg.reuse,
         }
     }
@@ -91,8 +107,8 @@ impl Coeffs {
 
 /// Simulate one conv layer (im2col GEMM mapping, like the systolic array:
 /// ReRAM crossbars are matrix machines, so they eat the k² Toeplitz too).
-pub fn simulate_layer(cfg: &ReramConfig, layer: &ConvLayer, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_layer(cfg: &ReramConfig, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     simulate_layer_with(cfg, layer, &c)
 }
 
@@ -125,7 +141,7 @@ fn simulate_layer_with(cfg: &ReramConfig, layer: &ConvLayer, c: &Coeffs) -> SimR
             // cell MACs — all ×2 for signed values.
             ledger.add(
                 Component::Sram,
-                l_rows * tile_n * c.e_sram_byte, // activation reads (8-bit)
+                l_rows * tile_n * c.e_sram_act, // activation reads (bits_x)
             );
             ledger.add(
                 Component::Dac,
@@ -145,10 +161,13 @@ fn simulate_layer_with(cfg: &ReramConfig, layer: &ConvLayer, c: &Coeffs) -> SimR
             // Partial-sum handling across tn passes (digital accumulate).
             let psum = l_rows * tile_m;
             if tn > 1 {
+                // 32-bit digital psum spill/fill (bits-independent);
+                // boundary passes touch one side only.
                 let bytes = if ti == 0 || ti == tn - 1 { 5.0 } else { 8.0 };
                 ledger.add(Component::Sram, psum * bytes * c.e_sram_byte);
             } else {
-                ledger.add(Component::Sram, psum * c.e_sram_byte);
+                // Single pass: write the bits_x-wide output directly.
+                ledger.add(Component::Sram, psum * c.e_sram_act);
             }
             passes += l_rows;
         }
@@ -163,8 +182,8 @@ fn simulate_layer_with(cfg: &ReramConfig, layer: &ConvLayer, c: &Coeffs) -> SimR
 }
 
 /// Simulate a whole network.
-pub fn simulate_network(cfg: &ReramConfig, net: &Network, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_network(cfg: &ReramConfig, net: &Network, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     let mut total = SimResult::default();
     for layer in &net.layers {
         total += &simulate_layer_with(cfg, layer, &c);
@@ -177,11 +196,15 @@ mod tests {
     use super::*;
     use crate::networks::yolov3::yolov3;
 
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
+
     #[test]
     fn mac_conservation() {
         let cfg = ReramConfig::default();
         let l = ConvLayer::square(64, 16, 32, 3, 1);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (lp, np, mp) = l.matmul_dims();
         assert!((r.macs - lp * np * mp).abs() < 1.0);
     }
@@ -195,7 +218,7 @@ mod tests {
         let net = yolov3(1000);
         let ceiling = 1.0 / (cfg.array.energy_per_mac() * 1e12); // TOPS/W per MAC
         for node in [45.0, 7.0] {
-            let r = simulate_network(&cfg, &net, node);
+            let r = simulate_network(&cfg, &net, &op(node));
             let eta_mac = r.macs / r.ledger.total() / 1e12;
             assert!(
                 eta_mac < ceiling,
@@ -208,8 +231,8 @@ mod tests {
     fn cell_energy_does_not_scale_with_node() {
         let cfg = ReramConfig::default();
         let l = ConvLayer::square(64, 16, 32, 3, 1);
-        let a = simulate_layer(&cfg, &l, 45.0);
-        let b = simulate_layer(&cfg, &l, 7.0);
+        let a = simulate_layer(&cfg, &l, &op(45.0));
+        let b = simulate_layer(&cfg, &l, &op(7.0));
         assert_eq!(
             a.ledger.get(Component::Mac),
             b.ledger.get(Component::Mac),
@@ -225,10 +248,10 @@ mod tests {
         // MACs got ~10× cheaper while the memristor floor stayed put.
         use crate::simulator::systolic::{simulate_network as sys, SystolicConfig};
         let net = yolov3(1000);
-        let r45 = simulate_network(&ReramConfig::default(), &net, 45.0).tops_per_watt()
-            / sys(&SystolicConfig::default(), &net, 45.0).tops_per_watt();
-        let r7 = simulate_network(&ReramConfig::default(), &net, 7.0).tops_per_watt()
-            / sys(&SystolicConfig::default(), &net, 7.0).tops_per_watt();
+        let r45 = simulate_network(&ReramConfig::default(), &net, &op(45.0)).tops_per_watt()
+            / sys(&SystolicConfig::default(), &net, &op(45.0)).tops_per_watt();
+        let r7 = simulate_network(&ReramConfig::default(), &net, &op(7.0)).tops_per_watt()
+            / sys(&SystolicConfig::default(), &net, &op(7.0)).tops_per_watt();
         assert!(r45 > 1.5, "ReRAM should win at 45 nm: ratio {r45}");
         assert!(r7 < r45, "advantage must shrink with node: {r45} -> {r7}");
     }
@@ -244,13 +267,13 @@ mod tests {
             ..Default::default()
         };
         let amortized = ReramConfig::default();
-        let ef = simulate_layer(&fresh, &l, 45.0).ledger.total();
-        let ea = simulate_layer(&amortized, &l, 45.0).ledger.total();
+        let ef = simulate_layer(&fresh, &l, &op(45.0)).ledger.total();
+        let ea = simulate_layer(&amortized, &l, &op(45.0)).ledger.total();
         assert!(ef > 1.5 * ea, "single-use programming must dominate: {ef} vs {ea}");
         // And with big spatial reuse within one inference the gap closes.
         let big = ConvLayer::square(256, 16, 32, 3, 1);
-        let ef_big = simulate_layer(&fresh, &big, 45.0).ledger.total();
-        let ea_big = simulate_layer(&amortized, &big, 45.0).ledger.total();
+        let ef_big = simulate_layer(&fresh, &big, &op(45.0)).ledger.total();
+        let ea_big = simulate_layer(&amortized, &big, &op(45.0)).ledger.total();
         assert!(ef_big < 1.1 * ea_big);
     }
 
@@ -262,9 +285,32 @@ mod tests {
             ..Default::default()
         };
         let signed = ReramConfig::default();
-        let ru = simulate_layer(&unsigned, &l, 45.0);
-        let rs = simulate_layer(&signed, &l, 45.0);
+        let ru = simulate_layer(&unsigned, &l, &op(45.0));
+        let rs = simulate_layer(&signed, &l, &op(45.0));
         let ratio = rs.ledger.get(Component::Dac) / ru.ledger.get(Component::Dac);
         assert!((ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_bits_drive_cells_activation_bits_drive_converters() {
+        let cfg = ReramConfig::default();
+        let l = ConvLayer::square(64, 16, 32, 3, 1);
+        let r88 = simulate_layer(&cfg, &l, &op(45.0));
+        // Halving the conductance resolution halves the mean programmed
+        // conductance (eq. A9) but leaves the converters untouched…
+        let r84 = simulate_layer(&cfg, &l, &op(45.0).bits(8, 4));
+        assert!(r84.ledger.get(Component::Mac) < r88.ledger.get(Component::Mac));
+        assert_eq!(
+            r84.ledger.get(Component::Adc).to_bits(),
+            r88.ledger.get(Component::Adc).to_bits()
+        );
+        // …while narrower activations collapse the 2^2B ADC law and the
+        // cells stay put.
+        let r48 = simulate_layer(&cfg, &l, &op(45.0).bits(4, 8));
+        assert!(r48.ledger.get(Component::Adc) < r88.ledger.get(Component::Adc) / 100.0);
+        assert_eq!(
+            r48.ledger.get(Component::Mac).to_bits(),
+            r88.ledger.get(Component::Mac).to_bits()
+        );
     }
 }

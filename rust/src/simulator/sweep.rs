@@ -4,9 +4,12 @@
 //! 200 layers collapse to a few dozen unique (n, Cᵢ, Cᵢ₊₁, k, stride)
 //! tuples; VGG repeats its expensive 224²-class layers back to back), and
 //! the evaluation grids re-simulate every network at 13 nodes. A
-//! [`SweepCache`] keyed by (machine-config fingerprint, node, layer
-//! shape) therefore simulates each unique tuple **once** and replays the
-//! stored [`SimResult`] everywhere else.
+//! [`SweepCache`] keyed by (machine-config fingerprint, operating point,
+//! layer shape) therefore simulates each unique tuple **once** and
+//! replays the stored [`SimResult`] everywhere else. The operating point
+//! joins the key as an [`OpKey`] — exact `f64` bit patterns for node and
+//! noise sigmas plus the integer bit widths — so precision sweeps never
+//! alias with each other or with the default 8×8 point.
 //!
 //! Correctness contract: [`SweepCache::simulate_network`] merges the
 //! per-layer results *in layer order*, exactly like the direct
@@ -15,18 +18,20 @@
 //! round differently and is deliberately avoided. The property tests in
 //! `tests/sweep_engine.rs` pin this down for all four machines.
 //!
-//! [`sweep`] is the grid runner on top: every (machine × network × node)
-//! point, evaluated through a shared cache by [`crate::util::pool`]
-//! workers, with records returned in deterministic machine-major order.
+//! [`sweep`] is the grid runner on top: every (machine × network ×
+//! operating point), evaluated through a shared cache by
+//! [`crate::util::pool`] workers, with records returned in deterministic
+//! machine-major order.
 //!
 //! The cache also **persists**: [`SweepCache::save`] snapshots every
 //! entry to a text file with bit-exact (hex `f64`) values, and
 //! [`SweepCache::load`] restores it — keyed by (config fingerprint,
-//! node, layer shape), so entries never alias across machine configs or
-//! processes and a repeated CLI invocation with `--cache-dir` replays
-//! instead of re-simulating. A corrupt, truncated or version-mismatched
-//! snapshot is *ignored in full* (fresh simulation), never trusted in
-//! part.
+//! operating point, layer shape), so entries never alias across machine
+//! configs or processes and a repeated CLI invocation with `--cache-dir`
+//! replays instead of re-simulating. A corrupt, truncated or
+//! version-mismatched snapshot (including any v1 file, which predates
+//! the precision fields) is *ignored in full* (fresh simulation), never
+//! trusted in part.
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -34,14 +39,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::machine::Machine;
+use super::op::{OpKey, OperatingPoint};
 use super::{Component, SimResult};
 use crate::networks::{ConvLayer, Network};
 use crate::util::pool::Pool;
 
-/// Memo key: machine config fingerprint + node (exact bits) + layer.
-type Key = (u64, u64, ConvLayer);
+/// Memo key: machine config fingerprint + operating point + layer.
+type Key = (u64, OpKey, ConvLayer);
 
-/// Concurrent memo table for (machine, node, layer) simulation results.
+/// Concurrent memo table for (machine, operating point, layer)
+/// simulation results.
 ///
 /// Thread-safe by a plain mutex around the map: the hot path is the
 /// *simulation*, which runs outside the lock; the lock only guards
@@ -65,15 +72,15 @@ impl SweepCache {
         &self,
         machine: &dyn Machine,
         layer: &ConvLayer,
-        node_nm: f64,
+        op: &OperatingPoint,
     ) -> SimResult {
-        let key = (machine.fingerprint(), node_nm.to_bits(), *layer);
+        let key = (machine.fingerprint(), op.key(), *layer);
         if let Some(hit) = self.entries.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let r = machine.simulate_layer(layer, node_nm);
+        let r = machine.simulate_layer(layer, op);
         self.entries.lock().unwrap().insert(key, r.clone());
         r
     }
@@ -85,16 +92,16 @@ impl SweepCache {
         &self,
         machine: &dyn Machine,
         net: &Network,
-        node_nm: f64,
+        op: &OperatingPoint,
     ) -> SimResult {
         let mut total = SimResult::default();
         for layer in &net.layers {
-            total += &self.simulate_layer(machine, layer, node_nm);
+            total += &self.simulate_layer(machine, layer, op);
         }
         total
     }
 
-    /// Unique (machine, node, layer) tuples simulated so far.
+    /// Unique (machine, operating point, layer) tuples simulated so far.
     pub fn len(&self) -> usize {
         self.entries.lock().unwrap().len()
     }
@@ -138,7 +145,7 @@ impl SweepCache {
         pool: &Pool,
         machine: &dyn Machine,
         net: &Network,
-        node_nm: f64,
+        op: &OperatingPoint,
     ) -> SimResult {
         let mut seen = HashSet::new();
         let uniq: Vec<ConvLayer> = net
@@ -148,29 +155,29 @@ impl SweepCache {
             .copied()
             .collect();
         pool.par_for_each(&uniq, |l| {
-            let _ = self.simulate_layer(machine, l, node_nm);
+            let _ = self.simulate_layer(machine, l, op);
         });
         // Every shape is now cached: the merge below is pure hits.
-        self.simulate_network(machine, net, node_nm)
+        self.simulate_network(machine, net, op)
     }
 
     /// Training rows for the [`crate::energy::surrogate`] fitter: one
     /// `(layer, total energy in joules)` pair per unique shape in
-    /// `layers`, for one machine × node. Served through the cache, so
-    /// grid points warmed by earlier sweeps are replayed bit-exactly and
-    /// anything missing is simulated once and retained for later
-    /// callers (the crossval pass reuses the same entries).
+    /// `layers`, for one machine × operating point. Served through the
+    /// cache, so grid points warmed by earlier sweeps are replayed
+    /// bit-exactly and anything missing is simulated once and retained
+    /// for later callers (the crossval pass reuses the same entries).
     pub fn training_rows(
         &self,
         machine: &dyn Machine,
         layers: &[ConvLayer],
-        node_nm: f64,
+        op: &OperatingPoint,
     ) -> Vec<(ConvLayer, f64)> {
         let mut seen = HashSet::new();
         layers
             .iter()
             .filter(|l| seen.insert(**l))
-            .map(|l| (*l, self.simulate_layer(machine, l, node_nm).ledger.total()))
+            .map(|l| (*l, self.simulate_layer(machine, l, op).ledger.total()))
             .collect()
     }
 
@@ -186,14 +193,21 @@ impl SweepCache {
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let entries = self.entries.lock().unwrap();
         let mut keys: Vec<&Key> = entries.keys().collect();
-        keys.sort_by_key(|(fp, node, l)| (*fp, *node, l.n, l.c_in, l.c_out, l.kh, l.kw, l.stride));
-        let mut out = String::with_capacity(64 + keys.len() * 160);
+        keys.sort_by_key(|(fp, op, l)| {
+            (*fp, *op, l.n, l.c_in, l.c_out, l.kh, l.kw, l.stride)
+        });
+        let mut out = String::with_capacity(64 + keys.len() * 200);
         out.push_str(&format!("{SNAPSHOT_MAGIC} {}\n", keys.len()));
         for key in keys {
-            let (fp, node, l) = key;
+            let (fp, op, l) = key;
             let r = &entries[key];
             out.push_str(&format!(
-                "{fp:016x} {node:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
+                "{fp:016x} {:016x} {} {} {:016x} {:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
+                op.node_bits,
+                op.bits_x,
+                op.bits_w,
+                op.wsig_bits,
+                op.osig_bits,
                 l.n,
                 l.c_in,
                 l.c_out,
@@ -222,10 +236,10 @@ impl SweepCache {
     }
 
     /// Restore a cache from a [`SweepCache::save`] snapshot. Any anomaly
-    /// — missing file, wrong magic/version, bad field, truncated or
-    /// over-long body, negative/NaN energy — discards the whole snapshot
-    /// and returns an **empty** cache, so corruption can only ever cost
-    /// re-simulation, never wrong numbers.
+    /// — missing file, wrong magic/version (v1 snapshots included), bad
+    /// field, truncated or over-long body, negative/NaN energy — discards
+    /// the whole snapshot and returns an **empty** cache, so corruption
+    /// can only ever cost re-simulation, never wrong numbers.
     pub fn load(path: &Path) -> SweepCache {
         let parsed = std::fs::read_to_string(path)
             .ok()
@@ -242,8 +256,9 @@ impl SweepCache {
 }
 
 /// Snapshot header: format name + version. Bump the version on any
-/// layout change — old files then deliberately fail to load.
-const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v1";
+/// layout change — old files then deliberately fail to load. v2 added
+/// the operating-point precision/noise fields to every line.
+const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v2";
 
 /// Strict snapshot parser: `None` on ANY deviation (see
 /// [`SweepCache::load`]).
@@ -258,18 +273,30 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
     for _ in 0..count {
         let line = lines.next()?;
         let tok: Vec<&str> = line.split_whitespace().collect();
-        if tok.len() != 11 + Component::ALL.len() {
+        if tok.len() != 15 + Component::ALL.len() {
             return None;
         }
         let fp = u64::from_str_radix(tok[0], 16).ok()?;
-        let node = u64::from_str_radix(tok[1], 16).ok()?;
+        let sigma_at = |i: usize| -> Option<u64> {
+            let bits = u64::from_str_radix(tok[i], 16).ok()?;
+            let v = f64::from_bits(bits);
+            // Noise sigmas are finite and non-negative by construction.
+            (v.is_finite() && v >= 0.0).then_some(bits)
+        };
+        let op = OpKey {
+            node_bits: u64::from_str_radix(tok[1], 16).ok()?,
+            bits_x: tok[2].parse().ok()?,
+            bits_w: tok[3].parse().ok()?,
+            wsig_bits: sigma_at(4)?,
+            osig_bits: sigma_at(5)?,
+        };
         let layer = ConvLayer {
-            n: tok[2].parse().ok()?,
-            c_in: tok[3].parse().ok()?,
-            c_out: tok[4].parse().ok()?,
-            kh: tok[5].parse().ok()?,
-            kw: tok[6].parse().ok()?,
-            stride: tok[7].parse().ok()?,
+            n: tok[6].parse().ok()?,
+            c_in: tok[7].parse().ok()?,
+            c_out: tok[8].parse().ok()?,
+            kh: tok[9].parse().ok()?,
+            kw: tok[10].parse().ok()?,
+            stride: tok[11].parse().ok()?,
         };
         let f64_at = |i: usize| -> Option<f64> {
             let v = f64::from_bits(u64::from_str_radix(tok[i], 16).ok()?);
@@ -278,15 +305,15 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
             (v.is_finite() && v >= 0.0).then_some(v)
         };
         let mut r = SimResult {
-            macs: f64_at(8)?,
-            ops: f64_at(9)?,
-            time_units: f64_at(10)?,
+            macs: f64_at(12)?,
+            ops: f64_at(13)?,
+            time_units: f64_at(14)?,
             ..SimResult::default()
         };
         for (i, c) in Component::ALL.iter().enumerate() {
-            r.ledger.add(*c, f64_at(11 + i)?);
+            r.ledger.add(*c, f64_at(15 + i)?);
         }
-        if map.insert((fp, node, layer), r).is_some() {
+        if map.insert((fp, op, layer), r).is_some() {
             return None; // duplicate key: corrupt writer
         }
     }
@@ -302,22 +329,22 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
 pub struct SweepRecord {
     pub machine: &'static str,
     pub network: &'static str,
-    pub node_nm: f64,
+    pub op: OperatingPoint,
     pub result: SimResult,
 }
 
-/// Evaluate the full (machine × network × node) grid in parallel through
-/// a shared cache. Records come back machine-major, then network, then
-/// node — the exact order a serial triple loop would produce — so
-/// drivers can index `records[(mi * nets.len() + ni) * nodes.len() + ki]`
-/// or just iterate.
+/// Evaluate the full (machine × network × operating point) grid in
+/// parallel through a shared cache. Records come back machine-major,
+/// then network, then operating point — the exact order a serial triple
+/// loop would produce — so drivers can index
+/// `records[(mi * nets.len() + ni) * ops.len() + ki]` or just iterate.
 pub fn sweep(
     machines: &[Box<dyn Machine>],
     nets: &[Network],
-    nodes: &[f64],
+    ops: &[OperatingPoint],
     cache: &SweepCache,
 ) -> Vec<SweepRecord> {
-    sweep_on(&Pool::auto(), machines, nets, nodes, cache)
+    sweep_on(&Pool::auto(), machines, nets, ops, cache)
 }
 
 /// [`sweep`] with an explicit pool (serial baseline: `Pool::new(1)`).
@@ -325,24 +352,30 @@ pub fn sweep_on(
     pool: &Pool,
     machines: &[Box<dyn Machine>],
     nets: &[Network],
-    nodes: &[f64],
+    ops: &[OperatingPoint],
     cache: &SweepCache,
 ) -> Vec<SweepRecord> {
-    let mut points: Vec<(usize, usize, f64)> =
-        Vec::with_capacity(machines.len() * nets.len() * nodes.len());
+    let mut points: Vec<(usize, usize, OperatingPoint)> =
+        Vec::with_capacity(machines.len() * nets.len() * ops.len());
     for mi in 0..machines.len() {
         for ni in 0..nets.len() {
-            for &node in nodes {
-                points.push((mi, ni, node));
+            for &op in ops {
+                points.push((mi, ni, op));
             }
         }
     }
-    pool.par_map(&points, |&(mi, ni, node)| SweepRecord {
+    pool.par_map(&points, |&(mi, ni, op)| SweepRecord {
         machine: machines[mi].name(),
         network: nets[ni].name,
-        node_nm: node,
-        result: cache.simulate_network(machines[mi].as_ref(), &nets[ni], node),
+        op,
+        result: cache.simulate_network(machines[mi].as_ref(), &nets[ni], &op),
     })
+}
+
+/// Operating points for a plain node sweep at default precision — the
+/// bridge from the legacy `&[f64]` node-list call sites.
+pub fn ops_at_nodes(nodes: &[f64]) -> Vec<OperatingPoint> {
+    nodes.iter().map(|&nm| OperatingPoint::node(nm)).collect()
 }
 
 #[cfg(test)]
@@ -352,12 +385,16 @@ mod tests {
     use crate::simulator::machine::all_machines;
     use crate::simulator::{systolic, Component};
 
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
+
     #[test]
     fn cache_hits_on_repeated_layers() {
         let cache = SweepCache::new();
         let cfg = systolic::SystolicConfig::default();
         let net = yolov3(1000); // plenty of repeated residual-block shapes
-        let r = cache.simulate_network(&cfg, &net, 45.0);
+        let r = cache.simulate_network(&cfg, &net, &op(45.0));
         assert!(r.macs > 0.0);
         assert!(cache.hits() > 0, "YOLOv3 repeats shapes: {}", cache.stats());
         assert_eq!(cache.hits() + cache.misses(), net.num_layers());
@@ -369,9 +406,9 @@ mod tests {
         let cache = SweepCache::new();
         let cfg = systolic::SystolicConfig::default();
         let net = yolov3(1000);
-        let direct = systolic::simulate_network(&cfg, &net, 28.0);
-        let cached = cache.simulate_network(&cfg, &net, 28.0);
-        let again = cache.simulate_network(&cfg, &net, 28.0); // pure hits
+        let direct = systolic::simulate_network(&cfg, &net, &op(28.0));
+        let cached = cache.simulate_network(&cfg, &net, &op(28.0));
+        let again = cache.simulate_network(&cfg, &net, &op(28.0)); // pure hits
         for r in [&cached, &again] {
             assert_eq!(direct.macs, r.macs);
             assert_eq!(direct.ops, r.ops);
@@ -392,8 +429,8 @@ mod tests {
         };
         let big = systolic::SystolicConfig::default();
         let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
-        let a = cache.simulate_layer(&small, &layer, 45.0);
-        let b = cache.simulate_layer(&big, &layer, 45.0);
+        let a = cache.simulate_layer(&small, &layer, &op(45.0));
+        let b = cache.simulate_layer(&big, &layer, &op(45.0));
         assert_eq!(cache.misses(), 2, "two configs → two entries");
         assert!(a.ledger.total() != b.ledger.total());
     }
@@ -403,27 +440,41 @@ mod tests {
         let cache = SweepCache::new();
         let cfg = systolic::SystolicConfig::default();
         let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
-        let a = cache.simulate_layer(&cfg, &layer, 45.0);
-        let b = cache.simulate_layer(&cfg, &layer, 7.0);
+        let a = cache.simulate_layer(&cfg, &layer, &op(45.0));
+        let b = cache.simulate_layer(&cfg, &layer, &op(7.0));
         assert_eq!(cache.misses(), 2);
         assert!(a.ledger.total() > b.ledger.total());
+    }
+
+    #[test]
+    fn distinct_precisions_never_alias() {
+        let cache = SweepCache::new();
+        let cfg = systolic::SystolicConfig::default();
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+        let a = cache.simulate_layer(&cfg, &layer, &op(45.0));
+        let b = cache.simulate_layer(&cfg, &layer, &op(45.0).bits(4, 4));
+        let c = cache.simulate_layer(&cfg, &layer, &op(45.0).bits(8, 4));
+        assert_eq!(cache.misses(), 3, "three operating points → three entries");
+        assert!(b.ledger.total() < a.ledger.total());
+        assert!(c.ledger.total() < a.ledger.total());
+        assert!(b.ledger.total() < c.ledger.total());
     }
 
     #[test]
     fn sweep_grid_order_is_machine_major() {
         let machines = all_machines();
         let nets = vec![yolov3(200)];
-        let nodes = [45.0, 7.0];
+        let ops = ops_at_nodes(&[45.0, 7.0]);
         let cache = SweepCache::new();
-        let recs = sweep(&machines, &nets, &nodes, &cache);
-        assert_eq!(recs.len(), machines.len() * nets.len() * nodes.len());
+        let recs = sweep(&machines, &nets, &ops, &cache);
+        assert_eq!(recs.len(), machines.len() * nets.len() * ops.len());
         let mut i = 0;
         for m in &machines {
             for net in &nets {
-                for &node in &nodes {
+                for point in &ops {
                     assert_eq!(recs[i].machine, m.name());
                     assert_eq!(recs[i].network, net.name);
-                    assert_eq!(recs[i].node_nm, node);
+                    assert_eq!(recs[i].op, *point);
                     assert!(recs[i].result.macs > 0.0);
                     i += 1;
                 }
@@ -435,25 +486,25 @@ mod tests {
     fn parallel_sweep_matches_serial_sweep() {
         let machines = all_machines();
         let nets = vec![yolov3(200)];
-        let nodes = [45.0, 28.0, 7.0];
+        let ops = [op(45.0), op(28.0), op(7.0).bits(4, 4)];
         let serial = sweep_on(
             &Pool::new(1),
             &machines,
             &nets,
-            &nodes,
+            &ops,
             &SweepCache::new(),
         );
         let parallel = sweep_on(
             &Pool::new(8),
             &machines,
             &nets,
-            &nodes,
+            &ops,
             &SweepCache::new(),
         );
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.machine, b.machine);
-            assert_eq!(a.node_nm, b.node_nm);
+            assert_eq!(a.op, b.op);
             assert_eq!(a.result.macs, b.result.macs);
             for c in Component::ALL {
                 assert_eq!(a.result.ledger.get(c), b.result.ledger.get(c));

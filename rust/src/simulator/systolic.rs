@@ -21,6 +21,12 @@
 //!   (§VII.A lists only SRAM/MAC/load/register costs); the ablation bench
 //!   turns it on.
 
+//!
+//! All entry points take an [`OperatingPoint`]; activation/weight byte
+//! widths and the MAC gate model follow its `bits_x`/`bits_w`, and the
+//! default 8×8 point reproduces the fixed-precision model bit-exactly.
+
+use super::op::OperatingPoint;
 use super::{Component, EnergyLedger, SimResult};
 use crate::energy::{
     constants::{SYSTOLIC_DIM, TOTAL_SRAM_BYTES},
@@ -73,32 +79,41 @@ impl SystolicConfig {
     }
 }
 
-/// Per-node energy coefficients, precomputed once per simulation.
+/// Per-operating-point energy coefficients, precomputed once per
+/// simulation. Precision folds in here — `act_bytes`/`wgt_bytes` carry
+/// the bits_x/bits_w storage scale so the tile loop keeps its exact
+/// expression shape (×1.0 at the default 8×8 point).
 struct Coeffs {
     e_mac: f64,
     e_hop: f64,
     e_reg: f64,
     e_sram_byte: f64,
     e_dram_byte: f64,
+    /// Bytes per activation element at this precision.
+    act_bytes: f64,
+    /// Bytes per weight element at this precision.
+    wgt_bytes: f64,
 }
 
 impl Coeffs {
-    fn new(cfg: &SystolicConfig, node_nm: f64) -> Self {
-        let e = EnergyParams::default().at_node(node_nm);
+    fn new(cfg: &SystolicConfig, op: &OperatingPoint) -> Self {
+        let e = EnergyParams::default().at_op(op);
         Coeffs {
             e_mac: e.e_mac,
             // Wire load: node-independent.
             e_hop: presets::systolic_hop().energy() * cfg.hop_bits as f64,
-            e_reg: Sram::at_node(5, node_nm).energy_per_byte * cfg.reg_bytes_per_mac,
-            e_sram_byte: Sram::at_node(cfg.bank_bytes(), node_nm).energy_per_byte,
+            e_reg: Sram::at_node(5, op.node_nm).energy_per_byte * cfg.reg_bytes_per_mac,
+            e_sram_byte: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte,
             e_dram_byte: cfg.e_dram_per_byte,
+            act_bytes: cfg.act_bytes * op.sx(),
+            wgt_bytes: cfg.act_bytes * op.sw(),
         }
     }
 }
 
 /// Simulate one conv layer. Returns the layer's [`SimResult`].
-pub fn simulate_layer(cfg: &SystolicConfig, layer: &ConvLayer, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+pub fn simulate_layer(cfg: &SystolicConfig, layer: &ConvLayer, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     simulate_layer_with(cfg, layer, &c)
 }
 
@@ -125,13 +140,13 @@ fn simulate_layer_with(cfg: &SystolicConfig, layer: &ConvLayer, c: &Coeffs) -> S
             // Weight tile streamed from DRAM into the array.
             ledger.add(
                 Component::Dram,
-                tile_n * tile_m * cfg.act_bytes * c.e_dram_byte,
+                tile_n * tile_m * c.wgt_bytes * c.e_dram_byte,
             );
 
             // Activation block streams through: L′ rows of tile_n bytes.
             ledger.add(
                 Component::Sram,
-                l_rows * tile_n * cfg.act_bytes * c.e_sram_byte,
+                l_rows * tile_n * c.act_bytes * c.e_sram_byte,
             );
 
             // MACs in this pass.
@@ -154,15 +169,16 @@ fn simulate_layer_with(cfg: &SystolicConfig, layer: &ConvLayer, c: &Coeffs) -> S
                         2.0 * psum * cfg.psum_bytes * c.e_sram_byte,
                     );
                 } else {
-                    // Last pass: read psums, requantize, write 8-bit output.
+                    // Last pass: read psums, requantize, write the
+                    // bits_x-wide output.
                     ledger.add(
                         Component::Sram,
-                        psum * (cfg.psum_bytes + cfg.act_bytes) * c.e_sram_byte,
+                        psum * (cfg.psum_bytes + c.act_bytes) * c.e_sram_byte,
                     );
                 }
             } else {
-                // Single pass: write the 8-bit output directly.
-                ledger.add(Component::Sram, psum * cfg.act_bytes * c.e_sram_byte);
+                // Single pass: write the bits_x-wide output directly.
+                ledger.add(Component::Sram, psum * c.act_bytes * c.e_sram_byte);
             }
 
             // Cycles: weight fill (dim) + stream (L′) + drain (dim).
@@ -178,9 +194,9 @@ fn simulate_layer_with(cfg: &SystolicConfig, layer: &ConvLayer, c: &Coeffs) -> S
     }
 }
 
-/// Simulate a whole network at a node.
-pub fn simulate_network(cfg: &SystolicConfig, net: &Network, node_nm: f64) -> SimResult {
-    let c = Coeffs::new(cfg, node_nm);
+/// Simulate a whole network at an operating point.
+pub fn simulate_network(cfg: &SystolicConfig, net: &Network, op: &OperatingPoint) -> SimResult {
+    let c = Coeffs::new(cfg, op);
     let mut total = SimResult::default();
     for layer in &net.layers {
         total += &simulate_layer_with(cfg, layer, &c);
@@ -202,13 +218,17 @@ mod tests {
         ConvLayer::square(64, 8, 16, 3, 1)
     }
 
+    fn op(nm: f64) -> OperatingPoint {
+        OperatingPoint::node(nm)
+    }
+
     #[test]
     fn mac_count_matches_layer() {
         // The simulator must perform exactly the layer's useful MACs —
         // padding/edge tiles add energy, never phantom work.
         let cfg = SystolicConfig::default();
         let l = small_layer();
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (lp, np, mp) = l.matmul_dims();
         assert!((r.macs - lp * np * mp).abs() < 1.0);
     }
@@ -218,7 +238,7 @@ mod tests {
         // YOLOv3 at 45 nm should land near the analytic eq. (5) value
         // (~2 TOPS/W with the §VII.A per-MAC bundle).
         let cfg = SystolicConfig::default();
-        let r = simulate_network(&cfg, &yolov3(1000), 45.0);
+        let r = simulate_network(&cfg, &yolov3(1000), &op(45.0));
         let eta = r.tops_per_watt();
         assert!(eta > 0.8 && eta < 6.0, "η = {eta}");
     }
@@ -229,8 +249,8 @@ mod tests {
         // 45→7 nm gain is well below pure CMOS scaling (~10.6×).
         let cfg = SystolicConfig::default();
         let net = yolov3(1000);
-        let e45 = simulate_network(&cfg, &net, 45.0).tops_per_watt();
-        let e7 = simulate_network(&cfg, &net, 7.0).tops_per_watt();
+        let e45 = simulate_network(&cfg, &net, &op(45.0)).tops_per_watt();
+        let e7 = simulate_network(&cfg, &net, &op(7.0)).tops_per_watt();
         assert!(e7 > e45, "still improves");
         assert!(e7 / e45 < 6.0, "but sub-CMOS: {}", e7 / e45);
     }
@@ -241,7 +261,7 @@ mod tests {
         // N′ = 9·8 = 72 < 256: single pass, no spill → SRAM traffic =
         // activations + outputs exactly.
         let l = small_layer();
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (lp, np, mp) = l.matmul_dims();
         let e_b = Sram::at_node(cfg.bank_bytes(), 45.0).energy_per_byte;
         let expect = (lp * np + lp * mp) * e_b;
@@ -254,7 +274,7 @@ mod tests {
         let cfg = SystolicConfig::default();
         // N′ = 9·64 = 576 > 256 → 3 passes → psum spill traffic appears.
         let l = ConvLayer::square(64, 64, 16, 3, 1);
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (lp, np, mp) = l.matmul_dims();
         let e_b = Sram::at_node(cfg.bank_bytes(), 45.0).energy_per_byte;
         let min_no_spill = (lp * np + lp * mp) * e_b;
@@ -264,7 +284,7 @@ mod tests {
     #[test]
     fn dram_off_by_default_matching_paper() {
         let cfg = SystolicConfig::default();
-        let r = simulate_layer(&cfg, &small_layer(), 45.0);
+        let r = simulate_layer(&cfg, &small_layer(), &op(45.0));
         assert_eq!(r.ledger.get(Component::Dram), 0.0);
     }
 
@@ -275,7 +295,7 @@ mod tests {
             ..Default::default()
         };
         let l = small_layer();
-        let r = simulate_layer(&cfg, &l, 45.0);
+        let r = simulate_layer(&cfg, &l, &op(45.0));
         let (_, np, mp) = l.matmul_dims();
         let expect = np * mp * 10e-12; // one weight pass, single tile
         assert!((r.ledger.get(Component::Dram) - expect).abs() / expect < 1e-9);
@@ -284,7 +304,7 @@ mod tests {
     #[test]
     fn utilization_below_one() {
         let cfg = SystolicConfig::default();
-        let r = simulate_network(&cfg, &yolov3(1000), 45.0);
+        let r = simulate_network(&cfg, &yolov3(1000), &op(45.0));
         let u = utilization(&cfg, &r);
         assert!(u > 0.05 && u <= 1.0, "utilization {u}");
     }
@@ -298,8 +318,8 @@ mod tests {
         };
         let big = SystolicConfig::default();
         let l = small_layer(); // M′ = 16 « 256
-        let r_small = simulate_layer(&small, &l, 45.0);
-        let r_big = simulate_layer(&big, &l, 45.0);
+        let r_small = simulate_layer(&small, &l, &op(45.0));
+        let r_big = simulate_layer(&big, &l, &op(45.0));
         assert!(
             utilization(&small, &r_small) > utilization(&big, &r_big),
             "small array should be better utilized by a small layer"
@@ -316,13 +336,36 @@ mod tests {
         };
         let b = SystolicConfig::default();
         let l = ConvLayer::square(32, 128, 128, 3, 1);
-        let ra = simulate_layer(&a, &l, 45.0);
-        let rb = simulate_layer(&b, &l, 45.0);
+        let ra = simulate_layer(&a, &l, &op(45.0));
+        let rb = simulate_layer(&b, &l, &op(45.0));
         assert!((ra.macs - rb.macs).abs() < 1.0);
         let ma = ra.ledger.get(Component::Mac);
         let mb = rb.ledger.get(Component::Mac);
         assert!((ma - mb).abs() / mb < 1e-9);
         // …but SRAM traffic is higher for the smaller array (more passes).
         assert!(ra.ledger.get(Component::Sram) > rb.ledger.get(Component::Sram));
+    }
+
+    #[test]
+    fn default_operating_point_is_bit_identical_to_45nm_8x8() {
+        let cfg = SystolicConfig::default();
+        let l = ConvLayer::square(64, 64, 16, 3, 1); // tiled contraction
+        let a = simulate_layer(&cfg, &l, &OperatingPoint::default());
+        let b = simulate_layer(&cfg, &l, &op(45.0).bits(8, 8));
+        assert_eq!(a.ledger.total().to_bits(), b.ledger.total().to_bits());
+        assert_eq!(a.time_units.to_bits(), b.time_units.to_bits());
+    }
+
+    #[test]
+    fn lower_precision_cuts_energy_not_work() {
+        let cfg = SystolicConfig::default();
+        let l = small_layer();
+        let r8 = simulate_layer(&cfg, &l, &op(45.0));
+        let r4 = simulate_layer(&cfg, &l, &op(45.0).bits(4, 4));
+        assert!((r4.macs - r8.macs).abs() < 1.0, "precision never changes work");
+        assert!(r4.time_units == r8.time_units, "cycle count is shape-only");
+        assert!(r4.ledger.get(Component::Mac) < r8.ledger.get(Component::Mac));
+        assert!(r4.ledger.get(Component::Sram) < r8.ledger.get(Component::Sram));
+        assert!(r4.ledger.total() < r8.ledger.total());
     }
 }

@@ -5,7 +5,7 @@
 use aimc::analytic::{Processor, Workload};
 use aimc::networks::zoo;
 use aimc::report::figures::median_layer;
-use aimc::simulator::{optical4f, systolic};
+use aimc::simulator::{optical4f, systolic, OperatingPoint};
 
 #[test]
 fn systolic_sim_tracks_analytic_for_every_network() {
@@ -14,7 +14,8 @@ fn systolic_sim_tracks_analytic_for_every_network() {
     for net in zoo(1000) {
         let w = Workload::from_layer(median_layer(&net));
         for node in [45.0, 7.0] {
-            let sim = systolic::simulate_network(&cfg, &net, node).tops_per_watt();
+            let sim = systolic::simulate_network(&cfg, &net, &OperatingPoint::node(node))
+                .tops_per_watt();
             let a = ana.efficiency(&w, node).tops_per_watt();
             let ratio = sim / a;
             assert!(
@@ -33,7 +34,8 @@ fn optical_sim_tracks_analytic_for_every_network() {
     for net in zoo(1000) {
         let w = Workload::from_layer(median_layer(&net));
         for node in [45.0, 7.0] {
-            let sim = optical4f::simulate_network(&cfg, &net, node).tops_per_watt();
+            let sim = optical4f::simulate_network(&cfg, &net, &OperatingPoint::node(node))
+                .tops_per_watt();
             let a = ana.efficiency(&w, node).tops_per_watt();
             let ratio = sim / a;
             // The cycle model charges real execution counts + full-
@@ -58,8 +60,9 @@ fn optical_beats_systolic_on_every_paper_network() {
     let s_cfg = systolic::SystolicConfig::default();
     let o_cfg = optical4f::Optical4FConfig::default();
     for net in zoo(1000) {
-        let s = systolic::simulate_network(&s_cfg, &net, 28.0).tops_per_watt();
-        let o = optical4f::simulate_network(&o_cfg, &net, 28.0).tops_per_watt();
+        let op = OperatingPoint::node(28.0);
+        let s = systolic::simulate_network(&s_cfg, &net, &op).tops_per_watt();
+        let o = optical4f::simulate_network(&o_cfg, &net, &op).tops_per_watt();
         assert!(
             o > 2.0 * s,
             "{}: optical {o:.2} should beat systolic {s:.2}",
@@ -103,9 +106,10 @@ fn high_intensity_advantage_analytic_vs_cycle_model() {
     // two land within 5% of each other — an effect only the cycle model
     // can see (and a good reason the paper built one).
     let cfg = systolic::SystolicConfig::default();
-    let vgg = systolic::simulate_network(&cfg, &aimc::networks::vgg::vgg16(1000), 45.0);
+    let op = OperatingPoint::node(45.0);
+    let vgg = systolic::simulate_network(&cfg, &aimc::networks::vgg::vgg16(1000), &op);
     let goog =
-        systolic::simulate_network(&cfg, &aimc::networks::googlenet::googlenet(1000), 45.0);
+        systolic::simulate_network(&cfg, &aimc::networks::googlenet::googlenet(1000), &op);
     let ratio = vgg.tops_per_watt() / goog.tops_per_watt();
     assert!(
         (0.9..1.15).contains(&ratio),
@@ -119,14 +123,15 @@ fn high_intensity_advantage_analytic_vs_cycle_model() {
 fn energy_additivity_network_equals_sum_of_layers() {
     let cfg = systolic::SystolicConfig::default();
     let ocfg = optical4f::Optical4FConfig::default();
+    let op = OperatingPoint::node(45.0);
     for net in zoo(1000).into_iter().take(3) {
-        let whole_s = systolic::simulate_network(&cfg, &net, 45.0);
-        let whole_o = optical4f::simulate_network(&ocfg, &net, 45.0);
+        let whole_s = systolic::simulate_network(&cfg, &net, &op);
+        let whole_o = optical4f::simulate_network(&ocfg, &net, &op);
         let mut sum_s = 0.0;
         let mut sum_o = 0.0;
         for l in &net.layers {
-            sum_s += systolic::simulate_layer(&cfg, l, 45.0).ledger.total();
-            sum_o += optical4f::simulate_layer(&ocfg, l, 45.0).ledger.total();
+            sum_s += systolic::simulate_layer(&cfg, l, &op).ledger.total();
+            sum_o += optical4f::simulate_layer(&ocfg, l, &op).ledger.total();
         }
         assert!((whole_s.ledger.total() - sum_s).abs() / sum_s < 1e-9);
         assert!((whole_o.ledger.total() - sum_o).abs() / sum_o < 1e-9);
@@ -140,9 +145,10 @@ fn reram_ceiling_between_dim_and_optical() {
     let ceiling =
         aimc::energy::reram::ReramArray::default().efficiency_ceiling() / 1e12 / 2.0;
     let net = aimc::networks::yolov3::yolov3(1000);
-    let s = systolic::simulate_network(&systolic::SystolicConfig::default(), &net, 28.0)
+    let op = OperatingPoint::node(28.0);
+    let s = systolic::simulate_network(&systolic::SystolicConfig::default(), &net, &op)
         .tops_per_watt();
-    let o = optical4f::simulate_network(&optical4f::Optical4FConfig::default(), &net, 28.0)
+    let o = optical4f::simulate_network(&optical4f::Optical4FConfig::default(), &net, &op)
         .tops_per_watt();
     assert!(s < ceiling, "systolic {s} below ReRAM ceiling {ceiling}");
     assert!(o > ceiling, "optical {o} above ReRAM ceiling {ceiling}");

@@ -8,7 +8,7 @@ use aimc::coordinator::batcher::plan_batches;
 use aimc::energy::EnergyParams;
 use aimc::networks::stats::optical4f_dims;
 use aimc::networks::ConvLayer;
-use aimc::simulator::{optical4f, systolic, Component};
+use aimc::simulator::{optical4f, systolic, Component, OperatingPoint};
 use aimc::util::prop::{check, prop_assert, prop_close};
 
 fn random_layer(g: &mut aimc::util::prop::Gen) -> ConvLayer {
@@ -49,7 +49,7 @@ fn prop_systolic_macs_equal_gemm_size() {
             banks: dim,
             ..Default::default()
         };
-        let r = systolic::simulate_layer(&cfg, &layer, 45.0);
+        let r = systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0));
         let (l, n, m) = layer.matmul_dims();
         prop_close(r.macs, l * n * m, 1e-9, "MAC conservation")
     });
@@ -62,7 +62,7 @@ fn prop_systolic_sram_traffic_lower_bound() {
     check(120, |g| {
         let layer = random_layer(g);
         let cfg = systolic::SystolicConfig::default();
-        let r = systolic::simulate_layer(&cfg, &layer, 45.0);
+        let r = systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0));
         let (l, n, m) = layer.matmul_dims();
         let e_b = aimc::energy::sram::energy_per_byte_45nm(cfg.bank_bytes());
         let floor = (l * n + l * m) * e_b;
@@ -97,7 +97,7 @@ fn prop_optical_execution_count() {
     check(120, |g| {
         let layer = random_layer(g);
         let cfg = optical4f::Optical4FConfig::default();
-        let r = optical4f::simulate_layer(&cfg, &layer, 45.0);
+        let r = optical4f::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0));
         let k = layer.kh.max(layer.kw);
         let patches = cfg.spatial_patches(layer.n, k);
         let s2 = if patches == 1 {
@@ -116,7 +116,11 @@ fn prop_optical_execution_count() {
 fn prop_ledger_total_is_sum_of_components() {
     check(100, |g| {
         let layer = random_layer(g);
-        let r = optical4f::simulate_layer(&optical4f::Optical4FConfig::default(), &layer, 45.0);
+        let r = optical4f::simulate_layer(
+            &optical4f::Optical4FConfig::default(),
+            &layer,
+            &OperatingPoint::node(45.0),
+        );
         let sum: f64 = Component::ALL.iter().map(|&c| r.ledger.get(c)).sum();
         prop_close(r.ledger.total(), sum, 1e-12, "ledger additivity")
     });
@@ -171,8 +175,8 @@ fn prop_simulator_energy_scales_with_node_but_not_below_wire_floor() {
     check(60, |g| {
         let layer = random_layer(g);
         let cfg = systolic::SystolicConfig::default();
-        let e45 = systolic::simulate_layer(&cfg, &layer, 45.0);
-        let e7 = systolic::simulate_layer(&cfg, &layer, 7.0);
+        let e45 = systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0));
+        let e7 = systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(7.0));
         prop_assert(
             e7.ledger.total() < e45.ledger.total(),
             "smaller node must be cheaper",
@@ -188,6 +192,25 @@ fn prop_simulator_energy_scales_with_node_but_not_below_wire_floor() {
             e7.ledger.total() >= wire * (1.0 - 1e-12),
             "total bounded by wire floor",
         )
+    });
+}
+
+#[test]
+fn prop_lower_precision_never_costs_more() {
+    // Quantizing to fewer bits shrinks every datapath event but changes
+    // no schedule: same MACs, same execution count, lower energy.
+    check(60, |g| {
+        let layer = random_layer(g);
+        let cfg = systolic::SystolicConfig::default();
+        let full = systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0));
+        let quant =
+            systolic::simulate_layer(&cfg, &layer, &OperatingPoint::node(45.0).bits(4, 4));
+        prop_assert(
+            quant.ledger.total() < full.ledger.total(),
+            "4x4 must price below 8x8",
+        )?;
+        prop_close(quant.macs, full.macs, 1e-12, "same MAC count")?;
+        prop_close(quant.time_units, full.time_units, 1e-12, "same schedule")
     });
 }
 

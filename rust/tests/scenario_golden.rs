@@ -17,7 +17,9 @@ use aimc::networks::{by_name, zoo, Network};
 use aimc::report::figures::median_layer;
 use aimc::report::{self, EvalCtx};
 use aimc::simulator::machine::all_machines;
-use aimc::simulator::{optical4f, sweep, systolic, Component, Machine, SimResult, SweepCache};
+use aimc::simulator::{
+    optical4f, sweep, systolic, Component, Machine, OperatingPoint, SimResult, SweepCache,
+};
 use aimc::technode::NODES;
 use aimc::util::json::Json;
 use aimc::util::pool::Pool;
@@ -109,7 +111,9 @@ fn legacy_fig8(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
         &["node (nm)", "cycle-accurate", "analytic eq.(5)", "ratio"],
     );
     for n in NODES {
-        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
+        let sim = cache
+            .simulate_network(&cfg, &net, &OperatingPoint::node(n.nm))
+            .tops_per_watt();
         let ana = aimc::analytic::in_memory::Config::tpu_like()
             .efficiency(&w, n.nm)
             .tops_per_watt();
@@ -135,7 +139,9 @@ fn legacy_fig9(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
         &["node (nm)", "cycle-accurate", "analytic eq.(24)", "ratio"],
     );
     for n in NODES {
-        let sim = cache.simulate_network(&cfg, &net, n.nm).tops_per_watt();
+        let sim = cache
+            .simulate_network(&cfg, &net, &OperatingPoint::node(n.nm))
+            .tops_per_watt();
         let ana = aimc::analytic::optical4f::Config::default_4mpx()
             .efficiency(&w, n.nm)
             .tops_per_watt();
@@ -160,7 +166,7 @@ fn legacy_fig10(net: Option<&str>, input: usize, cache: &SweepCache) -> Table {
         &["node (nm)", "DAC", "ADC", "SRAM", "laser", "total"],
     );
     for n in NODES {
-        let r = cache.simulate_network(&cfg, &net, n.nm);
+        let r = cache.simulate_network(&cfg, &net, &OperatingPoint::node(n.nm));
         let per = |c: Component| r.ledger.get(c) / r.macs * 1e12;
         t.row(vec![
             format!("{:.0}", n.nm),
@@ -189,7 +195,9 @@ fn legacy_crossval(net: Option<&str>, input: usize, cache: &SweepCache) -> Table
         for m in &machines {
             cells.push(format!(
                 "{:.3}",
-                cache.simulate_network(m.as_ref(), &net, n.nm).tops_per_watt()
+                cache
+                    .simulate_network(m.as_ref(), &net, &OperatingPoint::node(n.nm))
+                    .tops_per_watt()
             ));
         }
         t.row(cells);
@@ -354,7 +362,8 @@ fn legacy_sweep(input: usize, cache: &SweepCache) -> Table {
     let machines = all_machines();
     let nets = zoo(input);
     let nodes: Vec<f64> = NODES.iter().map(|n| n.nm).collect();
-    let records = sweep::sweep_on(&Pool::auto(), &machines, &nets, &nodes, cache);
+    let ops = sweep::ops_at_nodes(&nodes);
+    let records = sweep::sweep_on(&Pool::auto(), &machines, &nets, &ops, cache);
     let mut t = Table::new(
         &format!(
             "sweep — cycle-accurate TOPS/W, {} machines × {} networks × {} nodes @ {input} px",
@@ -582,10 +591,11 @@ fn scenario_layer_prefetch_bit_identical_datasets() {
 fn layer_fanout_merge_bit_identical() {
     let net = aimc::networks::yolov3::yolov3(300);
     for m in all_machines() {
-        let serial: SimResult = m.simulate_network(&net, 28.0);
+        let op = OperatingPoint::node(28.0);
+        let serial: SimResult = m.simulate_network(&net, &op);
         for threads in [1, 4] {
             let cache = SweepCache::new();
-            let par = cache.simulate_network_par(&Pool::new(threads), m.as_ref(), &net, 28.0);
+            let par = cache.simulate_network_par(&Pool::new(threads), m.as_ref(), &net, &op);
             assert_eq!(serial.macs, par.macs, "{}", m.name());
             assert_eq!(serial.ops, par.ops, "{}", m.name());
             assert_eq!(serial.time_units, par.time_units, "{}", m.name());

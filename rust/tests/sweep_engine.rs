@@ -9,10 +9,18 @@
 
 use aimc::networks::{ConvLayer, Network};
 use aimc::simulator::machine::{all_machines, by_name};
-use aimc::simulator::{Component, Machine, SweepCache};
-use aimc::simulator::sweep::{sweep_on, SweepRecord};
+use aimc::simulator::{Component, Machine, OperatingPoint, SweepCache};
+use aimc::simulator::sweep::{ops_at_nodes, sweep_on, SweepRecord};
 use aimc::util::pool::Pool;
 use aimc::util::prop::{check, prop_assert, Gen};
+
+/// A random operating point: node × a few precision pairs, so the memo
+/// and snapshot layers are exercised across the full key.
+fn random_op(g: &mut Gen) -> OperatingPoint {
+    let node = *g.choose(&[45.0, 32.0, 28.0, 14.0, 7.0]);
+    let (bx, bw) = *g.choose(&[(8u32, 8u32), (4, 4), (8, 4), (12, 12)]);
+    OperatingPoint::node(node).bits(bx, bw)
+}
 
 /// A random — but modestly sized, these run hundreds of times — layer.
 fn random_layer(g: &mut Gen) -> ConvLayer {
@@ -65,12 +73,12 @@ fn prop_cached_sweep_bit_identical_across_all_machines() {
     let machines = all_machines();
     check(30, |g| {
         let net = random_net(g);
-        let node = *g.choose(&[45.0, 32.0, 28.0, 14.0, 7.0]);
+        let op = random_op(g);
         for m in &machines {
-            let direct = m.simulate_network(&net, node);
+            let direct = m.simulate_network(&net, &op);
             let cache = SweepCache::new();
-            let cold = cache.simulate_network(m.as_ref(), &net, node);
-            let warm = cache.simulate_network(m.as_ref(), &net, node);
+            let cold = cache.simulate_network(m.as_ref(), &net, &op);
+            let warm = cache.simulate_network(m.as_ref(), &net, &op);
             assert_bit_identical(&direct, &cold, &format!("{} cold", m.name()))?;
             assert_bit_identical(&direct, &warm, &format!("{} warm", m.name()))?;
             // The dedup must actually engage: unique tuples simulated
@@ -100,10 +108,10 @@ fn prop_cache_shared_across_nets_nodes_and_machines_stays_exact() {
     let cache = SweepCache::new();
     check(25, |g| {
         let net = random_net(g);
-        let node = *g.choose(&[45.0, 28.0, 7.0]);
+        let op = random_op(g);
         let m = g.choose(&machines);
-        let direct = m.simulate_network(&net, node);
-        let cached = cache.simulate_network(m.as_ref(), &net, node);
+        let direct = m.simulate_network(&net, &op);
+        let cached = cache.simulate_network(m.as_ref(), &net, &op);
         assert_bit_identical(&direct, &cached, m.name())
     });
 }
@@ -131,12 +139,15 @@ fn prop_parallel_network_sim_deterministic_across_thread_counts() {
     let machines = all_machines();
     check(10, |g| {
         let nets: Vec<Network> = (0..g.usize(1, 4)).map(|_| random_net(g)).collect();
-        let nodes = [45.0, 7.0];
+        let ops = [
+            OperatingPoint::node(45.0),
+            OperatingPoint::node(7.0).bits(4, 4),
+        ];
         let serial = sweep_on(
             &Pool::new(1),
             &machines,
             &nets,
-            &nodes,
+            &ops,
             &SweepCache::new(),
         );
         for threads in [2, 5, 13] {
@@ -144,7 +155,7 @@ fn prop_parallel_network_sim_deterministic_across_thread_counts() {
                 &Pool::new(threads),
                 &machines,
                 &nets,
-                &nodes,
+                &ops,
                 &SweepCache::new(),
             );
             prop_assert(par.len() == serial.len(), "record count")?;
@@ -152,7 +163,7 @@ fn prop_parallel_network_sim_deterministic_across_thread_counts() {
                 prop_assert(
                     a.machine == b.machine
                         && a.network == b.network
-                        && a.node_nm == b.node_nm,
+                        && a.op == b.op,
                     "record order",
                 )?;
                 assert_bit_identical(&a.result, &b.result, a.machine)?;
@@ -169,17 +180,17 @@ fn grid_runner_covers_full_grid_in_declared_order() {
         aimc::networks::yolov3::yolov3(200),
         aimc::networks::vgg::vgg16(200),
     ];
-    let nodes = [45.0, 28.0, 7.0];
+    let ops = ops_at_nodes(&[45.0, 28.0, 7.0]);
     let cache = SweepCache::new();
-    let recs: Vec<SweepRecord> = sweep_on(&Pool::auto(), &machines, &nets, &nodes, &cache);
+    let recs: Vec<SweepRecord> = sweep_on(&Pool::auto(), &machines, &nets, &ops, &cache);
     assert_eq!(recs.len(), 4 * 2 * 3);
     let mut i = 0;
     for m in &machines {
         for net in &nets {
-            for &node in &nodes {
+            for op in &ops {
                 assert_eq!(recs[i].machine, m.name());
                 assert_eq!(recs[i].network, net.name);
-                assert_eq!(recs[i].node_nm, node);
+                assert_eq!(recs[i].op, *op);
                 assert!(recs[i].result.ops > 0.0);
                 i += 1;
             }
@@ -215,14 +226,14 @@ fn prop_snapshot_round_trip_bit_identical() {
     let path = temp_snapshot("roundtrip");
     check(15, |g| {
         let net = random_net(g);
-        let node = *g.choose(&[45.0, 28.0, 7.0]);
+        let op = random_op(g);
         let m = g.choose(&machines);
         let cache = SweepCache::new();
-        let direct = cache.simulate_network(m.as_ref(), &net, node);
+        let direct = cache.simulate_network(m.as_ref(), &net, &op);
         cache.save(&path).expect("save");
         let restored = SweepCache::load(&path);
         prop_assert(restored.len() == cache.len(), "entry count restored")?;
-        let replayed = restored.simulate_network(m.as_ref(), &net, node);
+        let replayed = restored.simulate_network(m.as_ref(), &net, &op);
         prop_assert(restored.misses() == 0, "replay must not simulate")?;
         assert_bit_identical(&direct, &replayed, m.name())
     });
@@ -234,7 +245,8 @@ fn snapshot_corruption_is_ignored_not_trusted() {
     let cache = SweepCache::new();
     let net = aimc::networks::yolov3::yolov3(200);
     let m = by_name("systolic").unwrap();
-    let _ = cache.simulate_network(m.as_ref(), &net, 45.0);
+    let op45 = OperatingPoint::node(45.0);
+    let _ = cache.simulate_network(m.as_ref(), &net, &op45);
     let path = temp_snapshot("corrupt");
     cache.save(&path).expect("save");
     let good = std::fs::read_to_string(&path).unwrap();
@@ -247,7 +259,7 @@ fn snapshot_corruption_is_ignored_not_trusted() {
     let cases: Vec<(&str, String)> = vec![
         ("missing file", String::new()),
         ("garbage", "not a snapshot at all\n".to_string()),
-        ("wrong version", good.replacen("-v1", "-v9", 1)),
+        ("wrong version", good.replacen("-v2", "-v9", 1)),
         ("truncated body", {
             let cut = good.len() / 2;
             good[..cut].to_string()
@@ -279,8 +291,8 @@ fn snapshot_corruption_is_ignored_not_trusted() {
         let loaded = SweepCache::load(&path);
         assert_eq!(loaded.len(), 0, "{what}: corrupt snapshot must load empty");
         // And a fresh simulation through it still produces exact results.
-        let r = loaded.simulate_network(m.as_ref(), &net, 45.0);
-        let direct = m.simulate_network(&net, 45.0);
+        let r = loaded.simulate_network(m.as_ref(), &net, &op45);
+        let direct = m.simulate_network(&net, &op45);
         assert_bit_identical(&direct, &r, what).unwrap();
     }
     let _ = std::fs::remove_file(&path);
@@ -304,13 +316,14 @@ fn snapshot_never_aliases_across_config_fingerprints() {
     };
     let big = SystolicConfig::default();
 
+    let op45 = OperatingPoint::node(45.0);
     let path = temp_snapshot("alias");
     let writer = SweepCache::new();
-    let small_result = writer.simulate_network(&small, &net, 45.0);
+    let small_result = writer.simulate_network(&small, &net, &op45);
     writer.save(&path).expect("save");
 
     let reader = SweepCache::load(&path);
-    let big_result = reader.simulate_network(&big, &net, 45.0);
+    let big_result = reader.simulate_network(&big, &net, &op45);
     assert_eq!(reader.hits(), 0, "different fingerprint must not hit");
     assert_eq!(reader.misses(), 1);
     assert!(
@@ -319,7 +332,7 @@ fn snapshot_never_aliases_across_config_fingerprints() {
     );
     // Same config + same snapshot DOES hit, bit-identically.
     let reader2 = SweepCache::load(&path);
-    let replay = reader2.simulate_network(&small, &net, 45.0);
+    let replay = reader2.simulate_network(&small, &net, &op45);
     assert_eq!(reader2.hits(), 1);
     assert_eq!(reader2.misses(), 0);
     assert_bit_identical(&small_result, &replay, "same fingerprint").unwrap();
@@ -333,7 +346,8 @@ fn snapshot_files_are_deterministic() {
     let cache = SweepCache::new();
     let net = aimc::networks::vgg::vgg16(200);
     for m in all_machines() {
-        let _ = cache.simulate_network(m.as_ref(), &net, 28.0);
+        let _ = cache.simulate_network(m.as_ref(), &net, &OperatingPoint::node(28.0));
+        let _ = cache.simulate_network(m.as_ref(), &net, &OperatingPoint::node(28.0).bits(4, 8));
     }
     let (p1, p2) = (temp_snapshot("det1"), temp_snapshot("det2"));
     cache.save(&p1).unwrap();

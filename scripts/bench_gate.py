@@ -21,6 +21,9 @@ Usage:
         rust/BENCH_serve.json rust/BENCH_sweep.json
 
 Tolerance defaults to 0.15 (15%); override with BENCH_GATE_TOLERANCE.
+A metric the bench run emits but the baseline lacks (a key added after
+the baseline was last refreshed) is reported and SKIPPED, never a
+failure — the gate only binds on keys the baseline actually carries.
 A baseline marked "provisional": true (floor values that were never
 measured on CI hardware) runs the same comparison but is ADVISORY: a
 miss is printed loudly and exits 0, so a guessed floor can never block
@@ -125,10 +128,19 @@ def main(argv):
         )
 
     failures = []
+    skipped = []
     for key, got in measured.items():
         want = baseline.get(key)
         if want is None:
-            failures.append(f"baseline missing {key!r}")
+            # A metric the current bench emits but the committed baseline
+            # predates (e.g. a key added by a newer bench run). Skipping
+            # keeps old baselines green across metric additions; the gate
+            # starts binding for the key after the next --update.
+            print(
+                f"bench gate: SKIP — baseline has no {key!r} "
+                f"(measured {got:.2f}); re-baseline with --update to guard it"
+            )
+            skipped.append(key)
             continue
         floor = float(want) * (1.0 - tol)
         verdict = "ok" if got >= floor else "REGRESSED"
@@ -150,7 +162,8 @@ def main(argv):
             print("bench gate: PASS (advisory)")
             return
         fail("; ".join(failures))
-    print("bench gate: PASS")
+    suffix = f" ({len(skipped)} metric(s) skipped: {', '.join(skipped)})" if skipped else ""
+    print(f"bench gate: PASS{suffix}")
 
 
 if __name__ == "__main__":
