@@ -150,6 +150,30 @@ fn bench_sweep_engine(input: usize) {
     report_time("sweep: persistent cache warm", &warm, None);
     let _ = std::fs::remove_file(&snapshot);
 
+    // Transformer decode streams through the same engine: gpt2-small at
+    // a small (batch × context) grid, every machine × the intensity node
+    // pair. Gated as a throughput (grid points per second) so the floor
+    // check stays higher-is-better like the other gate metrics.
+    let decode_cfg = aimc::networks::transformer::TransformerConfig::gpt2_small();
+    let decode_nets: Vec<_> = [(1usize, 64usize), (4, 256), (16, 1024)]
+        .iter()
+        .map(|&(b, s)| decode_cfg.decode(b, s))
+        .collect();
+    let decode_ops = sweep::ops_at_nodes(&report::INTENSITY_NODES);
+    let mut decode_points = 0usize;
+    let decode = time_it(5, || {
+        let cache = SweepCache::new();
+        let recs = sweep::sweep_on(&pool, &machines, &decode_nets, &decode_ops, &cache);
+        decode_points = recs.len();
+    });
+    let decode_ms = median_us(&decode) / 1e3;
+    let decode_pps = decode_points as f64 / (decode_ms / 1e3);
+    report_time(
+        "sweep: transformer decode (gpt2)",
+        &decode,
+        Some((decode_points as f64, "points/s")),
+    );
+
     let serial_ms = median_us(&serial) / 1e3;
     let engine_1t_ms = median_us(&engine_1t) / 1e3;
     let engine_ms = median_us(&engine) / 1e3;
@@ -157,7 +181,7 @@ fn bench_sweep_engine(input: usize) {
     let cold_ms = median_us(&cold) / 1e3;
     let warm_ms = median_us(&warm) / 1e3;
     let json = format!(
-        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"engine_parallel_bits2_ms\": {engine_bits2_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"persistent_cache\": {{ \"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.3}, \"warm_speedup\": {:.2}, \"warm_reuse_pct\": {warm_reuse:.1} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"sweep\",\n  \"grid\": {{ \"machines\": {}, \"networks\": {}, \"nodes\": {} }},\n  \"threads\": {},\n  \"serial_direct_ms\": {serial_ms:.3},\n  \"engine_1thread_ms\": {engine_1t_ms:.3},\n  \"engine_parallel_ms\": {engine_ms:.3},\n  \"engine_parallel_bits2_ms\": {engine_bits2_ms:.3},\n  \"speedup_vs_serial\": {:.2},\n  \"cache\": {{ \"hits\": {}, \"misses\": {} }},\n  \"persistent_cache\": {{ \"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.3}, \"warm_speedup\": {:.2}, \"warm_reuse_pct\": {warm_reuse:.1} }},\n  \"transformer_decode\": {{ \"streams\": {}, \"points\": {decode_points}, \"ms\": {decode_ms:.3}, \"points_per_s\": {decode_pps:.1} }},\n  \"report_regen_ms\": {:.3}\n}}\n",
         machines.len(),
         nets.len(),
         nodes.len(),
@@ -166,6 +190,7 @@ fn bench_sweep_engine(input: usize) {
         shared_cache.hits(),
         shared_cache.misses(),
         cold_ms / warm_ms,
+        decode_nets.len(),
         median_us(&figures) / 1e3,
     );
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());

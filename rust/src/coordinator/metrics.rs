@@ -39,6 +39,10 @@ pub struct Metrics {
     /// (`ServerConfig::max_uj_per_inf`), counted separately from
     /// backpressure rejections.
     budget_rejected: usize,
+    /// Layer families of the resident network a configured surrogate
+    /// table could NOT price (so pricing fell back to co-simulation).
+    /// 0 when no surrogate was configured or coverage was complete.
+    surrogate_miss: usize,
 }
 
 impl Metrics {
@@ -102,6 +106,12 @@ impl Metrics {
         self.budget_rejected += n;
     }
 
+    /// Count layer families a configured surrogate table failed to
+    /// cover (each forces the co-simulation fallback).
+    pub fn record_surrogate_miss(&mut self, n: usize) {
+        self.surrogate_miss += n;
+    }
+
     /// Set the throughput window explicitly (the server stamps serving
     /// start → shutdown on the merged aggregate).
     pub fn set_window(&mut self, started: Instant, finished: Instant) {
@@ -127,6 +137,7 @@ impl Metrics {
             self.energy_source = other.energy_source;
         }
         self.budget_rejected += other.budget_rejected;
+        self.surrogate_miss += other.surrogate_miss;
     }
 
     pub fn count(&self) -> usize {
@@ -167,6 +178,12 @@ impl Metrics {
     /// Requests refused by the energy-budget admission policy.
     pub fn budget_rejected(&self) -> usize {
         self.budget_rejected
+    }
+
+    /// Layer families a configured surrogate table could not price
+    /// (0 = full coverage or no surrogate configured).
+    pub fn surrogate_miss(&self) -> usize {
+        self.surrogate_miss
     }
 
     /// Projected µJ per inference on the systolic machine. `None` when
@@ -233,6 +250,12 @@ impl Metrics {
         }
         if self.budget_rejected > 0 {
             s.push_str(&format!(", {} over-budget", self.budget_rejected));
+        }
+        if self.surrogate_miss > 0 {
+            s.push_str(&format!(
+                ", {} surrogate miss(es) → co-simulation",
+                self.surrogate_miss
+            ));
         }
         if let (Some(sys), Some(opt)) = (
             self.systolic_uj_per_inference(),
@@ -385,5 +408,20 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.budget_rejected(), 5);
         assert_eq!(m.energy_source(), "surrogate");
+    }
+
+    #[test]
+    fn surrogate_miss_counts_and_surfaces() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(10));
+        assert_eq!(m.surrogate_miss(), 0);
+        assert!(!m.summary().contains("surrogate miss"));
+        m.record_surrogate_miss(2);
+        assert_eq!(m.surrogate_miss(), 2);
+        assert!(m.summary().contains("2 surrogate miss(es)"), "{}", m.summary());
+        let mut other = Metrics::new();
+        other.record_surrogate_miss(1);
+        m.merge(&other);
+        assert_eq!(m.surrogate_miss(), 3);
     }
 }

@@ -226,6 +226,12 @@ pub struct ServerConfig {
     /// when available, else from one startup co-simulation. `None`
     /// disables the policy.
     pub max_uj_per_inf: Option<f64>,
+    /// Network whose energy prices every batch (`aimc serve --network`)
+    /// — e.g. a transformer decode stream. Pricing only: the compiled
+    /// executor datapaths stay SmallCNN-shaped (the only AOT artifacts),
+    /// so request/response tensor shapes are unchanged. `None` means the
+    /// resident SmallCNN.
+    pub resident: Option<crate::networks::Network>,
 }
 
 impl Default for ServerConfig {
@@ -243,6 +249,7 @@ impl Default for ServerConfig {
             energy_bits: (8, 8),
             surrogate: None,
             max_uj_per_inf: None,
+            resident: None,
         }
     }
 }
@@ -261,6 +268,10 @@ pub struct Server {
     quote: Option<EnergyQuote>,
     /// Admission energy budget, µJ per inference.
     max_uj_per_inf: Option<f64>,
+    /// Shape families the surrogate could not price at startup (0 when
+    /// fully covered or no table) — folded into the final metrics on
+    /// shutdown so the co-simulation fallback is visible post-hoc.
+    surrogate_misses: usize,
     started: Instant,
     dispatcher: Option<JoinHandle<Metrics>>,
     workers: Vec<JoinHandle<Metrics>>,
@@ -316,18 +327,29 @@ impl Server {
         // the whole server ever does; without one the workers keep the
         // per-batch co-simulation path (memoized, see below) and only an
         // energy-budget policy forces a single startup co-simulation.
-        let resident = super::smallcnn_network();
+        let resident = cfg.resident.clone().unwrap_or_else(super::smallcnn_network);
         let serving_op = OperatingPoint::node(cfg.energy_node_nm)
             .bits(cfg.energy_bits.0, cfg.energy_bits.1);
+        let mut surrogate_misses = 0usize;
         let surrogate_quote: Option<EnergyQuote> = cfg.surrogate.as_ref().and_then(|table| {
             let q = table.quote_network_op(&resident, &serving_op);
             if q.is_none() {
-                eprintln!(
-                    "warn: surrogate table does not cover the resident network at {} nm \
-                     {}b; falling back to per-batch co-simulation",
-                    serving_op.node_nm,
-                    serving_op.bits_label()
-                );
+                // Name each uncovered shape family once, so a fallback
+                // to co-simulation is actionable, not just visible.
+                let missing = table.uncovered_families(&resident, &serving_op);
+                for fam in &missing {
+                    eprintln!(
+                        "warn: surrogate table has no {}×{} stride-{} model for {} at \
+                         {} nm {}b; falling back to per-batch co-simulation",
+                        fam.kh,
+                        fam.kw,
+                        fam.stride,
+                        resident.name,
+                        serving_op.node_nm,
+                        serving_op.bits_label()
+                    );
+                }
+                surrogate_misses = missing.len().max(1);
             }
             q
         });
@@ -367,6 +389,7 @@ impl Server {
             let warm = cfg.warm_start;
             let energy = cfg.energy;
             let worker_op = serving_op;
+            let worker_net = resident.clone();
             workers.push(std::thread::spawn(move || {
                 let exec = match (*factory)(w) {
                     Ok(e) => e,
@@ -389,7 +412,7 @@ impl Server {
                 }
                 let _ = ready_tx.send(Ok(()));
                 let mut shard = Metrics::new();
-                let net = super::smallcnn_network();
+                let net = worker_net;
                 // The energy model is batch-size-independent today, so
                 // each worker prices the schedule once (the shared cache
                 // still dedups that cold simulation across workers) and
@@ -465,6 +488,7 @@ impl Server {
             max_pending,
             quote: admission_quote,
             max_uj_per_inf: cfg.max_uj_per_inf,
+            surrogate_misses,
             started: Instant::now(),
             dispatcher: Some(dispatcher),
             workers,
@@ -612,6 +636,7 @@ impl Server {
         }
         agg.record_rejected(self.rejected.value());
         agg.record_budget_rejected(self.budget_rejected.value());
+        agg.record_surrogate_miss(self.surrogate_misses);
         agg.set_window(self.started, Instant::now());
         agg
     }
@@ -956,6 +981,7 @@ mod tests {
         let m = s.shutdown();
         assert_eq!(m.energy_images(), 10);
         assert_eq!(m.energy_source(), "surrogate");
+        assert_eq!(m.surrogate_miss(), 0, "full coverage, no fallback");
         let sys = m.systolic_uj_per_inference().expect("priced");
         let opt = m.optical_uj_per_inference().expect("priced");
         // Per-request attribution is the startup quote...
@@ -1014,6 +1040,53 @@ mod tests {
         let m = s.shutdown();
         assert_eq!(m.energy_images(), 1);
         assert_eq!(m.energy_source(), "co-simulation");
+        // The fallback is counted, not just warned about.
+        assert!(m.surrogate_miss() >= 1, "miss must surface in metrics");
+        assert!(m.summary().contains("surrogate miss"), "{}", m.summary());
+    }
+
+    #[test]
+    fn transformer_decode_resident_prices_batches() {
+        // `aimc serve --network tfm-tiny@decode`: the decode stream
+        // replaces SmallCNN on the pricing path while the executor keeps
+        // its SmallCNN-shaped tensors; a GEMM-covering surrogate prices
+        // it closed-form with zero misses.
+        use crate::energy::surrogate::MachineKind;
+        use crate::networks::transformer::TransformerConfig;
+        let decode = TransformerConfig::tiny().decode(1, 64);
+        let table = SurrogateTable::fit(
+            &SweepCache::new(),
+            &[MachineKind::Systolic, MachineKind::Optical4F],
+            &[45.0],
+            &crate::energy::surrogate::training_corpus(300),
+        )
+        .unwrap();
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                max_pending: 64,
+                surrogate: Some(Arc::new(table)),
+                resident: Some(decode.clone()),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let q = s.request_quote().expect("corpus covers GEMM streams");
+        let mut rng = Rng::new(36);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        let m = s.shutdown();
+        assert_eq!(m.energy_images(), 1);
+        assert_eq!(m.energy_source(), "surrogate");
+        assert_eq!(m.surrogate_miss(), 0);
+        // The quote prices the decode stream, not SmallCNN: it must
+        // agree with the cycle simulators on the transformer layers.
+        let reference =
+            super::super::energy::co_simulate(&decode, &OperatingPoint::node(45.0));
+        let sys_rel = (q.systolic_uj() - reference.systolic_joules() * 1e6).abs()
+            / (reference.systolic_joules() * 1e6);
+        assert!(sys_rel < 0.05, "decode quote off by {sys_rel}");
     }
 
     #[test]

@@ -409,6 +409,28 @@ impl SurrogateTable {
         self.quote_network_op(net, &OperatingPoint::node(node_nm))
     }
 
+    /// Shape families of `net` that [`SurrogateTable::quote_network_op`]
+    /// cannot price at `op` — i.e. families missing a fitted model for
+    /// the systolic or optical-4F machine. First-appearance order,
+    /// deduplicated; empty means the quote path has full coverage.
+    pub fn uncovered_families(&self, net: &Network, op: &OperatingPoint) -> Vec<Family> {
+        let mut seen = std::collections::HashSet::new();
+        let mut missing = Vec::new();
+        for layer in &net.layers {
+            let fam = Family::of(layer);
+            if !seen.insert(fam) {
+                continue;
+            }
+            let covered = [MachineKind::Systolic, MachineKind::Optical4F]
+                .iter()
+                .all(|&kind| self.models.contains_key(&(kind, op.key(), fam)));
+            if !covered {
+                missing.push(fam);
+            }
+        }
+        missing
+    }
+
     // ---- serialization ---------------------------------------------------
 
     /// Deterministic JSON document (models sorted by key).
@@ -580,16 +602,21 @@ pub fn dedup_layers(layers: impl IntoIterator<Item = ConvLayer>) -> Vec<ConvLaye
 }
 
 /// Default training corpus: every unique conv shape of the Table I zoo
-/// at `input` resolution, plus the Table V reference layer — so the
-/// shapes the crossval scenario scores are interpolations of the fit,
-/// never extrapolations. Callers append whatever else they serve (e.g.
-/// the coordinator's resident CNN) before fitting.
+/// at `input` resolution, plus the Table V reference layer, plus the
+/// transformer prefill/decode exemplar streams — so the shapes the
+/// crossval scenario scores (and the GEMM/GEMV rows `aimc intensity`
+/// and `serve --network` price) are interpolations of the fit, never
+/// extrapolations. Callers append whatever else they serve (e.g. the
+/// coordinator's resident CNN) before fitting.
 pub fn training_corpus(input: usize) -> Vec<ConvLayer> {
     let mut layers: Vec<ConvLayer> = Vec::new();
     for net in zoo(input) {
         layers.extend(net.layers);
     }
     layers.push(ConvLayer::square(512, 128, 128, 3, 1));
+    for net in crate::networks::transformer::corpus_networks() {
+        layers.extend(net.layers);
+    }
     dedup_layers(layers)
 }
 
@@ -794,6 +821,54 @@ mod tests {
             let pred = table.predict_network(kind, 45.0, &net).unwrap();
             let rel = (pred - truth).abs() / truth;
             assert!(rel < 0.01, "{}: rel {rel}", kind.name());
+        }
+    }
+
+    #[test]
+    fn uncovered_families_names_the_quote_gap() {
+        let cache = SweepCache::new();
+        let gemm_fam = Family {
+            kh: 1,
+            kw: 1,
+            stride: 1,
+        };
+        // Fit everything EXCEPT the 1×1 GEMM family.
+        let no_gemm: Vec<ConvLayer> = test_corpus()
+            .into_iter()
+            .filter(|l| Family::of(l) != gemm_fam)
+            .collect();
+        let table =
+            SurrogateTable::fit(&cache, &MachineKind::ALL, &[45.0], &no_gemm).unwrap();
+        let op = OperatingPoint::node(45.0);
+        let decode = crate::networks::transformer::TransformerConfig::tiny().decode(1, 64);
+        // Every layer of a decode stream is a GEMM/GEMV: exactly one gap.
+        assert_eq!(table.uncovered_families(&decode, &op), vec![gemm_fam]);
+        assert!(table.quote_network_op(&decode, &op).is_none());
+        // A covered network reports no gaps and quotes fine.
+        let covered = crate::networks::vgg::vgg16(300);
+        assert!(table.uncovered_families(&covered, &op).is_empty());
+        assert!(table.quote_network_op(&covered, &op).is_some());
+        // An operating point that was never fitted misses everything.
+        assert!(!table
+            .uncovered_families(&covered, &OperatingPoint::node(7.0))
+            .is_empty());
+    }
+
+    #[test]
+    fn training_corpus_covers_transformer_streams() {
+        // The default corpus must let the quote path price transformer
+        // prefill AND decode streams without co-simulation fallback.
+        let cache = SweepCache::new();
+        let table =
+            SurrogateTable::fit(&cache, &MachineKind::ALL, &[45.0], &test_corpus()).unwrap();
+        let op = OperatingPoint::node(45.0);
+        for net in crate::networks::transformer::corpus_networks() {
+            assert!(
+                table.uncovered_families(&net, &op).is_empty(),
+                "{}: gap in default corpus",
+                net.name
+            );
+            assert!(table.quote_network_op(&net, &op).is_some());
         }
     }
 

@@ -23,7 +23,11 @@
 //!   re-simulating (cross-validated against the simulators to
 //!   [`energy::surrogate::ERR_BOUND`]).
 //! * [`technode`] — CMOS technology-node energy scaling (Stillmaker & Baas).
-//! * [`networks`] — conv-layer shape zoo for the eight CNNs of Table I.
+//! * [`networks`] — conv-layer shape zoo for the eight CNNs of Table I,
+//!   plus [`networks::transformer`]: decoder-family prefill/decode layer
+//!   streams (GEMMs/GEMVs as 1×1 convs, selected by `name@phase`) and
+//!   [`networks::stats`] FLOPs/bytes arithmetic-intensity accounting
+//!   behind the `aimc intensity` crossover trace.
 //! * [`analytic`] — closed-form efficiency models (eqs. 3, 5, 14, 24).
 //! * [`simulator`] — cycle-accurate machines for all four processor
 //!   classes (systolic, ReRAM, planar photonic, optical 4F), unified
@@ -45,7 +49,10 @@
 //!   counter, a dispatcher draining the shards round-robin into
 //!   per-worker [`util::spsc`] batch lanes (least-loaded), per-worker
 //!   metrics shards with per-batch energy pricing (fitted surrogate
-//!   quote when configured, co-simulation otherwise) merged at
+//!   quote when configured, co-simulation otherwise — misses are
+//!   logged per shape family and counted in the metrics) against a
+//!   configurable resident network (`aimc serve --network`, e.g. a
+//!   transformer decode stream) merged at
 //!   shutdown, optional energy-budget admission
 //!   (`ServerConfig::max_uj_per_inf`), a condvar drain barrier for the
 //!   lifecycle, and an

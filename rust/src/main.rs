@@ -17,6 +17,12 @@
 //! `--surrogate` the workers price batches through the fitted table
 //! instead of co-simulating, and `--max-uj-per-inf` arms the
 //! energy-budget admission policy).
+//!
+//! Transformer workloads select by `name[@prefill|@decode]`
+//! (`gpt2-small`, `tinyllama`, `tfm-tiny`): `intensity` sweeps the
+//! prefill→decode arithmetic-intensity crossover over a `--batch` ×
+//! `--seq` grid, `simulate --net` and `serve --network` accept the same
+//! selector (serve prices its per-batch energy on the selected stream).
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -39,9 +45,38 @@ fn spec() -> Spec {
         "aimc",
         "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
          commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
-         crossval surrogate-crossval all simulate sweep pareto zoo verify fit-surrogate serve",
+         crossval surrogate-crossval all simulate sweep intensity pareto zoo verify \
+         fit-surrogate serve",
     )
-    .opt("net", "network name (fig8/fig9/fig10/simulate)", None)
+    .opt(
+        "net",
+        "network name (fig8/fig9/fig10/simulate); simulate also takes a \
+         transformer selector name[@prefill|@decode]",
+        None,
+    )
+    .opt(
+        "network",
+        "transformer stream selector name[@prefill|@decode] for intensity/serve \
+         (e.g. gpt2-small@decode; configs: gpt2-small, tinyllama, tfm-tiny)",
+        None,
+    )
+    .opt(
+        "batch",
+        "comma-separated batch grid (intensity); first entry sizes the \
+         simulate/serve stream (default 1,4,16 / 1)",
+        None,
+    )
+    .opt(
+        "seq",
+        "comma-separated sequence / KV-context grid (intensity); first entry \
+         sizes the simulate/serve stream (default 64,256,1024 / 256)",
+        None,
+    )
+    .opt(
+        "nodes",
+        "comma-separated technology-node list for intensity",
+        Some("45,7"),
+    )
     .opt("input", "input resolution (pixels per side)", Some("1000"))
     .opt("node", "technology node in nm (simulate/serve)", Some("45"))
     .opt(
@@ -124,6 +159,66 @@ fn parse_bits(spec: &str) -> anyhow::Result<Vec<(u32, u32)>> {
         anyhow::bail!("--bits needs at least one entry");
     }
     Ok(out)
+}
+
+/// Parse a comma-separated list of positive integers (`--batch`, `--seq`).
+fn parse_usize_list(opt: &str, spec: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let v: usize = entry
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --{opt} entry {entry:?} (expected an integer)"))?;
+        if v == 0 {
+            anyhow::bail!("--{opt} entries must be positive, got {entry:?}");
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        anyhow::bail!("--{opt} needs at least one entry");
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated list of positive numbers (`--nodes`).
+fn parse_f64_list(opt: &str, spec: &str) -> anyhow::Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let v: f64 = entry
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --{opt} entry {entry:?} (expected a number)"))?;
+        let ok = v.is_finite() && v > 0.0;
+        if !ok {
+            anyhow::bail!("--{opt} entries must be positive, got {entry:?}");
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        anyhow::bail!("--{opt} needs at least one entry");
+    }
+    Ok(out)
+}
+
+/// Resolve a network name: the serving CNN, a transformer stream
+/// selector (`name[@prefill|@decode]` at `batch`×`seq`), or a zoo CNN
+/// at `input` px — in that precedence order.
+fn resolve_network(
+    name: &str,
+    input: usize,
+    batch: usize,
+    seq: usize,
+) -> Option<aimc::networks::Network> {
+    if name.eq_ignore_ascii_case("smallcnn") {
+        return Some(smallcnn_network());
+    }
+    aimc::networks::transformer::resolve(name, batch, seq).or_else(|| by_name(name, input))
 }
 
 /// Output sink: text and CSV stream per dataset exactly as the
@@ -277,6 +372,40 @@ fn run() -> anyhow::Result<()> {
                         cache.stats()
                     );
                 }
+                "intensity" => {
+                    use aimc::networks::transformer::{self, DEFAULT_BATCHES, DEFAULT_SEQS};
+                    let sel = args.get("network").or(net).unwrap_or("gpt2-small");
+                    let (tcfg, phase) = transformer::parse_selector(sel).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown transformer {sel:?} (gpt2-small | tinyllama | tfm-tiny, \
+                             optional @prefill/@decode)"
+                        )
+                    })?;
+                    let batches = match args.get("batch") {
+                        Some(v) => parse_usize_list("batch", v)?,
+                        None => DEFAULT_BATCHES.to_vec(),
+                    };
+                    let seqs = match args.get("seq") {
+                        Some(v) => parse_usize_list("seq", v)?,
+                        None => DEFAULT_SEQS.to_vec(),
+                    };
+                    let nodes = parse_f64_list("nodes", args.get_or("nodes", "45,7"))?;
+                    let bits = match args.get("bits") {
+                        Some(spec) => parse_bits(spec)?,
+                        None => Vec::new(),
+                    };
+                    let sc =
+                        report::intensity_scenario(&tcfg, phase, &nodes, &bits, &batches, &seqs);
+                    let t0 = Instant::now();
+                    let ds = sc.eval(&ctx);
+                    sink.emit(&ds);
+                    eprintln!(
+                        "intensity crossover: {} rows in {:.2} s (cache: {})",
+                        sc.row_count(),
+                        t0.elapsed().as_secs_f64(),
+                        cache.stats()
+                    );
+                }
                 "pareto" => {
                     let sc = match args.get("bits") {
                         Some(spec) => {
@@ -296,7 +425,7 @@ fn run() -> anyhow::Result<()> {
                 }
                 "verify" => cmd_verify()?,
                 "fit-surrogate" => cmd_fit_surrogate(&args, input, &cache)?,
-                "serve" => cmd_serve(&args)?,
+                "serve" => cmd_serve(&args, input)?,
                 other => anyhow::bail!("unknown command {other:?}\n\n{}", s.usage()),
             }
         }
@@ -336,12 +465,20 @@ fn cmd_simulate(
         None => OperatingPoint::node(node),
     };
     let name = args.get("net").unwrap_or("YOLOv3");
-    let net = if name.eq_ignore_ascii_case("smallcnn") {
-        smallcnn_network()
-    } else {
-        by_name(name, input)
-            .ok_or_else(|| anyhow::anyhow!("unknown network {name:?} (try `aimc zoo`)"))?
+    let batch = match args.get("batch") {
+        Some(v) => parse_usize_list("batch", v)?[0],
+        None => 1,
     };
+    let seq = match args.get("seq") {
+        Some(v) => parse_usize_list("seq", v)?[0],
+        None => 256,
+    };
+    let net = resolve_network(name, input, batch, seq).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown network {name:?} (try `aimc zoo`, or a transformer selector \
+             like gpt2-small@decode)"
+        )
+    })?;
     let mname = args.get_or("machine", "systolic");
     let m = machine::by_name(mname).ok_or_else(|| {
         anyhow::anyhow!("unknown machine {mname:?} (systolic | optical4f | photonic | reram)")
@@ -448,9 +585,32 @@ fn cmd_fit_surrogate(
     Ok(())
 }
 
-fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
     let path = ConvPath::parse(args.get_or("path", "exact"))
         .ok_or_else(|| anyhow::anyhow!("bad --path (exact | systolic | fft)"))?;
+    // `--network` swaps the network the energy pricing (surrogate quote
+    // or co-simulation) runs on — e.g. `gpt2-small@decode` prices the
+    // decode stream serving actually executes per step. The compiled
+    // executor datapaths stay SmallCNN-shaped (the only AOT artifacts).
+    let resident = match args.get("network") {
+        Some(sel) => {
+            let batch = match args.get("batch") {
+                Some(v) => parse_usize_list("batch", v)?[0],
+                None => 1,
+            };
+            let seq = match args.get("seq") {
+                Some(v) => parse_usize_list("seq", v)?[0],
+                None => 256,
+            };
+            Some(resolve_network(sel, input, batch, seq).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --network {sel:?} (try a zoo name or a transformer \
+                     selector like gpt2-small@decode)"
+                )
+            })?)
+        }
+        None => None,
+    };
     let n_req = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", 2)?;
     let max_pending = args.get_usize("max-pending", 1024)?;
@@ -483,10 +643,11 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
     };
     println!(
         "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing){}{}",
+         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing on {}){}{}",
         energy_bits.0,
         energy_bits.1,
         if surrogate.is_some() { "surrogate" } else { "co-simulation" },
+        resident.as_ref().map(|n| n.name).unwrap_or("SmallCNN"),
         match max_uj_per_inf {
             Some(b) => format!(", budget {b} µJ/inf"),
             None => String::new(),
@@ -502,6 +663,7 @@ fn cmd_serve(args: &aimc::util::cli::Args) -> anyhow::Result<()> {
         energy_bits,
         surrogate,
         max_uj_per_inf,
+        resident,
         ..Default::default()
     };
     let server = if synthetic {

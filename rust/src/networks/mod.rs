@@ -9,12 +9,18 @@
 //! from its published structure at a configurable input resolution
 //! (default 1000×1000 = 1 Mpx), tracking spatial size through
 //! stride-2 stages exactly as the paper does.
+//!
+//! The [`transformer`] module grows the zoo beyond CNNs: decoder-family
+//! prefill/decode layer streams (GEMMs/GEMVs as 1×1 convs) expressed in
+//! the same [`ConvLayer`] vocabulary, selected by `name@phase` (e.g.
+//! `gpt2-small@decode`) via [`transformer::resolve`].
 
 pub mod densenet;
 pub mod googlenet;
 pub mod inception;
 pub mod resnet;
 pub mod stats;
+pub mod transformer;
 pub mod vgg;
 pub mod yolov3;
 

@@ -1,7 +1,45 @@
-//! Network-level statistics: the rows of Tables I, II and III.
+//! Network-level statistics: the rows of Tables I, II and III, plus the
+//! FLOPs/byte arithmetic-intensity accounting behind `aimc intensity`.
 
 use super::{ConvLayer, Network};
 use crate::util::stats::{mean, median};
+
+/// FLOPs of one layer forward pass (paper convention: 2·MACs).
+pub fn layer_flops(l: &ConvLayer) -> f64 {
+    l.ops()
+}
+
+/// Off-chip traffic of one layer forward pass in bytes at
+/// `bytes_per_elem` bytes per tensor element: input activations, output
+/// activations and weights each moved once — exactly eq. (9)'s memory
+/// term, so `flops_per_byte(l, 1.0) == l.arithmetic_intensity()`.
+pub fn layer_bytes(l: &ConvLayer, bytes_per_elem: f64) -> f64 {
+    let no = l.n_out() as f64;
+    let input = l.input_size();
+    let output = no * no * l.c_out as f64;
+    (input + output + l.weights()) * bytes_per_elem
+}
+
+/// Arithmetic intensity of one layer in FLOPs per byte.
+pub fn flops_per_byte(l: &ConvLayer, bytes_per_elem: f64) -> f64 {
+    layer_flops(l) / layer_bytes(l, bytes_per_elem)
+}
+
+/// Total FLOPs of one network forward pass.
+pub fn network_flops(net: &Network) -> f64 {
+    net.layers.iter().map(layer_flops).sum()
+}
+
+/// Total bytes moved by one network forward pass.
+pub fn network_bytes(net: &Network, bytes_per_elem: f64) -> f64 {
+    net.layers.iter().map(|l| layer_bytes(l, bytes_per_elem)).sum()
+}
+
+/// Whole-network arithmetic intensity: total FLOPs over total bytes.
+/// This is the x-axis of the `aimc intensity` crossover trace.
+pub fn network_intensity(net: &Network, bytes_per_elem: f64) -> f64 {
+    network_flops(net) / network_bytes(net, bytes_per_elem)
+}
 
 /// Table I row: conv-layer shape statistics of one network.
 #[derive(Clone, Debug)]
@@ -170,6 +208,62 @@ mod tests {
         let (_, n, _) = optical4f_dims(&l, Some(1024 * 1024));
         let expect = 9.0 * 1.0 * 8.0 / (1.0 + 8.0);
         assert!((n - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_flops_and_bytes_pin() {
+        // 32×32×16 → 32 channels, 3×3: FLOPs = 2·32²·9·16·32 and
+        // bytes = 32²·16 + 32²·32 + 9·16·32 at one byte per element.
+        let l = ConvLayer::square(32, 16, 32, 3, 1);
+        assert_eq!(layer_flops(&l), 9_437_184.0);
+        assert_eq!(layer_bytes(&l, 1.0), 16_384.0 + 32_768.0 + 4_608.0);
+        let a = flops_per_byte(&l, 1.0);
+        assert!((a - 175.5476).abs() < 1e-3, "a = {a}");
+    }
+
+    #[test]
+    fn gemm_flops_and_bytes_pin() {
+        // GEMM [256×128]·[128×64] via the 1×1-conv mapping.
+        let l = crate::networks::transformer::gemm(256, 128, 64);
+        assert_eq!(layer_flops(&l), 2.0 * 256.0 * 128.0 * 64.0);
+        assert_eq!(layer_bytes(&l, 1.0), 32_768.0 + 16_384.0 + 8_192.0);
+        let a = flops_per_byte(&l, 1.0);
+        assert!((a - 73.1428).abs() < 1e-3, "a = {a}");
+    }
+
+    #[test]
+    fn batch1_gemv_is_memory_bound() {
+        // GEMV [1×512]·[512×512]: weights dominate traffic, so the
+        // intensity pins just under 2 FLOPs/elem — the decode regime.
+        let l = crate::networks::transformer::gemm(1, 512, 512);
+        assert_eq!(layer_flops(&l), 524_288.0);
+        assert_eq!(layer_bytes(&l, 1.0), 512.0 + 512.0 + 262_144.0);
+        let a = flops_per_byte(&l, 1.0);
+        assert!(a < 2.0 && a > 1.9, "a = {a}");
+    }
+
+    #[test]
+    fn flops_per_byte_matches_eq9_at_unit_bytes() {
+        for l in [
+            ConvLayer::square(100, 16, 32, 3, 1),
+            ConvLayer::square(64, 8, 16, 3, 2),
+            crate::networks::transformer::gemm(256, 768, 768),
+        ] {
+            assert_eq!(flops_per_byte(&l, 1.0), l.arithmetic_intensity());
+            // Wider elements scale traffic linearly.
+            assert_eq!(layer_bytes(&l, 2.0), 2.0 * layer_bytes(&l, 1.0));
+        }
+    }
+
+    #[test]
+    fn network_intensity_is_flops_over_bytes() {
+        let net = crate::networks::transformer::TransformerConfig::tiny().decode(1, 64);
+        let f = network_flops(&net);
+        let b = network_bytes(&net, 1.0);
+        assert_eq!(f, 2.0 * net.total_macs());
+        assert_eq!(network_intensity(&net, 1.0), f / b);
+        // Decode streams sit deep in the memory-bound regime.
+        assert!(network_intensity(&net, 1.0) < 2.0);
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Decoder-transformer workload generator: prefill and decode streams.
+//!
+//! The paper's central claim is that analog in-memory efficiency scales
+//! with problem size and *arithmetic intensity*; transformers exercise
+//! both extremes of that axis in one model. A decoder forward pass runs
+//! in two regimes:
+//!
+//! * **prefill** — the whole prompt at once: every projection is a GEMM
+//!   with `batch·seq` rows, high intensity (weights amortize over many
+//!   activations), the regime where the digital machine is comfortable;
+//! * **decode** — one token per sequence per step: the same projections
+//!   collapse to `batch`-row GEMVs against the resident weights plus a
+//!   KV-cache-length attention, the low-intensity memory-wall regime
+//!   where in-memory compute should dominate.
+//!
+//! Both streams are emitted as plain [`Network`]s of 1×1 stride-1
+//! [`ConvLayer`]s: a GEMM `[rows × d_in]·[d_in × d_out]` maps exactly
+//! onto a 1×1 conv with spatial side `n = √rows` — `macs() =
+//! rows·d_in·d_out` and `matmul_dims() = (rows, d_in, d_out)` — so the
+//! four cycle simulators, the analytic models, [`SweepCache`], the
+//! surrogate fitter and the serving path all consume transformers
+//! unchanged. `rows` values that are not perfect squares are padded up
+//! to the next square grid (the defaults below are chosen so no padding
+//! ever happens in shipped grids).
+//!
+//! Attention is emitted with heads folded: `n_heads·d_head = d_model`,
+//! so the per-head score/AV batches fold into one `d_model`-wide GEMM
+//! with an identical MAC count. Causal masking is *not* discounted
+//! (full-`seq` scores), matching the usual roofline-accounting
+//! convention.
+//!
+//! [`SweepCache`]: crate::simulator::SweepCache
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+use super::{ConvLayer, Network};
+
+/// Which half of the serving loop a layer stream models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Prompt ingestion: `batch·seq`-row GEMMs, high intensity.
+    Prefill,
+    /// Token generation: `batch`-row GEMVs, low intensity.
+    Decode,
+}
+
+impl Phase {
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s.to_ascii_lowercase().as_str() {
+            "prefill" => Some(Phase::Prefill),
+            "decode" => Some(Phase::Decode),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    /// Tokens produced by ONE forward pass of the stream: prefill
+    /// ingests the whole prompt, decode emits one token per sequence.
+    pub fn tokens(self, batch: usize, seq: usize) -> usize {
+        match self {
+            Phase::Prefill => batch * seq,
+            Phase::Decode => batch,
+        }
+    }
+}
+
+/// A decoder-family configuration (GPT-2-class or Llama-class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    /// Model width (`n_heads · d_head`).
+    pub d_model: usize,
+    /// Number of decoder blocks.
+    pub n_layers: usize,
+    /// Attention heads (folded into `d_model`-wide GEMMs; kept for
+    /// documentation and the `d_head` invariant).
+    pub n_heads: usize,
+    /// MLP hidden width.
+    pub ff_dim: usize,
+    /// Output vocabulary (LM-head width).
+    pub vocab: usize,
+    /// Llama-style gated MLP (SwiGLU): the up-projection carries a
+    /// fused gate, doubling its output width.
+    pub gated_mlp: bool,
+}
+
+impl TransformerConfig {
+    /// GPT-2 small (124M): 12 × d768, GELU MLP ×4, tied 50257 vocab.
+    pub fn gpt2_small() -> Self {
+        TransformerConfig {
+            name: "gpt2-small",
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            ff_dim: 3072,
+            vocab: 50257,
+            gated_mlp: false,
+        }
+    }
+
+    /// TinyLlama-1.1B, the Llama-class config: 22 × d2048, SwiGLU
+    /// ff 5632, 32000 vocab.
+    pub fn tinyllama() -> Self {
+        TransformerConfig {
+            name: "tinyllama",
+            d_model: 2048,
+            n_layers: 22,
+            n_heads: 32,
+            ff_dim: 5632,
+            vocab: 32000,
+            gated_mlp: true,
+        }
+    }
+
+    /// Deliberately tiny config for CI smoke runs and unit tests.
+    pub fn tiny() -> Self {
+        TransformerConfig {
+            name: "tfm-tiny",
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            ff_dim: 128,
+            vocab: 256,
+            gated_mlp: false,
+        }
+    }
+
+    /// Every shipped config, for name lookup and corpus generation.
+    pub fn all() -> [TransformerConfig; 3] {
+        [Self::gpt2_small(), Self::tinyllama(), Self::tiny()]
+    }
+
+    /// Case-insensitive config lookup by name.
+    pub fn by_name(name: &str) -> Option<TransformerConfig> {
+        let lower = name.to_ascii_lowercase();
+        Self::all().into_iter().find(|c| c.name == lower)
+    }
+
+    /// One decoder block's six GEMMs at `rows` activation rows against
+    /// a `kv`-long key/value context.
+    fn push_block(&self, rows: usize, kv: usize, layers: &mut Vec<ConvLayer>) {
+        let d = self.d_model;
+        // Fused QKV projection (GPT-2's c_attn; Llama's separate Q/K/V
+        // have the identical MAC count).
+        layers.push(gemm(rows, d, 3 * d));
+        // Attention scores QKᵀ, heads folded: Σ_heads rows·d_head·kv
+        // = rows·d_model·kv.
+        layers.push(gemm(rows, d, kv));
+        // Attention·V, heads folded likewise.
+        layers.push(gemm(rows, kv, d));
+        // Output projection.
+        layers.push(gemm(rows, d, d));
+        // MLP up (gated configs fuse gate+up into one double-width GEMM).
+        let up = if self.gated_mlp { 2 * self.ff_dim } else { self.ff_dim };
+        layers.push(gemm(rows, d, up));
+        // MLP down.
+        layers.push(gemm(rows, self.ff_dim, d));
+    }
+
+    /// Emit one layer stream: the full stack of decoder blocks plus the
+    /// LM head (logits for the last position of each sequence only).
+    ///
+    /// For [`Phase::Prefill`], `seq` is the prompt length (rows =
+    /// `batch·seq`, scores span `seq`). For [`Phase::Decode`], `seq` is
+    /// the resident KV-cache length (rows = `batch`).
+    pub fn stream(&self, phase: Phase, batch: usize, seq: usize) -> Network {
+        assert!(batch > 0 && seq > 0, "batch and seq must be positive");
+        let rows = match phase {
+            Phase::Prefill => batch * seq,
+            Phase::Decode => batch,
+        };
+        let mut layers = Vec::with_capacity(6 * self.n_layers + 1);
+        for _ in 0..self.n_layers {
+            self.push_block(rows, seq, &mut layers);
+        }
+        layers.push(gemm(batch, self.d_model, self.vocab));
+        let name = intern(format!(
+            "{}@{} b{} s{}",
+            self.name,
+            phase.label(),
+            batch,
+            seq
+        ));
+        Network { name, layers }
+    }
+
+    /// Prompt-ingestion stream: `batch` prompts of `seq` tokens.
+    pub fn prefill(&self, batch: usize, seq: usize) -> Network {
+        self.stream(Phase::Prefill, batch, seq)
+    }
+
+    /// Token-generation stream: one step for `batch` sequences against
+    /// a `ctx`-long KV cache.
+    pub fn decode(&self, batch: usize, ctx: usize) -> Network {
+        self.stream(Phase::Decode, batch, ctx)
+    }
+}
+
+/// Default batch grid for intensity sweeps. Perfect squares, so both
+/// the decode rows (`batch`) and the prefill rows (`batch·seq`) map
+/// onto the n×n conv grid with zero padding.
+pub const DEFAULT_BATCHES: [usize; 3] = [1, 4, 16];
+
+/// Default sequence/context grid (perfect squares, see above).
+pub const DEFAULT_SEQS: [usize; 3] = [64, 256, 1024];
+
+/// Map a GEMM `[rows × d_in] · [d_in × d_out]` onto the 1×1-conv layer
+/// vocabulary. Exact when `rows` is a perfect square; otherwise the
+/// row count pads up to the next square grid (accelerators pad tiles
+/// the same way).
+pub fn gemm(rows: usize, d_in: usize, d_out: usize) -> ConvLayer {
+    ConvLayer::square(rows_side(rows), d_in, d_out, 1, 1)
+}
+
+/// Smallest n with n² ≥ rows.
+fn rows_side(rows: usize) -> usize {
+    let mut n = (rows as f64).sqrt() as usize;
+    while n * n < rows {
+        n += 1;
+    }
+    while n > 1 && (n - 1) * (n - 1) >= rows {
+        n -= 1;
+    }
+    n.max(1)
+}
+
+/// Parse a `name[@phase]` selector: `"gpt2-small@decode"` →
+/// `(config, Some(Decode))`, `"gpt2-small"` → `(config, None)`.
+pub fn parse_selector(sel: &str) -> Option<(TransformerConfig, Option<Phase>)> {
+    match sel.split_once('@') {
+        Some((name, phase)) => Some((
+            TransformerConfig::by_name(name)?,
+            Some(Phase::parse(phase)?),
+        )),
+        None => Some((TransformerConfig::by_name(sel)?, None)),
+    }
+}
+
+/// Resolve a `name[@phase]` selector into one concrete stream (phase
+/// defaults to decode — the stream serving actually runs per step).
+pub fn resolve(sel: &str, batch: usize, seq: usize) -> Option<Network> {
+    let (cfg, phase) = parse_selector(sel)?;
+    Some(cfg.stream(phase.unwrap_or(Phase::Decode), batch, seq))
+}
+
+/// Representative transformer streams for the surrogate training
+/// corpus: anchor the GEMM/GEMV (1×1 stride-1) family across the full
+/// rows × width range transformers exercise. After layer dedup this
+/// costs only a handful of extra shapes per machine × node.
+pub fn corpus_networks() -> Vec<Network> {
+    let gpt2 = TransformerConfig::gpt2_small();
+    let tiny = TransformerConfig::tiny();
+    vec![
+        gpt2.prefill(1, 64),
+        gpt2.decode(4, 256),
+        tiny.prefill(1, 64),
+        tiny.decode(1, 64),
+    ]
+}
+
+/// Leak-once string interner so generated stream names satisfy
+/// `Network.name: &'static str`. Repeated streams reuse one allocation.
+fn intern(s: String) -> &'static str {
+    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut set = pool.lock().unwrap();
+    if let Some(&existing) = set.get(s.as_str()) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(s.into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_maps_rows_exactly_for_perfect_squares() {
+        let l = gemm(256, 768, 3 * 768);
+        assert_eq!(l.n, 16);
+        assert_eq!((l.kh, l.kw, l.stride), (1, 1, 1));
+        // macs() = rows·d_in·d_out, matmul_dims() = (rows, d_in, d_out).
+        assert_eq!(l.macs(), 256.0 * 768.0 * 2304.0);
+        assert_eq!(l.matmul_dims(), (256.0, 768.0, 2304.0));
+    }
+
+    #[test]
+    fn gemm_pads_non_square_rows_up() {
+        assert_eq!(gemm(5, 8, 8).n, 3);
+        assert_eq!(gemm(1, 8, 8).n, 1);
+        assert_eq!(gemm(2, 8, 8).n, 2);
+        assert_eq!(gemm(1024, 8, 8).n, 32);
+    }
+
+    #[test]
+    fn tiny_decode_mac_count_pins() {
+        // tfm-tiny, decode b1 s64: per block (d=64, ff=128, kv=64):
+        // qkv 64·192 + scores 64·64 + av 64·64 + out 64·64 + up 64·128
+        // + down 128·64 = 40960; ×2 blocks + lm head 64·256 = 98304.
+        let net = TransformerConfig::tiny().decode(1, 64);
+        assert_eq!(net.num_layers(), 13);
+        assert_eq!(net.total_macs(), 98304.0);
+    }
+
+    #[test]
+    fn prefill_folds_batch_and_seq_into_rows() {
+        let net = TransformerConfig::gpt2_small().prefill(4, 64);
+        // rows = 256 → n = 16 on every projection.
+        assert_eq!(net.layers[0].n, 16);
+        // Scores span the sequence, AV contracts over it.
+        assert_eq!(net.layers[1].c_out, 64);
+        assert_eq!(net.layers[2].c_in, 64);
+    }
+
+    #[test]
+    fn decode_is_batch_rows_against_kv_context() {
+        let net = TransformerConfig::gpt2_small().decode(1, 1024);
+        assert_eq!(net.layers[0].n, 1); // batch-1 GEMV
+        assert_eq!(net.layers[1].c_out, 1024); // KV-cache-length scores
+    }
+
+    #[test]
+    fn gated_mlp_doubles_up_projection() {
+        let llama = TransformerConfig::tinyllama().decode(1, 64);
+        let gpt2 = TransformerConfig::gpt2_small().decode(1, 64);
+        assert_eq!(llama.layers[4].c_out, 2 * 5632);
+        assert_eq!(gpt2.layers[4].c_out, 3072);
+    }
+
+    #[test]
+    fn decode_intensity_below_prefill() {
+        let cfg = TransformerConfig::gpt2_small();
+        let pre = cfg.prefill(4, 256);
+        let dec = cfg.decode(4, 256);
+        let ai = |n: &Network| {
+            n.total_ops()
+                / n.layers
+                    .iter()
+                    .map(|l| l.ops() / l.arithmetic_intensity())
+                    .sum::<f64>()
+        };
+        assert!(ai(&dec) < ai(&pre) / 10.0, "decode must be low-intensity");
+    }
+
+    #[test]
+    fn selector_parses_phase_and_rejects_unknown() {
+        let (cfg, phase) = parse_selector("GPT2-Small@decode").unwrap();
+        assert_eq!(cfg.name, "gpt2-small");
+        assert_eq!(phase, Some(Phase::Decode));
+        let (_, none) = parse_selector("tfm-tiny").unwrap();
+        assert_eq!(none, None);
+        assert!(parse_selector("gpt2-small@train").is_none());
+        assert!(parse_selector("nope@decode").is_none());
+        assert!(parse_selector("nope").is_none());
+    }
+
+    #[test]
+    fn resolve_defaults_to_decode() {
+        let net = resolve("tfm-tiny", 1, 64).unwrap();
+        assert!(net.name.contains("@decode"));
+        assert!(resolve("vgg16", 1, 64).is_none());
+    }
+
+    #[test]
+    fn interner_dedups_stream_names() {
+        let a = TransformerConfig::tiny().decode(1, 64);
+        let b = TransformerConfig::tiny().decode(1, 64);
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.name.as_ptr(), b.name.as_ptr());
+    }
+
+    #[test]
+    fn tokens_per_forward_pass() {
+        assert_eq!(Phase::Prefill.tokens(4, 256), 1024);
+        assert_eq!(Phase::Decode.tokens(4, 256), 4);
+    }
+
+    #[test]
+    fn corpus_networks_are_all_gemm_family() {
+        for net in corpus_networks() {
+            for l in &net.layers {
+                assert_eq!((l.kh, l.kw, l.stride), (1, 1, 1), "{}", net.name);
+            }
+        }
+    }
+}

@@ -27,6 +27,7 @@
 //! | [`sweep_scenario_with_bits`] | `aimc sweep --bits` — the grid crossed with bit widths |
 //! | [`surrogate_crossval_scenario`] | `aimc surrogate-crossval` — fitted energy surrogate vs cycle sims |
 //! | [`pareto_scenario`] | `aimc pareto` — energy × latency × accuracy over node × bits |
+//! | [`intensity_scenario`] | `aimc intensity` — transformer prefill/decode intensity crossover |
 //!
 //! [`all_scenarios`] is the `aimc all` list: one shared cache/pool
 //! evaluates the lot, so layer shapes repeated across artifacts
@@ -199,6 +200,126 @@ pub fn pareto_scenario_with_bits(input: usize, bits: &[(u32, u32)]) -> Scenario 
     s
 }
 
+/// Default node grid for the `aimc intensity` crossover trace: the
+/// paper's 45 nm anchor plus the 7 nm end of the scaling ladder.
+pub const INTENSITY_NODES: [f64; 2] = [45.0, 7.0];
+
+/// `aimc intensity`: the arithmetic-intensity crossover trace. One
+/// transformer config is swept as a grid of *streams* — phase
+/// (prefill/decode) × batch × sequence length, each stream a distinct
+/// [`crate::networks::Network`] of GEMM/GEMV layers — and every stream
+/// is priced by all four cycle machines at every (node × bits)
+/// operating point. Each row reports the stream's FLOPs/byte (the
+/// x-axis of the paper's roofline argument) alongside µJ/inference and
+/// µJ/token per machine, so the point where the in-memory machines
+/// overtake the systolic array as intensity falls — the decode regime —
+/// can be read straight off the table.
+///
+/// Deliberately NOT in [`all_scenarios`]: like `pareto`, it is a
+/// design-space tool, not a paper artifact (the golden test pins
+/// `all_scenarios` to the paper's ten outputs).
+pub fn intensity_scenario(
+    cfg: &crate::networks::transformer::TransformerConfig,
+    phase: Option<crate::networks::transformer::Phase>,
+    nodes: &[f64],
+    bits: &[(u32, u32)],
+    batches: &[usize],
+    seqs: &[usize],
+) -> Scenario {
+    use crate::networks::stats;
+    use crate::networks::transformer::{Phase, DEFAULT_BATCHES, DEFAULT_SEQS};
+    use std::sync::Arc;
+
+    /// Per-stream metadata recovered per row via `index / ops_per_net`
+    /// (rows are network-major, operating-point-minor).
+    struct Stream {
+        phase: &'static str,
+        batch: f64,
+        seq: f64,
+        tokens: f64,
+        intensity: f64,
+    }
+
+    let phases: &[Phase] = match phase {
+        Some(Phase::Prefill) => &[Phase::Prefill],
+        Some(Phase::Decode) => &[Phase::Decode],
+        None => &[Phase::Prefill, Phase::Decode],
+    };
+    let batches = if batches.is_empty() {
+        DEFAULT_BATCHES.to_vec()
+    } else {
+        batches.to_vec()
+    };
+    let seqs = if seqs.is_empty() {
+        DEFAULT_SEQS.to_vec()
+    } else {
+        seqs.to_vec()
+    };
+    let mut nets = Vec::new();
+    let mut meta = Vec::new();
+    for &ph in phases {
+        for &b in &batches {
+            for &sq in &seqs {
+                let net = cfg.stream(ph, b, sq);
+                meta.push(Stream {
+                    phase: ph.label(),
+                    batch: b as f64,
+                    seq: sq as f64,
+                    tokens: ph.tokens(b, sq) as f64,
+                    intensity: stats::network_intensity(&net, 1.0),
+                });
+                nets.push(net);
+            }
+        }
+    }
+    let ops_per_net = nodes.len().max(1) * bits.len().max(1);
+    let meta = Arc::new(meta);
+    let title = format!(
+        "intensity — {}: prefill→decode crossover, {} streams × {} operating points",
+        cfg.name,
+        nets.len(),
+        ops_per_net
+    );
+    let md = |g: fn(&Stream) -> f64| {
+        let meta = Arc::clone(&meta);
+        move |c: &RowCtx| g(&meta[c.index / ops_per_net])
+    };
+    let phase_meta = Arc::clone(&meta);
+    let mut s = Scenario::new(title)
+        .machines(crate::simulator::machine::all_machines())
+        .networks(nets)
+        .nodes(nodes);
+    if !bits.is_empty() {
+        s = s.bits(bits);
+    }
+    let mut s = s
+        .over_network_nodes()
+        .text("phase", move |c: &RowCtx| {
+            phase_meta[c.index / ops_per_net].phase.to_string()
+        })
+        .num("batch", 0, md(|m| m.batch))
+        .num("seq", 0, md(|m| m.seq))
+        .num("tokens/inf", 0, md(|m| m.tokens))
+        .num("FLOPs/byte", 2, md(|m| m.intensity))
+        .num("node (nm)", 0, |c: &RowCtx| c.node());
+    if !bits.is_empty() {
+        s = s.text("bits", |c: &RowCtx| c.bits_label());
+    }
+    for (mi, m) in ["systolic", "reram", "photonic", "optical4f"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(&format!("{m} uJ/inf"), 3, move |c: &RowCtx| {
+            c.sim(mi).ledger.total() * 1e6
+        });
+        let meta = Arc::clone(&meta);
+        s = s.num(&format!("{m} uJ/tok"), 4, move |c: &RowCtx| {
+            c.sim(mi).ledger.total() * 1e6 / meta[c.index / ops_per_net].tokens
+        });
+    }
+    s
+}
+
 /// `aimc surrogate-crossval`: fit the closed-form energy surrogate from
 /// the cycle simulators, then score it against them — one row per node
 /// of the ladder, one column per machine holding the worst per-layer
@@ -327,6 +448,39 @@ mod tests {
         let fallback = sweep_scenario_with_bits(120, &[]);
         assert_eq!(fallback.title(), plain.title());
         assert_eq!(fallback.row_count(), plain.row_count());
+    }
+
+    #[test]
+    fn intensity_scenario_traces_both_phases() {
+        use crate::networks::transformer::TransformerConfig;
+        let cfg = TransformerConfig::tiny();
+        let s = intensity_scenario(&cfg, None, &[45.0], &[], &[1, 4], &[64]);
+        // 2 phases × 2 batches × 1 seq = 4 streams × 1 operating point.
+        assert_eq!(s.row_count(), 4);
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 4);
+        // Columns: phase, batch, seq, tokens/inf, FLOPs/byte, node,
+        // then (uJ/inf, uJ/tok) × 4 machines.
+        assert_eq!(ds.columns.len(), 6 + 8);
+        let num = |v: &Value| match v {
+            Value::Num(x) => *x,
+            other => panic!("{other:?}"),
+        };
+        // Networks are phase-major: prefill streams first, then decode,
+        // and decode must sit far lower on the FLOPs/byte axis.
+        assert_eq!(ds.rows[0][0], Value::Text("prefill".into()));
+        assert_eq!(ds.rows[2][0], Value::Text("decode".into()));
+        assert!(num(&ds.rows[0][4]) > num(&ds.rows[2][4]));
+        // Energy columns positive/finite and µJ/tok = µJ/inf ÷ tokens.
+        for row in &ds.rows {
+            let tokens = num(&row[3]);
+            for mi in 0..4 {
+                let inf = num(&row[6 + 2 * mi]);
+                let tok = num(&row[6 + 2 * mi + 1]);
+                assert!(inf.is_finite() && inf > 0.0, "{row:?}");
+                assert!((tok - inf / tokens).abs() <= inf * 1e-9, "{row:?}");
+            }
+        }
     }
 
     #[test]

@@ -584,6 +584,93 @@ fn scenario_layer_prefetch_bit_identical_datasets() {
     }
 }
 
+/// `aimc pareto --format csv|json` sink parity: exact CSV header, one
+/// line per (node × bits) grid point, and the JSON document must agree
+/// cell-for-cell with the CSV under each column's declared number
+/// format — numbers stay numbers in JSON, labels stay strings.
+#[test]
+fn golden_pareto_csv_json_sink_parity() {
+    let ds = report::pareto_scenario(120).eval(&ctx());
+    assert_eq!(
+        ds.rows.len(),
+        report::PARETO_NODES.len() * report::PARETO_DEFAULT_BITS.len()
+    );
+    let csv = ds.to_csv();
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "node (nm),bits,SNR (dB),eff. bits,accuracy,\
+         systolic uJ/inf,systolic time,reram uJ/inf,reram time,\
+         photonic uJ/inf,photonic time,optical4f uJ/inf,optical4f time"
+    );
+    let data: Vec<&str> = lines.collect();
+    assert_eq!(data.len(), ds.rows.len());
+    assert_csv_json_parity(&ds, &data);
+}
+
+/// `aimc intensity --format csv|json` sink parity on the tiny config:
+/// the CI smoke validates the JSON artifact parses; this pins the
+/// cell-level agreement between the two sinks.
+#[test]
+fn golden_intensity_csv_json_sink_parity() {
+    use aimc::networks::transformer::TransformerConfig;
+    let ds = report::intensity_scenario(
+        &TransformerConfig::tiny(),
+        None,
+        &[45.0],
+        &[],
+        &[1],
+        &[64],
+    )
+    .eval(&ctx());
+    // Two phases × one batch × one seq × one node.
+    assert_eq!(ds.rows.len(), 2);
+    let csv = ds.to_csv();
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "phase,batch,seq,tokens/inf,FLOPs/byte,node (nm),\
+         systolic uJ/inf,systolic uJ/tok,reram uJ/inf,reram uJ/tok,\
+         photonic uJ/inf,photonic uJ/tok,optical4f uJ/inf,optical4f uJ/tok"
+    );
+    let data: Vec<&str> = lines.collect();
+    assert_eq!(data.len(), ds.rows.len());
+    assert_csv_json_parity(&ds, &data);
+}
+
+/// Shared half of the sink-parity pins: every CSV cell must equal the
+/// JSON cell rendered under the column's [`report::NumFmt`]. None of
+/// these datasets emit cells containing commas, so a plain split is the
+/// exact inverse of the RFC-4180 writer here.
+fn assert_csv_json_parity(ds: &report::Dataset, csv_data: &[&str]) {
+    let parsed = Json::parse(&ds.to_json().pretty()).expect("JSON sink must parse");
+    let Json::Obj(fields) = &parsed else {
+        panic!("JSON sink must emit an object")
+    };
+    assert_eq!(fields[0].0, "title");
+    assert_eq!(fields[1].0, "columns");
+    assert_eq!(fields[2].0, "rows");
+    let Json::Arr(jrows) = &fields[2].1 else {
+        panic!("rows must be an array")
+    };
+    assert_eq!(jrows.len(), csv_data.len());
+    for (ri, line) in csv_data.iter().enumerate() {
+        let cells: Vec<&str> = line.split(',').collect();
+        assert_eq!(cells.len(), ds.columns.len(), "row {ri} width");
+        let Json::Arr(jrow) = &jrows[ri] else {
+            panic!("row {ri} must be an array")
+        };
+        for (ci, jcell) in jrow.iter().enumerate() {
+            let expect = match jcell {
+                Json::Num(v) => report::Value::Num(*v).render(ds.fmts[ci]),
+                Json::Str(s) => s.clone(),
+                other => panic!("row {ri} col {ci}: {other:?}"),
+            };
+            assert_eq!(cells[ci], expect, "row {ri} col {ci} drifted between sinks");
+        }
+    }
+}
+
 /// The fan-out path behind `aimc simulate`: unique-layer `par_map`
 /// pricing must merge bit-identically to the serial network walk, for
 /// every machine.

@@ -11,6 +11,9 @@ build when either guarded metric regresses more than the tolerance:
              cold co-simulation of the resident network, also from
              BENCH_serve.json
   * sweep  — persistent-cache warm_speedup from BENCH_sweep.json
+  * sweep  — transformer_decode.points_per_s (gpt2-small decode streams
+             through the sweep engine), also from BENCH_sweep.json;
+             skipped with a note when either side predates the metric
 
 Usage:
     python3 scripts/bench_gate.py BENCH_baseline.json \
@@ -83,6 +86,16 @@ def warm_speedup(sweep, path):
         fail(f"{path} has no persistent_cache.warm_speedup field")
 
 
+def decode_points_per_s(sweep):
+    # Optional: bench runs predating the transformer-decode section lack
+    # the field entirely. Returning None (-> metric not measured, skipped
+    # with a note) keeps the gate usable across both layouts.
+    try:
+        return float(sweep["transformer_decode"]["points_per_s"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 def main(argv):
     update = "--update" in argv
     paths = [a for a in argv if not a.startswith("--")]
@@ -92,11 +105,20 @@ def main(argv):
     baseline_path, serve_path, sweep_path = paths
 
     serve_doc = load(serve_path)
+    sweep_doc = load(sweep_path)
     measured = {
         "serve_4w_32offered_rps": serve_rps(serve_doc, serve_path),
         "surrogate_vs_cosim_speedup": surrogate_speedup(serve_doc, serve_path),
-        "warm_speedup": warm_speedup(load(sweep_path), sweep_path),
+        "warm_speedup": warm_speedup(sweep_doc, sweep_path),
     }
+    decode_pps = decode_points_per_s(sweep_doc)
+    if decode_pps is not None:
+        measured["transformer_decode_points_per_s"] = decode_pps
+    else:
+        print(
+            f"bench gate: NOTE — {sweep_path} has no transformer_decode "
+            "section (older bench layout); metric not measured"
+        )
 
     if update:
         doc = {
@@ -111,6 +133,10 @@ def main(argv):
             ),
             "warm_speedup": round(measured["warm_speedup"], 2),
         }
+        if "transformer_decode_points_per_s" in measured:
+            doc["transformer_decode_points_per_s"] = round(
+                measured["transformer_decode_points_per_s"], 1
+            )
         with open(baseline_path, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=2)
             f.write("\n")
