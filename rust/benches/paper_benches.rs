@@ -217,7 +217,9 @@ fn bench_sweep_engine(input: usize) {
 /// priced), and the file ends with a pricing-path microbench:
 /// `surrogate_vs_cosim_speedup` = fresh co-simulation time over
 /// closed-form quote time for the resident network, the number the CI
-/// bench gate floors.
+/// bench gate floors. A sim-backend run also re-times the guard cell
+/// under a scripted `FaultPlan` (`serve_under_faults`) so recovery
+/// overhead is gated alongside fault-free throughput.
 fn bench_serve() {
     use aimc::coordinator::exec::SimExecutor;
     use aimc::coordinator::{energy, smallcnn_network};
@@ -349,6 +351,73 @@ fn bench_serve() {
     // accounting itself.
     run_one(4, 32, "off");
 
+    // The guard cell again under a scripted fault plan: every 5th batch
+    // errors once (recovered by the default retry policy) and every 3rd
+    // runs 2x slow. Throughput under recovery is its own gate key
+    // (`serve_under_faults_rps`), so the retry/breaker machinery can't
+    // silently become the bottleneck. Faults script into the sim
+    // backend only, so a PJRT run omits the section (the gate then
+    // skips the key with a note).
+    let faulted_section = if have_engine {
+        String::new()
+    } else {
+        use aimc::coordinator::exec::FaultPlan;
+        let plan = FaultPlan::parse("error=5,slow=3:2").expect("bench fault plan");
+        let cfg = ServerConfig {
+            path: ConvPath::Exact,
+            workers: 4,
+            max_pending: 4096,
+            energy: false,
+            ..Default::default()
+        };
+        let server = Server::start_sim(
+            cfg,
+            SimExecutor::new(Duration::from_micros(10), Duration::from_micros(1))
+                .with_plan(plan),
+        )
+        .unwrap();
+        let offered = 32usize;
+        let per_client = n / offered;
+        let total = per_client * offered;
+        let t0 = Instant::now();
+        let ok: usize = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(offered);
+            for c in 0..offered {
+                let server = &server;
+                let images = &images;
+                handles.push(s.spawn(move || {
+                    let mut ok = 0usize;
+                    for i in 0..per_client {
+                        let img = images[(c + i) % images.len()].clone();
+                        if server.infer_blocking(img).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let rps = total as f64 / wall;
+        println!(
+            "serve[{backend}/faulted]: 4 workers, {offered:>2} offered: {rps:>8.0} req/s, \
+             {} retries, {} breaker trip(s), {ok}/{total} ok",
+            m.retries(),
+            m.breaker_trips(),
+        );
+        format!(
+            "  \"serve_under_faults\": {{ \"plan\": \"error=5,slow=3:2\", \"workers\": 4, \
+             \"offered\": {offered}, \"requests\": {total}, \"ok\": {ok}, \
+             \"throughput_rps\": {rps:.1}, \"retries\": {}, \"timeouts\": {}, \
+             \"breaker_trips\": {} }},\n",
+            m.retries(),
+            m.timeouts(),
+            m.breaker_trips(),
+        )
+    };
+
     // Pricing-path microbench: what each path costs per quote of the
     // resident network. Co-simulation is timed cold (fresh cache — the
     // first batch anywhere on a worker) per sample; the surrogate quote
@@ -373,7 +442,7 @@ fn bench_serve() {
     );
 
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ],\n  \
+        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ],\n{faulted_section}  \
          \"pricing_path\": {{ \"cosim_cold_us\": {cosim_us:.3}, \
          \"surrogate_quote_us\": {quote_us:.4} }},\n  \
          \"surrogate_vs_cosim_speedup\": {speedup:.1}\n}}\n",

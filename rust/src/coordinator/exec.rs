@@ -8,6 +8,7 @@
 //! `cargo bench -- serve` exercise batching, backpressure and shutdown
 //! in the offline build environment, where no AOT artifacts exist.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -43,6 +44,92 @@ impl Executor for Engine {
     }
 }
 
+/// Scripted executor-fault injection: deterministic cadences of
+/// transient errors, stalls and slow batches, for chaos-testing the
+/// server's retry/timeout/breaker machinery without any real hardware
+/// misbehaving. The `Default` plan is clear — no clause fires, and the
+/// executor behaves exactly as before the plan existed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Every `error_every`-th batch fails with a transient error
+    /// (0 = never).
+    pub error_every: u64,
+    /// Every `stall_every`-th batch sleeps `stall_for` before executing
+    /// (0 = never).
+    pub stall_every: u64,
+    /// Stall duration for the `stall_every` cadence.
+    pub stall_for: Duration,
+    /// Every `slow_every`-th batch costs `slow_factor` × the normal
+    /// sleep (0 = never).
+    pub slow_every: u64,
+    /// Cost multiplier for the `slow_every` cadence.
+    pub slow_factor: u32,
+}
+
+impl FaultPlan {
+    /// No clause armed — the executor is fault-free.
+    pub fn is_clear(&self) -> bool {
+        self.error_every == 0 && self.stall_every == 0 && self.slow_every == 0
+    }
+
+    /// Parse a `--chaos` spec: comma-separated clauses out of
+    /// `error=N` (every Nth batch errors), `stall=N:DUR` (every Nth
+    /// batch sleeps DUR — `50ms`, `2s`, `300us`, or bare milliseconds)
+    /// and `slow=N:F` (every Nth batch costs F×).
+    /// `"error=5,stall=7:50ms,slow=3:4"` arms all three.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        fn cadence(s: &str) -> Result<u64, String> {
+            match s.trim().parse::<u64>() {
+                Ok(0) | Err(_) => Err(format!("cadence must be a positive integer, got {s:?}")),
+                Ok(n) => Ok(n),
+            }
+        }
+        fn duration(s: &str) -> Result<Duration, String> {
+            let s = s.trim();
+            let bad = || format!("bad duration {s:?} (want e.g. 50ms, 2s, 300us)");
+            if let Some(us) = s.strip_suffix("us") {
+                us.parse::<u64>().map(Duration::from_micros).map_err(|_| bad())
+            } else if let Some(ms) = s.strip_suffix("ms") {
+                ms.parse::<u64>().map(Duration::from_millis).map_err(|_| bad())
+            } else if let Some(sec) = s.strip_suffix('s') {
+                sec.parse::<u64>().map(Duration::from_secs).map_err(|_| bad())
+            } else {
+                s.parse::<u64>().map(Duration::from_millis).map_err(|_| bad())
+            }
+        }
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("chaos clause {clause:?} is not key=value"))?;
+            match key.trim() {
+                "error" => plan.error_every = cadence(val)?,
+                "stall" => {
+                    let (n, d) = val
+                        .split_once(':')
+                        .ok_or_else(|| format!("stall wants N:DURATION, got {val:?}"))?;
+                    plan.stall_every = cadence(n)?;
+                    plan.stall_for = duration(d)?;
+                }
+                "slow" => {
+                    let (n, f) = val
+                        .split_once(':')
+                        .ok_or_else(|| format!("slow wants N:FACTOR, got {val:?}"))?;
+                    plan.slow_every = cadence(n)?;
+                    plan.slow_factor = match f.trim().parse::<u32>() {
+                        Ok(0) | Err(_) => {
+                            return Err(format!("slow factor must be ≥ 1, got {f:?}"))
+                        }
+                        Ok(x) => x,
+                    };
+                }
+                other => return Err(format!("unknown chaos clause {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
 /// Deterministic stand-in for the PJRT engine.
 ///
 /// Computes a fixed sparse linear readout per image (batch-invariant:
@@ -51,23 +138,38 @@ impl Executor for Engine {
 /// `base_cost + per_image_cost × batch` to model a device whose fixed
 /// dispatch overhead is amortized by batching — the same shape as the
 /// paper's efficiency-at-scale argument, eq. 22's channel packing in
-/// miniature.
-#[derive(Clone, Copy, Debug)]
+/// miniature. A [`FaultPlan`] arms scripted stalls, transient errors
+/// and slow batches on deterministic per-instance cadences; each worker
+/// clones its own executor, so cadences count per lane.
+#[derive(Debug)]
 pub struct SimExecutor {
     /// Fixed per-dispatch cost (kernel launch, readout).
     pub base_cost: Duration,
     /// Incremental cost per image in the batch.
     pub per_image_cost: Duration,
+    /// Scripted fault injection; clear by default.
+    pub plan: FaultPlan,
+    /// Batches dispatched through THIS instance (fault cadences count
+    /// against it, so every clone runs the same deterministic script).
+    dispatched: AtomicU64,
+}
+
+impl Clone for SimExecutor {
+    fn clone(&self) -> Self {
+        SimExecutor {
+            base_cost: self.base_cost,
+            per_image_cost: self.per_image_cost,
+            plan: self.plan,
+            dispatched: AtomicU64::new(self.dispatched.load(Relaxed)),
+        }
+    }
 }
 
 impl Default for SimExecutor {
     fn default() -> Self {
         // base/per-image ≈ 10: batch 8 serves ~5× more images per second
         // than batch 1, so batching visibly pays in the serve bench.
-        SimExecutor {
-            base_cost: Duration::from_micros(300),
-            per_image_cost: Duration::from_micros(30),
-        }
+        SimExecutor::new(Duration::from_micros(300), Duration::from_micros(30))
     }
 }
 
@@ -76,12 +178,20 @@ impl SimExecutor {
         SimExecutor {
             base_cost,
             per_image_cost,
+            plan: FaultPlan::default(),
+            dispatched: AtomicU64::new(0),
         }
     }
 
     /// Zero-cost variant for tests that don't time anything.
     pub fn instant() -> Self {
         SimExecutor::new(Duration::ZERO, Duration::ZERO)
+    }
+
+    /// Arm a scripted fault plan (builder style).
+    pub fn with_plan(mut self, plan: FaultPlan) -> Self {
+        self.plan = plan;
+        self
     }
 }
 
@@ -123,12 +233,25 @@ impl Executor for SimExecutor {
             packed.len(),
             batch * IMAGE_ELEMS
         );
+        // Scripted faults count well-formed dispatches only, so caller
+        // bugs (rejected above) never consume a cadence slot.
+        let ordinal = self.dispatched.fetch_add(1, Relaxed) + 1;
+        let hits = |every: u64| every > 0 && ordinal % every == 0;
+        if hits(self.plan.stall_every) && !self.plan.stall_for.is_zero() {
+            std::thread::sleep(self.plan.stall_for);
+        }
+        if hits(self.plan.error_every) {
+            anyhow::bail!("injected transient fault (batch #{ordinal})");
+        }
         let mut out = Vec::with_capacity(batch * LOGITS);
         for b in 0..batch {
             let img = &packed[b * IMAGE_ELEMS..(b + 1) * IMAGE_ELEMS];
             out.extend_from_slice(&logits_of(img));
         }
-        let cost = self.base_cost + self.per_image_cost * batch as u32;
+        let mut cost = self.base_cost + self.per_image_cost * batch as u32;
+        if hits(self.plan.slow_every) {
+            cost *= self.plan.slow_factor.max(1);
+        }
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
@@ -180,5 +303,90 @@ mod tests {
         assert!(e.execute("smallcnn_exact", &[vec![0.0; 5]]).is_err());
         assert!(e.execute("smallcnn_exact_b8", &[vec![0.0; IMAGE_ELEMS]]).is_err());
         assert!(e.execute("smallcnn_exact", &[]).is_err());
+    }
+
+    #[test]
+    fn fault_plan_parses_the_chaos_grammar() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("").unwrap().is_clear());
+        let p = FaultPlan::parse("error=5,stall=7:50ms,slow=3:4").unwrap();
+        assert_eq!(p.error_every, 5);
+        assert_eq!(p.stall_every, 7);
+        assert_eq!(p.stall_for, Duration::from_millis(50));
+        assert_eq!(p.slow_every, 3);
+        assert_eq!(p.slow_factor, 4);
+        assert!(!p.is_clear());
+        // Duration suffixes: us / ms / s / bare-ms.
+        assert_eq!(
+            FaultPlan::parse("stall=1:300us").unwrap().stall_for,
+            Duration::from_micros(300)
+        );
+        assert_eq!(
+            FaultPlan::parse("stall=1:2s").unwrap().stall_for,
+            Duration::from_secs(2)
+        );
+        assert_eq!(
+            FaultPlan::parse("stall=1:25").unwrap().stall_for,
+            Duration::from_millis(25)
+        );
+        // Every malformed clause is a loud error, never a silent no-op.
+        for bad in [
+            "error=0",
+            "error=x",
+            "stall=3",
+            "stall=3:banana",
+            "slow=2:0",
+            "warp=9",
+            "error",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn injected_errors_fire_on_their_cadence_only() {
+        let e = SimExecutor::instant().with_plan(FaultPlan {
+            error_every: 3,
+            ..Default::default()
+        });
+        let img = vec![0.5; IMAGE_ELEMS];
+        for ordinal in 1..=12u64 {
+            let r = e.execute("smallcnn_exact", &[img.clone()]);
+            if ordinal % 3 == 0 {
+                let err = r.expect_err("cadence batch must fail").to_string();
+                assert!(err.contains("injected transient fault"), "{err}");
+            } else {
+                assert_eq!(r.unwrap().len(), LOGITS);
+            }
+        }
+    }
+
+    #[test]
+    fn cloned_executors_replay_the_same_fault_script() {
+        let plan = FaultPlan {
+            error_every: 2,
+            ..Default::default()
+        };
+        let a = SimExecutor::instant().with_plan(plan);
+        let b = a.clone();
+        let img = vec![1.0; IMAGE_ELEMS];
+        let script = |e: &SimExecutor| -> Vec<bool> {
+            (0..6)
+                .map(|_| e.execute("smallcnn_exact", &[img.clone()]).is_ok())
+                .collect()
+        };
+        assert_eq!(script(&a), script(&b), "clones start from the same ordinal");
+    }
+
+    #[test]
+    fn clear_plan_is_behaviourally_invisible() {
+        let faulty = SimExecutor::instant().with_plan(FaultPlan::default());
+        let plain = SimExecutor::instant();
+        let mut rng = Rng::new(7);
+        let img = rng.normal_vec(IMAGE_ELEMS);
+        assert_eq!(
+            faulty.execute("smallcnn_exact", &[img.clone()]).unwrap(),
+            plain.execute("smallcnn_exact", &[img]).unwrap()
+        );
     }
 }

@@ -43,6 +43,20 @@ pub struct Metrics {
     /// table could NOT price (so pricing fell back to co-simulation).
     /// 0 when no surrogate was configured or coverage was complete.
     surrogate_miss: usize,
+    /// Batch executions re-attempted after a failure (backend error or
+    /// wrong-shaped output). One failed batch can contribute several.
+    retries: usize,
+    /// Batch attempts that overran the per-attempt execution deadline
+    /// (`ServerConfig::batch_deadline`). Counted for observability; the
+    /// attempt's results are still delivered.
+    timeouts: usize,
+    /// Times a worker lane's circuit breaker opened after consecutive
+    /// failed batches.
+    breaker_trips: usize,
+    /// 1 when the startup pricing co-simulation missed its deadline and
+    /// per-request quoting (and any energy budget) was abandoned in
+    /// favour of per-batch co-simulation.
+    degraded_pricing: usize,
 }
 
 impl Metrics {
@@ -112,6 +126,26 @@ impl Metrics {
         self.surrogate_miss += n;
     }
 
+    /// Count batch executions re-attempted after a failure.
+    pub fn record_retry(&mut self, n: usize) {
+        self.retries += n;
+    }
+
+    /// Count batch attempts that overran the execution deadline.
+    pub fn record_timeout(&mut self, n: usize) {
+        self.timeouts += n;
+    }
+
+    /// Count circuit-breaker openings on worker lanes.
+    pub fn record_breaker_trip(&mut self, n: usize) {
+        self.breaker_trips += n;
+    }
+
+    /// Record that startup pricing degraded to per-batch co-simulation.
+    pub fn record_degraded_pricing(&mut self, n: usize) {
+        self.degraded_pricing += n;
+    }
+
     /// Set the throughput window explicitly (the server stamps serving
     /// start → shutdown on the merged aggregate).
     pub fn set_window(&mut self, started: Instant, finished: Instant) {
@@ -138,6 +172,10 @@ impl Metrics {
         }
         self.budget_rejected += other.budget_rejected;
         self.surrogate_miss += other.surrogate_miss;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.breaker_trips += other.breaker_trips;
+        self.degraded_pricing += other.degraded_pricing;
     }
 
     pub fn count(&self) -> usize {
@@ -184,6 +222,26 @@ impl Metrics {
     /// (0 = full coverage or no surrogate configured).
     pub fn surrogate_miss(&self) -> usize {
         self.surrogate_miss
+    }
+
+    /// Batch executions re-attempted after a failure.
+    pub fn retries(&self) -> usize {
+        self.retries
+    }
+
+    /// Batch attempts that overran the execution deadline.
+    pub fn timeouts(&self) -> usize {
+        self.timeouts
+    }
+
+    /// Circuit-breaker openings on worker lanes.
+    pub fn breaker_trips(&self) -> usize {
+        self.breaker_trips
+    }
+
+    /// 1 when startup pricing degraded to per-batch co-simulation.
+    pub fn degraded_pricing(&self) -> usize {
+        self.degraded_pricing
     }
 
     /// Projected µJ per inference on the systolic machine. `None` when
@@ -256,6 +314,20 @@ impl Metrics {
                 ", {} surrogate miss(es) → co-simulation",
                 self.surrogate_miss
             ));
+        }
+        // Recovery counters surface only when non-zero, so fault-free
+        // summaries stay byte-identical to the pre-fault format.
+        if self.retries > 0 {
+            s.push_str(&format!(", {} retries", self.retries));
+        }
+        if self.timeouts > 0 {
+            s.push_str(&format!(", {} batch timeout(s)", self.timeouts));
+        }
+        if self.breaker_trips > 0 {
+            s.push_str(&format!(", {} breaker trip(s)", self.breaker_trips));
+        }
+        if self.degraded_pricing > 0 {
+            s.push_str(", degraded-pricing startup");
         }
         if let (Some(sys), Some(opt)) = (
             self.systolic_uj_per_inference(),
@@ -408,6 +480,37 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.budget_rejected(), 5);
         assert_eq!(m.energy_source(), "surrogate");
+    }
+
+    #[test]
+    fn recovery_counters_merge_and_surface_only_when_nonzero() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(10));
+        let clean = m.summary();
+        assert!(
+            !clean.contains("retries")
+                && !clean.contains("timeout")
+                && !clean.contains("breaker")
+                && !clean.contains("degraded"),
+            "{clean}"
+        );
+        m.record_retry(2);
+        m.record_timeout(1);
+        m.record_breaker_trip(1);
+        m.record_degraded_pricing(1);
+        let mut other = Metrics::new();
+        other.record_retry(3);
+        other.record_breaker_trip(2);
+        m.merge(&other);
+        assert_eq!(m.retries(), 5);
+        assert_eq!(m.timeouts(), 1);
+        assert_eq!(m.breaker_trips(), 3);
+        assert_eq!(m.degraded_pricing(), 1);
+        let s = m.summary();
+        assert!(s.contains("5 retries"), "{s}");
+        assert!(s.contains("1 batch timeout(s)"), "{s}");
+        assert!(s.contains("3 breaker trip(s)"), "{s}");
+        assert!(s.contains("degraded-pricing startup"), "{s}");
     }
 
     #[test]

@@ -54,6 +54,22 @@
 //!   counter hits zero instead of sleep-polling. Dropping the server
 //!   without calling `shutdown()` runs the same drain, so pending
 //!   requests are answered, never stranded.
+//! * **Failure semantics** — every batch execution gets bounded retries
+//!   with jittered exponential backoff ([`ServerConfig::max_retries`],
+//!   [`ServerConfig::retry_backoff`]) and an optional per-attempt
+//!   execution deadline ([`ServerConfig::batch_deadline`]; an overrun
+//!   counts as a timeout but its results are still delivered — slow
+//!   answers beat dropped ones). Each lane carries a circuit breaker:
+//!   after [`ServerConfig::breaker_threshold`] consecutive failed
+//!   batches the worker opens it for
+//!   [`ServerConfig::breaker_cooldown`] and the dispatcher routes
+//!   around the lane — unless every breaker is open, in which case it
+//!   dispatches anyway (liveness and the exactly-once answer guarantee
+//!   outrank the breaker). A startup pricing co-simulation that misses
+//!   [`ServerConfig::startup_quote_deadline`] degrades to per-batch
+//!   pricing instead of blocking startup. Every recovery action is
+//!   counted in [`Metrics`]: retries, timeouts, breaker trips,
+//!   degraded pricing.
 //!
 //! PJRT client handles are `Rc`-based (not `Send`), so the engine cannot
 //! be shared across threads; each worker builds its own [`Executor`] via
@@ -61,7 +77,7 @@
 //! the real PJRT engine; [`Server::start_sim`] wires the deterministic
 //! [`SimExecutor`] so serving tests and benches run without artifacts.
 
-use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -77,6 +93,7 @@ use super::{ConvPath, IMAGE_ELEMS, LOGITS};
 use crate::energy::surrogate::{EnergyQuote, SurrogateTable};
 use crate::runtime::Engine;
 use crate::simulator::{OperatingPoint, SweepCache};
+use crate::util::rng::Rng;
 use crate::util::shard::{self, PushError, ShardedCounter, ShardedQueue};
 use crate::util::spsc;
 
@@ -90,9 +107,10 @@ const IDLE_PARK: Duration = Duration::from_millis(10);
 /// adds queueing latency in front of a busy worker.
 const LANE_CAP: usize = 8;
 
-/// Bound on the shutdown drain: a wedged executor must not hang
+/// Default bound on the shutdown drain (see
+/// [`ServerConfig::drain_deadline`]): a wedged executor must not hang
 /// `shutdown()` forever.
-const DRAIN_DEADLINE: Duration = Duration::from_secs(30);
+const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(30);
 
 /// One inference request travelling through the server.
 struct Request {
@@ -173,6 +191,30 @@ impl DrainBarrier {
     }
 }
 
+/// Per-lane circuit-breaker state, shared between the worker that owns
+/// the lane (records batch outcomes, trips the breaker) and the
+/// dispatcher (skips lanes whose breaker is open). Times are millis
+/// since the server's epoch `Instant`, so the whole state fits in
+/// lock-free atomics.
+struct LaneHealth {
+    /// Consecutive failed batches; reset on any success or on a trip.
+    consecutive_failures: AtomicUsize,
+    /// Breaker-open horizon, millis since the server epoch (0 = closed).
+    open_until_ms: AtomicU64,
+    /// Times this lane's breaker has tripped.
+    trips: AtomicUsize,
+}
+
+impl LaneHealth {
+    fn new() -> Self {
+        LaneHealth {
+            consecutive_failures: AtomicUsize::new(0),
+            open_until_ms: AtomicU64::new(0),
+            trips: AtomicUsize::new(0),
+        }
+    }
+}
+
 /// Dispatcher-side handle to one worker's lane.
 struct Lane {
     tx: spsc::Producer<Batch>,
@@ -180,6 +222,16 @@ struct Lane {
     /// the least-loaded signal. Written by the dispatcher (add) and the
     /// worker (sub) only.
     depth: Arc<AtomicUsize>,
+    /// Circuit-breaker state written by the lane's worker.
+    health: Arc<LaneHealth>,
+}
+
+/// Per-batch retry/timeout policy handed to every worker.
+#[derive(Clone, Copy, Debug)]
+struct RetryPolicy {
+    max_retries: u32,
+    backoff: Duration,
+    batch_deadline: Option<Duration>,
 }
 
 /// Server configuration.
@@ -232,6 +284,32 @@ pub struct ServerConfig {
     /// so request/response tensor shapes are unchanged. `None` means the
     /// resident SmallCNN.
     pub resident: Option<crate::networks::Network>,
+    /// Bound on the shutdown drain: how long `shutdown()` waits for
+    /// admitted requests to be answered before detaching the serving
+    /// threads (logging which lanes still held work).
+    pub drain_deadline: Duration,
+    /// Per-attempt execution deadline for one batch. An attempt that
+    /// overruns it is counted as a timeout in [`Metrics`]; any results
+    /// it produced are still delivered (never dropped). `None` disables
+    /// the accounting.
+    pub batch_deadline: Option<Duration>,
+    /// Failed batch executions (backend error or wrong-shaped output)
+    /// are retried up to this many times before the error fans out to
+    /// the batch's requests. Each retry is counted in [`Metrics`].
+    pub max_retries: u32,
+    /// Base delay of the jittered exponential backoff between retries:
+    /// retry *k* sleeps `retry_backoff × 2^(k-1) × [1, 2)`.
+    pub retry_backoff: Duration,
+    /// Consecutive failed batches (after retries) on one lane before its
+    /// circuit breaker opens and the dispatcher routes around it.
+    pub breaker_threshold: usize,
+    /// How long a tripped lane breaker stays open.
+    pub breaker_cooldown: Duration,
+    /// Bound on the startup pricing co-simulation forced by an energy
+    /// budget without a covering surrogate. On expiry the server starts
+    /// anyway with pricing degraded to per-batch co-simulation (and the
+    /// budget unenforced, with a warning) instead of blocking startup.
+    pub startup_quote_deadline: Duration,
 }
 
 impl Default for ServerConfig {
@@ -250,6 +328,13 @@ impl Default for ServerConfig {
             surrogate: None,
             max_uj_per_inf: None,
             resident: None,
+            drain_deadline: DEFAULT_DRAIN_DEADLINE,
+            batch_deadline: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            startup_quote_deadline: Duration::from_secs(10),
         }
     }
 }
@@ -272,6 +357,16 @@ pub struct Server {
     /// fully covered or no table) — folded into the final metrics on
     /// shutdown so the co-simulation fallback is visible post-hoc.
     surrogate_misses: usize,
+    /// 1 when the startup pricing co-simulation missed its deadline and
+    /// pricing degraded to per-batch co-simulation — folded into the
+    /// final metrics on shutdown.
+    degraded_pricing: usize,
+    /// Bound on the shutdown drain (from [`ServerConfig`]).
+    drain_deadline: Duration,
+    /// Depth counters of every worker lane (the dispatcher owns the
+    /// producing halves) — read at drain expiry to name the lanes that
+    /// still hold work.
+    lane_depths: Vec<Arc<AtomicUsize>>,
     started: Instant,
     dispatcher: Option<JoinHandle<Metrics>>,
     workers: Vec<JoinHandle<Metrics>>,
@@ -293,7 +388,9 @@ impl Server {
     /// Start over the deterministic in-process backend — no artifacts or
     /// PJRT needed, so serving behaviour is testable offline.
     pub fn start_sim(cfg: ServerConfig, sim: SimExecutor) -> Result<Server> {
-        Server::start_with(cfg, move |_worker| Ok(sim))
+        // Clones share the fault script's dispatch counter value at
+        // clone time, so every worker replays the same `FaultPlan`.
+        Server::start_with(cfg, move |_worker| Ok(sim.clone()))
     }
 
     /// Start with a custom executor factory. The factory runs once
@@ -353,18 +450,44 @@ impl Server {
             }
             q
         });
+        let mut degraded_pricing = 0usize;
         let admission_quote: Option<EnergyQuote> = match (cfg.max_uj_per_inf, surrogate_quote) {
             (None, q) => q,
             (Some(_), Some(q)) => Some(q),
             (Some(_), None) => {
-                let r = co_simulate_cached(&resident, &serving_op, &energy_cache);
-                Some(EnergyQuote {
-                    systolic_j: r.systolic_joules(),
-                    optical_j: r.optical_joules(),
-                    node_nm: r.op.node_nm,
-                    bits_x: r.op.bits_x,
-                    bits_w: r.op.bits_w,
-                })
+                // An energy budget without a covering surrogate forces
+                // one startup co-simulation — but "startup" must not
+                // mean "unbounded": run it on a helper thread and give
+                // up after the deadline, degrading to per-batch pricing
+                // (budget unenforced) instead of blocking the start. A
+                // late helper is harmless: its send fails and its work
+                // lands in the shared cache for the workers to reuse.
+                let (quote_tx, quote_rx) = channel();
+                let net = resident.clone();
+                let cache = energy_cache.clone();
+                let op = serving_op;
+                std::thread::spawn(move || {
+                    let _ = quote_tx.send(co_simulate_cached(&net, &op, &cache));
+                });
+                match quote_rx.recv_timeout(cfg.startup_quote_deadline) {
+                    Ok(r) => Some(EnergyQuote {
+                        systolic_j: r.systolic_joules(),
+                        optical_j: r.optical_joules(),
+                        node_nm: r.op.node_nm,
+                        bits_x: r.op.bits_x,
+                        bits_w: r.op.bits_w,
+                    }),
+                    Err(_) => {
+                        eprintln!(
+                            "warn: startup energy quote did not finish within {:?}; \
+                             pricing degraded to per-batch cosim and max_uj_per_inf \
+                             is not enforced",
+                            cfg.startup_quote_deadline
+                        );
+                        degraded_pricing = 1;
+                        None
+                    }
+                }
             }
         };
 
@@ -372,14 +495,29 @@ impl Server {
         // executor (compilation is per-worker and lazy unless warmed),
         // and a private metrics shard returned on join.
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        // Epoch for breaker timestamps: lane-health horizons are millis
+        // since this instant, shared by workers (writers) and the
+        // dispatcher (reader).
+        let epoch = Instant::now();
+        let retry = RetryPolicy {
+            max_retries: cfg.max_retries,
+            backoff: cfg.retry_backoff,
+            batch_deadline: cfg.batch_deadline,
+        };
+        let breaker_threshold = cfg.breaker_threshold.max(1);
+        let breaker_cooldown = cfg.breaker_cooldown;
         let mut lanes = Vec::with_capacity(workers_n);
+        let mut lane_depths = Vec::with_capacity(workers_n);
         let mut workers = Vec::with_capacity(workers_n);
         for w in 0..workers_n {
             let (lane_tx, mut lane_rx) = spsc::channel::<Batch>(LANE_CAP);
             let depth = Arc::new(AtomicUsize::new(0));
+            let health = Arc::new(LaneHealth::new());
+            lane_depths.push(depth.clone());
             lanes.push(Lane {
                 tx: lane_tx,
                 depth: depth.clone(),
+                health: health.clone(),
             });
             let factory = factory.clone();
             let barrier = barrier.clone();
@@ -420,11 +558,14 @@ impl Server {
                 // traffic in steady state. Drop the memo and re-price
                 // per batch if a batch-aware energy model lands.
                 let mut energy_memo: Option<EnergyReport> = None;
+                // Jitter source for the retry backoff — seeded per
+                // worker so lanes don't retry in lockstep.
+                let mut retry_rng = Rng::new(0xFA17_5EED ^ w as u64);
                 // Exit when the dispatcher drops the lane producer and
                 // the ring has drained.
                 while let Ok(job) = lane_rx.recv() {
                     let retired = job.requests.len();
-                    run_batch(&exec, job, &mut shard);
+                    let delivered_ok = run_batch(&exec, job, &mut shard, &retry, &mut retry_rng);
                     // run_batch answered every request, so retire them
                     // from the in-flight accounting BEFORE the energy
                     // pricing — admission and the least-loaded lane pick
@@ -432,6 +573,22 @@ impl Server {
                     // while the co-simulation runs.
                     depth.fetch_sub(retired, SeqCst);
                     barrier.sub(w, retired);
+                    if delivered_ok {
+                        health.consecutive_failures.store(0, SeqCst);
+                    } else {
+                        // Batch failed even after retries: one more
+                        // strike against this lane; at the threshold the
+                        // breaker opens and the dispatcher routes around
+                        // it for the cooldown.
+                        let strikes = health.consecutive_failures.fetch_add(1, SeqCst) + 1;
+                        if strikes >= breaker_threshold {
+                            health.consecutive_failures.store(0, SeqCst);
+                            let until = (epoch.elapsed() + breaker_cooldown).as_millis() as u64;
+                            health.open_until_ms.store(until, SeqCst);
+                            health.trips.fetch_add(1, SeqCst);
+                            shard.record_breaker_trip(1);
+                        }
+                    }
                     if energy {
                         match surrogate_quote {
                             // Closed-form fast path: the quote was
@@ -477,7 +634,9 @@ impl Server {
             let policy = cfg.policy;
             let path = cfg.path;
             let barrier = barrier.clone();
-            std::thread::spawn(move || dispatcher_loop(&ingress, lanes, policy, path, &barrier))
+            std::thread::spawn(move || {
+                dispatcher_loop(&ingress, lanes, policy, path, &barrier, epoch)
+            })
         };
 
         Ok(Server {
@@ -489,6 +648,9 @@ impl Server {
             quote: admission_quote,
             max_uj_per_inf: cfg.max_uj_per_inf,
             surrogate_misses,
+            degraded_pricing,
+            drain_deadline: cfg.drain_deadline,
+            lane_depths,
             started: Instant::now(),
             dispatcher: Some(dispatcher),
             workers,
@@ -605,7 +767,7 @@ impl Server {
         // the shards and its pending set, drops the lane producers, and
         // each worker drains its ring before exiting.
         self.ingress.close();
-        let drained = self.barrier.wait_zero(DRAIN_DEADLINE);
+        let drained = self.barrier.wait_zero(self.drain_deadline);
         let mut agg = Metrics::new();
         if drained {
             // Zero unanswered requests means no batch is in flight
@@ -625,11 +787,25 @@ impl Server {
             // A wedged executor holds its worker thread hostage; joining
             // would hang shutdown()/Drop past the promised bound. Detach
             // instead (dropping a JoinHandle leaks no memory beyond the
-            // thread itself) and forfeit those shards.
+            // thread itself) and forfeit those shards. Name the lanes
+            // that still hold work so the wedge is attributable.
+            let stuck: Vec<String> = self
+                .lane_depths
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.load(SeqCst) > 0)
+                .map(|(i, d)| format!("lane {i} holds {}", d.load(SeqCst)))
+                .collect();
             eprintln!(
-                "warn: server drain deadline hit with {} requests unanswered; \
+                "warn: server drain deadline ({:?}) hit with {} requests unanswered ({}); \
                  detaching serving threads",
-                self.barrier.count()
+                self.drain_deadline,
+                self.barrier.count(),
+                if stuck.is_empty() {
+                    "none attributable to a worker lane".to_string()
+                } else {
+                    stuck.join(", ")
+                }
             );
             self.dispatcher.take();
             self.workers.clear();
@@ -637,6 +813,7 @@ impl Server {
         agg.record_rejected(self.rejected.value());
         agg.record_budget_rejected(self.budget_rejected.value());
         agg.record_surrogate_miss(self.surrogate_misses);
+        agg.record_degraded_pricing(self.degraded_pricing);
         agg.set_window(self.started, Instant::now());
         agg
     }
@@ -661,6 +838,7 @@ fn dispatcher_loop(
     policy: BatchPolicy,
     path: ConvPath,
     barrier: &DrainBarrier,
+    epoch: Instant,
 ) -> Metrics {
     let mut shard = Metrics::new();
     let mut pending: Vec<Request> = Vec::new();
@@ -692,6 +870,7 @@ fn dispatcher_loop(
                         requests: reqs,
                     },
                     barrier,
+                    epoch,
                 );
             }
         } else if closed && pending.is_empty() {
@@ -715,11 +894,14 @@ fn dispatcher_loop(
 }
 
 /// Hand one batch to the least-loaded live lane, falling back across
-/// lanes when full and blocking briefly when all are. Lanes whose worker
+/// lanes when full and blocking briefly when all are. Lanes whose
+/// circuit breaker is open are skipped — unless every breaker is open,
+/// in which case the batch is dispatched anyway: liveness and the
+/// exactly-once answer guarantee outrank the breaker. Lanes whose worker
 /// died are retired; with no lanes left the batch is failed out, so each
 /// request still receives exactly one response and the drain barrier
 /// still retires it.
-fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier) {
+fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier, epoch: Instant) {
     let n = job.requests.len();
     let mut job = job;
     'outer: loop {
@@ -732,10 +914,18 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier) {
             barrier.sub(0, n);
             return;
         }
-        // Try lanes in load order. Depth is incremented *before* the
-        // send so a fast worker can never retire the batch before the
-        // increment lands (which would underflow the counter).
-        let mut order: Vec<usize> = (0..lanes.len()).collect();
+        // Try closed-breaker lanes in load order. Depth is incremented
+        // *before* the send so a fast worker can never retire the batch
+        // before the increment lands (which would underflow the counter).
+        let now_ms = epoch.elapsed().as_millis() as u64;
+        let mut order: Vec<usize> = (0..lanes.len())
+            .filter(|&i| lanes[i].health.open_until_ms.load(SeqCst) <= now_ms)
+            .collect();
+        if order.is_empty() {
+            // Every breaker open: dispatch anyway rather than strand or
+            // fail work that a recovering lane could still serve.
+            order = (0..lanes.len()).collect();
+        }
         order.sort_by_key(|&i| lanes[i].depth.load(SeqCst));
         for &i in &order {
             lanes[i].depth.fetch_add(n, SeqCst);
@@ -753,9 +943,10 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier) {
                 }
             }
         }
-        // Every lane is full: block on the least-loaded until space
-        // frees, re-evaluating load on each timeout.
-        let i = (0..lanes.len())
+        // Every candidate lane is full: block on the least-loaded until
+        // space frees, re-evaluating load on each timeout.
+        let i = order
+            .into_iter()
             .min_by_key(|&i| lanes[i].depth.load(SeqCst))
             .expect("lanes checked non-empty");
         lanes[i].depth.fetch_add(n, SeqCst);
@@ -777,7 +968,22 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier) {
 /// Execute one planned batch on a worker's executor and fan results out,
 /// recording latencies into the worker-private shard (one clock read per
 /// batch, no lock).
-fn run_batch<E: Executor>(exec: &E, job: Batch, shard: &mut Metrics) {
+///
+/// Failed attempts (backend error or wrong-shaped output) are retried up
+/// to `policy.max_retries` times with jittered exponential backoff; only
+/// after exhaustion does the error fan out, so every request is still
+/// answered exactly once. An attempt that overruns
+/// `policy.batch_deadline` is counted as a timeout but its results are
+/// delivered regardless — a slow answer beats a dropped one. Returns
+/// whether the batch was ultimately delivered `Ok` (the lane-health
+/// signal for the circuit breaker).
+fn run_batch<E: Executor>(
+    exec: &E,
+    job: Batch,
+    shard: &mut Metrics,
+    policy: &RetryPolicy,
+    rng: &mut Rng,
+) -> bool {
     let Batch {
         artifact,
         batch,
@@ -785,38 +991,77 @@ fn run_batch<E: Executor>(exec: &E, job: Batch, shard: &mut Metrics) {
     } = job;
     debug_assert_eq!(batch, requests.len());
 
-    let result = if batch == 1 {
-        exec.execute(&artifact, std::slice::from_ref(&requests[0].image))
+    // Pack once; retries replay the same input.
+    let packed: Vec<f32> = if batch == 1 {
+        Vec::new()
     } else {
-        let mut packed = Vec::with_capacity(batch * IMAGE_ELEMS);
+        let mut p = Vec::with_capacity(batch * IMAGE_ELEMS);
         for r in &requests {
-            packed.extend_from_slice(&r.image);
+            p.extend_from_slice(&r.image);
         }
-        exec.execute(&artifact, &[packed])
+        p
     };
 
-    match result {
-        Ok(out) if out.len() == batch * LOGITS => {
+    let mut attempt = 0u32;
+    let outcome = loop {
+        let t0 = Instant::now();
+        let result = if batch == 1 {
+            exec.execute(&artifact, std::slice::from_ref(&requests[0].image))
+        } else {
+            exec.execute(&artifact, std::slice::from_ref(&packed))
+        };
+        if let Some(deadline) = policy.batch_deadline {
+            if t0.elapsed() > deadline {
+                // Deadline overrun is an observability event, not a
+                // cancellation: whatever this attempt produced is still
+                // delivered below.
+                shard.record_timeout(1);
+            }
+        }
+        // Fold wrong-shaped success into the one failure path so the
+        // retry loop treats it like any other transient fault.
+        let result = match result {
+            Ok(out) if out.len() == batch * LOGITS => Ok(out),
+            Ok(out) => Err(anyhow::anyhow!(
+                "backend returned {} values, expected {}",
+                out.len(),
+                batch * LOGITS
+            )),
+            Err(e) => Err(e),
+        };
+        match result {
+            Ok(out) => break Ok(out),
+            Err(_) if attempt < policy.max_retries => {
+                attempt += 1;
+                shard.record_retry(1);
+                // Jittered exponential backoff: base × 2^(k-1) × [1, 2).
+                // The shift is clamped so a huge max_retries cannot
+                // overflow the multiplier.
+                let exp = 1u64 << (attempt - 1).min(16) as u64;
+                let wait = policy.backoff.mul_f64(exp as f64 * (1.0 + rng.f64()));
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+            }
+            Err(e) => break Err(e),
+        }
+    };
+
+    match outcome {
+        Ok(out) => {
             let now = Instant::now();
             for (i, r) in requests.iter().enumerate() {
                 let logits = out[i * LOGITS..(i + 1) * LOGITS].to_vec();
                 shard.record_request(now.saturating_duration_since(r.enqueued));
                 let _ = r.resp.send(Ok(logits));
             }
-        }
-        Ok(out) => {
-            for r in &requests {
-                let _ = r.resp.send(Err(anyhow::anyhow!(
-                    "{artifact}: backend returned {} values, expected {}",
-                    out.len(),
-                    batch * LOGITS
-                )));
-            }
+            true
         }
         Err(e) => {
             for r in &requests {
                 let _ = r.resp.send(Err(anyhow::anyhow!("{artifact}: {e:#}")));
             }
+            false
         }
     }
 }
@@ -1284,5 +1529,170 @@ mod tests {
         let t0 = Instant::now();
         s.shutdown();
         assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn retries_recover_transient_faults() {
+        // Every second executor call fails; with retries enabled every
+        // request must still be answered Ok, and the recovery work must
+        // be visible as retry counts.
+        let plan = crate::coordinator::exec::FaultPlan::parse("error=2").unwrap();
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                energy: false,
+                ..Default::default()
+            },
+            SimExecutor::instant().with_plan(plan),
+        )
+        .unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..8 {
+            s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.count(), 8, "every request answered Ok: {}", m.summary());
+        assert!(m.retries() > 0, "injected faults must surface as retries");
+        assert_eq!(m.breaker_trips(), 0, "recovered batches must not trip the breaker");
+        assert!(m.summary().contains("retries"), "{}", m.summary());
+    }
+
+    #[test]
+    fn breaker_trips_on_persistent_faults_without_losing_answers() {
+        // Every executor call fails and retries are off: lanes trip
+        // their breakers, the dispatcher routes around them (and through
+        // them once all are open — liveness), and every request still
+        // gets exactly one (error) response.
+        let plan = crate::coordinator::exec::FaultPlan::parse("error=1").unwrap();
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 2,
+                warm_start: false,
+                energy: false,
+                max_retries: 0,
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_millis(50),
+                ..Default::default()
+            },
+            SimExecutor::instant().with_plan(plan),
+        )
+        .unwrap();
+        let mut rng = Rng::new(12);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| s.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        for rx in rxs {
+            let err = rx.recv().expect("exactly one response").unwrap_err();
+            assert!(err.to_string().contains("injected transient fault"), "{err:#}");
+        }
+        let m = s.shutdown();
+        assert!(m.breaker_trips() >= 1, "persistent faults must trip: {}", m.summary());
+        assert!(m.summary().contains("breaker trip"), "{}", m.summary());
+    }
+
+    #[test]
+    fn batch_deadline_overruns_count_but_still_deliver() {
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                energy: false,
+                batch_deadline: Some(Duration::from_micros(100)),
+                ..Default::default()
+            },
+            SimExecutor::new(Duration::from_millis(5), Duration::ZERO),
+        )
+        .unwrap();
+        let mut rng = Rng::new(13);
+        for _ in 0..3 {
+            s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.count(), 3, "slow batches still deliver: {}", m.summary());
+        assert!(m.timeouts() >= 1, "overruns must be counted: {}", m.summary());
+        assert!(m.summary().contains("batch timeout"), "{}", m.summary());
+    }
+
+    #[test]
+    fn drain_deadline_is_config_driven_and_detaches() {
+        // A stalled executor must not hold shutdown() past the
+        // configured drain deadline — and the detached worker still
+        // answers the admitted request (never stranded).
+        let plan = crate::coordinator::exec::FaultPlan::parse("stall=1:300ms").unwrap();
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                energy: false,
+                drain_deadline: Duration::from_millis(30),
+                ..Default::default()
+            },
+            SimExecutor::instant().with_plan(plan),
+        )
+        .unwrap();
+        let mut rng = Rng::new(14);
+        let rx = s.infer(rng.normal_vec(IMAGE_ELEMS));
+        let t0 = Instant::now();
+        let _ = s.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "drain deadline must bound shutdown"
+        );
+        let out = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("detached worker still answers");
+        assert!(out.is_ok());
+    }
+
+    #[test]
+    fn startup_quote_deadline_degrades_pricing_instead_of_blocking() {
+        // Energy budget + no surrogate forces a startup co-simulation; a
+        // zero deadline forces the degraded path: the server starts,
+        // serves, reports the degradation, and enforces no phantom
+        // budget.
+        let s = Server::start_sim(
+            ServerConfig {
+                workers: 1,
+                warm_start: false,
+                energy: false,
+                max_uj_per_inf: Some(1.0),
+                startup_quote_deadline: Duration::ZERO,
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        assert!(s.request_quote().is_none(), "degraded startup must not invent a quote");
+        let mut rng = Rng::new(15);
+        s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        let m = s.shutdown();
+        assert_eq!(m.degraded_pricing(), 1);
+        assert_eq!(m.budget_rejected(), 0, "unenforceable budget must not reject");
+        assert!(m.summary().contains("degraded-pricing"), "{}", m.summary());
+    }
+
+    #[test]
+    fn fault_free_serving_reports_no_recovery_actions() {
+        // The zero-fault path must look exactly like it did before the
+        // failure semantics landed: no counters, no summary fragments.
+        let s = sim_server(2, 64, SimExecutor::instant());
+        let mut rng = Rng::new(16);
+        for _ in 0..4 {
+            s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.retries(), 0);
+        assert_eq!(m.timeouts(), 0);
+        assert_eq!(m.breaker_trips(), 0);
+        assert_eq!(m.degraded_pricing(), 0);
+        let sum = m.summary();
+        assert!(
+            !sum.contains("retries")
+                && !sum.contains("timeout")
+                && !sum.contains("breaker")
+                && !sum.contains("degraded"),
+            "{sum}"
+        );
     }
 }

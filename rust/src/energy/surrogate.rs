@@ -50,8 +50,9 @@ use crate::util::stats::least_squares;
 
 /// Serialization header; bump on any layout change so old tables
 /// deliberately fail to load. v2 added bits_x/bits_w and the noise
-/// sigmas to every model entry.
-pub const SURROGATE_FORMAT: &str = "aimc-surrogate-v2";
+/// sigmas to every model entry; v3 added the four fault-model fields
+/// (stuck rate, drift sigma, ADC clip, IR drop).
+pub const SURROGATE_FORMAT: &str = "aimc-surrogate-v3";
 
 /// Acceptance bound on surrogate-vs-cycle-simulator relative energy
 /// error: the crossval scenario, its test, and `aimc surrogate-crossval`
@@ -449,6 +450,10 @@ impl SurrogateTable {
                     ("bits_w".into(), Json::Num(op.bits_w as f64)),
                     ("weight_sigma".into(), Json::Num(op.noise.weight_sigma)),
                     ("output_sigma".into(), Json::Num(op.noise.output_sigma)),
+                    ("stuck_rate".into(), Json::Num(op.noise.faults.stuck_rate)),
+                    ("drift_sigma".into(), Json::Num(op.noise.faults.drift_sigma)),
+                    ("adc_clip".into(), Json::Num(op.noise.faults.adc_clip)),
+                    ("ir_drop".into(), Json::Num(op.noise.faults.ir_drop)),
                     ("kh".into(), Json::Num(fam.kh as f64)),
                     ("kw".into(), Json::Num(fam.kw as f64)),
                     ("stride".into(), Json::Num(fam.stride as f64)),
@@ -503,11 +508,26 @@ impl SurrogateTable {
                     "negative noise sigma: {weight_sigma} / {output_sigma}"
                 ));
             }
+            let stuck_rate = as_num(field(entry, "stuck_rate")?)?;
+            let drift_sigma = as_num(field(entry, "drift_sigma")?)?;
+            let adc_clip = as_num(field(entry, "adc_clip")?)?;
+            let ir_drop = as_num(field(entry, "ir_drop")?)?;
+            if stuck_rate < 0.0 || drift_sigma < 0.0 || adc_clip < 0.0 || ir_drop < 0.0 {
+                return Err(format!(
+                    "negative fault field: {stuck_rate} / {drift_sigma} / {adc_clip} / {ir_drop}"
+                ));
+            }
             let op = OperatingPoint::node(node)
                 .bits(bits_x as u32, bits_w as u32)
                 .with_noise(crate::simulator::NoiseModel {
                     weight_sigma,
                     output_sigma,
+                    faults: crate::simulator::FaultModel {
+                        stuck_rate,
+                        drift_sigma,
+                        adc_clip,
+                        ir_drop,
+                    },
                 });
             let fam = Family {
                 kh: as_usize(field(entry, "kh")?)?,
@@ -917,6 +937,12 @@ mod tests {
             OperatingPoint::node(7.0).bits(4, 8).with_noise(crate::simulator::NoiseModel {
                 weight_sigma: 0.01,
                 output_sigma: 0.02,
+                faults: crate::simulator::FaultModel {
+                    stuck_rate: 0.001,
+                    drift_sigma: 0.02,
+                    adc_clip: 0.5,
+                    ir_drop: 0.03,
+                },
             }),
         ];
         let table = SurrogateTable::fit_ops(
@@ -969,6 +995,8 @@ mod tests {
                  \"machine\": \"systolic\", \"node_nm\": 45.0, \
                  \"bits_x\": 8, \"bits_w\": 8, \
                  \"weight_sigma\": 0.0, \"output_sigma\": 0.0, \
+                 \"stuck_rate\": 0.0, \"drift_sigma\": 0.0, \
+                 \"adc_clip\": 0.0, \"ir_drop\": 0.0, \
                  \"kh\": 3, \"kw\": 3, \"stride\": 1, \"coeffs\": [1.0]}}]}}"
             ),
         )
@@ -983,6 +1011,8 @@ mod tests {
                  \"machine\": \"systolic\", \"node_nm\": 45.0, \
                  \"bits_x\": 0, \"bits_w\": 8, \
                  \"weight_sigma\": 0.0, \"output_sigma\": 0.0, \
+                 \"stuck_rate\": 0.0, \"drift_sigma\": 0.0, \
+                 \"adc_clip\": 0.0, \"ir_drop\": 0.0, \
                  \"kh\": 3, \"kw\": 3, \"stride\": 1, \
                  \"coeffs\": [1.0, 1.0, 1.0, 1.0]}}]}}"
             ),

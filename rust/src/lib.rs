@@ -38,9 +38,12 @@
 //!   layer-dedup memoization ([`simulator::SweepCache`], persistable to
 //!   disk keyed by (config fingerprint, operating point, layer)), the
 //!   parallel (machine × network × operating point) grid runner
-//!   [`simulator::sweep::sweep`], and the deterministic seeded-RNG
+//!   [`simulator::sweep::sweep`], the deterministic seeded-RNG
 //!   effective-SNR/accuracy estimator [`simulator::accuracy`] behind
-//!   the `aimc pareto` energy × latency × accuracy frontier.
+//!   the `aimc pareto` energy × latency × accuracy frontier, and the
+//!   seeded fault-injection layer [`simulator::faults`] (stuck cells,
+//!   conductance drift, ADC clipping, IR drop) that degrades both the
+//!   energy coefficients and the accuracy channel behind `aimc faults`.
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts
 //!   (behind the `pjrt` cargo feature; a stub engine otherwise).
 //! * [`coordinator`] — the serving path on top of [`runtime`], sharded
@@ -55,9 +58,14 @@
 //!   transformer decode stream) merged at
 //!   shutdown, optional energy-budget admission
 //!   (`ServerConfig::max_uj_per_inf`), a condvar drain barrier for the
-//!   lifecycle, and an
-//!   executor abstraction ([`coordinator::exec`]) so serving runs
-//!   against PJRT or a deterministic in-process backend.
+//!   lifecycle (bounded by a configurable drain deadline), real failure
+//!   semantics — bounded retries with jittered backoff, per-batch
+//!   execution-deadline accounting, per-lane circuit breakers, and
+//!   degraded-pricing startup, all surfaced as metrics counters — and
+//!   an executor abstraction ([`coordinator::exec`]) so serving runs
+//!   against PJRT or a deterministic in-process backend
+//!   (with scripted fault injection via [`coordinator::exec`]'s
+//!   `FaultPlan`, `aimc serve --synthetic --chaos …`).
 //! * [`report`] — the Scenario → Dataset → sink pipeline: every table,
 //!   figure and sweep of the paper's evaluation section is a declarative
 //!   [`report::Scenario`] (machines × networks × nodes × derived

@@ -45,8 +45,8 @@ fn spec() -> Spec {
         "aimc",
         "Analog, In-memory Compute Architectures for AI — reproduction CLI.\n\
          commands: table1 table2 table3 table4 fig6 fig7 fig8 fig9 fig10 \
-         crossval surrogate-crossval all simulate sweep intensity pareto zoo verify \
-         fit-surrogate serve",
+         crossval surrogate-crossval all simulate sweep intensity pareto zoo faults \
+         verify fit-surrogate serve",
     )
     .opt(
         "net",
@@ -119,6 +119,17 @@ fn spec() -> Spec {
         "serve: reject requests whose predicted energy exceeds this many µJ/inf",
         None,
     )
+    .opt(
+        "fault-rates",
+        "faults: comma-separated fault-rate grid (stuck-at/drift/IR rate per point)",
+        Some("0,0.001,0.01,0.05"),
+    )
+    .opt(
+        "chaos",
+        "serve --synthetic: scripted executor fault plan, clauses error=N, \
+         stall=N:DUR, slow=N:FACTOR (e.g. error=5,stall=7:50ms,slow=3:4)",
+        None,
+    )
     .flag(
         "synthetic",
         "serve: deterministic in-process backend (no artifacts/PJRT needed)",
@@ -127,10 +138,10 @@ fn spec() -> Spec {
 }
 
 /// Where a cache directory keeps its snapshot (the version is in the
-/// file's own header; the name just keeps it greppable). Bumped to v2
-/// with the operating-point cache keys — a v1 file is simply ignored.
+/// file's own header; the name just keeps it greppable). Bumped to v3
+/// with the fault-model cache keys — an older file is simply ignored.
 fn cache_file(dir: &Path) -> PathBuf {
-    dir.join("sweep-cache.v2.txt")
+    dir.join("sweep-cache.v3.txt")
 }
 
 /// Parse `--bits`: comma-separated entries, each `"B"` (symmetric) or
@@ -179,6 +190,29 @@ fn parse_usize_list(opt: &str, spec: &str) -> anyhow::Result<Vec<usize>> {
     }
     if out.is_empty() {
         anyhow::bail!("--{opt} needs at least one entry");
+    }
+    Ok(out)
+}
+
+/// Parse `--fault-rates`: comma-separated rates in [0, 1] (0 = the
+/// ideal device, so a degradation curve can anchor at the clean point).
+fn parse_rate_list(spec: &str) -> anyhow::Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let v: f64 = entry.parse().map_err(|_| {
+            anyhow::anyhow!("bad --fault-rates entry {entry:?} (expected a number)")
+        })?;
+        if !(0.0..=1.0).contains(&v) {
+            anyhow::bail!("--fault-rates entries must be in [0, 1], got {entry:?}");
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        anyhow::bail!("--fault-rates needs at least one entry");
     }
     Ok(out)
 }
@@ -423,6 +457,26 @@ fn run() -> anyhow::Result<()> {
                         cache.stats()
                     );
                 }
+                "faults" => {
+                    let rates = match args.get("fault-rates") {
+                        Some(spec) => parse_rate_list(spec)?,
+                        None => Vec::new(),
+                    };
+                    let bits = match args.get("bits") {
+                        Some(spec) => parse_bits(spec)?,
+                        None => Vec::new(),
+                    };
+                    let sc = report::faults_scenario(input, &rates, &bits);
+                    let t0 = Instant::now();
+                    let ds = sc.eval(&ctx);
+                    sink.emit(&ds);
+                    eprintln!(
+                        "fault grid: {} rows in {:.2} s (cache: {})",
+                        sc.row_count(),
+                        t0.elapsed().as_secs_f64(),
+                        cache.stats()
+                    );
+                }
                 "verify" => cmd_verify()?,
                 "fit-surrogate" => cmd_fit_surrogate(&args, input, &cache)?,
                 "serve" => cmd_serve(&args, input)?,
@@ -626,6 +680,17 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
         None => (8, 8),
     };
     let synthetic = args.flag("synthetic");
+    let chaos = match args.get("chaos") {
+        Some(spec) => {
+            if !synthetic {
+                anyhow::bail!(
+                    "--chaos injects faults into the sim backend and needs --synthetic"
+                );
+            }
+            Some(aimc::coordinator::exec::FaultPlan::parse(spec)?)
+        }
+        None => None,
+    };
     // A corrupt/missing table must not take serving down: warn and fall
     // back to per-batch co-simulation.
     let surrogate = args.get("surrogate").and_then(|p| {
@@ -643,7 +708,7 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
     };
     println!(
         "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing on {}){}{}",
+         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing on {}){}{}{}",
         energy_bits.0,
         energy_bits.1,
         if surrogate.is_some() { "surrogate" } else { "co-simulation" },
@@ -652,7 +717,11 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
             Some(b) => format!(", budget {b} µJ/inf"),
             None => String::new(),
         },
-        if synthetic { ", synthetic backend" } else { "" }
+        if synthetic { ", synthetic backend" } else { "" },
+        match chaos {
+            Some(p) => format!(", chaos {p:?}"),
+            None => String::new(),
+        }
     );
 
     let cfg = ServerConfig {
@@ -667,7 +736,11 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
         ..Default::default()
     };
     let server = if synthetic {
-        Server::start_sim(cfg, SimExecutor::default())?
+        let sim = match chaos {
+            Some(plan) => SimExecutor::default().with_plan(plan),
+            None => SimExecutor::default(),
+        };
+        Server::start_sim(cfg, sim)?
     } else {
         Server::start(cfg)?
     };

@@ -28,6 +28,7 @@
 //! | [`surrogate_crossval_scenario`] | `aimc surrogate-crossval` — fitted energy surrogate vs cycle sims |
 //! | [`pareto_scenario`] | `aimc pareto` — energy × latency × accuracy over node × bits |
 //! | [`intensity_scenario`] | `aimc intensity` — transformer prefill/decode intensity crossover |
+//! | [`faults_scenario`] | `aimc faults` — energy/accuracy degradation over a fault-rate grid |
 //!
 //! [`all_scenarios`] is the `aimc all` list: one shared cache/pool
 //! evaluates the lot, so layer shapes repeated across artifacts
@@ -196,6 +197,99 @@ pub fn pareto_scenario_with_bits(input: usize, bits: &[(u32, u32)]) -> Scenario 
             c.sim(mi).ledger.total() * 1e6
         });
         s = s.sci(&format!("{m} time"), move |c: &RowCtx| c.sim(mi).time_units);
+    }
+    s
+}
+
+/// The default `aimc faults` fault-rate ladder: clean baseline, then
+/// three decades of injected device-fault severity.
+pub const FAULTS_DEFAULT_RATES: [f64; 4] = [0.0, 0.001, 0.01, 0.05];
+
+/// The default `aimc faults` node grid: the paper's 45 nm anchor plus
+/// the 7 nm end of the scaling ladder.
+pub const FAULTS_NODES: [f64; 2] = [45.0, 7.0];
+
+/// `aimc faults`: device-fault degradation curves. A fault-rate ladder
+/// (each rate mapped to a bundled [`crate::simulator::FaultModel`] —
+/// stuck cells + conductance drift + IR drop at that severity) is
+/// crossed with nodes × precisions; every row reports the seeded
+/// accuracy estimator's effective SNR / ENOB / retention under those
+/// faults and the fault-derated µJ/inference of all four cycle
+/// machines, so the energy-vs-robustness erosion of the analog
+/// advantage can be read straight off the table. Rate 0.0 rows are
+/// bit-identical to the clean `pareto` pricing — the identity-derate
+/// contract.
+///
+/// Deliberately NOT in [`all_scenarios`]: like `pareto`, a design-space
+/// tool, not a paper artifact.
+pub fn faults_scenario(input: usize, rates: &[f64], bits: &[(u32, u32)]) -> Scenario {
+    use crate::simulator::accuracy::{estimate_network, AccuracyEstimate};
+    use crate::simulator::{FaultModel, NoiseModel, OpKey, OperatingPoint};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let net = crate::networks::yolov3::yolov3(input);
+    let rates: Vec<f64> = if rates.is_empty() {
+        FAULTS_DEFAULT_RATES.to_vec()
+    } else {
+        rates.to_vec()
+    };
+    let bits: Vec<(u32, u32)> = if bits.is_empty() {
+        vec![(8, 8)]
+    } else {
+        bits.to_vec()
+    };
+    let noises: Vec<NoiseModel> = rates
+        .iter()
+        .map(|&r| NoiseModel {
+            faults: FaultModel::at_rate(r),
+            ..Default::default()
+        })
+        .collect();
+    // One Monte-Carlo estimate per grid point, shared by the three
+    // accuracy-derived columns (same trick as `pareto`).
+    let mut estimates: HashMap<OpKey, AccuracyEstimate> = HashMap::new();
+    for &nm in &FAULTS_NODES {
+        for &(bx, bw) in &bits {
+            for &noise in &noises {
+                let op = OperatingPoint::node(nm).bits(bx, bw).with_noise(noise);
+                estimates.insert(op.key(), estimate_network(&net, &op));
+            }
+        }
+    }
+    let estimates = Arc::new(estimates);
+
+    let title = format!(
+        "faults — energy × accuracy degradation, {} @ {input} px over {} nodes × {} precisions × {} fault rates",
+        net.name,
+        FAULTS_NODES.len(),
+        bits.len(),
+        rates.len()
+    );
+    let est = |f: fn(&AccuracyEstimate) -> f64| {
+        let estimates = Arc::clone(&estimates);
+        move |c: &RowCtx| f(&estimates[&c.op().key()])
+    };
+    let mut s = Scenario::new(title)
+        .machines(crate::simulator::machine::all_machines())
+        .network(net)
+        .nodes(&FAULTS_NODES)
+        .bits(&bits)
+        .noise_models(&noises)
+        .over_nodes()
+        .num("node (nm)", 0, |c: &RowCtx| c.node())
+        .text("bits", |c: &RowCtx| c.bits_label())
+        .num("fault rate", 4, |c: &RowCtx| c.op().noise.faults.stuck_rate)
+        .num("SNR (dB)", 2, est(|e| e.snr_db))
+        .num("eff. bits", 2, est(|e| e.effective_bits))
+        .num("accuracy", 4, est(|e| e.retention));
+    for (mi, m) in ["systolic", "reram", "photonic", "optical4f"]
+        .into_iter()
+        .enumerate()
+    {
+        s = s.num(&format!("{m} uJ/inf"), 3, move |c: &RowCtx| {
+            c.sim(mi).ledger.total() * 1e6
+        });
     }
     s
 }
@@ -437,6 +531,38 @@ mod tests {
         let e4 = num(&ds.rows[0][5]);
         let e12 = num(&ds.rows[3][5]);
         assert!(e4 < e12, "systolic energy must rise with bits");
+    }
+
+    #[test]
+    fn faults_scenario_traces_degradation_curves() {
+        let s = faults_scenario(120, &[0.0, 0.05], &[]);
+        // 2 nodes × 1 precision × 2 rates.
+        assert_eq!(s.row_count(), 4);
+        let ds = s.dataset();
+        assert_eq!(ds.rows.len(), 4);
+        // Columns: node, bits, rate, 3 accuracy-derived, then µJ × 4.
+        assert_eq!(ds.columns.len(), 6 + 4);
+        let num = |v: &Value| match v {
+            Value::Num(x) => *x,
+            other => panic!("{other:?}"),
+        };
+        // Rate-innermost: rows 0/1 are 45 nm clean/faulty.
+        assert_eq!(num(&ds.rows[0][2]), 0.0);
+        assert_eq!(num(&ds.rows[1][2]), 0.05);
+        // Faults must cost accuracy AND energy on every machine.
+        assert!(num(&ds.rows[1][3]) < num(&ds.rows[0][3]), "SNR degrades");
+        assert!(num(&ds.rows[1][5]) < num(&ds.rows[0][5]), "retention degrades");
+        for mi in 0..4 {
+            assert!(
+                num(&ds.rows[1][6 + mi]) > num(&ds.rows[0][6 + mi]),
+                "machine {mi} energy must rise under faults"
+            );
+        }
+        // Same seed ⇒ same curves: a rebuilt scenario is value-identical.
+        let again = faults_scenario(120, &[0.0, 0.05], &[]).dataset();
+        for (a, b) in ds.rows.iter().zip(&again.rows) {
+            assert_eq!(a, b, "faults scenario must be deterministic");
+        }
     }
 
     #[test]

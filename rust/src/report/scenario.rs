@@ -30,7 +30,7 @@
 use std::collections::HashSet;
 
 use crate::networks::{ConvLayer, Network};
-use crate::simulator::{Machine, OpKey, OperatingPoint, SimResult, SweepCache};
+use crate::simulator::{Machine, NoiseModel, OpKey, OperatingPoint, SimResult, SweepCache};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::table::{sci, Table};
@@ -271,6 +271,10 @@ pub struct Scenario {
     /// means default precision (8×8, noiseless) — the pre-precision
     /// behaviour every golden test pins.
     bits: Vec<(u32, u32)>,
+    /// Noise/fault models crossed noise-innermost with nodes × bits.
+    /// Empty means the noiseless ideal device — the pre-fault behaviour
+    /// every golden test pins.
+    noises: Vec<NoiseModel>,
     axis: RowAxis,
     columns: Vec<ColumnSpec>,
 }
@@ -283,6 +287,7 @@ impl Scenario {
             networks: Vec::new(),
             nodes: Vec::new(),
             bits: Vec::new(),
+            noises: Vec::new(),
             axis: RowAxis::Items(0),
             columns: Vec::new(),
         }
@@ -327,6 +332,15 @@ impl Scenario {
     /// before the precision axis existed.
     pub fn bits(mut self, bits: &[(u32, u32)]) -> Self {
         self.bits.extend_from_slice(bits);
+        self
+    }
+
+    /// Cross every (node × bits) point with these noise/fault models,
+    /// noise-innermost: each (node, bits) pair's rows appear
+    /// consecutively, one per model. Leaving this unset evaluates the
+    /// noiseless ideal device exactly as before the fault axis existed.
+    pub fn noise_models(mut self, noises: &[NoiseModel]) -> Self {
+        self.noises.extend_from_slice(noises);
         self
     }
 
@@ -400,10 +414,11 @@ impl Scenario {
     }
 
     /// The scenario's operating points: nodes crossed bits-minor with
-    /// the `bits` pairs, or plain default-precision nodes when no bits
-    /// were set.
+    /// the `bits` pairs (plain default precision when no bits were
+    /// set), then noise-innermost with the `noises` models (noiseless
+    /// when none were set).
     fn operating_points(&self) -> Vec<OperatingPoint> {
-        if self.bits.is_empty() {
+        let base: Vec<OperatingPoint> = if self.bits.is_empty() {
             self.nodes.iter().map(|&nm| OperatingPoint::node(nm)).collect()
         } else {
             let mut out = Vec::with_capacity(self.nodes.len() * self.bits.len());
@@ -413,12 +428,23 @@ impl Scenario {
                 }
             }
             out
+        };
+        if self.noises.is_empty() {
+            base
+        } else {
+            let mut out = Vec::with_capacity(base.len() * self.noises.len());
+            for op in base {
+                for &noise in &self.noises {
+                    out.push(op.with_noise(noise));
+                }
+            }
+            out
         }
     }
 
-    /// Operating points per node (≥ 1; the bits-axis multiplier).
+    /// Operating points per node (≥ 1; the bits × noise multiplier).
     fn bits_arity(&self) -> usize {
-        self.bits.len().max(1)
+        self.bits.len().max(1) * self.noises.len().max(1)
     }
 
     /// Rows this scenario will produce.
@@ -717,6 +743,40 @@ mod tests {
             panic!("numeric cells expected");
         };
         assert!(e4 < e8);
+    }
+
+    #[test]
+    fn noise_axis_crosses_innermost() {
+        use crate::simulator::FaultModel;
+        let noises: Vec<NoiseModel> = [0.0, 0.05]
+            .iter()
+            .map(|&r| NoiseModel {
+                faults: FaultModel::at_rate(r),
+                ..Default::default()
+            })
+            .collect();
+        let s = Scenario::new("faults")
+            .machine(Box::new(systolic::SystolicConfig::default()))
+            .network(yolov3(100))
+            .nodes(&[45.0, 7.0])
+            .noise_models(&noises)
+            .over_nodes()
+            .num("node (nm)", 0, |c: &RowCtx| c.node())
+            .num("stuck", 3, |c: &RowCtx| c.op().noise.faults.stuck_rate)
+            .sci("J/inf", |c: &RowCtx| c.sim(0).ledger.total());
+        assert_eq!(s.row_count(), 4);
+        let ds = s.dataset();
+        // Noise-innermost: 45/clean, 45/faulty, 7/clean, 7/faulty.
+        assert_eq!(ds.rows[0][0], Value::Num(45.0));
+        assert_eq!(ds.rows[0][1], Value::Num(0.0));
+        assert_eq!(ds.rows[1][1], Value::Num(0.05));
+        assert_eq!(ds.rows[2][0], Value::Num(7.0));
+        // Injected faults surcharge energy at the same node.
+        let (Value::Num(clean), Value::Num(faulty)) = (&ds.rows[0][2], &ds.rows[1][2])
+        else {
+            panic!("numeric cells expected");
+        };
+        assert!(faulty > clean);
     }
 
     #[test]

@@ -49,10 +49,13 @@ pub struct AccuracyEstimate {
     pub retention: f64,
 }
 
-/// Deterministic seed for one (layer, op) experiment.
+/// Deterministic seed for one (layer, op) experiment. The fault bits
+/// are appended only for a non-ideal [`super::faults::FaultModel`], so
+/// every zero-fault seed — and with it every pre-fault estimate — stays
+/// exactly what it was before fault injection existed.
 fn seed_for(layer: &ConvLayer, op: &OperatingPoint) -> u64 {
     let k = op.key();
-    let s = format!(
+    let mut s = format!(
         "accuracy {} {} {} {} {} {} | {:016x} {} {} {:016x} {:016x}",
         layer.n,
         layer.c_in,
@@ -66,6 +69,12 @@ fn seed_for(layer: &ConvLayer, op: &OperatingPoint) -> u64 {
         k.wsig_bits,
         k.osig_bits,
     );
+    if !op.noise.faults.is_ideal() {
+        s.push_str(&format!(
+            " {:016x} {:016x} {:016x} {:016x}",
+            k.stuck_bits, k.drift_bits, k.clip_bits, k.ir_bits,
+        ));
+    }
     fnv1a(s.as_bytes())
 }
 
@@ -80,12 +89,21 @@ fn quantize(x: f64, bits: u32) -> f64 {
 }
 
 /// Estimate signal integrity for one layer at `op`.
+///
+/// Fault composition (all gated on the corresponding
+/// [`super::faults::FaultModel`] field being non-zero, so the zero-fault
+/// RNG stream — and every pre-fault estimate — is untouched): stuck
+/// cells replace the stored weight with Gmin (0) or Gmax (full scale),
+/// log-normal drift multiplies it, IR drop scales the analog
+/// accumulation by a deterministic per-column factor, and ADC
+/// saturation clamps the readout at `adc_clip` output-RMS units.
 pub fn estimate_layer(layer: &ConvLayer, op: &OperatingPoint) -> AccuracyEstimate {
     let fan_in = (layer.kh * layer.kw * layer.c_in).clamp(1, FAN_IN_CAP);
+    let f = op.noise.faults;
     let mut rng = Rng::new(seed_for(layer, op));
     let mut sig_power = 0.0;
     let mut err_power = 0.0;
-    for _ in 0..TRIALS {
+    for t in 0..TRIALS {
         let mut exact = 0.0;
         let mut noisy = 0.0;
         for _ in 0..fan_in {
@@ -94,13 +112,41 @@ pub fn estimate_layer(layer: &ConvLayer, op: &OperatingPoint) -> AccuracyEstimat
             // Device-level perturbations: quantize both operands, then
             // add per-device conductance error to the stored weight.
             let qx = quantize(x, op.bits_x);
-            let qw = quantize(w, op.bits_w) + op.noise.weight_sigma * rng.normal();
+            let mut qw = quantize(w, op.bits_w) + op.noise.weight_sigma * rng.normal();
+            if f.stuck_rate > 0.0 && rng.f64() < f.stuck_rate {
+                // Stuck cell: Gmin reads as zero, Gmax as a full-scale
+                // weight of the programmed sign.
+                qw = if rng.bool() {
+                    0.0
+                } else if qw >= 0.0 {
+                    4.0
+                } else {
+                    -4.0
+                };
+            }
+            if f.drift_sigma > 0.0 {
+                // Log-normal conductance drift since the last refresh.
+                qw *= (f.drift_sigma * rng.normal()).exp();
+            }
             exact += x * w;
             noisy += qx * qw;
+        }
+        if f.ir_drop > 0.0 {
+            // Per-column IR drop: successive trials read successive
+            // columns of the array, scaled 1.0 → 1 − ir_drop (same
+            // deterministic ramp as `faults::sample_map`).
+            noisy *= 1.0 - f.ir_drop * (t as f64 / (TRIALS - 1) as f64);
         }
         // Output-referred analog noise (ADC / shot / thermal) scales
         // with the accumulation length like an RSS of per-term noise.
         noisy += op.noise.output_sigma * (fan_in as f64).sqrt() * rng.normal();
+        if f.adc_clip > 0.0 {
+            // ADC saturation at `adc_clip` output-RMS units (the output
+            // RMS of a fan_in-term unit-variance accumulation is
+            // √fan_in).
+            let limit = f.adc_clip * (fan_in as f64).sqrt();
+            noisy = noisy.clamp(-limit, limit);
+        }
         sig_power += exact * exact;
         err_power += (noisy - exact) * (noisy - exact);
     }
@@ -166,6 +212,7 @@ mod tests {
         let op = OperatingPoint::node(45.0).bits(6, 6).with_noise(NoiseModel {
             weight_sigma: 0.01,
             output_sigma: 0.02,
+            ..Default::default()
         });
         let here = estimate_layer(&l, &op);
         let handles: Vec<_> = (0..4)
@@ -210,6 +257,7 @@ mod tests {
             &OperatingPoint::node(45.0).with_noise(NoiseModel {
                 weight_sigma: 0.1,
                 output_sigma: 0.1,
+                ..Default::default()
             }),
         );
         assert!(noisy.snr_db < e8.snr_db);
@@ -250,9 +298,73 @@ mod tests {
             &OperatingPoint::node(45.0).bits(2, 2).with_noise(NoiseModel {
                 weight_sigma: 0.5,
                 output_sigma: 0.5,
+                ..Default::default()
             }),
         );
         assert!(e.retention < 0.5, "retention {}", e.retention);
         assert!(e.snr_db < 10.0);
+    }
+
+    #[test]
+    fn injected_faults_degrade_snr_monotonically() {
+        use crate::simulator::faults::FaultModel;
+        let l = layer();
+        let at = |rate: f64| {
+            estimate_layer(
+                &l,
+                &OperatingPoint::node(45.0).with_noise(NoiseModel {
+                    faults: FaultModel::at_rate(rate),
+                    ..Default::default()
+                }),
+            )
+        };
+        let clean = at(0.0);
+        let mild = at(0.01);
+        let harsh = at(0.10);
+        assert!(mild.snr_db < clean.snr_db, "{} vs {}", mild.snr_db, clean.snr_db);
+        assert!(harsh.snr_db < mild.snr_db, "{} vs {}", harsh.snr_db, mild.snr_db);
+        assert!(harsh.retention < mild.retention);
+        // A zero-rate fault bundle IS the ideal model: same seed, same
+        // stream, bit-identical estimate.
+        let plain = estimate_layer(&l, &OperatingPoint::node(45.0));
+        assert_eq!(clean.snr_db.to_bits(), plain.snr_db.to_bits());
+    }
+
+    #[test]
+    fn adc_clipping_alone_degrades_the_channel() {
+        use crate::simulator::faults::FaultModel;
+        let l = layer();
+        let clipped = estimate_layer(
+            &l,
+            &OperatingPoint::node(45.0).with_noise(NoiseModel {
+                faults: FaultModel {
+                    adc_clip: 0.5,
+                    ..Default::default()
+                },
+                ..Default::default()
+            }),
+        );
+        let clean = estimate_layer(&l, &OperatingPoint::node(45.0));
+        assert!(clipped.snr_db < clean.snr_db);
+    }
+
+    #[test]
+    fn faulted_estimates_are_deterministic() {
+        use crate::simulator::faults::FaultModel;
+        let l = layer();
+        let op = OperatingPoint::node(45.0).bits(6, 6).with_noise(NoiseModel {
+            weight_sigma: 0.01,
+            output_sigma: 0.02,
+            faults: FaultModel::at_rate(0.02),
+        });
+        let here = estimate_layer(&l, &op);
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || estimate_layer(&l, &op)))
+            .collect();
+        for h in handles {
+            let other = h.join().unwrap();
+            assert_eq!(here.snr_db.to_bits(), other.snr_db.to_bits());
+            assert_eq!(here.retention.to_bits(), other.retention.to_bits());
+        }
     }
 }

@@ -1,0 +1,329 @@
+//! Deterministic fault injection for the analog device layer.
+//!
+//! Real IMC arrays are not the ideal devices the paper's scaling
+//! argument assumes: cells stick at their conductance extremes, stored
+//! conductances drift log-normally between refreshes, long summation
+//! columns lose current to IR drop, and the ADC saturates. This module
+//! makes those non-idealities first-class and **deterministic**:
+//!
+//! * [`FaultModel`] — the statistical description carried inside
+//!   [`super::op::NoiseModel`] (and therefore inside every
+//!   [`super::op::OperatingPoint`] and cache key). The energy
+//!   simulators consume it through the closed-form expected-overhead
+//!   derates ([`FaultModel::cell_derate`] /
+//!   [`FaultModel::converter_derate`] / [`FaultModel::digital_derate`]),
+//!   all of which are **exactly 1.0** for the ideal model — multiplying
+//!   a finite coefficient by 1.0 is an IEEE-754 identity, which is how
+//!   the zero-fault golden outputs stay byte-identical. The accuracy
+//!   estimator ([`super::accuracy`]) composes the same fields into its
+//!   per-draw Monte-Carlo channel.
+//! * [`FaultMap`] — one concrete seeded realization of the model over an
+//!   R×C array (per-cell stuck state, per-cell drift factor, per-column
+//!   IR scale). The same `(model, rows, cols, seed)` produces a
+//!   bit-identical map on every call, thread and platform
+//!   ([`FaultMap::fingerprint`] pins this in tests and lets callers
+//!   assert reproducibility cheaply).
+
+use super::machine::fnv1a;
+use crate::util::rng::Rng;
+
+/// Expected energy overhead per unit of stuck-cell rate: spare-column
+/// redundancy plus the remap logic that steers around a dead cell.
+const STUCK_REDUNDANCY_COST: f64 = 4.0;
+
+/// Expected energy overhead per unit of drift sigma: periodic refresh
+/// programming amortized over the reuse window.
+const DRIFT_REFRESH_COST: f64 = 0.5;
+
+/// Converter overhead per unit of IR-drop fraction: per-column gain
+/// calibration in front of the ADC.
+const IR_CAL_COST: f64 = 0.25;
+
+/// Converter overhead when ADC saturation handling is on: auto-ranging
+/// margin per unit of 1/clip (a tighter clip needs more ranging work).
+const ADC_RANGE_COST: f64 = 0.1;
+
+/// Digital-side overhead per unit of stuck-cell rate: ECC-style
+/// detect/correct on memory traffic.
+const ECC_COST: f64 = 0.5;
+
+/// Statistical description of the device-level faults injected at an
+/// operating point. All-zero (the `Default`) means the ideal device the
+/// pre-fault code paths assumed.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct FaultModel {
+    /// Fraction of array cells stuck at Gmin or Gmax (split 50/50 by the
+    /// sampled map).
+    pub stuck_rate: f64,
+    /// Sigma of the log-normal multiplicative conductance drift per
+    /// stored weight (`g' = g · exp(σ·N(0,1))`).
+    pub drift_sigma: f64,
+    /// ADC saturation threshold in units of the output RMS (0 = ideal,
+    /// no clipping). Smaller values clip harder.
+    pub adc_clip: f64,
+    /// Fractional current lost to IR drop at the far end of a summation
+    /// column (`[0, 1)`; columns scale linearly from 1.0 down to
+    /// `1 − ir_drop`).
+    pub ir_drop: f64,
+}
+
+impl FaultModel {
+    /// Is this the ideal (zero-fault) device?
+    pub fn is_ideal(&self) -> bool {
+        self.stuck_rate == 0.0
+            && self.drift_sigma == 0.0
+            && self.adc_clip == 0.0
+            && self.ir_drop == 0.0
+    }
+
+    /// One-knob fault bundle for degradation sweeps (`aimc faults`):
+    /// stuck cells at `rate`, drift sigma `rate`, IR-drop fraction
+    /// `rate`, ADC clipping off. `at_rate(0.0)` is the ideal model.
+    pub fn at_rate(rate: f64) -> FaultModel {
+        FaultModel {
+            stuck_rate: rate,
+            drift_sigma: rate,
+            adc_clip: 0.0,
+            ir_drop: rate,
+        }
+    }
+
+    /// Expected energy overhead on analog cell arrays (ReRAM crossbar
+    /// MACs and programming, SLM pixels): redundancy for stuck cells
+    /// plus refresh programming against drift. Exactly 1.0 when ideal.
+    pub fn cell_derate(&self) -> f64 {
+        if self.is_ideal() {
+            return 1.0;
+        }
+        (1.0 + self.stuck_rate * STUCK_REDUNDANCY_COST)
+            * (1.0 + self.drift_sigma * DRIFT_REFRESH_COST)
+    }
+
+    /// Expected energy overhead on the converters (DAC drive, ADC
+    /// readout): per-column IR calibration plus ADC auto-ranging margin
+    /// when a saturation threshold is configured. Exactly 1.0 when
+    /// ideal.
+    pub fn converter_derate(&self) -> f64 {
+        if self.is_ideal() {
+            return 1.0;
+        }
+        let range = if self.adc_clip > 0.0 {
+            1.0 + ADC_RANGE_COST / self.adc_clip
+        } else {
+            1.0
+        };
+        (1.0 + self.ir_drop * IR_CAL_COST) * range
+    }
+
+    /// Expected energy overhead on digital memory traffic (ECC-style
+    /// detect/correct against stuck bits). Exactly 1.0 when ideal.
+    pub fn digital_derate(&self) -> f64 {
+        if self.is_ideal() {
+            return 1.0;
+        }
+        1.0 + self.stuck_rate * ECC_COST
+    }
+}
+
+/// State of one array cell in a sampled [`FaultMap`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellFault {
+    /// Cell programs and reads normally.
+    Ok,
+    /// Stuck at minimum conductance (reads as zero weight).
+    StuckMin,
+    /// Stuck at maximum conductance (reads as a full-scale weight).
+    StuckMax,
+}
+
+/// One concrete seeded realization of a [`FaultModel`] over an R×C
+/// array. Row-major cell order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultMap {
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-cell stuck state, row-major (`rows × cols` entries).
+    pub cells: Vec<CellFault>,
+    /// Per-cell multiplicative drift factor, row-major; all 1.0 when
+    /// `drift_sigma == 0`.
+    pub drift: Vec<f64>,
+    /// Per-column current scale from IR drop: 1.0 at the near column,
+    /// `1 − ir_drop` at the far column, linear in between.
+    pub column_scale: Vec<f64>,
+}
+
+/// Deterministic seed for a `(model, rows, cols, salt)` map draw.
+pub fn seed_for(model: &FaultModel, rows: usize, cols: usize, salt: u64) -> u64 {
+    let s = format!(
+        "faultmap {rows} {cols} {salt} | {:016x} {:016x} {:016x} {:016x}",
+        model.stuck_rate.to_bits(),
+        model.drift_sigma.to_bits(),
+        model.adc_clip.to_bits(),
+        model.ir_drop.to_bits(),
+    );
+    fnv1a(s.as_bytes())
+}
+
+/// Sample one fault map. Same inputs ⇒ bit-identical output, on every
+/// call, thread and platform (no wall clock, no global RNG).
+pub fn sample_map(model: &FaultModel, rows: usize, cols: usize, salt: u64) -> FaultMap {
+    let mut rng = Rng::new(seed_for(model, rows, cols, salt));
+    let n = rows * cols;
+    let mut cells = Vec::with_capacity(n);
+    let mut drift = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cell = if model.stuck_rate > 0.0 && rng.f64() < model.stuck_rate {
+            if rng.bool() {
+                CellFault::StuckMax
+            } else {
+                CellFault::StuckMin
+            }
+        } else {
+            CellFault::Ok
+        };
+        cells.push(cell);
+        drift.push(if model.drift_sigma > 0.0 {
+            (model.drift_sigma * rng.normal()).exp()
+        } else {
+            1.0
+        });
+    }
+    let span = (cols.max(2) - 1) as f64;
+    let column_scale = (0..cols)
+        .map(|c| 1.0 - model.ir_drop * (c as f64 / span))
+        .collect();
+    FaultMap {
+        rows,
+        cols,
+        cells,
+        drift,
+        column_scale,
+    }
+}
+
+impl FaultMap {
+    /// Fraction of cells stuck (either polarity).
+    pub fn stuck_fraction(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        let stuck = self
+            .cells
+            .iter()
+            .filter(|&&c| c != CellFault::Ok)
+            .count();
+        stuck as f64 / self.cells.len() as f64
+    }
+
+    /// FNV-1a digest over the exact bit content of the map — two maps
+    /// are bit-identical iff their fingerprints match (modulo hash
+    /// collisions), which is what the seeded-determinism tests pin.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(16 + self.cells.len() * 9 + self.column_scale.len() * 8);
+        bytes.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        bytes.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        for c in &self.cells {
+            bytes.push(match c {
+                CellFault::Ok => 0,
+                CellFault::StuckMin => 1,
+                CellFault::StuckMax => 2,
+            });
+        }
+        for d in &self.drift {
+            bytes.extend_from_slice(&d.to_bits().to_le_bytes());
+        }
+        for s in &self.column_scale {
+            bytes.extend_from_slice(&s.to_bits().to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_model_has_identity_derates() {
+        let f = FaultModel::default();
+        assert!(f.is_ideal());
+        // Bit-exact 1.0: the zero-fault golden contract rests on this.
+        assert_eq!(f.cell_derate().to_bits(), 1.0f64.to_bits());
+        assert_eq!(f.converter_derate().to_bits(), 1.0f64.to_bits());
+        assert_eq!(f.digital_derate().to_bits(), 1.0f64.to_bits());
+        assert_eq!(FaultModel::at_rate(0.0), f);
+    }
+
+    #[test]
+    fn derates_grow_with_fault_severity() {
+        let lo = FaultModel::at_rate(0.01);
+        let hi = FaultModel::at_rate(0.05);
+        assert!(lo.cell_derate() > 1.0);
+        assert!(hi.cell_derate() > lo.cell_derate());
+        assert!(hi.converter_derate() > lo.converter_derate());
+        assert!(hi.digital_derate() > lo.digital_derate());
+        let clipped = FaultModel {
+            adc_clip: 2.0,
+            ..Default::default()
+        };
+        assert!(clipped.converter_derate() > 1.0);
+        assert_eq!(clipped.cell_derate().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn same_seed_gives_bit_identical_map() {
+        let f = FaultModel {
+            stuck_rate: 0.02,
+            drift_sigma: 0.05,
+            adc_clip: 3.0,
+            ir_drop: 0.1,
+        };
+        let a = sample_map(&f, 64, 64, 7);
+        let b = sample_map(&f, 64, 64, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Across threads too.
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || sample_map(&f, 64, 64, 7).fingerprint()))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), a.fingerprint());
+        }
+    }
+
+    #[test]
+    fn different_seed_or_model_changes_the_map() {
+        let f = FaultModel::at_rate(0.05);
+        let a = sample_map(&f, 32, 32, 1);
+        let b = sample_map(&f, 32, 32, 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let g = FaultModel::at_rate(0.06);
+        let c = sample_map(&g, 32, 32, 1);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn map_statistics_track_the_model() {
+        let f = FaultModel {
+            stuck_rate: 0.1,
+            drift_sigma: 0.0,
+            adc_clip: 0.0,
+            ir_drop: 0.2,
+        };
+        let m = sample_map(&f, 128, 128, 3);
+        let frac = m.stuck_fraction();
+        assert!((frac - 0.1).abs() < 0.02, "stuck fraction {frac}");
+        assert!(m.drift.iter().all(|&d| d == 1.0), "no drift configured");
+        assert_eq!(m.column_scale[0], 1.0);
+        let last = *m.column_scale.last().unwrap();
+        assert!((last - 0.8).abs() < 1e-12, "far column {last}");
+    }
+
+    #[test]
+    fn ideal_map_is_clean() {
+        let m = sample_map(&FaultModel::default(), 16, 16, 0);
+        assert_eq!(m.stuck_fraction(), 0.0);
+        assert!(m.drift.iter().all(|&d| d == 1.0));
+        assert!(m.column_scale.iter().all(|&s| s == 1.0));
+    }
+}

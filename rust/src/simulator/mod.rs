@@ -24,6 +24,13 @@
 //! configuration bit-exactly. The [`accuracy`] module estimates the
 //! effective SNR / task-accuracy retention of a point, so the `aimc
 //! pareto` scenario can trace the energy × latency × accuracy frontier.
+//! The [`faults`] module makes device non-idealities (stuck cells,
+//! conductance drift, ADC saturation, IR drop) first-class: a
+//! [`FaultModel`] rides inside the `NoiseModel`, derates every cycle
+//! simulator's energy coefficients (identity at zero faults), degrades
+//! the accuracy estimator's Monte-Carlo channel, and samples
+//! deterministic seeded [`faults::FaultMap`]s — the `aimc faults`
+//! scenario sweeps the resulting degradation curves.
 //!
 //! Sweep drivers do not call the machines directly: the [`machine`]
 //! module unifies all four (plus the analytic models) behind the
@@ -32,6 +39,7 @@
 //! operating-point) grid runner built on [`crate::util::pool`].
 
 pub mod accuracy;
+pub mod faults;
 pub mod ledger;
 pub mod machine;
 pub mod op;
@@ -41,6 +49,7 @@ pub mod reram;
 pub mod sweep;
 pub mod systolic;
 
+pub use faults::{FaultMap, FaultModel};
 pub use ledger::{Component, EnergyLedger};
 pub use machine::{all_machines, AnalyticMachine, Machine};
 pub use op::{NoiseModel, OpKey, OperatingPoint};

@@ -18,6 +18,8 @@
 //! 8 bits, and multiplying by 1.0 is an IEEE-754 identity for finite
 //! values.
 
+use super::faults::FaultModel;
+
 /// Per-device noise description for the accuracy estimator. Sigmas are
 /// relative to unit-variance signals (i.e. a `weight_sigma` of 0.05
 /// means 5% rms conductance/phase error per stored weight).
@@ -28,11 +30,15 @@ pub struct NoiseModel {
     /// RMS error added per dot-product readout (ADC / shot noise),
     /// in units of one input element's contribution.
     pub output_sigma: f64,
+    /// Injected device faults (stuck cells, drift, ADC saturation,
+    /// IR drop — see [`crate::simulator::faults`]). The `Default` is the
+    /// ideal device, reproducing every pre-fault code path exactly.
+    pub faults: FaultModel,
 }
 
 impl NoiseModel {
     pub fn is_noiseless(&self) -> bool {
-        self.weight_sigma == 0.0 && self.output_sigma == 0.0
+        self.weight_sigma == 0.0 && self.output_sigma == 0.0 && self.faults.is_ideal()
     }
 }
 
@@ -117,6 +123,10 @@ impl OperatingPoint {
             bits_w: self.bits_w,
             wsig_bits: self.noise.weight_sigma.to_bits(),
             osig_bits: self.noise.output_sigma.to_bits(),
+            stuck_bits: self.noise.faults.stuck_rate.to_bits(),
+            drift_bits: self.noise.faults.drift_sigma.to_bits(),
+            clip_bits: self.noise.faults.adc_clip.to_bits(),
+            ir_bits: self.noise.faults.ir_drop.to_bits(),
         }
     }
 }
@@ -132,6 +142,10 @@ pub struct OpKey {
     pub bits_w: u32,
     pub wsig_bits: u64,
     pub osig_bits: u64,
+    pub stuck_bits: u64,
+    pub drift_bits: u64,
+    pub clip_bits: u64,
+    pub ir_bits: u64,
 }
 
 impl OpKey {
@@ -144,6 +158,12 @@ impl OpKey {
             noise: NoiseModel {
                 weight_sigma: f64::from_bits(self.wsig_bits),
                 output_sigma: f64::from_bits(self.osig_bits),
+                faults: FaultModel {
+                    stuck_rate: f64::from_bits(self.stuck_bits),
+                    drift_sigma: f64::from_bits(self.drift_bits),
+                    adc_clip: f64::from_bits(self.clip_bits),
+                    ir_drop: f64::from_bits(self.ir_bits),
+                },
             },
         }
     }
@@ -179,6 +199,7 @@ mod tests {
         let op = OperatingPoint::node(28.0).bits(6, 4).with_noise(NoiseModel {
             weight_sigma: 0.05,
             output_sigma: 0.01,
+            ..Default::default()
         });
         assert_eq!(op.bits_label(), "6x4");
         assert!(!op.is_default_precision());
@@ -194,12 +215,18 @@ mod tests {
         let d = a.with_noise(NoiseModel {
             weight_sigma: 0.1,
             output_sigma: 0.0,
+            ..Default::default()
+        });
+        let e = a.with_noise(NoiseModel {
+            faults: FaultModel::at_rate(0.01),
+            ..Default::default()
         });
         assert_ne!(a.key(), b.key());
         assert_ne!(a.key(), c.key());
         assert_ne!(a.key(), d.key());
+        assert_ne!(a.key(), e.key(), "fault model must be part of the key");
         assert_eq!(a.key(), OperatingPoint::default().key());
-        for op in [a, b, c, d] {
+        for op in [a, b, c, d, e] {
             assert_eq!(op.key().to_op(), op);
         }
     }

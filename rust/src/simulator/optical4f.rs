@@ -114,11 +114,17 @@ impl Coeffs {
         // Pixel-wise DAC: converter circuit + segmented active-matrix
         // line load (node-independent wire term).
         let slm_line = presets::slm_2048().energy();
+        // Fault derates: dead/stuck SLM pixels behave like stuck analog
+        // cells (spare-pixel redundancy + recalibration refresh charge
+        // the optical budget), while drive droop and CIS ADC range
+        // pressure surcharge the converters. Exactly ×1.0 when ideal.
+        let cell = op.noise.faults.cell_derate();
+        let conv = op.noise.faults.converter_derate();
         Coeffs {
-            e_dac_px: e.e_dac_x + slm_line,
-            e_dac_kern_px: e.e_dac_w + slm_line,
-            e_adc: e.e_adc,
-            e_opt_px: e.e_opt,
+            e_dac_px: (e.e_dac_x + slm_line) * conv,
+            e_dac_kern_px: (e.e_dac_w + slm_line) * conv,
+            e_adc: e.e_adc * conv,
+            e_opt_px: e.e_opt * cell,
             e_sram_byte: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte,
             act_bytes: cfg.act_bytes * op.sx(),
             wgt_bytes: cfg.act_bytes * op.sw(),

@@ -78,12 +78,16 @@ impl Coeffs {
     fn new(cfg: &PhotonicConfig, op: &OperatingPoint) -> Self {
         let e = EnergyParams::default().at_op(op);
         let line = LoadModel::new(PITCH_PHOTONIC, cfg.dim).energy();
+        // Fault derate: the photonic mesh has no conductance cells to
+        // stick, but IR-drop-style drive droop and ADC range pressure
+        // surcharge every converter event. Exactly ×1.0 when ideal.
+        let conv = op.noise.faults.converter_derate();
         Coeffs {
             // Input: DAC + modulator + shot-noise laser budget (eq. A7/A8).
-            e_dac_in: e.e_dac_x + cfg.e_modulator + e.e_opt,
+            e_dac_in: (e.e_dac_x + cfg.e_modulator + e.e_opt) * conv,
             // Weight reconfig: DAC + modulator + mesh line load (eq. A5).
-            e_dac_weight: e.e_dac_w + cfg.e_modulator + line,
-            e_adc: e.e_adc,
+            e_dac_weight: (e.e_dac_w + cfg.e_modulator + line) * conv,
+            e_adc: e.e_adc * conv,
             e_sram_act: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte * op.sx(),
             e_reg_byte: Sram::at_node(5, op.node_nm).energy_per_byte,
         }

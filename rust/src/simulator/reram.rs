@@ -87,9 +87,15 @@ impl Coeffs {
         // pitch; node-independent wire term). Inputs are activations.
         let line = LoadModel::new(PITCH_RERAM, cfg.dim).energy();
         let e_sram_byte = Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte;
+        // Fault derates: stuck cells / drift surcharge the analog array
+        // (spare columns + refresh reprogramming), IR drop / ADC range
+        // pressure surcharge the converters. Both are exactly ×1.0 for
+        // the ideal device — the golden bit-identity contract.
+        let cell = op.noise.faults.cell_derate();
+        let conv = op.noise.faults.converter_derate();
         Coeffs {
-            e_dac_row: e.e_dac_x + line,
-            e_adc: e.e_adc,
+            e_dac_row: (e.e_dac_x + line) * conv,
+            e_adc: e.e_adc * conv,
             // eq. (A11): per-MAC dissipation in the cells — no node
             // scaling (set by quantum conductance + noise floor), but
             // the mean programmed conductance follows bits_w.
@@ -97,10 +103,11 @@ impl Coeffs {
                 bits: op.bits_w,
                 ..cfg.array
             }
-            .energy_per_mac(),
+            .energy_per_mac()
+                * cell,
             e_sram_byte,
             e_sram_act: e_sram_byte * op.sx(),
-            e_program_amortized: cfg.e_program / cfg.reuse,
+            e_program_amortized: cfg.e_program / cfg.reuse * cell,
         }
     }
 }
@@ -311,6 +318,32 @@ mod tests {
         assert_eq!(
             r48.ledger.get(Component::Mac).to_bits(),
             r88.ledger.get(Component::Mac).to_bits()
+        );
+    }
+
+    #[test]
+    fn injected_faults_surcharge_cells_and_converters() {
+        use crate::simulator::faults::FaultModel;
+        use crate::simulator::op::NoiseModel;
+        let cfg = ReramConfig::default();
+        let l = ConvLayer::square(64, 16, 32, 3, 1);
+        let clean = simulate_layer(&cfg, &l, &op(45.0));
+        let faulty = simulate_layer(
+            &cfg,
+            &l,
+            &op(45.0).with_noise(NoiseModel {
+                faults: FaultModel::at_rate(0.01),
+                ..Default::default()
+            }),
+        );
+        assert_eq!(clean.macs, faulty.macs, "faults never change work");
+        assert!(faulty.ledger.get(Component::Mac) > clean.ledger.get(Component::Mac));
+        assert!(faulty.ledger.get(Component::Adc) > clean.ledger.get(Component::Adc));
+        assert!(faulty.ledger.get(Component::Dac) > clean.ledger.get(Component::Dac));
+        // Digital activation SRAM is untouched by analog-array faults.
+        assert_eq!(
+            clean.ledger.get(Component::Sram).to_bits(),
+            faulty.ledger.get(Component::Sram).to_bits()
         );
     }
 }

@@ -202,12 +202,16 @@ impl SweepCache {
             let (fp, op, l) = key;
             let r = &entries[key];
             out.push_str(&format!(
-                "{fp:016x} {:016x} {} {} {:016x} {:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
+                "{fp:016x} {:016x} {} {} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
                 op.node_bits,
                 op.bits_x,
                 op.bits_w,
                 op.wsig_bits,
                 op.osig_bits,
+                op.stuck_bits,
+                op.drift_bits,
+                op.clip_bits,
+                op.ir_bits,
                 l.n,
                 l.c_in,
                 l.c_out,
@@ -257,8 +261,10 @@ impl SweepCache {
 
 /// Snapshot header: format name + version. Bump the version on any
 /// layout change — old files then deliberately fail to load. v2 added
-/// the operating-point precision/noise fields to every line.
-const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v2";
+/// the operating-point precision/noise fields to every line; v3 added
+/// the four fault-model fields (stuck rate, drift sigma, ADC clip,
+/// IR drop) so fault-derated energies never alias clean ones.
+const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v3";
 
 /// Strict snapshot parser: `None` on ANY deviation (see
 /// [`SweepCache::load`]).
@@ -273,14 +279,15 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
     for _ in 0..count {
         let line = lines.next()?;
         let tok: Vec<&str> = line.split_whitespace().collect();
-        if tok.len() != 15 + Component::ALL.len() {
+        if tok.len() != 19 + Component::ALL.len() {
             return None;
         }
         let fp = u64::from_str_radix(tok[0], 16).ok()?;
         let sigma_at = |i: usize| -> Option<u64> {
             let bits = u64::from_str_radix(tok[i], 16).ok()?;
             let v = f64::from_bits(bits);
-            // Noise sigmas are finite and non-negative by construction.
+            // Noise sigmas and fault fields are finite and non-negative
+            // by construction.
             (v.is_finite() && v >= 0.0).then_some(bits)
         };
         let op = OpKey {
@@ -289,14 +296,18 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
             bits_w: tok[3].parse().ok()?,
             wsig_bits: sigma_at(4)?,
             osig_bits: sigma_at(5)?,
+            stuck_bits: sigma_at(6)?,
+            drift_bits: sigma_at(7)?,
+            clip_bits: sigma_at(8)?,
+            ir_bits: sigma_at(9)?,
         };
         let layer = ConvLayer {
-            n: tok[6].parse().ok()?,
-            c_in: tok[7].parse().ok()?,
-            c_out: tok[8].parse().ok()?,
-            kh: tok[9].parse().ok()?,
-            kw: tok[10].parse().ok()?,
-            stride: tok[11].parse().ok()?,
+            n: tok[10].parse().ok()?,
+            c_in: tok[11].parse().ok()?,
+            c_out: tok[12].parse().ok()?,
+            kh: tok[13].parse().ok()?,
+            kw: tok[14].parse().ok()?,
+            stride: tok[15].parse().ok()?,
         };
         let f64_at = |i: usize| -> Option<f64> {
             let v = f64::from_bits(u64::from_str_radix(tok[i], 16).ok()?);
@@ -305,13 +316,13 @@ fn parse_snapshot(text: &str) -> Option<HashMap<Key, SimResult>> {
             (v.is_finite() && v >= 0.0).then_some(v)
         };
         let mut r = SimResult {
-            macs: f64_at(12)?,
-            ops: f64_at(13)?,
-            time_units: f64_at(14)?,
+            macs: f64_at(16)?,
+            ops: f64_at(17)?,
+            time_units: f64_at(18)?,
             ..SimResult::default()
         };
         for (i, c) in Component::ALL.iter().enumerate() {
-            r.ledger.add(*c, f64_at(15 + i)?);
+            r.ledger.add(*c, f64_at(19 + i)?);
         }
         if map.insert((fp, op, layer), r).is_some() {
             return None; // duplicate key: corrupt writer

@@ -98,13 +98,17 @@ struct Coeffs {
 impl Coeffs {
     fn new(cfg: &SystolicConfig, op: &OperatingPoint) -> Self {
         let e = EnergyParams::default().at_op(op);
+        // Digital fault tolerance (ECC over the memory hierarchy when
+        // stuck cells are injected) surcharges every byte moved; exactly
+        // ×1.0 for the ideal device, preserving the golden bit-identity.
+        let dig = op.noise.faults.digital_derate();
         Coeffs {
             e_mac: e.e_mac,
             // Wire load: node-independent.
             e_hop: presets::systolic_hop().energy() * cfg.hop_bits as f64,
             e_reg: Sram::at_node(5, op.node_nm).energy_per_byte * cfg.reg_bytes_per_mac,
-            e_sram_byte: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte,
-            e_dram_byte: cfg.e_dram_per_byte,
+            e_sram_byte: Sram::at_node(cfg.bank_bytes(), op.node_nm).energy_per_byte * dig,
+            e_dram_byte: cfg.e_dram_per_byte * dig,
             act_bytes: cfg.act_bytes * op.sx(),
             wgt_bytes: cfg.act_bytes * op.sw(),
         }
@@ -354,6 +358,36 @@ mod tests {
         let b = simulate_layer(&cfg, &l, &op(45.0).bits(8, 8));
         assert_eq!(a.ledger.total().to_bits(), b.ledger.total().to_bits());
         assert_eq!(a.time_units.to_bits(), b.time_units.to_bits());
+    }
+
+    #[test]
+    fn injected_faults_raise_energy_never_work() {
+        use crate::simulator::faults::FaultModel;
+        use crate::simulator::op::NoiseModel;
+        let cfg = SystolicConfig::default();
+        let l = small_layer();
+        let clean = simulate_layer(&cfg, &l, &op(45.0));
+        let faulty = simulate_layer(
+            &cfg,
+            &l,
+            &op(45.0).with_noise(NoiseModel {
+                faults: FaultModel::at_rate(0.01),
+                ..Default::default()
+            }),
+        );
+        assert_eq!(clean.macs, faulty.macs, "faults never change work");
+        assert_eq!(clean.time_units, faulty.time_units);
+        assert!(faulty.ledger.get(Component::Sram) > clean.ledger.get(Component::Sram));
+        // A zero-rate fault model is the ideal device, bit-identically.
+        let zero = simulate_layer(
+            &cfg,
+            &l,
+            &op(45.0).with_noise(NoiseModel {
+                faults: FaultModel::at_rate(0.0),
+                ..Default::default()
+            }),
+        );
+        assert_eq!(clean.ledger.total().to_bits(), zero.ledger.total().to_bits());
     }
 
     #[test]

@@ -358,6 +358,127 @@ fn backpressure_sheds_load_but_never_strands() {
 }
 
 #[test]
+fn exactly_one_response_under_injected_faults_prop() {
+    // The exactly-once property must survive chaos: random worker/shard
+    // counts with scripted executor faults (transient errors, stalls,
+    // slow batches) and random retry budgets. Responses may be errors,
+    // but every submitted request gets exactly one, and the books
+    // balance at shutdown.
+    use aimc::coordinator::exec::FaultPlan;
+    check(12, |g| {
+        let workers = g.usize(1, 4);
+        let ingress_shards = g.usize(1, 6);
+        let max_batch = g.usize(1, 8);
+        let n = g.usize(0, 40);
+        let plan = FaultPlan {
+            error_every: [0u64, 2, 3][g.usize(0, 2)],
+            stall_every: [0u64, 5][g.usize(0, 1)],
+            stall_for: Duration::from_millis(2),
+            slow_every: [0u64, 3][g.usize(0, 1)],
+            slow_factor: 4,
+        };
+        let server = Server::start_sim(
+            ServerConfig {
+                workers,
+                ingress_shards,
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_micros(500),
+                },
+                warm_start: false,
+                max_pending: 4096, // admission disabled for this property
+                energy: false,
+                max_retries: g.usize(0, 2) as u32,
+                retry_backoff: Duration::from_micros(100),
+                breaker_threshold: g.usize(1, 3),
+                breaker_cooldown: Duration::from_millis(5),
+                ..Default::default()
+            },
+            SimExecutor::new(Duration::from_micros(50), Duration::ZERO).with_plan(plan),
+        )
+        .unwrap();
+        let mut rng = Rng::new(5000 + g.seed);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        let m = server.shutdown();
+        let mut answered = 0usize;
+        for rx in rxs {
+            // Exactly one: a first recv must succeed (Ok or a fault
+            // error — both are answers)…
+            match rx.recv() {
+                Ok(Ok(out)) => {
+                    if out.len() != LOGITS {
+                        return prop_assert(false, "bad logits length");
+                    }
+                    answered += 1;
+                }
+                Ok(Err(_)) => answered += 1,
+                Err(_) => return prop_assert(false, "request got zero responses"),
+            }
+            // …and a second recv must find a closed channel.
+            if rx.try_recv().is_ok() {
+                return prop_assert(false, "request got two responses");
+            }
+        }
+        if answered != n {
+            return prop_assert(false, "response count mismatch");
+        }
+        // Every Ok answer is recorded; every retry/trip is accounted.
+        prop_assert(
+            m.count() + m.rejected() <= n,
+            "served + rejected exceeds submitted",
+        )
+    });
+}
+
+#[test]
+fn admission_bound_holds_under_injected_faults() {
+    // The strict single-client admission bound must survive a faulting
+    // worker: a burst against a slow, erroring executor still sheds
+    // everything beyond max_pending, and every admitted request is
+    // answered exactly once (Ok or the injected fault's error).
+    use aimc::coordinator::exec::FaultPlan;
+    let plan = FaultPlan::parse("error=2").unwrap();
+    let server = Server::start_sim(
+        ServerConfig {
+            workers: 1,
+            warm_start: false,
+            max_pending: 8,
+            ingress_shards: 4,
+            energy: false,
+            max_retries: 0,
+            ..Default::default()
+        },
+        SimExecutor::new(Duration::from_millis(500), Duration::ZERO).with_plan(plan),
+    )
+    .unwrap();
+    let mut rng = Rng::new(51);
+    let rxs: Vec<_> = (0..64)
+        .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+        .collect();
+    let m = server.shutdown();
+    let (mut delivered, mut shed) = (0, 0);
+    for rx in rxs {
+        match rx.recv().expect("one response per request") {
+            Ok(_) => delivered += 1,
+            Err(e) if e.to_string().contains("overloaded") => shed += 1,
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("injected transient fault"),
+                    "unexpected: {e:#}"
+                );
+                delivered += 1;
+            }
+        }
+    }
+    assert_eq!(delivered + shed, 64);
+    assert!(delivered >= 1, "something must be admitted");
+    assert!(delivered <= 8, "admitted {delivered} > max_pending 8");
+    assert!(m.count() <= delivered, "only delivered Oks are recorded");
+}
+
+#[test]
 fn sim_results_deterministic_across_servers() {
     let mut rng = Rng::new(20);
     let img = rng.normal_vec(IMAGE_ELEMS);

@@ -259,7 +259,7 @@ fn snapshot_corruption_is_ignored_not_trusted() {
     let cases: Vec<(&str, String)> = vec![
         ("missing file", String::new()),
         ("garbage", "not a snapshot at all\n".to_string()),
-        ("wrong version", good.replacen("-v2", "-v9", 1)),
+        ("wrong version", good.replacen("-v3", "-v9", 1)),
         ("truncated body", {
             let cut = good.len() / 2;
             good[..cut].to_string()

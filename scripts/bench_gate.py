@@ -14,6 +14,11 @@ build when either guarded metric regresses more than the tolerance:
   * sweep  — transformer_decode.points_per_s (gpt2-small decode streams
              through the sweep engine), also from BENCH_sweep.json;
              skipped with a note when either side predates the metric
+  * serve  — serve_under_faults.throughput_rps: the same serving grid
+             cell under a scripted FaultPlan (transient errors + slow
+             batches, retries on), from BENCH_serve.json; guards the
+             recovery-path overhead and is likewise skipped with a note
+             when either side predates the metric
 
 Usage:
     python3 scripts/bench_gate.py BENCH_baseline.json \
@@ -96,6 +101,15 @@ def decode_points_per_s(sweep):
         return None
 
 
+def serve_under_faults_rps(serve):
+    # Optional, same contract as decode_points_per_s: bench runs that
+    # predate the fault-injection section lack the key entirely.
+    try:
+        return float(serve["serve_under_faults"]["throughput_rps"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 def main(argv):
     update = "--update" in argv
     paths = [a for a in argv if not a.startswith("--")]
@@ -119,6 +133,14 @@ def main(argv):
             f"bench gate: NOTE — {sweep_path} has no transformer_decode "
             "section (older bench layout); metric not measured"
         )
+    faulted_rps = serve_under_faults_rps(serve_doc)
+    if faulted_rps is not None:
+        measured["serve_under_faults_rps"] = faulted_rps
+    else:
+        print(
+            f"bench gate: NOTE — {serve_path} has no serve_under_faults "
+            "section (older bench layout); metric not measured"
+        )
 
     if update:
         doc = {
@@ -136,6 +158,10 @@ def main(argv):
         if "transformer_decode_points_per_s" in measured:
             doc["transformer_decode_points_per_s"] = round(
                 measured["transformer_decode_points_per_s"], 1
+            )
+        if "serve_under_faults_rps" in measured:
+            doc["serve_under_faults_rps"] = round(
+                measured["serve_under_faults_rps"], 1
             )
         with open(baseline_path, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=2)
