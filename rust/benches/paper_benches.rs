@@ -219,7 +219,9 @@ fn bench_sweep_engine(input: usize) {
 /// closed-form quote time for the resident network, the number the CI
 /// bench gate floors. A sim-backend run also re-times the guard cell
 /// under a scripted `FaultPlan` (`serve_under_faults`) so recovery
-/// overhead is gated alongside fault-free throughput.
+/// overhead is gated alongside fault-free throughput, and times a
+/// heterogeneous 2-backend fleet cell (`serve_hetero`) so quote-based
+/// routing is measured the same way.
 fn bench_serve() {
     use aimc::coordinator::exec::SimExecutor;
     use aimc::coordinator::{energy, smallcnn_network};
@@ -418,6 +420,90 @@ fn bench_serve() {
         )
     };
 
+    // Heterogeneous-fleet grid cell: 2 backends (one lane each) × {8,
+    // 32} offered, recorded as `serve_hetero` so quote-based routing has
+    // its own gate key (`serve_hetero_rps`, warn-and-skip until
+    // baselined). Sim-only like the faulted cell: fleets need the
+    // per-lane SimExecutor factory.
+    let hetero_section = if have_engine {
+        String::new()
+    } else {
+        use aimc::coordinator::server::parse_fleet;
+        let fleet_spec = "systolic@45:1,reram@45:1";
+        let mut hetero_runs = Vec::new();
+        for &offered in &[8usize, 32] {
+            let cfg = ServerConfig {
+                path: ConvPath::Exact,
+                max_pending: 4096,
+                energy: true,
+                fleet: Some(parse_fleet(fleet_spec).expect("bench fleet spec")),
+                ..Default::default()
+            };
+            let server = Server::start_with(cfg, |_| {
+                Ok(SimExecutor::new(
+                    Duration::from_micros(10),
+                    Duration::from_micros(1),
+                ))
+            })
+            .unwrap();
+            let _ = server.infer_blocking(images[0].clone()); // warm path
+            let per_client = n / offered;
+            let total = per_client * offered;
+            let t0 = Instant::now();
+            let ok: usize = std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(offered);
+                for c in 0..offered {
+                    let server = &server;
+                    let images = &images;
+                    handles.push(s.spawn(move || {
+                        let mut ok = 0usize;
+                        for i in 0..per_client {
+                            let img = images[(c + i) % images.len()].clone();
+                            if server.infer_blocking(img).is_ok() {
+                                ok += 1;
+                            }
+                        }
+                        ok
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let m = server.shutdown();
+            let rps = total as f64 / wall;
+            println!(
+                "serve[{backend}/hetero]: fleet {fleet_spec}, {offered:>2} offered: \
+                 {rps:>8.0} req/s, {} rerouted, {} backends in table",
+                m.rerouted(),
+                m.backends().len(),
+            );
+            let backends_json: Vec<String> = m
+                .backends()
+                .iter()
+                .map(|(label, b)| {
+                    format!(
+                        "{{ \"backend\": \"{label}\", \"images\": {}, \"uj_per_inf\": {} }}",
+                        b.images(),
+                        match b.uj_per_inf() {
+                            Some(uj) => format!("{uj:.4}"),
+                            None => "null".to_string(),
+                        },
+                    )
+                })
+                .collect();
+            hetero_runs.push(format!(
+                "      {{ \"offered\": {offered}, \"requests\": {total}, \"ok\": {ok}, \
+                 \"throughput_rps\": {rps:.1}, \"rerouted\": {}, \"per_backend\": [ {} ] }}",
+                m.rerouted(),
+                backends_json.join(", "),
+            ));
+        }
+        format!(
+            "  \"serve_hetero\": {{ \"fleet\": \"{fleet_spec}\", \"runs\": [\n{}\n    ] }},\n",
+            hetero_runs.join(",\n")
+        )
+    };
+
     // Pricing-path microbench: what each path costs per quote of the
     // resident network. Co-simulation is timed cold (fresh cache — the
     // first batch anywhere on a worker) per sample; the surrogate quote
@@ -442,7 +528,7 @@ fn bench_serve() {
     );
 
     let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ],\n{faulted_section}  \
+        "{{\n  \"bench\": \"serve\",\n  \"backend\": \"{backend}\",\n  \"runs\": [\n{}\n  ],\n{faulted_section}{hetero_section}  \
          \"pricing_path\": {{ \"cosim_cold_us\": {cosim_us:.3}, \
          \"surrogate_quote_us\": {quote_us:.4} }},\n  \
          \"surrogate_vs_cosim_speedup\": {speedup:.1}\n}}\n",

@@ -28,6 +28,7 @@
 //! `BENCH_serve.json` report measured latency/throughput alongside
 //! projected µJ-per-inference from the same workload.
 
+use crate::energy::surrogate::MachineKind;
 use crate::networks::Network;
 use crate::simulator::{optical4f, systolic, OperatingPoint, SimResult, SweepCache};
 
@@ -77,6 +78,64 @@ pub fn co_simulate_cached(net: &Network, op: &OperatingPoint, cache: &SweepCache
         systolic: cache.simulate_network(&sys, net, op),
         optical4f: cache.simulate_network(&opt, net, op),
         op: *op,
+    }
+}
+
+/// Nominal wall-clock per simulator time unit for one machine kind, in
+/// nanoseconds. `SimResult::time_units` is machine-specific (systolic
+/// cycles, ReRAM passes, photonic reconfigurations, 4F SLM executions);
+/// these constants turn it into a *routing signal* for `--slo-ns` —
+/// comparable across backends in order of magnitude, deliberately NOT a
+/// timing model (the repo has no cycle-time model; see ROADMAP).
+pub fn nominal_step_ns(kind: MachineKind) -> f64 {
+    match kind {
+        // GHz-class digital array: ~1 ns per systolic cycle.
+        MachineKind::Systolic => 1.0,
+        // A ReRAM crossbar pass is DAC→analog MAC→ADC: ~100 ns.
+        MachineKind::Reram => 100.0,
+        // Photonic mesh reconfiguration: ~10 ns (thermo-optic settle).
+        MachineKind::Photonic => 10.0,
+        // 4F SLM frame load + exposure: ~10 µs per execution.
+        MachineKind::Optical4F => 10_000.0,
+    }
+}
+
+/// Per-inference cost of one fleet backend, resolved at startup and
+/// captured by that backend's lanes: the dispatcher routes each planned
+/// batch to the live lane minimizing `j_per_inf` (or `ns_per_inf` under
+/// an SLO) — see `coordinator::server`.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendQuote {
+    pub kind: MachineKind,
+    /// Projected joules per single inference at the lane's operating
+    /// point.
+    pub j_per_inf: f64,
+    /// Nominal nanoseconds per inference (`time_units ×
+    /// [`nominal_step_ns`]`) — a cross-backend routing signal, not a
+    /// latency prediction. `None` when the quote came from the surrogate
+    /// alone (the closed-form table only models joules) and no SLO asked
+    /// for it.
+    pub ns_per_inf: Option<f64>,
+    /// Which path priced it: `"surrogate"` or `"co-simulation"`.
+    pub source: &'static str,
+}
+
+/// Price one inference of `net` on `kind`'s default-config cycle machine
+/// through the shared cache — the co-simulation path behind a fleet
+/// lane's [`BackendQuote`] (the surrogate path only covers joules, so
+/// `ns_per_inf` always comes from here).
+pub fn co_simulate_kind(
+    kind: MachineKind,
+    net: &Network,
+    op: &OperatingPoint,
+    cache: &SweepCache,
+) -> BackendQuote {
+    let r = cache.simulate_network(kind.machine().as_ref(), net, op);
+    BackendQuote {
+        kind,
+        j_per_inf: r.ledger.total(),
+        ns_per_inf: Some(r.time_units * nominal_step_ns(kind)),
+        source: "co-simulation",
     }
 }
 
@@ -139,6 +198,32 @@ mod tests {
             r.optical4f.tops_per_watt(),
             r.systolic.tops_per_watt()
         );
+    }
+
+    #[test]
+    fn per_kind_quote_matches_the_pair_co_sim() {
+        // The fleet quote for systolic/optical4f must agree with the
+        // legacy two-machine report — same simulators, same cache keys.
+        let net = smallcnn_network();
+        let cache = SweepCache::new();
+        let pair = co_simulate_cached(&net, &op45(), &cache);
+        let sys = co_simulate_kind(MachineKind::Systolic, &net, &op45(), &cache);
+        let opt = co_simulate_kind(MachineKind::Optical4F, &net, &op45(), &cache);
+        assert_eq!(sys.j_per_inf, pair.systolic_joules());
+        assert_eq!(opt.j_per_inf, pair.optical_joules());
+        assert_eq!(sys.source, "co-simulation");
+        for kind in MachineKind::ALL {
+            let q = co_simulate_kind(kind, &net, &op45(), &cache);
+            assert!(q.j_per_inf > 0.0, "{kind:?}");
+            assert!(q.ns_per_inf.unwrap() > 0.0, "{kind:?}");
+            assert_eq!(
+                q.ns_per_inf.unwrap(),
+                cache
+                    .simulate_network(kind.machine().as_ref(), &net, &op45())
+                    .time_units
+                    * nominal_step_ns(kind)
+            );
+        }
     }
 
     #[test]

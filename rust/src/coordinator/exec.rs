@@ -14,6 +14,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::{IMAGE_ELEMS, LOGITS};
+use crate::energy::surrogate::MachineKind;
 use crate::runtime::Engine;
 
 /// A batch-execution backend owned by one worker thread.
@@ -64,6 +65,11 @@ pub struct FaultPlan {
     pub slow_every: u64,
     /// Cost multiplier for the `slow_every` cadence.
     pub slow_factor: u32,
+    /// Restrict the plan to fleet workers backed by this machine kind
+    /// (`None` = every worker). Resolved by [`FaultPlan::for_backend`]
+    /// when the server expands a heterogeneous fleet, so chaos can
+    /// degrade one backend while the rest of the fleet stays healthy.
+    pub backend: Option<MachineKind>,
 }
 
 impl FaultPlan {
@@ -72,11 +78,25 @@ impl FaultPlan {
         self.error_every == 0 && self.stall_every == 0 && self.slow_every == 0
     }
 
+    /// Specialize the plan for one fleet worker: the full plan when the
+    /// `backend` clause is absent or names `kind`, the clear plan
+    /// otherwise — so a targeted plan leaves every other backend's
+    /// executor behaviourally untouched.
+    pub fn for_backend(self, kind: MachineKind) -> FaultPlan {
+        match self.backend {
+            None => self,
+            Some(target) if target == kind => self,
+            Some(_) => FaultPlan::default(),
+        }
+    }
+
     /// Parse a `--chaos` spec: comma-separated clauses out of
     /// `error=N` (every Nth batch errors), `stall=N:DUR` (every Nth
-    /// batch sleeps DUR — `50ms`, `2s`, `300us`, or bare milliseconds)
-    /// and `slow=N:F` (every Nth batch costs F×).
-    /// `"error=5,stall=7:50ms,slow=3:4"` arms all three.
+    /// batch sleeps DUR — `50ms`, `2s`, `300us`, or bare milliseconds),
+    /// `slow=N:F` (every Nth batch costs F×) and `backend=NAME`
+    /// (restrict the plan to fleet workers on that machine kind).
+    /// `"error=5,stall=7:50ms,slow=3:4"` arms the first three;
+    /// `"error=3,backend=reram"` degrades only the ReRAM lanes.
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         fn cadence(s: &str) -> Result<u64, String> {
             match s.trim().parse::<u64>() {
@@ -122,6 +142,14 @@ impl FaultPlan {
                         }
                         Ok(x) => x,
                     };
+                }
+                "backend" => {
+                    plan.backend = Some(MachineKind::parse(val.trim()).ok_or_else(|| {
+                        format!(
+                            "unknown chaos backend {val:?} \
+                             (systolic | reram | photonic | optical4f)"
+                        )
+                    })?);
                 }
                 other => return Err(format!("unknown chaos clause {other:?}")),
             }
@@ -338,9 +366,24 @@ mod tests {
             "slow=2:0",
             "warp=9",
             "error",
+            "backend=abacus",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn backend_clause_targets_one_machine_kind() {
+        let p = FaultPlan::parse("error=3,backend=reram").unwrap();
+        assert_eq!(p.backend, Some(MachineKind::Reram));
+        assert!(!p.is_clear());
+        // Specialization: the targeted kind keeps the full plan, every
+        // other kind gets the clear plan.
+        assert_eq!(p.for_backend(MachineKind::Reram), p);
+        assert!(p.for_backend(MachineKind::Systolic).is_clear());
+        // An untargeted plan applies to every backend unchanged.
+        let any = FaultPlan::parse("error=2").unwrap();
+        assert_eq!(any.for_backend(MachineKind::Optical4F), any);
     }
 
     #[test]

@@ -1,9 +1,99 @@
 //! Serving metrics: latency percentiles, throughput, batch-size
-//! histogram, per-batch energy accounting.
+//! histogram, per-batch energy accounting — and, for heterogeneous
+//! fleets, a per-backend breakdown ([`BackendStats`]) keyed by the
+//! lane's backend label (`systolic@45` …).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use super::energy::EnergyReport;
+
+/// Latency percentile in microseconds (nearest-rank) over a raw sample.
+fn percentile_of(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+    v[rank.min(v.len()) - 1]
+}
+
+/// Per-backend serving observations for one fleet label. Accumulated in
+/// the owning worker's shard (the shard's `set_backend` label routes
+/// every request/trip/energy record here too) and unioned across shards
+/// by [`Metrics::merge`].
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    latencies_us: Vec<u64>,
+    batches: usize,
+    images: usize,
+    energy_images: usize,
+    joules: f64,
+    breaker_trips: usize,
+    surrogate_misses: usize,
+    source: &'static str,
+}
+
+impl BackendStats {
+    fn merge(&mut self, other: &BackendStats) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.images += other.images;
+        self.energy_images += other.energy_images;
+        self.joules += other.joules;
+        self.breaker_trips += other.breaker_trips;
+        self.surrogate_misses += other.surrogate_misses;
+        if !other.source.is_empty() {
+            self.source = other.source;
+        }
+    }
+
+    /// Batches this backend executed.
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Images (inferences) this backend served.
+    pub fn images(&self) -> usize {
+        self.images
+    }
+
+    /// Projected µJ per inference on this backend; `None` when no batch
+    /// was priced (absence, never 0.0).
+    pub fn uj_per_inf(&self) -> Option<f64> {
+        if self.energy_images == 0 {
+            return None;
+        }
+        Some(self.joules * 1e6 / self.energy_images as f64)
+    }
+
+    /// p50 request latency (µs) for requests answered by this backend.
+    pub fn p50_us(&self) -> u64 {
+        percentile_of(&self.latencies_us, 50.0)
+    }
+
+    /// p99 request latency (µs) for requests answered by this backend.
+    pub fn p99_us(&self) -> u64 {
+        percentile_of(&self.latencies_us, 99.0)
+    }
+
+    /// Circuit-breaker openings on this backend's lanes.
+    pub fn breaker_trips(&self) -> usize {
+        self.breaker_trips
+    }
+
+    /// Startup surrogate misses attributed to this backend.
+    pub fn surrogate_misses(&self) -> usize {
+        self.surrogate_misses
+    }
+
+    /// Pricing source for this backend's quote ("surrogate" /
+    /// "co-simulation"); empty when unpriced.
+    pub fn source(&self) -> &'static str {
+        self.source
+    }
+}
 
 /// Accumulates per-request and per-batch observations.
 ///
@@ -57,6 +147,16 @@ pub struct Metrics {
     /// per-request quoting (and any energy budget) was abandoned in
     /// favour of per-batch co-simulation.
     degraded_pricing: usize,
+    /// Batches the fleet dispatcher routed AWAY from the quote-preferred
+    /// backend (open breaker or full lane there). 0 in homogeneous
+    /// deployments, where no lane carries a quote.
+    rerouted: usize,
+    /// Per-backend breakdown for heterogeneous fleets, keyed by backend
+    /// label (`systolic@45` …). Empty outside fleet mode.
+    backends: BTreeMap<String, BackendStats>,
+    /// This shard's backend label (fleet worker shards only): routes
+    /// request/trip/energy records into `backends` as well.
+    backend_label: Option<String>,
 }
 
 impl Metrics {
@@ -65,7 +165,49 @@ impl Metrics {
     }
 
     pub fn record_request(&mut self, latency: Duration) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        self.latencies_us.push(us);
+        if let Some(label) = self.backend_label.as_deref() {
+            if let Some(b) = self.backends.get_mut(label) {
+                b.latencies_us.push(us);
+            }
+        }
+    }
+
+    /// Tag this shard with its lane's backend label (fleet workers):
+    /// from here on, requests / breaker trips / surrogate misses /
+    /// energy recorded on the shard also accumulate under the label.
+    pub fn set_backend(&mut self, label: &str) {
+        self.backends.entry(label.to_string()).or_default();
+        self.backend_label = Some(label.to_string());
+    }
+
+    /// Count batches executed by this shard's backend lane (fleet mode).
+    pub fn record_backend_batch(&mut self, images: usize) {
+        if let Some(label) = self.backend_label.as_deref() {
+            if let Some(b) = self.backends.get_mut(label) {
+                b.batches += 1;
+                b.images += images;
+            }
+        }
+    }
+
+    /// Accumulate priced energy for one batch under this shard's
+    /// backend label (fleet mode) — per-inference joules × images,
+    /// tagged with the pricing source.
+    pub fn record_backend_energy(&mut self, images: usize, j_per_inf: f64, source: &'static str) {
+        if let Some(label) = self.backend_label.as_deref() {
+            if let Some(b) = self.backends.get_mut(label) {
+                b.energy_images += images;
+                b.joules += j_per_inf * images as f64;
+                b.source = source;
+            }
+        }
+    }
+
+    /// Count batches routed away from the quote-preferred backend.
+    pub fn record_reroute(&mut self, n: usize) {
+        self.rerouted += n;
     }
 
     pub fn record_batch(&mut self, size: usize) {
@@ -124,6 +266,11 @@ impl Metrics {
     /// cover (each forces the co-simulation fallback).
     pub fn record_surrogate_miss(&mut self, n: usize) {
         self.surrogate_miss += n;
+        if let Some(label) = self.backend_label.as_deref() {
+            if let Some(b) = self.backends.get_mut(label) {
+                b.surrogate_misses += n;
+            }
+        }
     }
 
     /// Count batch executions re-attempted after a failure.
@@ -139,6 +286,11 @@ impl Metrics {
     /// Count circuit-breaker openings on worker lanes.
     pub fn record_breaker_trip(&mut self, n: usize) {
         self.breaker_trips += n;
+        if let Some(label) = self.backend_label.as_deref() {
+            if let Some(b) = self.backends.get_mut(label) {
+                b.breaker_trips += n;
+            }
+        }
     }
 
     /// Record that startup pricing degraded to per-batch co-simulation.
@@ -176,6 +328,10 @@ impl Metrics {
         self.timeouts += other.timeouts;
         self.breaker_trips += other.breaker_trips;
         self.degraded_pricing += other.degraded_pricing;
+        self.rerouted += other.rerouted;
+        for (label, stats) in &other.backends {
+            self.backends.entry(label.clone()).or_default().merge(stats);
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -244,6 +400,56 @@ impl Metrics {
         self.degraded_pricing
     }
 
+    /// Batches the fleet dispatcher routed away from the quote-preferred
+    /// backend.
+    pub fn rerouted(&self) -> usize {
+        self.rerouted
+    }
+
+    /// Per-backend breakdown (heterogeneous fleets); empty otherwise.
+    pub fn backends(&self) -> &BTreeMap<String, BackendStats> {
+        &self.backends
+    }
+
+    /// Render the per-backend breakdown as an aligned table; `None`
+    /// outside fleet mode so homogeneous output stays untouched.
+    pub fn backend_table(&self) -> Option<String> {
+        if self.backends.is_empty() {
+            return None;
+        }
+        let mut s = format!(
+            "{:<18} {:>7} {:>7} {:>10} {:>8} {:>8} {:>6} {:>7}  {}",
+            "backend",
+            "batches",
+            "images",
+            "µJ/inf",
+            "p50 ms",
+            "p99 ms",
+            "trips",
+            "misses",
+            "source"
+        );
+        for (label, b) in &self.backends {
+            let uj = match b.uj_per_inf() {
+                Some(uj) => format!("{uj:.2}"),
+                None => "n/a".to_string(),
+            };
+            s.push_str(&format!(
+                "\n{:<18} {:>7} {:>7} {:>10} {:>8.2} {:>8.2} {:>6} {:>7}  {}",
+                label,
+                b.batches,
+                b.images,
+                uj,
+                b.p50_us() as f64 / 1e3,
+                b.p99_us() as f64 / 1e3,
+                b.breaker_trips,
+                b.surrogate_misses,
+                if b.source.is_empty() { "-" } else { b.source },
+            ));
+        }
+        Some(s)
+    }
+
     /// Projected µJ per inference on the systolic machine. `None` when
     /// no batch was priced — callers must render "n/a" / omit the field
     /// rather than report a meaningless 0.0.
@@ -265,13 +471,7 @@ impl Metrics {
 
     /// Latency percentile in microseconds (nearest-rank).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
-        v[rank.min(v.len()) - 1]
+        percentile_of(&self.latencies_us, p)
     }
 
     /// Mean batch size actually executed.
@@ -325,6 +525,9 @@ impl Metrics {
         }
         if self.breaker_trips > 0 {
             s.push_str(&format!(", {} breaker trip(s)", self.breaker_trips));
+        }
+        if self.rerouted > 0 {
+            s.push_str(&format!(", {} rerouted", self.rerouted));
         }
         if self.degraded_pricing > 0 {
             s.push_str(", degraded-pricing startup");
@@ -511,6 +714,61 @@ mod tests {
         assert!(s.contains("1 batch timeout(s)"), "{s}");
         assert!(s.contains("3 breaker trip(s)"), "{s}");
         assert!(s.contains("degraded-pricing startup"), "{s}");
+    }
+
+    #[test]
+    fn backend_shards_accumulate_and_merge() {
+        // Two fleet worker shards on different backends, as the server
+        // would own them: requests, batches, energy and a breaker trip
+        // all land under the shard's label and union at merge time.
+        let mut sys = Metrics::new();
+        sys.set_backend("systolic@45");
+        sys.record_request(Duration::from_micros(100));
+        sys.record_request(Duration::from_micros(300));
+        sys.record_backend_batch(2);
+        sys.record_backend_energy(2, 3e-6, "surrogate");
+
+        let mut opt = Metrics::new();
+        opt.set_backend("optical4f@22");
+        opt.record_request(Duration::from_micros(900));
+        opt.record_backend_batch(1);
+        opt.record_breaker_trip(1);
+
+        let mut m = Metrics::new();
+        m.record_reroute(2);
+        m.merge(&sys);
+        m.merge(&opt);
+
+        assert_eq!(m.rerouted(), 2);
+        assert_eq!(m.backends().len(), 2);
+        let s = &m.backends()["systolic@45"];
+        assert_eq!(s.batches(), 1);
+        assert_eq!(s.images(), 2);
+        let uj = s.uj_per_inf().unwrap();
+        assert!((uj - 3.0).abs() < 1e-9, "{uj}");
+        assert_eq!(s.source(), "surrogate");
+        assert_eq!(s.p50_us(), 100);
+        assert_eq!(s.p99_us(), 300);
+        let o = &m.backends()["optical4f@22"];
+        assert_eq!(o.breaker_trips(), 1);
+        assert_eq!(o.uj_per_inf(), None, "unpriced backend is n/a, not 0");
+        // The merged aggregate still carries the global counters too.
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.breaker_trips(), 1);
+        let table = m.backend_table().unwrap();
+        assert!(table.contains("systolic@45"), "{table}");
+        assert!(table.contains("optical4f@22"), "{table}");
+        assert!(table.contains("n/a"), "{table}");
+        assert!(m.summary().contains("2 rerouted"), "{}", m.summary());
+    }
+
+    #[test]
+    fn homogeneous_metrics_have_no_backend_table() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(10));
+        assert!(m.backend_table().is_none());
+        assert!(m.backends().is_empty());
+        assert!(!m.summary().contains("rerouted"));
     }
 
     #[test]

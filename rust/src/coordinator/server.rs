@@ -28,6 +28,19 @@
 //!   bounded [`spsc`] lane; the dispatcher hands each planned batch to
 //!   the least-loaded live lane. Workers never contend on a shared
 //!   mutexed receiver.
+//! * **Heterogeneous fleet routing** — with [`ServerConfig::fleet`]
+//!   each worker lane is backed by a [`BackendSpec`] (machine family ×
+//!   node × bits); the server resolves one [`BackendQuote`] per lane at
+//!   startup (fitted surrogate when it covers the resident network,
+//!   co-simulation through the shared cache otherwise) and the
+//!   dispatcher routes each planned batch to the live closed-breaker
+//!   lane minimizing predicted µJ/inference — or nominal ns/inference
+//!   under [`ServerConfig::slo_ns`] — falling back to least-loaded
+//!   among equal-cost (or quote-less) lanes. Liveness and exactly-once
+//!   outrank routing: a full or tripped preferred lane spills to the
+//!   next-cheapest, counted as a reroute in [`Metrics`]. Per-backend
+//!   stats (µJ/inf, batches, latency percentiles, breaker trips) shard
+//!   into the worker's labelled metrics and render as a table.
 //! * **Sharded metrics + per-batch energy** — each worker records
 //!   latencies into a private [`Metrics`] shard returned from its
 //!   thread on join, and accounts every executed batch's projected
@@ -86,11 +99,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{plan_batches, should_dispatch, BatchPolicy};
-use super::energy::{co_simulate_cached, EnergyReport};
+use super::energy::{co_simulate_cached, co_simulate_kind, BackendQuote, EnergyReport};
 use super::exec::{Executor, SimExecutor};
 use super::metrics::Metrics;
 use super::{ConvPath, IMAGE_ELEMS, LOGITS};
-use crate::energy::surrogate::{EnergyQuote, SurrogateTable};
+use crate::energy::surrogate::{EnergyQuote, MachineKind, SurrogateTable};
 use crate::runtime::Engine;
 use crate::simulator::{OperatingPoint, SweepCache};
 use crate::util::rng::Rng;
@@ -224,6 +237,106 @@ struct Lane {
     depth: Arc<AtomicUsize>,
     /// Circuit-breaker state written by the lane's worker.
     health: Arc<LaneHealth>,
+    /// Routing cost from the lane's startup [`BackendQuote`]: predicted
+    /// µJ/inference (or nominal ns/inference under an SLO). `None`
+    /// outside fleet mode — routing is then pure least-loaded.
+    cost: Option<f64>,
+}
+
+/// One backend of a heterogeneous fleet: a machine family at an
+/// operating point, replicated over `count` worker lanes. Parsed from
+/// `KIND@NODE[/BXxBW][:COUNT]` (`aimc serve --fleet
+/// systolic@45:2,optical4f@22:2,reram@45:2`); bits default to the
+/// server's [`ServerConfig::energy_bits`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackendSpec {
+    pub kind: MachineKind,
+    pub node_nm: f64,
+    /// `(bits_x, bits_w)` override for this backend; `None` inherits
+    /// the server-wide precision.
+    pub bits: Option<(u32, u32)>,
+    /// Worker lanes backed by this spec (≥ 1).
+    pub count: usize,
+}
+
+impl BackendSpec {
+    /// Metrics/table label: `systolic@45`, or `reram@45/8x4` with a
+    /// per-backend precision override.
+    pub fn label(&self) -> String {
+        match self.bits {
+            Some((x, w)) => format!("{}@{}/{}x{}", self.kind.name(), self.node_nm, x, w),
+            None => format!("{}@{}", self.kind.name(), self.node_nm),
+        }
+    }
+}
+
+/// Parse a `--fleet` spec: comma-separated `KIND@NODE[/BXxBW][:COUNT]`
+/// entries, e.g. `systolic@45:2,optical4f@22:2,reram@45:2`. Every
+/// malformed entry is a loud error, never a silent default.
+pub fn parse_fleet(spec: &str) -> Result<Vec<BackendSpec>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (kind_s, rest) = entry
+            .split_once('@')
+            .ok_or_else(|| format!("fleet entry {entry:?} is not KIND@NODE[/BXxBW][:COUNT]"))?;
+        let kind = MachineKind::parse(kind_s.trim()).ok_or_else(|| {
+            format!("unknown fleet backend {kind_s:?} (systolic | reram | photonic | optical4f)")
+        })?;
+        let (rest, count) = match rest.rsplit_once(':') {
+            Some((r, c)) => match c.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => (r, n),
+                _ => return Err(format!("fleet count must be ≥ 1, got {c:?} in {entry:?}")),
+            },
+            None => (rest, 1),
+        };
+        let (node_s, bits) = match rest.split_once('/') {
+            Some((n, b)) => {
+                let b = b.trim();
+                let (x, w) = match b.split_once(['x', 'X']) {
+                    Some((x, w)) => (x.trim().parse::<u32>(), w.trim().parse::<u32>()),
+                    None => {
+                        let v = b.parse::<u32>();
+                        (v.clone(), v)
+                    }
+                };
+                let bits = match (x, w) {
+                    (Ok(x), Ok(w)) if (1..=32).contains(&x) && (1..=32).contains(&w) => (x, w),
+                    _ => {
+                        return Err(format!(
+                            "bad fleet bits {b:?} in {entry:?} (want e.g. 8 or 8x4, widths 1..=32)"
+                        ))
+                    }
+                };
+                (n, Some(bits))
+            }
+            None => (rest, None),
+        };
+        let node_nm = match node_s.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => v,
+            _ => return Err(format!("bad fleet node {node_s:?} in {entry:?}")),
+        };
+        out.push(BackendSpec {
+            kind,
+            node_nm,
+            bits,
+            count,
+        });
+    }
+    if out.is_empty() {
+        return Err("fleet spec needs at least one KIND@NODE entry".to_string());
+    }
+    Ok(out)
+}
+
+/// Per-lane plan resolved at startup for one fleet worker: its metrics
+/// label, operating point and backend quote.
+#[derive(Clone, Debug)]
+struct LanePlan {
+    label: String,
+    quote: BackendQuote,
+    /// True when a surrogate table was configured but did not cover the
+    /// resident network on this backend (quote fell back to co-sim).
+    surrogate_missed: bool,
 }
 
 /// Per-batch retry/timeout policy handed to every worker.
@@ -310,6 +423,36 @@ pub struct ServerConfig {
     /// anyway with pricing degraded to per-batch co-simulation (and the
     /// budget unenforced, with a warning) instead of blocking startup.
     pub startup_quote_deadline: Duration,
+    /// Heterogeneous fleet: each [`BackendSpec`] expands to `count`
+    /// worker lanes backed by that machine family × node × bits, each
+    /// carrying its own startup [`BackendQuote`]; the dispatcher routes
+    /// batches by predicted cost (see [`ServerConfig::slo_ns`]).
+    /// Overrides [`ServerConfig::workers`]. `None` = homogeneous
+    /// serving, exactly as before fleets existed.
+    pub fleet: Option<Vec<BackendSpec>>,
+    /// Routing objective under a latency SLO (`aimc serve --slo-ns`):
+    /// when set, the dispatcher minimizes each lane's *nominal*
+    /// ns/inference (co-simulated `time_units` × a per-machine
+    /// step-time constant, see [`super::energy::nominal_step_ns`])
+    /// instead of µJ/inference. A routing signal only — the repo has no
+    /// cycle-time model, so the value is an objective switch and a
+    /// target, not an enforced deadline.
+    pub slo_ns: Option<f64>,
+}
+
+impl ServerConfig {
+    /// Expand [`ServerConfig::fleet`] to one [`BackendSpec`] per worker
+    /// lane (spec repeated `count` times), in lane order — the mapping
+    /// executor factories use to target a backend by worker index
+    /// ([`super::exec::FaultPlan::for_backend`]).
+    pub fn fleet_workers(&self) -> Option<Vec<BackendSpec>> {
+        self.fleet.as_ref().map(|specs| {
+            specs
+                .iter()
+                .flat_map(|s| std::iter::repeat(*s).take(s.count.max(1)))
+                .collect()
+        })
+    }
 }
 
 impl Default for ServerConfig {
@@ -335,6 +478,8 @@ impl Default for ServerConfig {
             breaker_threshold: 3,
             breaker_cooldown: Duration::from_millis(250),
             startup_quote_deadline: Duration::from_secs(10),
+            fleet: None,
+            slo_ns: None,
         }
     }
 }
@@ -400,7 +545,12 @@ impl Server {
         E: Executor + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let workers_n = cfg.workers.max(1);
+        // A fleet overrides the worker count: one lane per expanded spec.
+        let fleet_specs = cfg.fleet_workers();
+        let workers_n = match &fleet_specs {
+            Some(specs) => specs.len().max(1),
+            None => cfg.workers.max(1),
+        };
         let shards_n = if cfg.ingress_shards == 0 {
             (workers_n * 2).clamp(4, 16)
         } else {
@@ -428,28 +578,38 @@ impl Server {
         let serving_op = OperatingPoint::node(cfg.energy_node_nm)
             .bits(cfg.energy_bits.0, cfg.energy_bits.1);
         let mut surrogate_misses = 0usize;
-        let surrogate_quote: Option<EnergyQuote> = cfg.surrogate.as_ref().and_then(|table| {
-            let q = table.quote_network_op(&resident, &serving_op);
-            if q.is_none() {
-                // Name each uncovered shape family once, so a fallback
-                // to co-simulation is actionable, not just visible.
-                let missing = table.uncovered_families(&resident, &serving_op);
-                for fam in &missing {
-                    eprintln!(
-                        "warn: surrogate table has no {}×{} stride-{} model for {} at \
-                         {} nm {}b; falling back to per-batch co-simulation",
-                        fam.kh,
-                        fam.kw,
-                        fam.stride,
-                        resident.name,
-                        serving_op.node_nm,
-                        serving_op.bits_label()
-                    );
+        // Fleet lanes are priced per backend below; the legacy pair
+        // quote (systolic + optical-4F at the global operating point)
+        // then only backs the energy-budget admission policy, so its
+        // coverage warnings/misses are suppressed in fleet mode.
+        let want_pair_quote = fleet_specs.is_none() || cfg.max_uj_per_inf.is_some();
+        let surrogate_quote: Option<EnergyQuote> = cfg
+            .surrogate
+            .as_ref()
+            .filter(|_| want_pair_quote)
+            .and_then(|table| {
+                let q = table.quote_network_op(&resident, &serving_op);
+                if q.is_none() {
+                    // Name each uncovered shape family once, so a
+                    // fallback to co-simulation is actionable, not just
+                    // visible.
+                    let missing = table.uncovered_families(&resident, &serving_op);
+                    for fam in &missing {
+                        eprintln!(
+                            "warn: surrogate table has no {}×{} stride-{} model for {} at \
+                             {} nm {}b; falling back to per-batch co-simulation",
+                            fam.kh,
+                            fam.kw,
+                            fam.stride,
+                            resident.name,
+                            serving_op.node_nm,
+                            serving_op.bits_label()
+                        );
+                    }
+                    surrogate_misses = missing.len().max(1);
                 }
-                surrogate_misses = missing.len().max(1);
-            }
-            q
-        });
+                q
+            });
         let mut degraded_pricing = 0usize;
         let admission_quote: Option<EnergyQuote> = match (cfg.max_uj_per_inf, surrogate_quote) {
             (None, q) => q,
@@ -491,6 +651,50 @@ impl Server {
             }
         };
 
+        // Fleet mode: resolve one BackendQuote per worker lane, up
+        // front, so the dispatcher can route by predicted cost from the
+        // first batch. Joules come from the fitted surrogate when it
+        // covers (resident × kind × operating point); otherwise — and
+        // always for the nominal-ns SLO signal — from one co-simulation
+        // through the shared cache (deduped across lanes of the same
+        // backend).
+        let lane_plans: Option<Vec<LanePlan>> = fleet_specs.as_ref().map(|specs| {
+            specs
+                .iter()
+                .map(|spec| {
+                    let (bx, bw) = spec.bits.unwrap_or(cfg.energy_bits);
+                    let op = OperatingPoint::node(spec.node_nm).bits(bx, bw);
+                    let surro_j = cfg
+                        .surrogate
+                        .as_ref()
+                        .and_then(|t| t.predict_network_op(spec.kind, &op, &resident));
+                    let quote = match surro_j {
+                        Some(j) if cfg.slo_ns.is_none() => BackendQuote {
+                            kind: spec.kind,
+                            j_per_inf: j,
+                            ns_per_inf: None,
+                            source: "surrogate",
+                        },
+                        Some(j) => {
+                            // SLO routing needs the nominal-ns signal,
+                            // which only the cycle simulators carry; the
+                            // surrogate still prices the joules.
+                            let mut q = co_simulate_kind(spec.kind, &resident, &op, &energy_cache);
+                            q.j_per_inf = j;
+                            q.source = "surrogate";
+                            q
+                        }
+                        None => co_simulate_kind(spec.kind, &resident, &op, &energy_cache),
+                    };
+                    LanePlan {
+                        label: spec.label(),
+                        quote,
+                        surrogate_missed: cfg.surrogate.is_some() && surro_j.is_none(),
+                    }
+                })
+                .collect()
+        });
+
         // Workers: each owns the consumer half of its lane, a private
         // executor (compilation is per-worker and lazy unless warmed),
         // and a private metrics shard returned on join.
@@ -513,11 +717,24 @@ impl Server {
             let (lane_tx, mut lane_rx) = spsc::channel::<Batch>(LANE_CAP);
             let depth = Arc::new(AtomicUsize::new(0));
             let health = Arc::new(LaneHealth::new());
+            let lane_plan: Option<LanePlan> =
+                lane_plans.as_ref().map(|plans| plans[w].clone());
+            // Routing cost: what the dispatcher minimizes when picking a
+            // lane. Joules by default; the nominal-ns signal under an
+            // SLO (missing ns sorts last rather than wins).
+            let cost = lane_plan.as_ref().map(|p| {
+                if cfg.slo_ns.is_some() {
+                    p.quote.ns_per_inf.unwrap_or(f64::INFINITY)
+                } else {
+                    p.quote.j_per_inf
+                }
+            });
             lane_depths.push(depth.clone());
             lanes.push(Lane {
                 tx: lane_tx,
                 depth: depth.clone(),
                 health: health.clone(),
+                cost,
             });
             let factory = factory.clone();
             let barrier = barrier.clone();
@@ -550,6 +767,16 @@ impl Server {
                 }
                 let _ = ready_tx.send(Ok(()));
                 let mut shard = Metrics::new();
+                if let Some(plan) = &lane_plan {
+                    shard.set_backend(&plan.label);
+                    if plan.surrogate_missed {
+                        // The fitted table didn't cover this backend ×
+                        // shape × operating point; the lane fell back to
+                        // co-simulated pricing. Counted per backend so
+                        // the fleet table shows which lanes degraded.
+                        shard.record_surrogate_miss(1);
+                    }
+                }
                 let net = worker_net;
                 // The energy model is batch-size-independent today, so
                 // each worker prices the schedule once (the shared cache
@@ -589,8 +816,23 @@ impl Server {
                             shard.record_breaker_trip(1);
                         }
                     }
-                    if energy {
-                        match surrogate_quote {
+                    match &lane_plan {
+                        // Fleet lane: account the batch against this
+                        // lane's backend shard. The startup BackendQuote
+                        // already priced the lane (surrogate or one
+                        // co-simulation), so per-batch accounting is a
+                        // multiply regardless of pricing path.
+                        Some(plan) => {
+                            shard.record_backend_batch(retired);
+                            if energy {
+                                shard.record_backend_energy(
+                                    retired,
+                                    plan.quote.j_per_inf,
+                                    plan.quote.source,
+                                );
+                            }
+                        }
+                        None if energy => match surrogate_quote {
                             // Closed-form fast path: the quote was
                             // computed once at startup; accounting a
                             // batch is a handful of adds.
@@ -608,7 +850,8 @@ impl Server {
                                 });
                                 shard.record_energy(retired, report);
                             }
-                        }
+                        },
+                        None => {}
                     }
                 }
                 shard
@@ -830,8 +1073,9 @@ impl Drop for Server {
 }
 
 /// Dispatcher thread body: drain the ingress shards round-robin, apply
-/// the batching policy, hand plans to the least-loaded lane. Returns its
-/// metrics shard (batch-size histogram).
+/// the batching policy, hand plans to the cheapest live lane (fleet
+/// mode) or the least-loaded one. Returns its metrics shard (batch-size
+/// histogram plus reroute count).
 fn dispatcher_loop(
     ingress: &ShardedQueue<Request>,
     mut lanes: Vec<Lane>,
@@ -871,6 +1115,7 @@ fn dispatcher_loop(
                     },
                     barrier,
                     epoch,
+                    &mut shard,
                 );
             }
         } else if closed && pending.is_empty() {
@@ -893,15 +1138,25 @@ fn dispatcher_loop(
     }
 }
 
-/// Hand one batch to the least-loaded live lane, falling back across
-/// lanes when full and blocking briefly when all are. Lanes whose
-/// circuit breaker is open are skipped — unless every breaker is open,
-/// in which case the batch is dispatched anyway: liveness and the
-/// exactly-once answer guarantee outrank the breaker. Lanes whose worker
-/// died are retired; with no lanes left the batch is failed out, so each
-/// request still receives exactly one response and the drain barrier
-/// still retires it.
-fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier, epoch: Instant) {
+/// Hand one batch to the cheapest live lane — by startup-quoted cost in
+/// fleet mode (predicted µJ/inf, or nominal ns under `--slo-ns`), by
+/// depth alone in a homogeneous fleet — falling back across lanes when
+/// full and blocking briefly when all are. Lanes whose circuit breaker
+/// is open are skipped — unless every breaker is open, in which case the
+/// batch is dispatched anyway: liveness and the exactly-once answer
+/// guarantee outrank both the breaker and the routing policy. Any
+/// successful send to a lane pricier than the cheapest live lane counts
+/// as a reroute in the dispatcher shard (breaker detours and lane-full
+/// spills alike). Lanes whose worker died are retired; with no lanes
+/// left the batch is failed out, so each request still receives exactly
+/// one response and the drain barrier still retires it.
+fn dispatch(
+    lanes: &mut Vec<Lane>,
+    job: Batch,
+    barrier: &DrainBarrier,
+    epoch: Instant,
+    shard: &mut Metrics,
+) {
     let n = job.requests.len();
     let mut job = job;
     'outer: loop {
@@ -914,9 +1169,19 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier, epoch: In
             barrier.sub(0, n);
             return;
         }
-        // Try closed-breaker lanes in load order. Depth is incremented
-        // *before* the send so a fast worker can never retire the batch
-        // before the increment lands (which would underflow the counter).
+        // Cheapest cost over ALL live lanes (breakers included): the
+        // reroute yardstick. Recomputed per pass — dead lanes retire.
+        let min_cost = lanes
+            .iter()
+            .filter_map(|l| l.cost)
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rerouted = |lane: &Lane| -> bool {
+            matches!((lane.cost, min_cost), (Some(c), Some(mc)) if c > mc)
+        };
+        // Try closed-breaker lanes in cost-then-load order. Depth is
+        // incremented *before* the send so a fast worker can never
+        // retire the batch before the increment lands (which would
+        // underflow the counter).
         let now_ms = epoch.elapsed().as_millis() as u64;
         let mut order: Vec<usize> = (0..lanes.len())
             .filter(|&i| lanes[i].health.open_until_ms.load(SeqCst) <= now_ms)
@@ -926,11 +1191,22 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier, epoch: In
             // fail work that a recovering lane could still serve.
             order = (0..lanes.len()).collect();
         }
-        order.sort_by_key(|&i| lanes[i].depth.load(SeqCst));
+        order.sort_by(|&a, &b| {
+            let ca = lanes[a].cost.unwrap_or(f64::INFINITY);
+            let cb = lanes[b].cost.unwrap_or(f64::INFINITY);
+            ca.partial_cmp(&cb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| lanes[a].depth.load(SeqCst).cmp(&lanes[b].depth.load(SeqCst)))
+        });
         for &i in &order {
             lanes[i].depth.fetch_add(n, SeqCst);
             match lanes[i].tx.try_send(job) {
-                Ok(()) => return,
+                Ok(()) => {
+                    if rerouted(&lanes[i]) {
+                        shard.record_reroute(1);
+                    }
+                    return;
+                }
                 Err(spsc::TrySendError::Full(j)) => {
                     lanes[i].depth.fetch_sub(n, SeqCst);
                     job = j;
@@ -951,7 +1227,12 @@ fn dispatch(lanes: &mut Vec<Lane>, job: Batch, barrier: &DrainBarrier, epoch: In
             .expect("lanes checked non-empty");
         lanes[i].depth.fetch_add(n, SeqCst);
         match lanes[i].tx.send_timeout(job, Duration::from_millis(5)) {
-            Ok(()) => return,
+            Ok(()) => {
+                if rerouted(&lanes[i]) {
+                    shard.record_reroute(1);
+                }
+                return;
+            }
             Err(spsc::SendTimeoutError::Timeout(j)) => {
                 lanes[i].depth.fetch_sub(n, SeqCst);
                 job = j;
@@ -1694,5 +1975,119 @@ mod tests {
                 && !sum.contains("degraded"),
             "{sum}"
         );
+    }
+
+    #[test]
+    fn fleet_spec_grammar_parses_and_rejects() {
+        let fleet = parse_fleet("systolic@45:2, optical4f@22:2,reram@45/8x4").unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[0].kind, MachineKind::Systolic);
+        assert_eq!(fleet[0].count, 2);
+        assert_eq!(fleet[0].bits, None);
+        assert_eq!(fleet[0].label(), "systolic@45");
+        assert_eq!(fleet[1].kind, MachineKind::Optical4F);
+        assert_eq!(fleet[1].node_nm, 22.0);
+        assert_eq!(fleet[2].kind, MachineKind::Reram);
+        assert_eq!(fleet[2].bits, Some((8, 4)));
+        assert_eq!(fleet[2].count, 1);
+        assert_eq!(fleet[2].label(), "reram@45/8x4");
+        // Shorthand bits + aliases.
+        let fleet = parse_fleet("memristor@28/4:3").unwrap();
+        assert_eq!(fleet[0].kind, MachineKind::Reram);
+        assert_eq!(fleet[0].bits, Some((4, 4)));
+        assert_eq!(fleet[0].count, 3);
+        for bad in [
+            "",
+            "systolic",
+            "abacus@45",
+            "systolic@zero",
+            "systolic@-45",
+            "systolic@45:0",
+            "systolic@45/0x8",
+            "systolic@45/33",
+            "systolic@45/8y8",
+        ] {
+            assert!(parse_fleet(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn fleet_workers_expand_replica_counts() {
+        let cfg = ServerConfig {
+            fleet: Some(parse_fleet("systolic@45:2,reram@45").unwrap()),
+            ..Default::default()
+        };
+        let specs = cfg.fleet_workers().unwrap();
+        assert_eq!(specs.len(), 3, "2 systolic lanes + 1 reram lane");
+        assert_eq!(specs[0].kind, MachineKind::Systolic);
+        assert_eq!(specs[1].kind, MachineKind::Systolic);
+        assert_eq!(specs[2].kind, MachineKind::Reram);
+        assert!(ServerConfig::default().fleet_workers().is_none());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_prices_per_backend_and_answers_exactly_once() {
+        let s = Server::start_sim(
+            ServerConfig {
+                warm_start: false,
+                max_pending: 64,
+                fleet: Some(parse_fleet("systolic@45:1,reram@45:1").unwrap()),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(47);
+        let rxs: Vec<_> = (0..16)
+            .map(|_| s.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        let mut ok = 0;
+        for rx in rxs {
+            // Exactly-once: every admitted request yields one answer.
+            if rx.recv().unwrap().is_ok() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 16);
+        let m = s.shutdown();
+        assert_eq!(m.count(), 16);
+        let table = m.backend_table().expect("fleet mode must shard metrics");
+        assert!(table.contains("systolic@45"), "{table}");
+        assert!(table.contains("reram@45"), "{table}");
+        let images: usize = m.backends().values().map(|b| b.images()).sum();
+        assert_eq!(images, 16, "per-backend shards must cover every image");
+        for (label, b) in m.backends() {
+            if b.images() > 0 {
+                let uj = b.uj_per_inf().expect("served backends must be priced");
+                assert!(uj > 0.0, "{label}: {uj}");
+                assert_eq!(b.source(), "co-simulation");
+            }
+        }
+    }
+
+    #[test]
+    fn routing_sends_serial_load_to_the_cheapest_backend() {
+        // At SmallCNN scale the systolic array prices far below the 4F
+        // optical machine (`small_images_favor_systolic`), so a serial
+        // stream — no lane ever full — must route every batch to the
+        // systolic lane and count zero reroutes.
+        let s = Server::start_sim(
+            ServerConfig {
+                warm_start: false,
+                max_pending: 64,
+                fleet: Some(parse_fleet("systolic@45:1,optical4f@45:1").unwrap()),
+                ..Default::default()
+            },
+            SimExecutor::instant(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(48);
+        for _ in 0..6 {
+            s.infer_blocking(rng.normal_vec(IMAGE_ELEMS)).unwrap();
+        }
+        let m = s.shutdown();
+        assert_eq!(m.rerouted(), 0, "{}", m.summary());
+        assert_eq!(m.backends()["systolic@45"].images(), 6);
+        assert_eq!(m.backends()["optical4f@45"].images(), 0);
     }
 }

@@ -50,7 +50,14 @@
 //!   end to end: N bounded ingress shards picked per client thread
 //!   ([`util::shard`]) behind a sharded `max_pending` admission
 //!   counter, a dispatcher draining the shards round-robin into
-//!   per-worker [`util::spsc`] batch lanes (least-loaded), per-worker
+//!   per-worker [`util::spsc`] batch lanes — least-loaded for a
+//!   homogeneous pool, cheapest-by-quote (predicted µJ/inf, or nominal
+//!   ns/inf under `ServerConfig::slo_ns`) across a heterogeneous
+//!   fleet (`ServerConfig::fleet`, `aimc serve --fleet
+//!   systolic@45:2,reram@45:2`, each lane owning its backend's
+//!   executor, operating point and startup
+//!   [`coordinator::energy::BackendQuote`], metrics sharded per
+//!   backend label with a rerouted counter) — per-worker
 //!   metrics shards with per-batch energy pricing (fitted surrogate
 //!   quote when configured, co-simulation otherwise — misses are
 //!   logged per shape family and counted in the metrics) against a

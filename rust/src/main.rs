@@ -127,7 +127,28 @@ fn spec() -> Spec {
     .opt(
         "chaos",
         "serve --synthetic: scripted executor fault plan, clauses error=N, \
-         stall=N:DUR, slow=N:FACTOR (e.g. error=5,stall=7:50ms,slow=3:4)",
+         stall=N:DUR, slow=N:FACTOR, backend=NAME (restrict the plan to \
+         fleet lanes of one machine kind; e.g. error=5,stall=7:50ms,slow=3:4 \
+         or error=3,backend=reram)",
+        None,
+    )
+    .opt(
+        "fleet",
+        "serve: heterogeneous worker fleet, comma-separated \
+         KIND@NODE[/BXxBW][:COUNT] (e.g. systolic@45:2,optical4f@22:2,reram@45:2); \
+         overrides --workers, routes each batch to the cheapest live lane",
+        None,
+    )
+    .opt(
+        "slo-ns",
+        "serve --fleet: route by nominal ns/inference instead of µJ/inference \
+         (order-of-magnitude signal, not a timing model)",
+        None,
+    )
+    .opt(
+        "metrics-json",
+        "serve: also write the final metrics (per-backend shards included) \
+         to this path as JSON",
         None,
     )
     .flag(
@@ -135,13 +156,6 @@ fn spec() -> Spec {
         "serve: deterministic in-process backend (no artifacts/PJRT needed)",
     )
     .flag("csv", "emit CSV instead of aligned text (alias for --format csv)")
-}
-
-/// Where a cache directory keeps its snapshot (the version is in the
-/// file's own header; the name just keeps it greppable). Bumped to v3
-/// with the fault-model cache keys — an older file is simply ignored.
-fn cache_file(dir: &Path) -> PathBuf {
-    dir.join("sweep-cache.v3.txt")
 }
 
 /// Parse `--bits`: comma-separated entries, each `"B"` (symmetric) or
@@ -320,8 +334,12 @@ fn run() -> anyhow::Result<()> {
         None => Pool::auto(),
     };
     let cache_dir = args.get("cache-dir").map(PathBuf::from);
+    // Snapshots are sharded by config fingerprint (one file per
+    // fingerprint, plus the legacy monolithic v3 file if present), so
+    // concurrent invocations sharing --cache-dir never clobber each
+    // other's entries.
     let cache = match &cache_dir {
-        Some(dir) => SweepCache::load(&cache_file(dir)),
+        Some(dir) => SweepCache::load_sharded(dir),
         None => SweepCache::new(),
     };
     let ctx = EvalCtx {
@@ -490,7 +508,7 @@ fn run() -> anyhow::Result<()> {
     sink.finish();
     let saved = match &cache_dir {
         Some(dir) => {
-            std::fs::create_dir_all(dir).and_then(|()| cache.save(&cache_file(dir)))
+            std::fs::create_dir_all(dir).and_then(|()| cache.save_sharded(dir).map(|_| ()))
         }
         None => Ok(()),
     };
@@ -706,9 +724,33 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
         Some(_) => Some(args.get_f64("max-uj-per-inf", 0.0)?),
         None => None,
     };
+    let fleet = match args.get("fleet") {
+        Some(spec) => Some(
+            aimc::coordinator::server::parse_fleet(spec)
+                .map_err(|e| anyhow::anyhow!("bad --fleet: {e}"))?,
+        ),
+        None => None,
+    };
+    let slo_ns = match args.get("slo-ns") {
+        Some(_) => {
+            if fleet.is_none() {
+                anyhow::bail!("--slo-ns routes a fleet and needs --fleet");
+            }
+            Some(args.get_f64("slo-ns", 0.0)?)
+        }
+        None => None,
+    };
+    let metrics_json = args.get("metrics-json").map(PathBuf::from);
     println!(
-        "starting server: path {path:?}, {workers} workers, {n_req} requests, \
-         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing on {}){}{}{}",
+        "starting server: path {path:?}, {} workers, {n_req} requests, \
+         max_pending {max_pending}, energy @{node} nm {}x{}b ({} pricing on {}){}{}{}{}",
+        match &fleet {
+            Some(specs) => format!(
+                "fleet [{}]",
+                specs.iter().map(|s| s.label()).collect::<Vec<_>>().join(", ")
+            ),
+            None => workers.to_string(),
+        },
         energy_bits.0,
         energy_bits.1,
         if surrogate.is_some() { "surrogate" } else { "co-simulation" },
@@ -717,8 +759,12 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
             Some(b) => format!(", budget {b} µJ/inf"),
             None => String::new(),
         },
+        match slo_ns {
+            Some(_) => ", routing by nominal ns/inf",
+            None => "",
+        },
         if synthetic { ", synthetic backend" } else { "" },
-        match chaos {
+        match &chaos {
             Some(p) => format!(", chaos {p:?}"),
             None => String::new(),
         }
@@ -733,14 +779,29 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
         surrogate,
         max_uj_per_inf,
         resident,
+        fleet,
+        slo_ns,
         ..Default::default()
     };
     let server = if synthetic {
-        let sim = match chaos {
-            Some(plan) => SimExecutor::default().with_plan(plan),
-            None => SimExecutor::default(),
-        };
-        Server::start_sim(cfg, sim)?
+        match cfg.fleet_workers() {
+            // Fleet + chaos: each lane gets the plan filtered to its own
+            // machine kind, so `backend=NAME` clauses degrade exactly
+            // the targeted lanes and routing has to shift around them.
+            Some(specs) => {
+                let plan = chaos.unwrap_or_default();
+                Server::start_with(cfg, move |w| {
+                    Ok(SimExecutor::default().with_plan(plan.for_backend(specs[w].kind)))
+                })?
+            }
+            None => {
+                let sim = match chaos {
+                    Some(plan) => SimExecutor::default().with_plan(plan),
+                    None => SimExecutor::default(),
+                };
+                Server::start_sim(cfg, sim)?
+            }
+        }
     } else {
         Server::start(cfg)?
     };
@@ -765,6 +826,54 @@ fn cmd_serve(args: &aimc::util::cli::Args, input: usize) -> anyhow::Result<()> {
     let quote = server.request_quote();
     let metrics = server.shutdown();
     println!("served {ok}/{n_req} OK — {}", metrics.summary());
+    // Fleet mode: the per-backend shards are the headline numbers — one
+    // row per backend label with its own µJ/inf, latency percentiles and
+    // recovery counters.
+    if let Some(table) = metrics.backend_table() {
+        println!("per-backend serving:");
+        println!("{table}");
+    }
+    if let Some(out) = &metrics_json {
+        let mut obj = vec![
+            ("count".to_string(), Json::Num(metrics.count() as f64)),
+            ("rejected".to_string(), Json::Num(metrics.rejected() as f64)),
+            ("throughput_rps".to_string(), Json::Num(metrics.throughput())),
+            ("p50_us".to_string(), Json::Num(metrics.percentile_us(50.0) as f64)),
+            ("p99_us".to_string(), Json::Num(metrics.percentile_us(99.0) as f64)),
+            ("retries".to_string(), Json::Num(metrics.retries() as f64)),
+            ("breaker_trips".to_string(), Json::Num(metrics.breaker_trips() as f64)),
+            ("rerouted".to_string(), Json::Num(metrics.rerouted() as f64)),
+        ];
+        let backends: Vec<Json> = metrics
+            .backends()
+            .iter()
+            .map(|(label, b)| {
+                Json::Obj(vec![
+                    ("backend".to_string(), Json::Str(label.clone())),
+                    ("batches".to_string(), Json::Num(b.batches() as f64)),
+                    ("images".to_string(), Json::Num(b.images() as f64)),
+                    (
+                        "uj_per_inf".to_string(),
+                        match b.uj_per_inf() {
+                            Some(uj) => Json::Num(uj),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("p50_us".to_string(), Json::Num(b.p50_us() as f64)),
+                    ("p99_us".to_string(), Json::Num(b.p99_us() as f64)),
+                    ("breaker_trips".to_string(), Json::Num(b.breaker_trips() as f64)),
+                    (
+                        "surrogate_misses".to_string(),
+                        Json::Num(b.surrogate_misses() as f64),
+                    ),
+                    ("source".to_string(), Json::Str(b.source().to_string())),
+                ])
+            })
+            .collect();
+        obj.push(("backends".to_string(), Json::Arr(backends)));
+        std::fs::write(out, Json::Obj(obj).pretty() + "\n")?;
+        println!("metrics JSON written to {}", out.display());
+    }
     if let Some(q) = quote {
         println!(
             "per-request attribution @{} nm {}x{}b: systolic {:.2} µJ | optical-4F {:.2} µJ \

@@ -192,51 +192,83 @@ impl SweepCache {
     /// truncated file that would silently cost a full re-simulation.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let entries = self.entries.lock().unwrap();
-        let mut keys: Vec<&Key> = entries.keys().collect();
-        keys.sort_by_key(|(fp, op, l)| {
-            (*fp, *op, l.n, l.c_in, l.c_out, l.kh, l.kw, l.stride)
-        });
-        let mut out = String::with_capacity(64 + keys.len() * 200);
-        out.push_str(&format!("{SNAPSHOT_MAGIC} {}\n", keys.len()));
-        for key in keys {
-            let (fp, op, l) = key;
-            let r = &entries[key];
-            out.push_str(&format!(
-                "{fp:016x} {:016x} {} {} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
-                op.node_bits,
-                op.bits_x,
-                op.bits_w,
-                op.wsig_bits,
-                op.osig_bits,
-                op.stuck_bits,
-                op.drift_bits,
-                op.clip_bits,
-                op.ir_bits,
-                l.n,
-                l.c_in,
-                l.c_out,
-                l.kh,
-                l.kw,
-                l.stride,
-                r.macs.to_bits(),
-                r.ops.to_bits(),
-                r.time_units.to_bits(),
-            ));
-            for c in Component::ALL {
-                out.push_str(&format!(" {:016x}", r.ledger.get(c).to_bits()));
-            }
-            out.push('\n');
+        let out = render_snapshot(&entries);
+        drop(entries);
+        write_atomic(path, &out)
+    }
+
+    /// Snapshot the cache into `dir`, **sharded by machine-config
+    /// fingerprint**: one `sweep-cache.v3.<fp>.txt` file per fingerprint,
+    /// each written atomically (temp + rename) after unioning with
+    /// whatever that shard already holds on disk. Concurrent processes
+    /// sharing a `--cache-dir` therefore merge instead of losing entries
+    /// to last-writer-wins: writers touching *different* configs write
+    /// different files outright, and writers racing on the *same* config
+    /// re-read the shard and union before renaming (entries are
+    /// idempotent simulations, so both sides of any remaining race carry
+    /// bit-identical values). Returns the number of shard files written.
+    pub fn save_sharded(&self, dir: &Path) -> std::io::Result<usize> {
+        let entries = self.entries.lock().unwrap();
+        let mut by_fp: HashMap<u64, HashMap<Key, SimResult>> = HashMap::new();
+        for (key, r) in entries.iter() {
+            by_fp.entry(key.0).or_default().insert(*key, r.clone());
         }
-        // Same-directory temp (rename is only atomic within a
-        // filesystem); pid-suffixed so concurrent savers never clobber
-        // each other's staging file.
-        let file = path
-            .file_name()
-            .and_then(|n| n.to_str())
-            .unwrap_or("sweep-cache");
-        let tmp = path.with_file_name(format!("{file}.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, out)?;
-        std::fs::rename(&tmp, path)
+        drop(entries);
+        let mut written = 0;
+        for (fp, mut group) in by_fp {
+            let path = shard_file(dir, fp);
+            if let Some(existing) = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| parse_snapshot(&text))
+            {
+                for (k, v) in existing {
+                    group.entry(k).or_insert(v);
+                }
+            }
+            write_atomic(&path, &render_snapshot(&group))?;
+            written += 1;
+        }
+        Ok(written)
+    }
+
+    /// Restore a cache from every snapshot in `dir`: all fingerprint
+    /// shards written by [`SweepCache::save_sharded`] plus a legacy
+    /// monolithic `sweep-cache.v3.txt` if one is still around (so a
+    /// pre-sharding cache directory keeps replaying; the next save
+    /// re-homes its entries into shards). Each file is still
+    /// all-or-nothing — a corrupt shard is skipped in full — but one bad
+    /// shard no longer discards its healthy siblings. A missing or empty
+    /// directory loads an empty cache.
+    pub fn load_sharded(dir: &Path) -> SweepCache {
+        let mut map = HashMap::new();
+        let Ok(read_dir) = std::fs::read_dir(dir) else {
+            return SweepCache::new();
+        };
+        let mut paths: Vec<std::path::PathBuf> = read_dir
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("sweep-cache.v3") && n.ends_with(".txt"))
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            if let Some(parsed) = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| parse_snapshot(&text))
+            {
+                for (k, v) in parsed {
+                    map.entry(k).or_insert(v);
+                }
+            }
+        }
+        SweepCache {
+            entries: Mutex::new(map),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
     }
 
     /// Restore a cache from a [`SweepCache::save`] snapshot. Any anomaly
@@ -265,6 +297,67 @@ impl SweepCache {
 /// the four fault-model fields (stuck rate, drift sigma, ADC clip,
 /// IR drop) so fault-derated energies never alias clean ones.
 const SNAPSHOT_MAGIC: &str = "aimc-sweepcache-v3";
+
+/// Where one config fingerprint's shard lives inside a cache directory.
+/// The fixed-width hex keeps `ls` stable and the prefix greppable next
+/// to the legacy monolithic `sweep-cache.v3.txt`.
+fn shard_file(dir: &Path, fp: u64) -> std::path::PathBuf {
+    dir.join(format!("sweep-cache.v3.{fp:016x}.txt"))
+}
+
+/// Render entries in [`SweepCache::save`]'s line format: sorted by key,
+/// so identical contents produce identical files; every `f64` as its
+/// IEEE-754 bit pattern in hex, so a reload is bit-identical.
+fn render_snapshot(entries: &HashMap<Key, SimResult>) -> String {
+    let mut keys: Vec<&Key> = entries.keys().collect();
+    keys.sort_by_key(|(fp, op, l)| (*fp, *op, l.n, l.c_in, l.c_out, l.kh, l.kw, l.stride));
+    let mut out = String::with_capacity(64 + keys.len() * 200);
+    out.push_str(&format!("{SNAPSHOT_MAGIC} {}\n", keys.len()));
+    for key in keys {
+        let (fp, op, l) = key;
+        let r = &entries[key];
+        out.push_str(&format!(
+            "{fp:016x} {:016x} {} {} {:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {} {} {} {} {} {} {:016x} {:016x} {:016x}",
+            op.node_bits,
+            op.bits_x,
+            op.bits_w,
+            op.wsig_bits,
+            op.osig_bits,
+            op.stuck_bits,
+            op.drift_bits,
+            op.clip_bits,
+            op.ir_bits,
+            l.n,
+            l.c_in,
+            l.c_out,
+            l.kh,
+            l.kw,
+            l.stride,
+            r.macs.to_bits(),
+            r.ops.to_bits(),
+            r.time_units.to_bits(),
+        ));
+        for c in Component::ALL {
+            out.push_str(&format!(" {:016x}", r.ledger.get(c).to_bits()));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Same-directory temp (rename is only atomic within a filesystem);
+/// pid-suffixed so concurrent savers never clobber each other's staging
+/// file. An interrupted or concurrent write leaves either the old file
+/// or the new one — never a truncated snapshot.
+fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let file = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("sweep-cache");
+    let tmp = path.with_file_name(format!("{file}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
 
 /// Strict snapshot parser: `None` on ANY deviation (see
 /// [`SweepCache::load`]).
@@ -491,6 +584,107 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Fresh temp directory per test so parallel test threads never
+    /// collide (pid + tag).
+    fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "aimc-sweepcache-shard-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sharded_snapshots_survive_both_writers() {
+        // Two "processes" (caches) with different machine configs share
+        // one cache dir: after both save, BOTH sets of entries must
+        // load back — the last-writer-wins loss mode is gone.
+        let dir = temp_cache_dir("two-writers");
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+        let small = systolic::SystolicConfig {
+            dim: 64,
+            banks: 64,
+            ..Default::default()
+        };
+        let big = systolic::SystolicConfig::default();
+
+        let a = SweepCache::new();
+        let ra = a.simulate_layer(&small, &layer, &op(45.0));
+        assert_eq!(a.save_sharded(&dir).unwrap(), 1);
+        let b = SweepCache::new();
+        let rb = b.simulate_layer(&big, &layer, &op(45.0));
+        assert_eq!(b.save_sharded(&dir).unwrap(), 1);
+
+        let shards = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(shards, 2, "one shard file per config fingerprint");
+        let merged = SweepCache::load_sharded(&dir);
+        assert_eq!(merged.len(), 2, "both writers' entries survive");
+        let ra2 = merged.simulate_layer(&small, &layer, &op(45.0));
+        let rb2 = merged.simulate_layer(&big, &layer, &op(45.0));
+        assert_eq!(merged.misses(), 0, "replay must not simulate");
+        assert_eq!(ra.ledger.total(), ra2.ledger.total());
+        assert_eq!(rb.ledger.total(), rb2.ledger.total());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_fingerprint_writers_union_their_entries() {
+        // Two writers on the SAME config but different operating points
+        // race on one shard file: the second save re-reads and unions,
+        // so the first writer's entry survives.
+        let dir = temp_cache_dir("same-fp");
+        let cfg = systolic::SystolicConfig::default();
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+
+        let a = SweepCache::new();
+        let _ = a.simulate_layer(&cfg, &layer, &op(45.0));
+        a.save_sharded(&dir).unwrap();
+        let b = SweepCache::new();
+        let _ = b.simulate_layer(&cfg, &layer, &op(7.0));
+        b.save_sharded(&dir).unwrap();
+
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            1,
+            "same fingerprint → one shard"
+        );
+        let merged = SweepCache::load_sharded(&dir);
+        assert_eq!(merged.len(), 2, "union, not last-writer-wins");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_monolithic_snapshot_loads_and_migrates() {
+        // A pre-sharding cache dir holds the old sweep-cache.v3.txt:
+        // load_sharded must replay it, and the next save_sharded re-homes
+        // the entries into fingerprint shards.
+        let dir = temp_cache_dir("legacy");
+        let cfg = systolic::SystolicConfig::default();
+        let layer = crate::networks::ConvLayer::square(64, 32, 32, 3, 1);
+        let old = SweepCache::new();
+        let _ = old.simulate_layer(&cfg, &layer, &op(45.0));
+        old.save(&dir.join("sweep-cache.v3.txt")).unwrap();
+
+        let loaded = SweepCache::load_sharded(&dir);
+        assert_eq!(loaded.len(), 1, "legacy snapshot still replays");
+        loaded.save_sharded(&dir).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(
+            names.iter().any(|n| n.len() > "sweep-cache.v3.txt".len()),
+            "entries re-homed into a fingerprint shard: {names:?}"
+        );
+        // A corrupt shard is skipped in full without poisoning siblings.
+        std::fs::write(dir.join("sweep-cache.v3.dead.txt"), "garbage\n").unwrap();
+        assert_eq!(SweepCache::load_sharded(&dir).len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

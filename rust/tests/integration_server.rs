@@ -376,6 +376,7 @@ fn exactly_one_response_under_injected_faults_prop() {
             stall_for: Duration::from_millis(2),
             slow_every: [0u64, 3][g.usize(0, 1)],
             slow_factor: 4,
+            backend: None,
         };
         let server = Server::start_sim(
             ServerConfig {
@@ -476,6 +477,277 @@ fn admission_bound_holds_under_injected_faults() {
     assert!(delivered >= 1, "something must be admitted");
     assert!(delivered <= 8, "admitted {delivered} > max_pending 8");
     assert!(m.count() <= delivered, "only delivered Oks are recorded");
+}
+
+#[test]
+fn hetero_fleet_exactly_once_under_backend_targeted_faults_prop() {
+    // The exactly-once property over a heterogeneous fleet: random
+    // 2–3-backend fleets under a randomized FaultPlan that may target a
+    // single machine kind (the server specializes the plan per lane via
+    // `for_backend`, exactly like `aimc serve --chaos backend=…`).
+    // Every request gets exactly one answer, and every dispatched image
+    // is accounted to some backend's shard.
+    use aimc::coordinator::exec::FaultPlan;
+    use aimc::coordinator::server::parse_fleet;
+    use aimc::energy::surrogate::MachineKind;
+    check(10, |g| {
+        let fleet_spec = [
+            "systolic@45:1,reram@45:1",
+            "systolic@45:2,optical4f@45:1",
+            "reram@45:1,photonic@45:1,systolic@45:1",
+        ][g.usize(0, 2)];
+        let plan = FaultPlan {
+            error_every: [0u64, 2, 3][g.usize(0, 2)],
+            stall_every: [0u64, 5][g.usize(0, 1)],
+            stall_for: Duration::from_millis(1),
+            slow_every: 0,
+            slow_factor: 1,
+            backend: [None, Some(MachineKind::Systolic), Some(MachineKind::Reram)]
+                [g.usize(0, 2)],
+        };
+        let n = g.usize(0, 40);
+        let cfg = ServerConfig {
+            fleet: Some(parse_fleet(fleet_spec).unwrap()),
+            policy: BatchPolicy {
+                max_batch: g.usize(1, 8),
+                max_wait: Duration::from_micros(500),
+            },
+            warm_start: false,
+            max_pending: 4096, // admission disabled for this property
+            energy: false,
+            max_retries: g.usize(0, 2) as u32,
+            retry_backoff: Duration::from_micros(100),
+            breaker_threshold: g.usize(1, 3),
+            breaker_cooldown: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let specs = cfg.fleet_workers().unwrap();
+        let server = Server::start_with(cfg, move |w| {
+            Ok(SimExecutor::new(Duration::from_micros(50), Duration::ZERO)
+                .with_plan(plan.for_backend(specs[w].kind)))
+        })
+        .unwrap();
+        let mut rng = Rng::new(9000 + g.seed);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        let m = server.shutdown();
+        let mut answered = 0usize;
+        for rx in rxs {
+            // Exactly one: a first recv must succeed (Ok or a fault
+            // error — both are answers)…
+            match rx.recv() {
+                Ok(Ok(out)) => {
+                    if out.len() != LOGITS {
+                        return prop_assert(false, "bad logits length");
+                    }
+                    answered += 1;
+                }
+                Ok(Err(_)) => answered += 1,
+                Err(_) => return prop_assert(false, "request got zero responses"),
+            }
+            // …and a second recv must find a closed channel.
+            if rx.try_recv().is_ok() {
+                return prop_assert(false, "request got two responses");
+            }
+        }
+        if answered != n {
+            return prop_assert(false, "response count mismatch");
+        }
+        // Every dispatched image lands in exactly one backend's shard.
+        let shard_images: usize = m.backends().values().map(|b| b.images()).sum();
+        prop_assert(
+            shard_images == n,
+            "per-backend shards must account every dispatched image",
+        )
+    });
+}
+
+#[test]
+fn hetero_fleet_admission_bound_holds_under_backend_faults_prop() {
+    // The strict single-client admission bound over a heterogeneous
+    // fleet: a burst against slow fleet lanes — one of which may be
+    // error-injected — still sheds everything beyond max_pending, and
+    // every admitted request is answered exactly once.
+    use aimc::coordinator::exec::FaultPlan;
+    use aimc::coordinator::server::parse_fleet;
+    use aimc::energy::surrogate::MachineKind;
+    check(5, |g| {
+        let max_pending = [4usize, 8][g.usize(0, 1)];
+        let plan = FaultPlan {
+            error_every: [0u64, 2][g.usize(0, 1)],
+            stall_every: 0,
+            stall_for: Duration::ZERO,
+            slow_every: 0,
+            slow_factor: 1,
+            backend: [None, Some(MachineKind::Systolic), Some(MachineKind::Reram)]
+                [g.usize(0, 2)],
+        };
+        let cfg = ServerConfig {
+            fleet: Some(parse_fleet("systolic@45:1,reram@45:1").unwrap()),
+            warm_start: false,
+            max_pending,
+            ingress_shards: 4,
+            energy: false,
+            max_retries: 0,
+            ..Default::default()
+        };
+        let specs = cfg.fleet_workers().unwrap();
+        let server = Server::start_with(cfg, move |w| {
+            Ok(SimExecutor::new(Duration::from_millis(200), Duration::ZERO)
+                .with_plan(plan.for_backend(specs[w].kind)))
+        })
+        .unwrap();
+        let mut rng = Rng::new(700 + g.seed);
+        let rxs: Vec<_> = (0..48)
+            .map(|_| server.infer(rng.normal_vec(IMAGE_ELEMS)))
+            .collect();
+        let m = server.shutdown();
+        let (mut delivered, mut shed) = (0usize, 0usize);
+        for rx in rxs {
+            match rx.recv().expect("one response per request") {
+                Ok(_) => delivered += 1,
+                Err(e) if e.to_string().contains("overloaded") => shed += 1,
+                Err(e) => {
+                    if !e.to_string().contains("injected transient fault") {
+                        return prop_assert(false, "unexpected error kind");
+                    }
+                    delivered += 1;
+                }
+            }
+        }
+        if delivered + shed != 48 {
+            return prop_assert(false, "lost a response");
+        }
+        if delivered < 1 {
+            return prop_assert(false, "nothing admitted");
+        }
+        prop_assert(
+            delivered <= max_pending,
+            "admitted more than max_pending across fleet lanes",
+        )
+    });
+}
+
+/// Batch-counting executor for the routing test: tallies served images
+/// per worker and fails while its `degraded` flag is set.
+struct CountingExec {
+    images: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    degraded: std::sync::Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl aimc::coordinator::exec::Executor for CountingExec {
+    fn execute(&self, artifact: &str, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        use std::sync::atomic::Ordering;
+        let batch = artifact
+            .rsplit_once("_b")
+            .and_then(|(_, n)| n.parse().ok())
+            .unwrap_or(1);
+        assert_eq!(inputs[0].len(), batch * IMAGE_ELEMS);
+        self.images.fetch_add(batch, Ordering::SeqCst);
+        if self.degraded.load(Ordering::SeqCst) {
+            anyhow::bail!("injected transient fault (degraded backend)");
+        }
+        Ok(vec![0.0; batch * LOGITS])
+    }
+}
+
+#[test]
+fn routing_shifts_off_degraded_backend_and_returns_after_cooldown() {
+    // Chaos on the quote-preferred backend must *move the load*: the
+    // systolic lane is cheapest for SmallCNN, so it gets everything
+    // until it starts failing; its breaker then opens and batches land
+    // on the optical lane (counted as reroutes). After the fault clears
+    // and the cooldown expires, routing returns to the systolic lane.
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use aimc::coordinator::server::parse_fleet;
+
+    let systolic_images = Arc::new(AtomicUsize::new(0));
+    let optical_images = Arc::new(AtomicUsize::new(0));
+    let systolic_down = Arc::new(AtomicBool::new(true));
+    let healthy = Arc::new(AtomicBool::new(false));
+
+    let cooldown = Duration::from_millis(300);
+    let cfg = ServerConfig {
+        fleet: Some(parse_fleet("systolic@45:1,optical4f@45:1").unwrap()),
+        warm_start: false,
+        max_pending: 4096,
+        energy: false,
+        max_retries: 0,
+        breaker_threshold: 1,
+        breaker_cooldown: cooldown,
+        ..Default::default()
+    };
+    let specs = cfg.fleet_workers().unwrap();
+    assert_eq!(specs[0].label(), "systolic@45", "lane order follows the spec");
+    let (sys_n, opt_n) = (systolic_images.clone(), optical_images.clone());
+    let (sys_down, ok_flag) = (systolic_down.clone(), healthy.clone());
+    let server = Server::start_with(cfg, move |w| {
+        Ok(if w == 0 {
+            CountingExec {
+                images: sys_n.clone(),
+                degraded: sys_down.clone(),
+            }
+        } else {
+            CountingExec {
+                images: opt_n.clone(),
+                degraded: ok_flag.clone(),
+            }
+        })
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(61);
+    // Phase A: the preferred (systolic) lane is degraded. The first
+    // request deterministically routes there (cheapest, breaker closed),
+    // fails with retries off, and trips the threshold-1 breaker.
+    let first = server.infer_blocking(rng.normal_vec(IMAGE_ELEMS));
+    assert!(first.is_err(), "degraded preferred lane must fail first");
+    // Give the worker a beat to publish the open breaker.
+    std::thread::sleep(Duration::from_millis(30));
+    for _ in 0..6 {
+        server
+            .infer_blocking(rng.normal_vec(IMAGE_ELEMS))
+            .expect("open breaker must detour to the healthy backend");
+    }
+    let optical_during_outage = optical_images.load(Ordering::SeqCst);
+    assert!(
+        optical_during_outage >= 6,
+        "load must shift to the healthy backend, got {optical_during_outage}"
+    );
+
+    // Phase B: fault clears, cooldown expires — routing must return.
+    systolic_down.store(false, Ordering::SeqCst);
+    std::thread::sleep(cooldown + Duration::from_millis(100));
+    let systolic_before_recovery = systolic_images.load(Ordering::SeqCst);
+    for _ in 0..4 {
+        server
+            .infer_blocking(rng.normal_vec(IMAGE_ELEMS))
+            .expect("recovered backend must serve");
+    }
+    let systolic_after = systolic_images.load(Ordering::SeqCst);
+    assert!(
+        systolic_after >= systolic_before_recovery + 4,
+        "routing must return to the cheapest backend after cooldown \
+         ({systolic_before_recovery} -> {systolic_after})"
+    );
+    assert_eq!(
+        optical_images.load(Ordering::SeqCst),
+        optical_during_outage,
+        "recovered fleet must stop paying the expensive backend"
+    );
+
+    let m = server.shutdown();
+    assert!(m.breaker_trips() >= 1, "{}", m.summary());
+    assert!(m.rerouted() >= 6, "{}", m.summary());
+    assert!(
+        m.backends()["systolic@45"].images() > 0
+            && m.backends()["optical4f@45"].images() > 0,
+        "both backends must appear in the shards:\n{}",
+        m.backend_table().unwrap()
+    );
 }
 
 #[test]
